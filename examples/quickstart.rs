@@ -1,0 +1,39 @@
+//! Quickstart: run the vibration intermittent learner for two simulated
+//! hours on the native backend and print what happened.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! This exercises the whole L3 coordinator — piezo harvester, capacitor,
+//! NVM-atomic actions, dynamic action planner, round-robin example
+//! selection, NN-k-means learner — on the paper's §6.3 gesture protocol.
+
+use ilearn::apps::{AppConfig, AppKind};
+
+const H: u64 = 3_600_000_000;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = AppConfig::new(AppKind::Vibration, 42, 2 * H);
+    println!("building the vibration app (piezo harvester, NN-k-means)...");
+    let r = cfg.build_engine()?.run()?;
+
+    println!("simulated 2 h of the paper's gesture protocol:");
+    println!("  wake cycles     {}", r.cycles);
+    println!("  sensed          {}", r.sensed);
+    println!("  learned         {} (selection discarded {})", r.learned, r.discarded_select);
+    println!("  inferences      {}", r.inferred);
+    println!("  power failures  {}", r.power_failures);
+    println!("  energy          {:.1} mJ", r.energy_uj / 1000.0);
+    println!("  final accuracy  {:.2}", r.final_accuracy());
+    println!();
+    println!("accuracy trajectory (learning the two shaking classes):");
+    for c in r.checkpoints.iter().step_by(2) {
+        let bars = (c.accuracy * 40.0) as usize;
+        println!(
+            "  t={:>4.1}h {:>5.2} {}",
+            c.t_us as f64 / H as f64,
+            c.accuracy,
+            "#".repeat(bars)
+        );
+    }
+    Ok(())
+}

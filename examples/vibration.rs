@@ -1,0 +1,42 @@
+//! Piezoelectric vibration learning (paper §6.3) with heuristic sweep.
+//!
+//!     cargo run --release --example vibration
+//!
+//! Runs the §6.3 gesture protocol (alternating gentle/abrupt hours, 100
+//! gestures each) under all four example-selection policies and shows the
+//! §7.3 effect: the heuristics reach the same accuracy while learning far
+//! fewer examples than learn-everything.
+
+use ilearn::apps::{AppConfig, AppKind};
+use ilearn::selection::Heuristic;
+
+const H: u64 = 3_600_000_000;
+
+fn main() -> anyhow::Result<()> {
+    println!("4 h vibration runs, one per selection heuristic:");
+    println!(
+        "{:<14} {:>8} {:>9} {:>10} {:>10} {:>9}",
+        "heuristic", "learned", "discarded", "energy_mJ", "final_acc", "mean_acc"
+    );
+    for h in Heuristic::ALL {
+        let mut cfg = AppConfig::new(AppKind::Vibration, 42, 4 * H);
+        cfg.heuristic = h;
+        let r = cfg.build_engine()?.run()?;
+        println!(
+            "{:<14} {:>8} {:>9} {:>10.1} {:>10.2} {:>9.2}",
+            h.name(),
+            r.learned,
+            r.discarded_select,
+            r.energy_uj / 1000.0,
+            r.final_accuracy(),
+            r.mean_accuracy(3)
+        );
+    }
+    println!();
+    println!(
+        "(the paper's §7.3 finding: selection reaches comparable accuracy\n\
+         with ~half the learned examples; k-last is the most expensive\n\
+         heuristic, randomized the cheapest — see `ilearn figure fig17`)"
+    );
+    Ok(())
+}

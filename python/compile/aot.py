@@ -1,0 +1,75 @@
+# AOT pipeline: lower every L2 payload (model.export_specs) to HLO TEXT
+# artifacts the rust runtime loads via HloModuleProto::from_text_file.
+#
+# HLO *text*, NOT lowered.compile()/.serialize(): jax >= 0.5 emits
+# HloModuleProto with 64-bit instruction ids which the xla crate's
+# xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The HLO text
+# parser reassigns ids, so text round-trips cleanly. See
+# /opt/xla-example/README.md and gen_hlo.py.
+#
+# Usage:  cd python && python -m compile.aot --out ../artifacts
+#
+# Also writes artifacts/manifest.txt — one line per artifact:
+#   name <tab> in=<shape;shape;...> <tab> out=<shape;...>
+# which the rust runtime parses to validate buffer sizes at load time.
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple=True so
+    the rust side always unwraps a tuple, regardless of arity)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _fmt_shapes(avals) -> str:
+    return ";".join(
+        "x".join(str(d) for d in getattr(a, "shape", ())) or "scalar"
+        for a in avals
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact dir")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated subset of payloads"
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    specs = model.export_specs()
+    if args.only:
+        keep = set(args.only.split(","))
+        specs = {k: v for k, v in specs.items() if k in keep}
+
+    manifest = []
+    for name, (fn, arg_specs) in sorted(specs.items()):
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *arg_specs)
+        manifest.append(
+            f"{name}\tin={_fmt_shapes(arg_specs)}\tout={_fmt_shapes(outs)}"
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(args.out, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (compute hot-spots) + pure-jnp oracle (ref)."""
+
+from . import competitive, features, pairwise, ref  # noqa: F401

@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: winner-take-all competitive-learning step.
+
+Paper §6.3 (neural-network k-means): activation a_j = sum_i w_ij x_i; only
+the winner neuron (largest activation) is updated, dw = eta * (x - w_win).
+One fused kernel keeps the weight matrix resident in VMEM across the
+activation matvec and the masked update — the paper's MCU implementation
+does two passes over FRAM; fusing halves the (simulated) memory traffic and
+on a real TPU avoids a second HBM round-trip for W.
+
+Shapes are tiny ((K=2, F=32)); the value of the kernel is structural: it is
+the `learn` action's entire numeric payload, so the AOT'd HLO module for
+`kmeans_learn` is a single fused unit the rust coordinator invokes once per
+learned example.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _competitive_kernel(w_ref, x_ref, eta_ref, neww_ref, acts_ref):
+    w = w_ref[...]  # (K, F)
+    x = x_ref[...]  # (1, F)  (kept 2-D for TPU layout friendliness)
+    eta = eta_ref[0, 0]
+    # Activation a_j = -||x - w_j||^2 (the normalized-input equivalent of
+    # the paper's dot-product activation; see ref.py). K*F is tiny (2x32),
+    # so the direct VPU form beats a Gram-form matmul and matches the
+    # oracle bit-for-bit in summation order.
+    diff = w - x  # (K, F) broadcast over the 1-row x
+    acts = -jnp.sum(diff * diff, axis=-1)  # (K,)
+    winner = jnp.argmax(acts)
+    k = w.shape[0]
+    onehot = (jax.lax.iota(jnp.int32, k) == winner).astype(jnp.float32)
+    neww_ref[...] = w + eta * onehot[:, None] * (x - w)
+    acts_ref[...] = acts[None, :]
+
+
+@jax.jit
+def competitive_step(w, x, eta):
+    """(K, F) weights, (F,) input, scalar eta -> (new_w (K, F), acts (K,))."""
+    k, f = w.shape
+    new_w, acts = pl.pallas_call(
+        _competitive_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((k, f), jnp.float32),
+            jax.ShapeDtypeStruct((1, k), jnp.float32),
+        ),
+        interpret=True,
+    )(
+        w.astype(jnp.float32),
+        x.astype(jnp.float32)[None, :],
+        jnp.asarray(eta, jnp.float32)[None, None],
+    )
+    return new_w, acts[0]

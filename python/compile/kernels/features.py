@@ -1,0 +1,47 @@
+"""L1 Pallas kernel: windowed feature extraction (the `extract` action).
+
+Computes the paper's feature set — mean, std, median, RMS, peak-to-peak,
+zero-crossing rate, average absolute acceleration variation (§6.1, §6.3) —
+for every channel of a (W, C) sensor window in one VMEM-resident pass.
+The window is tiny (64 x 4 x 4 B = 1 KiB) so a single program instance
+holds everything; the win over the MCU implementation is the same as for
+the other kernels: one fused module per action, invoked once per `extract`.
+
+The median uses a full sort along the window axis; W is static so the sort
+lowers to a fixed sorting network in XLA.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _features_kernel(w_ref, o_ref):
+    w = w_ref[...]  # (W, C) f32
+    n = w.shape[0]
+    mean = jnp.mean(w, axis=0)
+    var = jnp.mean(w * w, axis=0) - mean * mean
+    std = jnp.sqrt(jnp.maximum(var, 0.0))
+    srt = jnp.sort(w, axis=0)
+    # W is even for all artifact shapes; average the two middle samples.
+    med = 0.5 * (srt[n // 2 - 1] + srt[n // 2])
+    rms = jnp.sqrt(jnp.mean(w * w, axis=0))
+    p2p = jnp.max(w, axis=0) - jnp.min(w, axis=0)
+    centered = w - mean[None, :]
+    sign = jnp.where(centered >= 0.0, 1.0, -1.0)
+    zcr = jnp.sum(jnp.abs(sign[1:] - sign[:-1]), axis=0) / (2.0 * (n - 1))
+    diff = w[1:] - w[:-1]
+    aav = jnp.mean(jnp.abs(diff), axis=0)
+    mav = jnp.mean(jnp.abs(w), axis=0)
+    o_ref[...] = jnp.stack([mean, std, med, rms, p2p, zcr, aav, mav], axis=-1)
+
+
+@jax.jit
+def extract_features(window):
+    """(W, C) window -> (C, 8) features; see ref.extract_features."""
+    w, c = window.shape
+    return pl.pallas_call(
+        _features_kernel,
+        out_shape=jax.ShapeDtypeStruct((c, 8), jnp.float32),
+        interpret=True,
+    )(window.astype(jnp.float32))

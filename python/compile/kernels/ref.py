@@ -1,0 +1,165 @@
+"""Pure-jnp reference oracle for every L1 Pallas kernel and L2 payload.
+
+This file is the *correctness ground truth* of the compile path: each
+function is a straightforward (unoptimized, loop-free jnp) transcription of
+the math in the paper:
+
+  - pairwise Euclidean distance  d(e_i, e_j) = sqrt(sum_m (f_m^i - f_m^j)^2)
+    (paper §6.1, feature distance for the k-NN anomaly learner),
+  - k-NN anomaly score  AS_i = sum over the k nearest neighbours of d(e_i, .)
+    with the anomaly threshold AS_TH = 90th percentile of scores (§6.1),
+  - competitive-learning (neural-network k-means) activation and update
+    a_j = sum_i w_ij x_i ; winner = argmax_j a_j ; dw = eta * (x - w_winner)
+    (§6.3),
+  - windowed feature extraction: mean, std, median, RMS, P2P, ZCR, AAV
+    (§6.1 and §6.3 feature sets; superset of both).
+
+pytest pins the Pallas kernels (kernels/*.py) and the AOT'd HLO modules to
+these functions via assert_allclose.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# Canonical artifact shapes (shared with aot.py and the rust runtime).
+WINDOW = 64  # samples per sensing window
+CHANNELS = 4  # sensor channels (apps use a prefix, rest zero)
+N_FEATURES = 8  # features per channel
+FEAT_DIM = CHANNELS * N_FEATURES  # flattened example dimension (32)
+N_BUF = 64  # example-buffer capacity for the k-NN learner
+K_NEIGHBORS = 3  # paper's k for the anomaly score
+N_CLUSTERS = 2  # normal / abnormal (paper's NN k-means)
+PCTL = 0.9  # anomaly-threshold percentile (90th, §6.1)
+BATCH = 16  # batched-inference artifact width
+KLAST = 4  # k-last-lists heuristic list length (artifact shape)
+
+
+def pairwise_sq_dists(x, y):
+    """Squared Euclidean distance matrix via the Gram-matrix identity.
+
+    ||a - b||^2 = ||a||^2 + ||b||^2 - 2 a.b  — one matmul instead of an
+    O(N^2 F) subtraction loop; this is the formulation the Pallas kernel
+    tiles for the MXU.
+    """
+    xn = jnp.sum(x * x, axis=-1, keepdims=True)  # (n, 1)
+    yn = jnp.sum(y * y, axis=-1, keepdims=True).T  # (1, m)
+    d = xn + yn - 2.0 * (x @ y.T)
+    return jnp.maximum(d, 0.0)  # clamp numeric negatives
+
+
+def knn_scores(examples, mask, k=K_NEIGHBORS):
+    """Anomaly score for every (valid) example in the buffer.
+
+    examples : (N, F) float32, rows >= count are padding
+    mask     : (N,) float32 1.0 valid / 0.0 padding
+    Returns (scores (N,), threshold ()): score_i = sum of distances to the
+    k nearest *other* valid examples; threshold = 90th percentile of the
+    valid scores. Padded rows get score 0.
+    """
+    n = examples.shape[0]
+    d2 = pairwise_sq_dists(examples, examples)
+    d = jnp.sqrt(d2)
+    big = jnp.float32(3.4e38)
+    # exclude self-distance and padded columns
+    invalid = (1.0 - mask)[None, :] > 0.5
+    d = jnp.where(invalid | jnp.eye(n, dtype=bool), big, d)
+    # k smallest per row == -(k largest of -d)
+    neg_topk, _ = jax.lax.top_k(-d, k)
+    knn_sum = -jnp.sum(neg_topk, axis=-1)
+    # A score is only defined when at least k other valid neighbours exist;
+    # the rust native backend applies the same rule.
+    valid_cnt = jnp.sum(mask)
+    enough = valid_cnt > k
+    scores = jnp.where((mask > 0.5) & enough, knn_sum, 0.0)
+    # 90th percentile over valid scores: sort with invalid pushed to -inf,
+    # then index ceil(0.9 * cnt) - 1 within the valid tail block.
+    sortkey = jnp.where(mask > 0.5, scores, -big)
+    ss = jnp.sort(sortkey)  # invalid first, valid ascending at the end
+    idx = n - valid_cnt + jnp.ceil(PCTL * valid_cnt) - 1.0
+    idx = jnp.clip(idx, 0, n - 1).astype(jnp.int32)
+    thr = jnp.where(enough, ss[idx], jnp.float32(0.0))
+    return scores, thr
+
+
+def knn_infer(examples, mask, x, k=K_NEIGHBORS):
+    """Anomaly score of a new example against the valid buffer rows."""
+    d2 = pairwise_sq_dists(x[None, :], examples)[0]
+    d = jnp.sqrt(jnp.maximum(d2, 0.0))
+    big = jnp.float32(3.4e38)
+    d = jnp.where(mask > 0.5, d, big)
+    neg_topk, _ = jax.lax.top_k(-d, k)
+    score = -jnp.sum(neg_topk)
+    return jnp.where(jnp.sum(mask) >= k, score, jnp.float32(0.0))
+
+
+def knn_infer_batch(examples, mask, xs, k=K_NEIGHBORS):
+    """Batched variant of knn_infer: xs (B, F) -> scores (B,)."""
+    d2 = pairwise_sq_dists(xs, examples)
+    d = jnp.sqrt(jnp.maximum(d2, 0.0))
+    big = jnp.float32(3.4e38)
+    d = jnp.where(mask[None, :] > 0.5, d, big)
+    neg_topk, _ = jax.lax.top_k(-d, k)
+    scores = -jnp.sum(neg_topk, axis=-1)
+    return jnp.where(jnp.sum(mask) >= k, scores, jnp.zeros_like(scores))
+
+
+def competitive_step(w, x, eta):
+    """One competitive-learning step (paper §6.3).
+
+    w : (K, F) cluster weights, x : (F,) input, eta: () learning rate.
+    Returns (new_w (K, F), acts (K,)).
+    Only the winner row (largest activation) moves: w_win += eta*(x - w_win).
+
+    Activation: the paper's text uses a_j = w_j . x; Marsland's NN-k-means
+    (the paper's cited formulation) assumes normalized inputs, where the
+    dot product is ordering-equivalent to the negative distance. Our
+    vibration features are magnitude-separated (gentle vs abrupt differ in
+    scale, not direction), for which the raw dot product degenerates (the
+    larger-norm neuron wins everything), so we use the normalized-input
+    equivalent directly: a_j = -||x - w_j||^2 = 2 w.x - ||w||^2 - ||x||^2.
+    Documented in DESIGN.md §Hardware-Adaptation.
+    """
+    acts = -jnp.sum((w - x[None, :]) ** 2, axis=-1)  # (K,)
+    winner = jnp.argmax(acts)
+    onehot = jax.nn.one_hot(winner, w.shape[0], dtype=w.dtype)  # (K,)
+    new_w = w + eta * onehot[:, None] * (x[None, :] - w)
+    return new_w, acts
+
+
+def kmeans_infer(w, x):
+    """Activations for classification; winner = argmax (done host-side)."""
+    return -jnp.sum((w - x[None, :]) ** 2, axis=-1)
+
+
+def extract_features(window):
+    """(W, C) sensor window -> (C, 8) feature matrix.
+
+    Features per channel (paper §6.1 + §6.3 union):
+      0 mean, 1 std, 2 median, 3 RMS, 4 P2P, 5 ZCR, 6 AAV, 7 mean-abs.
+    """
+    w = window.astype(jnp.float32)
+    n = w.shape[0]
+    mean = jnp.mean(w, axis=0)
+    std = jnp.std(w, axis=0)
+    med = jnp.median(w, axis=0)
+    rms = jnp.sqrt(jnp.mean(w * w, axis=0))
+    p2p = jnp.max(w, axis=0) - jnp.min(w, axis=0)
+    centered = w - mean[None, :]
+    sign = jnp.where(centered >= 0.0, 1.0, -1.0)
+    zcr = jnp.sum(jnp.abs(jnp.diff(sign, axis=0)), axis=0) / (2.0 * (n - 1))
+    aav = jnp.mean(jnp.abs(jnp.diff(w, axis=0)), axis=0)
+    mav = jnp.mean(jnp.abs(w), axis=0)
+    return jnp.stack([mean, std, med, rms, p2p, zcr, aav, mav], axis=-1)
+
+
+def diversity(b):
+    """Mean pairwise distance within a set (paper Eq. 2), b: (k, F)."""
+    k = b.shape[0]
+    d = jnp.sqrt(pairwise_sq_dists(b, b))
+    return jnp.sum(d) / jnp.float32(k * k)
+
+
+def representation(b, b_prime):
+    """Mean selected<->non-selected distance (paper Eq. 3)."""
+    d = jnp.sqrt(pairwise_sq_dists(b, b_prime))
+    return jnp.mean(d)

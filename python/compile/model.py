@@ -1,0 +1,183 @@
+# L2: paper's jax model — the numeric payload of each learning action,
+# composed from the L1 Pallas kernels. These are the functions that
+# python/compile/aot.py lowers ONCE to HLO text; the rust coordinator
+# (L3) executes the resulting artifacts on its PJRT CPU client and never
+# imports python at runtime.
+#
+# Payloads (shapes are the canonical artifact shapes from kernels.ref):
+#   extract        : (W=64, C=4) window            -> (C, 8) features
+#   knn_learn      : (N=64, F=32) buffer + mask    -> (scores (N,), AS_TH ())
+#   knn_infer      : buffer + mask + example       -> anomaly score ()
+#   knn_infer_batch: buffer + mask + (B=16, F)     -> scores (B,)   [perf]
+#   kmeans_learn   : (K=2, F) weights, example, eta-> (new_w, acts)
+#   kmeans_infer   : weights, example              -> acts (K,)
+#   diversity_repr : k-last-lists selection scores (Eq. 2/3) in one call
+#
+# The k-NN top-k / percentile-threshold logic lives here (XLA top_k + sort)
+# rather than inside the Pallas kernels: it is O(N log N) sorting work that
+# XLA already fuses well, while the O(N^2 F) distance work is the kernel's
+# job.
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import competitive, features, pairwise
+from .kernels.ref import BATCH, K_NEIGHBORS, PCTL
+
+_BIG = jnp.float32(3.4e38)
+
+
+def _sum_k_smallest(d, k):
+    """Sum of the k smallest entries along the last axis.
+
+    Implemented as k rounds of argmin + mask rather than `lax.top_k`: the
+    crate's xla_extension 0.5.1 HLO-text parser predates the `largest=`
+    attribute jax >= 0.4.30 emits on the TopK custom-call, so exported
+    payloads must stick to primitive HLO ops. k is 3; the extra passes are
+    noise next to the O(N^2 F) distance work.
+    """
+    total = jnp.zeros(d.shape[:-1], jnp.float32)
+    n = d.shape[-1]
+    for _ in range(k):
+        idx = jnp.argmin(d, axis=-1)
+        m = jnp.min(d, axis=-1)
+        total = total + m
+        onehot = jax.nn.one_hot(idx, n, dtype=jnp.float32)
+        d = d + onehot * _BIG  # knock out exactly one occurrence
+    return total
+
+
+def extract(window):
+    """`extract` action payload: window -> per-channel feature matrix."""
+    return (features.extract_features(window),)
+
+
+def _mask_invalid(d, mask):
+    """Push distances to padded buffer rows out of top-k range."""
+    return jnp.where(mask[None, :] > 0.5, d, _BIG)
+
+
+def knn_learn(examples, mask):
+    """`learn` payload for the k-NN anomaly learner (§6.1).
+
+    Recomputes every buffered example's anomaly score
+    AS_i = sum_{j in kNN(i)} d(e_i, e_j) and the detection threshold
+    AS_TH = 90th percentile of the valid scores.
+    """
+    n = examples.shape[0]
+    d2 = pairwise.pairwise_sq_dists(examples, examples)
+    d = jnp.sqrt(d2)
+    d = _mask_invalid(d, mask)
+    d = jnp.where(jnp.eye(n, dtype=bool), _BIG, d)  # exclude self
+    knn_sum = _sum_k_smallest(d, K_NEIGHBORS)
+    cnt = jnp.sum(mask)
+    enough = cnt > K_NEIGHBORS
+    scores = jnp.where((mask > 0.5) & enough, knn_sum, 0.0)
+    sortkey = jnp.where(mask > 0.5, scores, -_BIG)
+    ss = jnp.sort(sortkey)
+    idx = n - cnt + jnp.ceil(PCTL * cnt) - 1.0
+    idx = jnp.clip(idx, 0, n - 1).astype(jnp.int32)
+    thr = jnp.where(enough, ss[idx], jnp.float32(0.0))
+    return scores, thr
+
+
+def knn_infer(examples, mask, x):
+    """`infer` payload: anomaly score of one new example."""
+    d2 = pairwise.pairwise_sq_dists(x[None, :], examples, block_n=1)
+    d = _mask_invalid(jnp.sqrt(d2), mask)
+    score = _sum_k_smallest(d, K_NEIGHBORS)[0]
+    return (jnp.where(jnp.sum(mask) >= K_NEIGHBORS, score, 0.0),)
+
+
+def knn_infer_batch(examples, mask, xs):
+    """Batched `infer` payload (B queries per dispatch) — amortizes the
+    PJRT call overhead on the rust hot path; see EXPERIMENTS.md §Perf."""
+    d2 = pairwise.pairwise_sq_dists(xs, examples, block_n=BATCH)
+    d = _mask_invalid(jnp.sqrt(d2), mask)
+    scores = _sum_k_smallest(d, K_NEIGHBORS)
+    ok = jnp.sum(mask) >= K_NEIGHBORS
+    return (jnp.where(ok, scores, jnp.zeros_like(scores)),)
+
+
+def kmeans_learn(w, x, eta):
+    """`learn` payload for the NN-k-means learner (§6.3): one competitive
+    step. Returns (new_w, acts); the host keeps new_w in NVM."""
+    return competitive.competitive_step(w, x, eta)
+
+
+def kmeans_infer(w, x):
+    """`infer` payload: cluster activations (host argmaxes the winner)."""
+    acts = competitive.competitive_step(w, x, jnp.float32(0.0))[1]
+    return (acts,)
+
+
+def diversity_repr(b, bp, x):
+    """k-last-lists heuristic payload (§5.2, Eq. 2/3): returns
+    [div(B), div(B+x), rep(B, B'), rep(B+x, B')] in one dispatch so the
+    `select` action costs a single artifact call."""
+    k, _ = b.shape
+    bx = jnp.concatenate([b, x[None, :]], axis=0)  # (k+1, f)
+    d_bb = jnp.sqrt(pairwise.pairwise_sq_dists(b, b, block_n=k, block_m=k))
+    d_xx = jnp.sqrt(
+        pairwise.pairwise_sq_dists(bx, bx, block_n=k + 1, block_m=k + 1)
+    )
+    d_bp = jnp.sqrt(pairwise.pairwise_sq_dists(b, bp, block_n=k, block_m=k))
+    d_xp = jnp.sqrt(
+        pairwise.pairwise_sq_dists(bx, bp, block_n=k + 1, block_m=k)
+    )
+    div_b = jnp.sum(d_bb) / jnp.float32(k * k)
+    div_bx = jnp.sum(d_xx) / jnp.float32((k + 1) * (k + 1))
+    rep_b = jnp.mean(d_bp)
+    rep_bx = jnp.mean(d_xp)
+    return (jnp.stack([div_b, div_bx, rep_b, rep_bx]),)
+
+
+# ----------------------------------------------------------------------
+# Export table used by aot.py: name -> (fn, example-arg ShapeDtypeStructs).
+def export_specs():
+    from .kernels.ref import (
+        CHANNELS,
+        FEAT_DIM,
+        KLAST,
+        N_BUF,
+        N_CLUSTERS,
+        WINDOW,
+    )
+
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    return {
+        "extract": (extract, (s((WINDOW, CHANNELS), f32),)),
+        "knn_learn": (
+            knn_learn,
+            (s((N_BUF, FEAT_DIM), f32), s((N_BUF,), f32)),
+        ),
+        "knn_infer": (
+            knn_infer,
+            (s((N_BUF, FEAT_DIM), f32), s((N_BUF,), f32), s((FEAT_DIM,), f32)),
+        ),
+        "knn_infer_batch": (
+            knn_infer_batch,
+            (
+                s((N_BUF, FEAT_DIM), f32),
+                s((N_BUF,), f32),
+                s((BATCH, FEAT_DIM), f32),
+            ),
+        ),
+        "kmeans_learn": (
+            kmeans_learn,
+            (s((N_CLUSTERS, FEAT_DIM), f32), s((FEAT_DIM,), f32), s((), f32)),
+        ),
+        "kmeans_infer": (
+            kmeans_infer,
+            (s((N_CLUSTERS, FEAT_DIM), f32), s((FEAT_DIM,), f32)),
+        ),
+        "diversity_repr": (
+            diversity_repr,
+            (
+                s((KLAST, FEAT_DIM), f32),
+                s((KLAST, FEAT_DIM), f32),
+                s((FEAT_DIM,), f32),
+            ),
+        ),
+    }

@@ -1,0 +1,175 @@
+"""L2 correctness: model payloads vs oracle compositions, plus the AOT
+manifest/shape contract the rust runtime relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+SET = settings(
+    max_examples=20,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+def buf(seed, count, scale=3.0):
+    """Canonical (N_BUF, FEAT_DIM) buffer with `count` valid rows + mask."""
+    r = np.random.default_rng(seed)
+    ex = np.zeros((ref.N_BUF, ref.FEAT_DIM), np.float32)
+    ex[:count] = r.standard_normal((count, ref.FEAT_DIM)) * scale
+    mask = np.zeros((ref.N_BUF,), np.float32)
+    mask[:count] = 1.0
+    return ex, mask
+
+
+# ------------------------------------------------------------------- knn
+@SET
+@given(count=st.integers(4, 64), seed=st.integers(0, 2**31 - 1))
+def test_knn_learn_matches_ref(count, seed):
+    ex, mask = buf(seed, count)
+    scores, thr = model.knn_learn(ex, mask)
+    want_s, want_t = ref.knn_scores(jnp.asarray(ex), jnp.asarray(mask))
+    assert_allclose(np.asarray(scores), np.asarray(want_s), rtol=1e-4, atol=1e-3)
+    assert_allclose(float(thr), float(want_t), rtol=1e-4, atol=1e-3)
+
+
+def test_knn_learn_padding_rows_zero():
+    ex, mask = buf(0, 10)
+    scores, _ = model.knn_learn(ex, mask)
+    assert_allclose(np.asarray(scores)[10:], 0.0)
+
+
+def test_knn_learn_too_few_examples():
+    """With <= k valid rows the score/threshold are undefined -> 0."""
+    ex, mask = buf(1, ref.K_NEIGHBORS)
+    scores, thr = model.knn_learn(ex, mask)
+    assert_allclose(np.asarray(scores), 0.0)
+    assert float(thr) == 0.0
+
+
+def test_knn_threshold_is_90th_percentile():
+    ex, mask = buf(2, 40)
+    scores, thr = model.knn_learn(ex, mask)
+    s = np.sort(np.asarray(scores)[:40])
+    idx = int(np.ceil(0.9 * 40)) - 1
+    assert_allclose(float(thr), s[idx], rtol=1e-5)
+
+
+@SET
+@given(count=st.integers(4, 64), seed=st.integers(0, 2**31 - 1))
+def test_knn_infer_matches_ref(count, seed):
+    ex, mask = buf(seed, count)
+    x = np.random.default_rng(seed + 9).standard_normal(ref.FEAT_DIM)
+    x = (x * 3).astype(np.float32)
+    (score,) = model.knn_infer(ex, mask, x)
+    want = ref.knn_infer(jnp.asarray(ex), jnp.asarray(mask), jnp.asarray(x))
+    assert_allclose(float(score), float(want), rtol=1e-4, atol=1e-3)
+
+
+def test_knn_infer_outlier_scores_higher():
+    ex, mask = buf(3, 30, scale=1.0)
+    near = ex[0] + 0.05
+    far = np.full((ref.FEAT_DIM,), 50.0, np.float32)
+    (s_near,) = model.knn_infer(ex, mask, near)
+    (s_far,) = model.knn_infer(ex, mask, far)
+    assert float(s_far) > float(s_near)
+
+
+@SET
+@given(count=st.integers(4, 64), seed=st.integers(0, 2**31 - 1))
+def test_knn_infer_batch_matches_scalar(count, seed):
+    ex, mask = buf(seed, count)
+    r = np.random.default_rng(seed + 13)
+    xs = (r.standard_normal((ref.BATCH, ref.FEAT_DIM)) * 3).astype(np.float32)
+    (scores,) = model.knn_infer_batch(ex, mask, xs)
+    for i in range(0, ref.BATCH, 5):
+        (si,) = model.knn_infer(ex, mask, xs[i])
+        assert_allclose(
+            float(np.asarray(scores)[i]), float(si), rtol=1e-4, atol=1e-3
+        )
+
+
+# ---------------------------------------------------------------- kmeans
+@SET
+@given(eta=st.floats(0.01, 0.9), seed=st.integers(0, 2**31 - 1))
+def test_kmeans_learn_matches_ref(eta, seed):
+    r = np.random.default_rng(seed)
+    w = r.standard_normal((ref.N_CLUSTERS, ref.FEAT_DIM)).astype(np.float32)
+    x = r.standard_normal(ref.FEAT_DIM).astype(np.float32)
+    new_w, acts = model.kmeans_learn(w, x, eta)
+    want_w, want_a = ref.competitive_step(
+        jnp.asarray(w), jnp.asarray(x), jnp.float32(eta)
+    )
+    assert_allclose(np.asarray(new_w), np.asarray(want_w), rtol=2e-5, atol=1e-6)
+    assert_allclose(np.asarray(acts), np.asarray(want_a), rtol=1e-5)
+
+
+def test_kmeans_infer_is_pure():
+    r = np.random.default_rng(11)
+    w = r.standard_normal((ref.N_CLUSTERS, ref.FEAT_DIM)).astype(np.float32)
+    x = r.standard_normal(ref.FEAT_DIM).astype(np.float32)
+    (acts,) = model.kmeans_infer(w, x)
+    want = -np.sum((w - x[None, :]) ** 2, axis=-1)
+    assert_allclose(np.asarray(acts), want, rtol=1e-4)
+
+
+# -------------------------------------------------------- diversity_repr
+@SET
+@given(seed=st.integers(0, 2**31 - 1))
+def test_diversity_repr_matches_ref(seed):
+    r = np.random.default_rng(seed)
+    b = r.standard_normal((ref.KLAST, ref.FEAT_DIM)).astype(np.float32)
+    bp = r.standard_normal((ref.KLAST, ref.FEAT_DIM)).astype(np.float32)
+    x = r.standard_normal(ref.FEAT_DIM).astype(np.float32)
+    (out,) = model.diversity_repr(b, bp, x)
+    out = np.asarray(out)
+    bx = jnp.concatenate([jnp.asarray(b), jnp.asarray(x)[None, :]])
+    assert_allclose(out[0], float(ref.diversity(jnp.asarray(b))), rtol=1e-4)
+    assert_allclose(out[1], float(ref.diversity(bx)), rtol=1e-4)
+    assert_allclose(
+        out[2],
+        float(ref.representation(jnp.asarray(b), jnp.asarray(bp))),
+        rtol=1e-4,
+    )
+    assert_allclose(
+        out[3], float(ref.representation(bx, jnp.asarray(bp))), rtol=1e-4
+    )
+
+
+# ----------------------------------------------------- AOT export contract
+def test_export_specs_cover_all_payloads():
+    specs = model.export_specs()
+    assert set(specs) == {
+        "extract",
+        "knn_learn",
+        "knn_infer",
+        "knn_infer_batch",
+        "kmeans_learn",
+        "kmeans_infer",
+        "diversity_repr",
+    }
+
+
+def test_export_specs_lowerable_and_shapes():
+    """Every payload must lower with its example args and produce the
+    output shapes the rust runtime expects."""
+    specs = model.export_specs()
+    out_shapes = {
+        "extract": [(ref.CHANNELS, 8)],
+        "knn_learn": [(ref.N_BUF,), ()],
+        "knn_infer": [()],
+        "knn_infer_batch": [(ref.BATCH,)],
+        "kmeans_learn": [(ref.N_CLUSTERS, ref.FEAT_DIM), (ref.N_CLUSTERS,)],
+        "kmeans_infer": [(ref.N_CLUSTERS,)],
+        "diversity_repr": [(4,)],
+    }
+    for name, (fn, args) in specs.items():
+        outs = jax.eval_shape(fn, *args)
+        got = [tuple(o.shape) for o in outs]
+        assert got == out_shapes[name], name

@@ -1,0 +1,111 @@
+//! Ablation benches for the design choices DESIGN.md calls out: the
+//! planner's §4.3 search refinements (horizon L, admitted-example cap,
+//! discount γ) and the select-gate expectation. Each row is a full 4 h
+//! vibration run; the interesting outputs are accuracy, learned count and
+//! planner decision latency.
+//!
+//!     cargo bench --bench ablations
+
+use ilearn::actions::Action;
+use ilearn::apps::{AppConfig, AppKind};
+use ilearn::backend::native::NativeBackend;
+use ilearn::energy::CostModel;
+use ilearn::learning::KnnAnomalyLearner;
+use ilearn::planner::{DynamicActionPlanner, PlanContext, PlannerConfig};
+use ilearn::selection::Heuristic;
+use ilearn::sim::engine::Engine;
+use ilearn::sim::PlannerScheduler;
+use ilearn::util::bench::{bench, black_box, time_once};
+
+const H: u64 = 3_600_000_000;
+
+fn run_with_planner(cfg_mod: impl Fn(&mut PlannerConfig)) -> ilearn::sim::RunResult {
+    let app = AppConfig::new(AppKind::Vibration, 42, 4 * H);
+    let mut pc = PlannerConfig::default();
+    cfg_mod(&mut pc);
+    let planner = DynamicActionPlanner::new(app.kind.goal(), pc);
+    let engine = Engine::new(
+        app.sim_config(),
+        app.build_harvester(),
+        app.build_capacitor(),
+        app.build_sensor(),
+        Box::new(KnnAnomalyLearner::new()),
+        Heuristic::RoundRobin.build(42),
+        Box::new(PlannerScheduler(planner)),
+        Box::new(NativeBackend::new()),
+        app.kind.cost_model(),
+    );
+    engine.run().unwrap()
+}
+
+fn main() {
+    println!("== ablation: planning horizon L (paper §4.3: L ~ longest path) ==");
+    println!(
+        "{:>3} {:>9} {:>9} {:>9} {:>12}",
+        "L", "mean_acc", "learned", "inferred", "decision_p50"
+    );
+    for horizon in [2usize, 4, 7, 10] {
+        let (r, _) = time_once("run", || run_with_planner(|c| c.horizon = horizon));
+        let mut planner = DynamicActionPlanner::default();
+        planner.cfg.horizon = horizon;
+        let costs = CostModel::kmeans();
+        let pending = vec![Action::Decide, Action::Sense];
+        let ctx = PlanContext {
+            learned_total: 50,
+            quality: 0.5,
+            window_learns: 1,
+            window_infers: 1,
+        };
+        let m = bench("d", 60, || {
+            black_box(planner.next_action(&pending, &ctx, &costs));
+        });
+        println!(
+            "{:>3} {:>9.2} {:>9} {:>9} {:>10.1}us",
+            horizon,
+            r.mean_accuracy(3),
+            r.learned,
+            r.inferred,
+            m.p50_ns / 1000.0
+        );
+    }
+
+    println!("\n== ablation: admitted-example cap (paper uses 2 in §7.5) ==");
+    for cap in [1usize, 2, 3] {
+        let (r, m) = time_once("run", || run_with_planner(|c| c.max_admitted = cap));
+        println!(
+            "cap={cap}: mean_acc {:.2} learned {} inferred {} (run wall {})",
+            r.mean_accuracy(3),
+            r.learned,
+            r.inferred,
+            ilearn::util::bench::fmt_ns(m.mean_ns)
+        );
+    }
+
+    println!("\n== ablation: discount gamma (procrastination guard) ==");
+    for gamma in [1.0f64, 0.95, 0.85, 0.6] {
+        let (r, _) = time_once("run", || run_with_planner(|c| c.gamma = gamma));
+        println!(
+            "gamma={gamma:.2}: mean_acc {:.2} learned {} inferred {} (gamma=1.0 shows the receding-horizon procrastination pathology)",
+            r.mean_accuracy(3),
+            r.learned,
+            r.inferred,
+        );
+    }
+
+    println!("\n== ablation: planner vs fixed duty cycles on identical world ==");
+    for (name, sched) in [
+        ("planner", ilearn::apps::SchedulerKind::Planner),
+        ("alpaca:50", ilearn::apps::SchedulerKind::Alpaca { learn_pct: 0.5 }),
+        ("alpaca:90", ilearn::apps::SchedulerKind::Alpaca { learn_pct: 0.9 }),
+    ] {
+        let mut app = AppConfig::new(AppKind::Vibration, 42, 4 * H);
+        app.scheduler = sched;
+        let (r, _) = time_once("run", || app.build_engine().unwrap().run().unwrap());
+        println!(
+            "{name:>10}: mean_acc {:.2} learned {:>5} energy {:>8.1} mJ",
+            r.mean_accuracy(3),
+            r.learned,
+            r.energy_uj / 1000.0
+        );
+    }
+}

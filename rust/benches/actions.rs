@@ -1,0 +1,126 @@
+//! Bench: per-action payload latency + planner/selection overhead
+//! (regenerates the measured columns behind paper Figs. 16 & 17).
+//!
+//!     cargo bench --bench actions
+
+use ilearn::actions::Action;
+use ilearn::backend::native::NativeBackend;
+use ilearn::backend::shapes::*;
+use ilearn::backend::ComputeBackend;
+use ilearn::energy::CostModel;
+use ilearn::learning::Example;
+use ilearn::planner::{DynamicActionPlanner, PlanContext};
+use ilearn::selection::{Heuristic, Selector};
+use ilearn::util::bench::{bench, black_box};
+use ilearn::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let mut be = NativeBackend::new();
+
+    let mut ex = vec![0.0f32; N_BUF * FEAT_DIM];
+    let mut mask = vec![0.0f32; N_BUF];
+    for i in 0..48 {
+        mask[i] = 1.0;
+        for j in 0..FEAT_DIM {
+            ex[i * FEAT_DIM + j] = rng.normal(0.0, 3.0) as f32;
+        }
+    }
+    let x: Vec<f32> = (0..FEAT_DIM).map(|_| rng.normal(0.0, 3.0) as f32).collect();
+    let w: Vec<f32> = (0..N_CLUSTERS * FEAT_DIM)
+        .map(|_| rng.normal(0.0, 1.0) as f32)
+        .collect();
+    let window: Vec<f32> = (0..WINDOW * CHANNELS)
+        .map(|_| rng.normal(0.0, 1.0) as f32)
+        .collect();
+
+    println!("== native payloads (fig16 measured column) ==");
+    println!(
+        "{}",
+        bench("extract (64x4 window)", 150, || {
+            black_box(be.extract(&window).unwrap());
+        })
+        .row()
+    );
+    println!(
+        "{}",
+        bench("knn_learn (48/64 examples)", 300, || {
+            black_box(be.knn_learn(&ex, &mask).unwrap());
+        })
+        .row()
+    );
+    println!(
+        "{}",
+        bench("knn_infer", 150, || {
+            black_box(be.knn_infer(&ex, &mask, &x).unwrap());
+        })
+        .row()
+    );
+    println!(
+        "{}",
+        bench("kmeans_learn", 150, || {
+            black_box(be.kmeans_learn(&w, &x, 0.15).unwrap());
+        })
+        .row()
+    );
+    println!(
+        "{}",
+        bench("kmeans_infer", 150, || {
+            black_box(be.kmeans_infer(&w, &x).unwrap());
+        })
+        .row()
+    );
+
+    println!("\n== planner decision latency (fig17 measured column) ==");
+    let costs = CostModel::kmeans();
+    for admitted in [1usize, 2, 3] {
+        let mut planner = DynamicActionPlanner::default();
+        planner.cfg.max_admitted = admitted;
+        let pending: Vec<Action> = (0..admitted.min(2)).map(|_| Action::Decide).collect();
+        let ctx = PlanContext {
+            learned_total: 50,
+            quality: 0.6,
+            window_learns: 1,
+            window_infers: 2,
+        };
+        println!(
+            "{}",
+            bench(&format!("planner.next_action (admitted={admitted})"), 150, || {
+                black_box(planner.next_action(&pending, &ctx, &costs));
+            })
+            .row()
+        );
+    }
+
+    println!("\n== selection heuristics (fig17) ==");
+    for h in Heuristic::ALL {
+        let mut sel = h.build(7);
+        let mut i = 0u64;
+        println!(
+            "{}",
+            bench(&format!("select/{}", h.name()), 150, || {
+                i += 1;
+                let mut f = x.clone();
+                f[0] += (i % 17) as f32 * 0.3;
+                let e = Example::new(f, i, false);
+                black_box(sel.select(&e, &mut be).unwrap());
+            })
+            .row()
+        );
+    }
+
+    println!("\n== paper cost-model anchors ==");
+    for m in [CostModel::knn(), CostModel::kmeans()] {
+        for a in [Action::Sense, Action::Extract, Action::Learn, Action::Infer] {
+            let c = m.cost(a);
+            println!(
+                "{:<8} {:<8} {:>10.1} uJ {:>10.2} ms (splits {})",
+                m.name,
+                a.name(),
+                c.energy_uj,
+                c.time_us as f64 / 1000.0,
+                c.splits
+            );
+        }
+    }
+}

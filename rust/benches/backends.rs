@@ -1,0 +1,125 @@
+//! Bench: native vs PJRT dispatch cost per payload, and the batching
+//! lever (§Perf): how much of the PJRT per-call overhead the batched
+//! `knn_infer_batch` artifact amortizes.
+//!
+//!     make artifacts && cargo bench --bench backends
+
+use ilearn::backend::native::NativeBackend;
+use ilearn::backend::pjrt::PjrtBackend;
+use ilearn::backend::shapes::*;
+use ilearn::backend::ComputeBackend;
+use ilearn::util::bench::{bench, black_box};
+use ilearn::util::Rng;
+
+fn main() {
+    let mut rng = Rng::new(2);
+    let mut ex = vec![0.0f32; N_BUF * FEAT_DIM];
+    let mut mask = vec![0.0f32; N_BUF];
+    for i in 0..48 {
+        mask[i] = 1.0;
+        for j in 0..FEAT_DIM {
+            ex[i * FEAT_DIM + j] = rng.normal(0.0, 3.0) as f32;
+        }
+    }
+    let x: Vec<f32> = (0..FEAT_DIM).map(|_| rng.normal(0.0, 3.0) as f32).collect();
+    let xs: Vec<f32> = (0..BATCH * FEAT_DIM)
+        .map(|_| rng.normal(0.0, 3.0) as f32)
+        .collect();
+    let w: Vec<f32> = (0..N_CLUSTERS * FEAT_DIM)
+        .map(|_| rng.normal(0.0, 1.0) as f32)
+        .collect();
+    let window: Vec<f32> = (0..WINDOW * CHANNELS)
+        .map(|_| rng.normal(0.0, 1.0) as f32)
+        .collect();
+
+    let mut native = NativeBackend::new();
+    let pjrt = PjrtBackend::discover();
+    let mut pjrt = match pjrt {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("skipping pjrt benches: {e}");
+            return;
+        }
+    };
+
+    println!("== dispatch cost: native vs pjrt (same payloads) ==");
+    let rows: Vec<(String, f64, f64)> = vec![
+        (
+            "extract".into(),
+            bench("native", 150, || {
+                black_box(native.extract(&window).unwrap());
+            })
+            .p50_ns,
+            bench("pjrt", 400, || {
+                black_box(pjrt.extract(&window).unwrap());
+            })
+            .p50_ns,
+        ),
+        (
+            "knn_learn".into(),
+            bench("native", 300, || {
+                black_box(native.knn_learn(&ex, &mask).unwrap());
+            })
+            .p50_ns,
+            bench("pjrt", 500, || {
+                black_box(pjrt.knn_learn(&ex, &mask).unwrap());
+            })
+            .p50_ns,
+        ),
+        (
+            "knn_infer".into(),
+            bench("native", 150, || {
+                black_box(native.knn_infer(&ex, &mask, &x).unwrap());
+            })
+            .p50_ns,
+            bench("pjrt", 400, || {
+                black_box(pjrt.knn_infer(&ex, &mask, &x).unwrap());
+            })
+            .p50_ns,
+        ),
+        (
+            "kmeans_learn".into(),
+            bench("native", 150, || {
+                black_box(native.kmeans_learn(&w, &x, 0.15).unwrap());
+            })
+            .p50_ns,
+            bench("pjrt", 400, || {
+                black_box(pjrt.kmeans_learn(&w, &x, 0.15).unwrap());
+            })
+            .p50_ns,
+        ),
+    ];
+    println!(
+        "{:<14} {:>14} {:>14} {:>10}",
+        "payload", "native p50", "pjrt p50", "ratio"
+    );
+    for (name, n_ns, p_ns) in &rows {
+        println!(
+            "{:<14} {:>11.2} us {:>11.2} us {:>9.1}x",
+            name,
+            n_ns / 1000.0,
+            p_ns / 1000.0,
+            p_ns / n_ns.max(1.0)
+        );
+    }
+
+    println!("\n== batching lever: scalar vs batched knn_infer on pjrt ==");
+    let scalar = bench("pjrt knn_infer x16 (scalar loop)", 500, || {
+        for b in 0..BATCH {
+            black_box(
+                pjrt.knn_infer(&ex, &mask, &xs[b * FEAT_DIM..(b + 1) * FEAT_DIM])
+                    .unwrap(),
+            );
+        }
+    });
+    let batched = bench("pjrt knn_infer_batch (one dispatch)", 500, || {
+        black_box(pjrt.knn_infer_batch(&ex, &mask, &xs).unwrap());
+    });
+    println!("{}", scalar.row());
+    println!("{}", batched.row());
+    println!(
+        "batched dispatch is {:.1}x cheaper per example",
+        scalar.p50_ns / batched.p50_ns.max(1.0)
+    );
+    println!("\ntotal pjrt dispatches this run: {}", pjrt.dispatches);
+}

@@ -1,0 +1,39 @@
+//! Bench: end-to-end regeneration of every paper table & figure, timed.
+//! One entry per experiment in the DESIGN.md §4 index — this is the
+//! "one bench per paper table" harness.
+//!
+//!     cargo bench --bench figures            # all
+//!     cargo bench --bench figures fig9       # one
+
+use ilearn::eval::figures;
+use ilearn::util::bench::time_once;
+
+fn main() {
+    // cargo bench passes harness flags like `--bench`; only treat bare
+    // words as figure filters
+    let filter: Option<String> = std::env::args()
+        .skip(1)
+        .find(|a| !a.starts_with('-'));
+    let seed = 42;
+    let mut total_s = 0.0;
+    for id in figures::FIGURE_IDS {
+        if let Some(f) = &filter {
+            if !id.contains(f.as_str()) {
+                continue;
+            }
+        }
+        let (result, m) = time_once(id, || figures::generate(id, seed));
+        total_s += m.mean_ns / 1e9;
+        match result {
+            Ok(fig) => {
+                println!("{}", fig.render());
+                println!("[bench] {}\n", m.row());
+            }
+            Err(e) => {
+                eprintln!("[bench] {id} FAILED: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    println!("[bench] total figure regeneration time: {total_s:.1}s");
+}

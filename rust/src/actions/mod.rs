@@ -1,0 +1,181 @@
+//! The eight action primitives (paper Table 1) and the action state
+//! diagram (Fig. 3) that constrains their per-example execution order.
+//!
+//! An *action* is the unit of atomic intermittent execution: it either
+//! runs to completion on one capacitor charge (possibly as several
+//! sub-actions, §3.4) or its intermediate results are discarded and it
+//! restarts after the next power-up (§3.5 programming model).
+
+use std::fmt;
+
+/// The action primitives of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Action {
+    /// Sense and convert data to an example.
+    Sense,
+    /// Extract features from an example.
+    Extract,
+    /// Decide to learn or infer.
+    Decide,
+    /// Determine whether a training example increases learning performance.
+    Select,
+    /// Check prerequisites of a learn action.
+    Learnable,
+    /// Execute a learning algorithm intermittently.
+    Learn,
+    /// Evaluate the learning performance.
+    Evaluate,
+    /// Make an inference using the current model.
+    Infer,
+}
+
+impl Action {
+    /// All actions, in state-diagram order.
+    pub const ALL: [Action; 8] = [
+        Action::Sense,
+        Action::Extract,
+        Action::Decide,
+        Action::Select,
+        Action::Learnable,
+        Action::Learn,
+        Action::Evaluate,
+        Action::Infer,
+    ];
+
+    /// Successor actions per the action state diagram (Fig. 3).
+    ///
+    /// `sense → extract → decide → {select → learnable → learn → evaluate}
+    /// | {infer}`; `evaluate` and `infer` are terminal (the example then
+    /// leaves the system). `select` and `learnable` may also terminate an
+    /// example early (discard), which is modelled by the planner as the
+    /// example leaving the system rather than by an edge here.
+    pub fn next(self) -> &'static [Action] {
+        match self {
+            Action::Sense => &[Action::Extract],
+            Action::Extract => &[Action::Decide],
+            Action::Decide => &[Action::Select, Action::Infer],
+            Action::Select => &[Action::Learnable],
+            Action::Learnable => &[Action::Learn],
+            Action::Learn => &[Action::Evaluate],
+            Action::Evaluate => &[],
+            Action::Infer => &[],
+        }
+    }
+
+    /// Can `to` legally follow `self` for the same example?
+    pub fn can_precede(self, to: Action) -> bool {
+        self.next().contains(&to)
+    }
+
+    /// Actions whose result is a boolean gate that may discard the example
+    /// (used by the planner's "bypass boolean actions at random" search
+    /// refinement, §4.3).
+    pub fn is_boolean_gate(self) -> bool {
+        matches!(self, Action::Select | Action::Learnable | Action::Decide)
+    }
+
+    /// Length of the longest path in the state diagram starting from
+    /// `sense` (= 7 actions: sense, extract, decide, select, learnable,
+    /// learn, evaluate). The paper recommends the planning horizon L be on
+    /// this order (§4.3).
+    pub fn longest_path_len() -> usize {
+        7
+    }
+
+    /// Static name (for cost tables, logs, figures).
+    pub fn name(self) -> &'static str {
+        match self {
+            Action::Sense => "sense",
+            Action::Extract => "extract",
+            Action::Decide => "decide",
+            Action::Select => "select",
+            Action::Learnable => "learnable",
+            Action::Learn => "learn",
+            Action::Evaluate => "evaluate",
+            Action::Infer => "infer",
+        }
+    }
+
+    /// Parse from the CLI / config name.
+    pub fn parse(s: &str) -> Option<Action> {
+        Action::ALL.iter().copied().find(|a| a.name() == s)
+    }
+}
+
+impl fmt::Display for Action {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Phase groups of Fig. 3 (acquiring / learning / evaluating).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Acquiring,
+    Learning,
+    Evaluating,
+}
+
+impl Action {
+    /// Which Fig. 3 group an action belongs to.
+    pub fn phase(self) -> Phase {
+        match self {
+            Action::Sense | Action::Extract => Phase::Acquiring,
+            Action::Decide | Action::Select | Action::Learnable | Action::Learn => {
+                Phase::Learning
+            }
+            Action::Evaluate | Action::Infer => Phase::Evaluating,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagram_has_no_cycles() {
+        // DFS from sense must terminate; collect max depth.
+        fn depth(a: Action, seen: &mut Vec<Action>) -> usize {
+            assert!(!seen.contains(&a), "cycle at {a}");
+            seen.push(a);
+            let d = a
+                .next()
+                .iter()
+                .map(|&n| depth(n, seen))
+                .max()
+                .unwrap_or(0);
+            seen.pop();
+            d + 1
+        }
+        assert_eq!(depth(Action::Sense, &mut vec![]), Action::longest_path_len());
+    }
+
+    #[test]
+    fn decide_branches_to_learn_or_infer_paths() {
+        assert!(Action::Decide.can_precede(Action::Select));
+        assert!(Action::Decide.can_precede(Action::Infer));
+        assert!(!Action::Decide.can_precede(Action::Learn));
+    }
+
+    #[test]
+    fn terminals_have_no_successors() {
+        assert!(Action::Evaluate.next().is_empty());
+        assert!(Action::Infer.next().is_empty());
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        for a in Action::ALL {
+            assert_eq!(Action::parse(a.name()), Some(a));
+        }
+        assert_eq!(Action::parse("bogus"), None);
+    }
+
+    #[test]
+    fn phases_cover_fig3_grouping() {
+        assert_eq!(Action::Sense.phase(), Phase::Acquiring);
+        assert_eq!(Action::Learn.phase(), Phase::Learning);
+        assert_eq!(Action::Infer.phase(), Phase::Evaluating);
+    }
+}

@@ -1,0 +1,96 @@
+//! Compute-backend abstraction for the numeric action payloads.
+//!
+//! Every learner dispatches its `extract` / `learn` / `infer` math through
+//! [`ComputeBackend`]. Two implementations:
+//!
+//! * [`native::NativeBackend`] — pure-rust transcription of the same math
+//!   (semantically identical to `python/compile/kernels/ref.py`), used for
+//!   the large figure sweeps where millions of payload calls are made;
+//! * [`pjrt::PjrtBackend`] — executes the AOT HLO artifacts produced by
+//!   `python/compile/aot.py` on the PJRT CPU client, proving the
+//!   L1 (Pallas) → L2 (JAX) → L3 (rust) stack composes end-to-end.
+//!
+//! Integration tests assert both backends agree within float tolerance on
+//! random inputs, which transitively pins the native path to the Pallas
+//! kernels (pytest pins kernels ↔ ref, `backend_parity` pins pjrt ↔
+//! native).
+
+pub mod native;
+pub mod pjrt;
+
+use crate::error::Result;
+
+/// Canonical artifact shapes — must match `python/compile/kernels/ref.py`.
+pub mod shapes {
+    /// Samples per sensing window.
+    pub const WINDOW: usize = 64;
+    /// Sensor channels in the artifact (apps use a prefix, rest zero).
+    pub const CHANNELS: usize = 4;
+    /// Features per channel emitted by `extract`.
+    pub const N_FEATURES: usize = 8;
+    /// Flattened example dimension.
+    pub const FEAT_DIM: usize = CHANNELS * N_FEATURES;
+    /// k-NN example-buffer capacity.
+    pub const N_BUF: usize = 64;
+    /// Paper's k for the anomaly score.
+    pub const K_NEIGHBORS: usize = 3;
+    /// Clusters of the NN-k-means learner (normal / abnormal).
+    pub const N_CLUSTERS: usize = 2;
+    /// Anomaly-threshold percentile.
+    pub const PCTL: f64 = 0.9;
+    /// Batched-inference width.
+    pub const BATCH: usize = 16;
+    /// k-last-lists list length.
+    pub const KLAST: usize = 4;
+}
+
+/// Numeric payloads of the learning actions. All buffers are row-major
+/// f32 at the canonical shapes above.
+///
+/// Not `Send`: the PJRT client is thread-pinned; parallel sweeps build one
+/// engine (and backend) per worker thread instead of sharing one.
+pub trait ComputeBackend {
+    /// `extract`: (WINDOW, CHANNELS) window -> (CHANNELS * N_FEATURES)
+    /// flattened feature matrix.
+    fn extract(&mut self, window: &[f32]) -> Result<Vec<f32>>;
+
+    /// k-NN `learn`: (N_BUF, FEAT_DIM) examples + (N_BUF) validity mask ->
+    /// (per-example anomaly scores, 90th-percentile threshold).
+    fn knn_learn(&mut self, examples: &[f32], mask: &[f32]) -> Result<(Vec<f32>, f32)>;
+
+    /// k-NN `infer`: anomaly score of one example against the buffer.
+    fn knn_infer(&mut self, examples: &[f32], mask: &[f32], x: &[f32]) -> Result<f32>;
+
+    /// Batched k-NN `infer` ((BATCH, FEAT_DIM) queries).
+    fn knn_infer_batch(
+        &mut self,
+        examples: &[f32],
+        mask: &[f32],
+        xs: &[f32],
+    ) -> Result<Vec<f32>>;
+
+    /// k-means `learn`: one competitive step -> (new weights, activations).
+    fn kmeans_learn(&mut self, w: &[f32], x: &[f32], eta: f32)
+        -> Result<(Vec<f32>, Vec<f32>)>;
+
+    /// k-means `infer`: cluster activations.
+    fn kmeans_infer(&mut self, w: &[f32], x: &[f32]) -> Result<Vec<f32>>;
+
+    /// k-last-lists scores: [div(B), div(B+x), rep(B,B'), rep(B+x,B')].
+    fn diversity_repr(&mut self, b: &[f32], bp: &[f32], x: &[f32]) -> Result<[f32; 4]>;
+
+    /// Backend name for logs/benches.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::shapes::*;
+
+    #[test]
+    fn shapes_are_consistent() {
+        assert_eq!(FEAT_DIM, CHANNELS * N_FEATURES);
+        assert!(K_NEIGHBORS < N_BUF);
+        assert!(KLAST < N_BUF);
+    }
+}

@@ -1,0 +1,465 @@
+//! Pure-rust compute backend — a transcription of the oracle math in
+//! `python/compile/kernels/ref.py` (same masking, same "enough
+//! neighbours" rule, same ceil-percentile threshold), used for the large
+//! simulation sweeps where PJRT dispatch overhead would dominate.
+//!
+//! Parity with [`super::pjrt::PjrtBackend`] is asserted by the
+//! `backend_parity` integration test.
+
+use super::shapes::*;
+use super::ComputeBackend;
+use crate::error::Result;
+use crate::util::stats;
+
+/// Cached pairwise-distance matrix for `knn_learn` (§Perf): each learn
+/// replaces one ring-buffer slot, so instead of the O(N²F) full recompute
+/// the backend diffs the example buffer against the previous call and
+/// refreshes only the changed rows/columns (O(ΔN·N·F)), then rebuilds the
+/// O(N²) score pass. Distances per pair are computed by the same
+/// `stats::euclidean`, so results are bit-identical to the full recompute
+/// (asserted by `knn_learn_cache_matches_full_recompute`).
+#[derive(Debug, Default, Clone)]
+struct KnnMatrixCache {
+    examples: Vec<f32>,
+    mask: Vec<f32>,
+    /// (N_BUF, N_BUF) Euclidean distances (diagonal = 0, unmasked).
+    d: Vec<f32>,
+}
+
+/// Pure-rust backend (no external state).
+#[derive(Debug, Default, Clone)]
+pub struct NativeBackend {
+    /// Scratch distance row reused across `knn_infer` calls (perf: avoids
+    /// one allocation per inference on the hot path).
+    scratch: Vec<f32>,
+    /// Scratch channel buffer reused across `extract` calls.
+    ch_scratch: Vec<f32>,
+    /// Incremental distance-matrix cache for `knn_learn`.
+    knn_cache: Option<KnnMatrixCache>,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Sum of the k smallest values in `d` (ignores +inf entries).
+    fn k_smallest_sum(d: &[f32], k: usize) -> f32 {
+        // selection by partial insertion: k is tiny (3)
+        let mut best = [f32::INFINITY; 8];
+        let k = k.min(8);
+        for &v in d {
+            if v < best[k - 1] {
+                // insert into sorted prefix
+                let mut i = k - 1;
+                while i > 0 && best[i - 1] > v {
+                    best[i] = best[i - 1];
+                    i -= 1;
+                }
+                best[i] = v;
+            }
+        }
+        best[..k].iter().filter(|v| v.is_finite()).sum()
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn extract(&mut self, window: &[f32]) -> Result<Vec<f32>> {
+        debug_assert_eq!(window.len(), WINDOW * CHANNELS);
+        let mut out = vec![0.0f32; CHANNELS * N_FEATURES];
+        // §Perf: fused single pass per channel (was 7 separate passes +
+        // an allocation inside `median`); see EXPERIMENTS.md §Perf.
+        let mut ch_buf = std::mem::take(&mut self.ch_scratch);
+        ch_buf.resize(WINDOW, 0.0);
+        for ch in 0..CHANNELS {
+            // gather the channel and accumulate the one-pass moments
+            let mut sum = 0.0f64;
+            let mut sq = 0.0f64;
+            let mut abs = 0.0f64;
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            let mut adiff = 0.0f64;
+            let mut prev = window[ch];
+            for r in 0..WINDOW {
+                let v = window[r * CHANNELS + ch];
+                ch_buf[r] = v;
+                let vd = v as f64;
+                sum += vd;
+                sq += vd * vd;
+                abs += vd.abs();
+                lo = lo.min(v);
+                hi = hi.max(v);
+                adiff += (v - prev).abs() as f64;
+                prev = v;
+            }
+            let n = WINDOW as f64;
+            let mean = (sum / n) as f32;
+            // zero crossings around the mean need a second (cheap) sweep
+            let mut crossings = 0u32;
+            let mut psign = ch_buf[0] >= mean;
+            for r in 1..WINDOW {
+                let s = ch_buf[r] >= mean;
+                crossings += (s != psign) as u32;
+                psign = s;
+            }
+            ch_buf.sort_unstable_by(|a, b| a.total_cmp(b));
+            let med = 0.5 * (ch_buf[WINDOW / 2 - 1] + ch_buf[WINDOW / 2]);
+
+            let f = &mut out[ch * N_FEATURES..(ch + 1) * N_FEATURES];
+            f[0] = mean;
+            f[1] = ((sq / n - (sum / n) * (sum / n)).max(0.0)).sqrt() as f32;
+            f[2] = med;
+            f[3] = (sq / n).sqrt() as f32;
+            f[4] = hi - lo;
+            f[5] = crossings as f32 / (WINDOW - 1) as f32;
+            f[6] = (adiff / (WINDOW - 1) as f64) as f32;
+            f[7] = (abs / n) as f32;
+        }
+        self.ch_scratch = ch_buf;
+        Ok(out)
+    }
+
+    fn knn_learn(&mut self, examples: &[f32], mask: &[f32]) -> Result<(Vec<f32>, f32)> {
+        debug_assert_eq!(examples.len(), N_BUF * FEAT_DIM);
+        debug_assert_eq!(mask.len(), N_BUF);
+        let cnt = mask.iter().filter(|&&m| m > 0.5).count();
+        let mut scores = vec![0.0f32; N_BUF];
+        if cnt <= K_NEIGHBORS {
+            // model undefined; drop any cache (cheap) and bail
+            return Ok((scores, 0.0));
+        }
+
+        // ---- incremental distance-matrix maintenance (§Perf) ----------
+        let cache_ok = self
+            .knn_cache
+            .as_ref()
+            .map(|c| c.examples.len() == examples.len())
+            .unwrap_or(false);
+        let mut cache = if cache_ok {
+            self.knn_cache.take().unwrap()
+        } else {
+            KnnMatrixCache {
+                examples: vec![f32::NAN; N_BUF * FEAT_DIM],
+                mask: vec![f32::NAN; N_BUF],
+                d: vec![0.0; N_BUF * N_BUF],
+            }
+        };
+        // rows whose features changed since the cached call
+        let mut changed: Vec<usize> = Vec::new();
+        for i in 0..N_BUF {
+            if cache.examples[i * FEAT_DIM..(i + 1) * FEAT_DIM]
+                != examples[i * FEAT_DIM..(i + 1) * FEAT_DIM]
+            {
+                changed.push(i);
+            }
+        }
+        for &i in &changed {
+            let xi = &examples[i * FEAT_DIM..(i + 1) * FEAT_DIM];
+            for j in 0..N_BUF {
+                let v = if j == i {
+                    0.0
+                } else {
+                    stats::euclidean(xi, &examples[j * FEAT_DIM..(j + 1) * FEAT_DIM])
+                };
+                cache.d[i * N_BUF + j] = v;
+                cache.d[j * N_BUF + i] = v;
+            }
+        }
+        cache.examples.copy_from_slice(examples);
+        cache.mask.copy_from_slice(mask);
+
+        // ---- O(N^2) score pass over the cached matrix ------------------
+        // K_NEIGHBORS = 3 is baked into the unrolled min-insertion below;
+        // the const assert keeps the shortcut honest.
+        const { assert!(K_NEIGHBORS == 3) };
+        for i in 0..N_BUF {
+            if mask[i] <= 0.5 {
+                continue;
+            }
+            let base = i * N_BUF;
+            let (mut b0, mut b1, mut b2) = (f32::INFINITY, f32::INFINITY, f32::INFINITY);
+            for j in 0..N_BUF {
+                if j == i || mask[j] <= 0.5 {
+                    continue;
+                }
+                let v = cache.d[base + j];
+                if v < b2 {
+                    if v < b1 {
+                        b2 = b1;
+                        if v < b0 {
+                            b1 = b0;
+                            b0 = v;
+                        } else {
+                            b1 = v;
+                        }
+                    } else {
+                        b2 = v;
+                    }
+                }
+            }
+            let mut sum = 0.0;
+            for b in [b0, b1, b2] {
+                if b.is_finite() {
+                    sum += b;
+                }
+            }
+            scores[i] = sum;
+        }
+        self.knn_cache = Some(cache);
+
+        let valid: Vec<f32> = (0..N_BUF).filter(|&i| mask[i] > 0.5).map(|i| scores[i]).collect();
+        let thr = stats::percentile(&valid, PCTL);
+        Ok((scores, thr))
+    }
+
+    fn knn_infer(&mut self, examples: &[f32], mask: &[f32], x: &[f32]) -> Result<f32> {
+        debug_assert_eq!(x.len(), FEAT_DIM);
+        let cnt = mask.iter().filter(|&&m| m > 0.5).count();
+        if cnt < K_NEIGHBORS {
+            return Ok(0.0);
+        }
+        let mut row = std::mem::take(&mut self.scratch);
+        row.clear();
+        row.resize(N_BUF, f32::INFINITY);
+        for j in 0..N_BUF {
+            if mask[j] > 0.5 {
+                row[j] = stats::euclidean(x, &examples[j * FEAT_DIM..(j + 1) * FEAT_DIM]);
+            }
+        }
+        let s = Self::k_smallest_sum(&row, K_NEIGHBORS);
+        self.scratch = row;
+        Ok(s)
+    }
+
+    fn knn_infer_batch(
+        &mut self,
+        examples: &[f32],
+        mask: &[f32],
+        xs: &[f32],
+    ) -> Result<Vec<f32>> {
+        debug_assert_eq!(xs.len(), BATCH * FEAT_DIM);
+        (0..BATCH)
+            .map(|b| self.knn_infer(examples, mask, &xs[b * FEAT_DIM..(b + 1) * FEAT_DIM]))
+            .collect()
+    }
+
+    fn kmeans_learn(
+        &mut self,
+        w: &[f32],
+        x: &[f32],
+        eta: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        debug_assert_eq!(w.len(), N_CLUSTERS * FEAT_DIM);
+        debug_assert_eq!(x.len(), FEAT_DIM);
+        let acts = self.kmeans_infer(w, x)?;
+        let winner = acts
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let mut new_w = w.to_vec();
+        let row = &mut new_w[winner * FEAT_DIM..(winner + 1) * FEAT_DIM];
+        for i in 0..FEAT_DIM {
+            row[i] += eta * (x[i] - row[i]);
+        }
+        Ok((new_w, acts))
+    }
+
+    fn kmeans_infer(&mut self, w: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        // Activation a_j = -||x - w_j||^2 (see kernels/ref.py for why the
+        // distance form replaces the paper's raw dot product).
+        let mut acts = vec![0.0f32; N_CLUSTERS];
+        for k in 0..N_CLUSTERS {
+            let wk = &w[k * FEAT_DIM..(k + 1) * FEAT_DIM];
+            acts[k] = -stats::sq_euclidean(x, wk);
+        }
+        Ok(acts)
+    }
+
+    fn diversity_repr(&mut self, b: &[f32], bp: &[f32], x: &[f32]) -> Result<[f32; 4]> {
+        debug_assert_eq!(b.len(), KLAST * FEAT_DIM);
+        debug_assert_eq!(bp.len(), KLAST * FEAT_DIM);
+        let row = |set: &[f32], i: usize| -> Vec<f32> {
+            set[i * FEAT_DIM..(i + 1) * FEAT_DIM].to_vec()
+        };
+        let mut bx: Vec<Vec<f32>> = (0..KLAST).map(|i| row(b, i)).collect();
+        bx.push(x.to_vec());
+        let bset: Vec<Vec<f32>> = (0..KLAST).map(|i| row(b, i)).collect();
+        let bpset: Vec<Vec<f32>> = (0..KLAST).map(|i| row(bp, i)).collect();
+
+        let div = |s: &[Vec<f32>]| -> f32 {
+            let k = s.len();
+            let mut sum = 0.0f64;
+            for a in s {
+                for c in s {
+                    sum += stats::euclidean(a, c) as f64;
+                }
+            }
+            (sum / (k * k) as f64) as f32
+        };
+        let rep = |s: &[Vec<f32>], t: &[Vec<f32>]| -> f32 {
+            let mut sum = 0.0f64;
+            for a in s {
+                for c in t {
+                    sum += stats::euclidean(a, c) as f64;
+                }
+            }
+            (sum / (s.len() * t.len()) as f64) as f32
+        };
+        Ok([div(&bset), div(&bx), rep(&bset, &bpset), rep(&bx, &bpset)])
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn filled_buffer(rng: &mut Rng, count: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut ex = vec![0.0f32; N_BUF * FEAT_DIM];
+        let mut mask = vec![0.0f32; N_BUF];
+        for i in 0..count {
+            mask[i] = 1.0;
+            for j in 0..FEAT_DIM {
+                ex[i * FEAT_DIM + j] = rng.normal(0.0, 3.0) as f32;
+            }
+        }
+        (ex, mask)
+    }
+
+    #[test]
+    fn knn_learn_threshold_brackets_scores() {
+        let mut be = NativeBackend::new();
+        let mut rng = Rng::new(1);
+        let (ex, mask) = filled_buffer(&mut rng, 40);
+        let (scores, thr) = be.knn_learn(&ex, &mask).unwrap();
+        let valid: Vec<f32> = scores[..40].to_vec();
+        let above = valid.iter().filter(|&&s| s > thr).count();
+        // 90th percentile: ~10% strictly above
+        assert!(above <= 5, "above {above}");
+        assert!(thr > 0.0);
+        // padded rows untouched
+        assert!(scores[40..].iter().all(|&s| s == 0.0));
+    }
+
+    #[test]
+    fn knn_learn_cache_matches_full_recompute() {
+        // the incremental matrix cache must give bit-identical results to
+        // a fresh backend's full recompute, across ring-buffer updates
+        let mut cached = NativeBackend::new();
+        let mut rng = Rng::new(99);
+        let (mut ex, mut mask) = filled_buffer(&mut rng, 20);
+        let mut slot = 20usize;
+        for step in 0..30 {
+            // mutate one ring slot like the learner does
+            for j in 0..FEAT_DIM {
+                ex[slot * FEAT_DIM + j] = rng.normal(0.0, 3.0) as f32;
+            }
+            mask[slot] = 1.0;
+            slot = (slot + 1) % N_BUF;
+            let (s_inc, t_inc) = cached.knn_learn(&ex, &mask).unwrap();
+            let mut fresh = NativeBackend::new();
+            let (s_full, t_full) = fresh.knn_learn(&ex, &mask).unwrap();
+            assert_eq!(s_inc, s_full, "scores diverged at step {step}");
+            assert_eq!(t_inc, t_full, "threshold diverged at step {step}");
+        }
+    }
+
+    #[test]
+    fn knn_learn_insufficient_examples() {
+        let mut be = NativeBackend::new();
+        let mut rng = Rng::new(2);
+        let (ex, mask) = filled_buffer(&mut rng, K_NEIGHBORS);
+        let (scores, thr) = be.knn_learn(&ex, &mask).unwrap();
+        assert!(scores.iter().all(|&s| s == 0.0));
+        assert_eq!(thr, 0.0);
+    }
+
+    #[test]
+    fn knn_infer_far_point_scores_high() {
+        let mut be = NativeBackend::new();
+        let mut rng = Rng::new(3);
+        let (ex, mask) = filled_buffer(&mut rng, 30);
+        let near = ex[..FEAT_DIM].to_vec();
+        let far = vec![100.0f32; FEAT_DIM];
+        let s_near = be.knn_infer(&ex, &mask, &near).unwrap();
+        let s_far = be.knn_infer(&ex, &mask, &far).unwrap();
+        assert!(s_far > 10.0 * s_near.max(0.1));
+    }
+
+    #[test]
+    fn knn_batch_matches_scalar() {
+        let mut be = NativeBackend::new();
+        let mut rng = Rng::new(4);
+        let (ex, mask) = filled_buffer(&mut rng, 25);
+        let xs: Vec<f32> = (0..BATCH * FEAT_DIM)
+            .map(|_| rng.normal(0.0, 3.0) as f32)
+            .collect();
+        let batch = be.knn_infer_batch(&ex, &mask, &xs).unwrap();
+        for bidx in 0..BATCH {
+            let s = be
+                .knn_infer(&ex, &mask, &xs[bidx * FEAT_DIM..(bidx + 1) * FEAT_DIM])
+                .unwrap();
+            assert!((batch[bidx] - s).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn kmeans_learn_moves_winner_only() {
+        let mut be = NativeBackend::new();
+        let mut w = vec![0.0f32; N_CLUSTERS * FEAT_DIM];
+        w[0] = 1.0; // cluster 0 aligned with x
+        let mut x = vec![0.0f32; FEAT_DIM];
+        x[0] = 2.0;
+        x[1] = 2.0;
+        let (new_w, acts) = be.kmeans_learn(&w, &x, 0.5).unwrap();
+        assert!(acts[0] > acts[1]);
+        assert!((new_w[0] - 1.5).abs() < 1e-6);
+        assert!((new_w[1] - 1.0).abs() < 1e-6);
+        // cluster 1 untouched
+        assert!(new_w[FEAT_DIM..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn k_smallest_sum_matches_sort() {
+        let mut rng = Rng::new(5);
+        for _ in 0..50 {
+            let v: Vec<f32> = (0..20).map(|_| rng.f32() * 10.0).collect();
+            let mut sorted = v.clone();
+            sorted.sort_by(|a, b| a.total_cmp(b));
+            let want: f32 = sorted[..3].iter().sum();
+            let got = NativeBackend::k_smallest_sum(&v, 3);
+            assert!((got - want).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn diversity_repr_identical_sets() {
+        let mut be = NativeBackend::new();
+        let b = vec![1.0f32; KLAST * FEAT_DIM];
+        let bp = vec![1.0f32; KLAST * FEAT_DIM];
+        let x = vec![1.0f32; FEAT_DIM];
+        let out = be.diversity_repr(&b, &bp, &x).unwrap();
+        assert_eq!(out, [0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn extract_feature_layout() {
+        let mut be = NativeBackend::new();
+        // channel 0 constant 2.0, others zero
+        let mut win = vec![0.0f32; WINDOW * CHANNELS];
+        for r in 0..WINDOW {
+            win[r * CHANNELS] = 2.0;
+        }
+        let f = be.extract(&win).unwrap();
+        assert_eq!(f.len(), FEAT_DIM);
+        assert!((f[0] - 2.0).abs() < 1e-6); // mean ch0
+        assert!((f[3] - 2.0).abs() < 1e-6); // rms ch0
+        assert_eq!(f[N_FEATURES], 0.0); // mean ch1
+    }
+}

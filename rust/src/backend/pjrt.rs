@@ -1,0 +1,148 @@
+//! PJRT compute backend: every payload call executes the corresponding
+//! AOT HLO artifact (L1 Pallas kernel lowered through the L2 JAX model) on
+//! the PJRT CPU client. This is the backend that proves the three layers
+//! compose; the end-to-end example (`examples/end_to_end.rs`) and the
+//! parity integration tests run on it.
+//!
+//! §Perf: the k-NN example buffer (N_BUF×FEAT_DIM + mask ≈ 8.4 KB) only
+//! changes on `learn`, but is an input to every `infer` dispatch. The
+//! backend keeps it resident on the device and re-uploads only when the
+//! host copy changes, cutting per-inference host→device traffic to just
+//! the query vector. Measured effect in EXPERIMENTS.md §Perf.
+
+use super::shapes::*;
+use super::ComputeBackend;
+use crate::error::Result;
+use crate::runtime::{Arg, Runtime};
+
+/// Cached device residency for the k-NN buffer.
+struct KnnDeviceCache {
+    host_ex: Vec<f32>,
+    host_mask: Vec<f32>,
+    dev_ex: xla::PjRtBuffer,
+    dev_mask: xla::PjRtBuffer,
+}
+
+/// Backend that dispatches to compiled PJRT executables.
+pub struct PjrtBackend {
+    rt: Runtime,
+    knn_cache: Option<KnnDeviceCache>,
+    /// Number of artifact executions (for perf accounting in benches).
+    pub dispatches: u64,
+    /// Host→device uploads of the k-NN buffer avoided by the cache.
+    pub cache_hits: u64,
+}
+
+impl PjrtBackend {
+    /// Wrap a runtime; compiles all artifacts eagerly.
+    pub fn new(mut rt: Runtime) -> Result<Self> {
+        rt.preload()?;
+        Ok(PjrtBackend {
+            rt,
+            knn_cache: None,
+            dispatches: 0,
+            cache_hits: 0,
+        })
+    }
+
+    /// Discover artifacts relative to CWD.
+    pub fn discover() -> Result<Self> {
+        Self::new(Runtime::discover()?)
+    }
+
+    fn run(&mut self, name: &str, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.dispatches += 1;
+        self.rt.load(name)?.run(inputs)
+    }
+
+    /// Ensure the k-NN buffer is device-resident and current.
+    fn ensure_knn_cache(&mut self, examples: &[f32], mask: &[f32]) -> Result<()> {
+        let stale = match &self.knn_cache {
+            Some(c) => c.host_ex != examples || c.host_mask != mask,
+            None => true,
+        };
+        if stale {
+            let dev_ex = self.rt.upload(examples, &[N_BUF, FEAT_DIM])?;
+            let dev_mask = self.rt.upload(mask, &[N_BUF])?;
+            self.knn_cache = Some(KnnDeviceCache {
+                host_ex: examples.to_vec(),
+                host_mask: mask.to_vec(),
+                dev_ex,
+                dev_mask,
+            });
+        } else {
+            self.cache_hits += 1;
+        }
+        Ok(())
+    }
+
+    fn run_knn(&mut self, name: &str, extra: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.dispatches += 1;
+        let exe = self.rt.load(name)?;
+        let cache = self.knn_cache.as_ref().expect("cache ensured");
+        let mut args: Vec<Arg<'_>> = vec![
+            Arg::Device(&cache.dev_ex),
+            Arg::Device(&cache.dev_mask),
+        ];
+        args.extend(extra.iter().map(|x| Arg::Host(x)));
+        exe.run_args(&args)
+    }
+}
+
+impl ComputeBackend for PjrtBackend {
+    fn extract(&mut self, window: &[f32]) -> Result<Vec<f32>> {
+        let mut out = self.run("extract", &[window])?;
+        Ok(out.remove(0)) // (C, 8) row-major == flattened FEAT_DIM layout
+    }
+
+    fn knn_learn(&mut self, examples: &[f32], mask: &[f32]) -> Result<(Vec<f32>, f32)> {
+        self.ensure_knn_cache(examples, mask)?;
+        let mut out = self.run_knn("knn_learn", &[])?;
+        let thr = out[1][0];
+        Ok((out.remove(0), thr))
+    }
+
+    fn knn_infer(&mut self, examples: &[f32], mask: &[f32], x: &[f32]) -> Result<f32> {
+        self.ensure_knn_cache(examples, mask)?;
+        let out = self.run_knn("knn_infer", &[x])?;
+        Ok(out[0][0])
+    }
+
+    fn knn_infer_batch(
+        &mut self,
+        examples: &[f32],
+        mask: &[f32],
+        xs: &[f32],
+    ) -> Result<Vec<f32>> {
+        debug_assert_eq!(xs.len(), BATCH * FEAT_DIM);
+        self.ensure_knn_cache(examples, mask)?;
+        let mut out = self.run_knn("knn_infer_batch", &[xs])?;
+        Ok(out.remove(0))
+    }
+
+    fn kmeans_learn(
+        &mut self,
+        w: &[f32],
+        x: &[f32],
+        eta: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let eta_buf = [eta];
+        let mut out = self.run("kmeans_learn", &[w, x, &eta_buf])?;
+        let acts = out.remove(1);
+        Ok((out.remove(0), acts))
+    }
+
+    fn kmeans_infer(&mut self, w: &[f32], x: &[f32]) -> Result<Vec<f32>> {
+        let mut out = self.run("kmeans_infer", &[w, x])?;
+        Ok(out.remove(0))
+    }
+
+    fn diversity_repr(&mut self, b: &[f32], bp: &[f32], x: &[f32]) -> Result<[f32; 4]> {
+        let out = self.run("diversity_repr", &[b, bp, x])?;
+        Ok([out[0][0], out[0][1], out[0][2], out[0][3]])
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

@@ -1,0 +1,177 @@
+//! Alpaca-style baseline scheduler (§7.1).
+//!
+//! Alpaca [Maeng+ OOPSLA'17] is a task-based intermittent runtime with no
+//! notion of machine-learning semantics: the paper's baseline configuration
+//! repeats a *fixed* action sequence, duty-cycling `learn` vs `infer`
+//! according to a compile-time parameter (e.g. [90% learn, 10% infer]),
+//! executes every example (no selection heuristic) and runs no dynamic
+//! action planner (zero scheduling overhead, but also zero adaptivity).
+//!
+//! Mapped onto the engine: one example in flight at a time, advancing
+//! `sense → extract → learn|infer`; `learn` completion chains through
+//! `evaluate` only implicitly (the baseline does not evaluate, so learn's
+//! successor is handled by dropping the example — the scheduler advances
+//! `learn`-state examples straight out via `Evaluate`-free termination is
+//! impossible in the diagram, so we jump from `extract` directly to the
+//! payload action; the engine does not re-enforce the diagram for
+//! schedulers, which is exactly the point: Alpaca has no action diagram).
+
+use crate::actions::Action;
+use crate::energy::cost::{ActionCost, CostModel};
+use crate::planner::{PlanContext, Planned, Pending};
+use crate::sim::Scheduler;
+
+/// Fixed duty-cycle schedule: `learn_pct` of examples are learned, the
+/// rest inferred, in a deterministic interleave.
+#[derive(Debug, Clone)]
+pub struct DutyCycleScheduler {
+    /// Fraction of examples sent to `learn` (0.1 / 0.5 / 0.9 in §7.1).
+    pub learn_pct: f64,
+    /// Deterministic interleave accumulator.
+    acc: f64,
+    /// Decision latched at `extract` completion for the current example.
+    current_is_learn: bool,
+    name: &'static str,
+}
+
+impl DutyCycleScheduler {
+    pub fn new(learn_pct: f64) -> Self {
+        DutyCycleScheduler {
+            learn_pct,
+            acc: 0.0,
+            current_is_learn: false,
+            name: "alpaca",
+        }
+    }
+
+    pub(crate) fn with_name(learn_pct: f64, name: &'static str) -> Self {
+        DutyCycleScheduler {
+            name,
+            ..Self::new(learn_pct)
+        }
+    }
+
+    /// Advance the interleave: returns true if the next example should be
+    /// learned (e.g. 0.9 -> 9 of every 10).
+    fn next_is_learn(&mut self) -> bool {
+        self.acc += self.learn_pct;
+        if self.acc >= 1.0 - 1e-9 {
+            self.acc -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The fixed-sequence step for a single pending example.
+    pub(crate) fn step(&mut self, pending: &Pending) -> Planned {
+        match pending.first() {
+            None => Planned::SenseNew,
+            Some(Action::Sense) => Planned::Advance {
+                slot: 0,
+                action: Action::Extract,
+            },
+            Some(Action::Extract) => {
+                self.current_is_learn = self.next_is_learn();
+                let action = if self.current_is_learn {
+                    Action::Learn
+                } else {
+                    Action::Infer
+                };
+                Planned::Advance { slot: 0, action }
+            }
+            // learn completed: the example is done; evaluate is the only
+            // diagram successor but Alpaca doesn't evaluate — emit Evaluate
+            // as a zero-value terminal hop so the engine retires the slot.
+            Some(Action::Learn) => Planned::Advance {
+                slot: 0,
+                action: Action::Evaluate,
+            },
+            // anything else (shouldn't happen): retire via infer path
+            Some(_) => Planned::Advance {
+                slot: 0,
+                action: Action::Infer,
+            },
+        }
+    }
+}
+
+impl Scheduler for DutyCycleScheduler {
+    fn next(&mut self, pending: &Pending, _ctx: &PlanContext, _costs: &CostModel) -> Planned {
+        self.step(pending)
+    }
+
+    fn overhead(&self, _costs: &CostModel) -> ActionCost {
+        // hardcoded schedule: no planner overhead
+        ActionCost::new(0.0, 0, 1)
+    }
+
+    fn uses_selection(&self) -> bool {
+        false // every example is learned; no selection heuristic
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> PlanContext {
+        PlanContext {
+            learned_total: 0,
+            quality: 0.0,
+            window_learns: 0,
+            window_infers: 0,
+        }
+    }
+
+    #[test]
+    fn duty_cycle_interleave_ratio() {
+        let mut s = DutyCycleScheduler::new(0.9);
+        let learns = (0..1000).filter(|_| s.next_is_learn()).count();
+        assert_eq!(learns, 900);
+        let mut s = DutyCycleScheduler::new(0.1);
+        let learns = (0..1000).filter(|_| s.next_is_learn()).count();
+        assert_eq!(learns, 100);
+    }
+
+    #[test]
+    fn fixed_sequence_shape() {
+        let costs = CostModel::knn();
+        let mut s = DutyCycleScheduler::new(1.0);
+        assert_eq!(s.next(&vec![], &ctx(), &costs), Planned::SenseNew);
+        assert_eq!(
+            s.next(&vec![Action::Sense], &ctx(), &costs),
+            Planned::Advance {
+                slot: 0,
+                action: Action::Extract
+            }
+        );
+        assert_eq!(
+            s.next(&vec![Action::Extract], &ctx(), &costs),
+            Planned::Advance {
+                slot: 0,
+                action: Action::Learn
+            }
+        );
+        // 0% learn -> infer
+        let mut s = DutyCycleScheduler::new(0.0);
+        assert_eq!(
+            s.next(&vec![Action::Extract], &ctx(), &costs),
+            Planned::Advance {
+                slot: 0,
+                action: Action::Infer
+            }
+        );
+    }
+
+    #[test]
+    fn no_planner_overhead_and_no_selection() {
+        let s = DutyCycleScheduler::new(0.5);
+        assert_eq!(s.overhead(&CostModel::knn()).energy_uj, 0.0);
+        assert!(!s.uses_selection());
+    }
+}

@@ -1,0 +1,88 @@
+//! Mayfly-style baseline scheduler (§7.1).
+//!
+//! Mayfly [Hester+ SenSys'17] adds *timeliness* to intermittent computing:
+//! sensed data carries an expiration interval and is discarded when stale.
+//! The paper's baseline configuration is the Alpaca duty-cycle schedule
+//! plus this expiration rule — it still learns every (non-expired)
+//! example and runs no action planner. As §7.4 notes, expiration can leave
+//! the system with *nothing to learn* when energy finally arrives, which
+//! is exactly the failure mode the intermittent-learning buffering avoids.
+
+use crate::energy::cost::{ActionCost, CostModel};
+use crate::planner::{PlanContext, Planned, Pending};
+use crate::sim::Scheduler;
+
+use super::alpaca::DutyCycleScheduler;
+
+/// Alpaca schedule + data expiration.
+#[derive(Debug, Clone)]
+pub struct MayflyScheduler {
+    inner: DutyCycleScheduler,
+    /// Sensed data older than this is stale and dropped.
+    pub expiry_us: u64,
+}
+
+impl MayflyScheduler {
+    pub fn new(learn_pct: f64, expiry_us: u64) -> Self {
+        MayflyScheduler {
+            inner: DutyCycleScheduler::with_name(learn_pct, "mayfly"),
+            expiry_us,
+        }
+    }
+}
+
+impl Scheduler for MayflyScheduler {
+    fn next(&mut self, pending: &Pending, ctx: &PlanContext, costs: &CostModel) -> Planned {
+        self.inner.next(pending, ctx, costs)
+    }
+
+    fn overhead(&self, _costs: &CostModel) -> ActionCost {
+        // timestamp bookkeeping per decision (tiny, but not zero)
+        ActionCost::new(2.0, 150, 1)
+    }
+
+    fn expiry_us(&self) -> Option<u64> {
+        Some(self.expiry_us)
+    }
+
+    fn uses_selection(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str {
+        "mayfly"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actions::Action;
+
+    #[test]
+    fn exposes_expiry() {
+        let s = MayflyScheduler::new(0.5, 5_000_000);
+        assert_eq!(s.expiry_us(), Some(5_000_000));
+        assert!(!s.uses_selection());
+        assert_eq!(s.name(), "mayfly");
+    }
+
+    #[test]
+    fn schedule_matches_alpaca() {
+        let costs = CostModel::knn();
+        let ctx = PlanContext {
+            learned_total: 0,
+            quality: 0.0,
+            window_learns: 0,
+            window_infers: 0,
+        };
+        let mut m = MayflyScheduler::new(1.0, 1);
+        let mut a = DutyCycleScheduler::new(1.0);
+        for pending in [vec![], vec![Action::Sense], vec![Action::Extract]] {
+            assert_eq!(
+                m.next(&pending, &ctx, &costs),
+                a.next(&pending, &ctx, &costs)
+            );
+        }
+    }
+}

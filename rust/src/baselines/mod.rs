@@ -1,0 +1,21 @@
+//! Baselines the paper evaluates against (§7.1, §7.2, §6.2):
+//!
+//! * [`alpaca`] — Alpaca-style task-based intermittent computing: a fixed,
+//!   duty-cycled [sense, extract, learn|infer] schedule, no dynamic action
+//!   planner, no example selection (§7.1).
+//! * [`mayfly`] — Mayfly-style: Alpaca plus *data expiration* — sensed
+//!   data older than an interval is discarded as stale (§7.1).
+//! * [`threshold`] — the running-mean RSSI threshold detector the human
+//!   presence learner is compared against in Fig. 7(c).
+//! * [`offline`] — the three offline anomaly detectors of §7.2: one-class
+//!   SVM (RBF), isolation forest, and an ARIMA(AR)-residual detector —
+//!   each implemented from scratch.
+
+pub mod alpaca;
+pub mod mayfly;
+pub mod offline;
+pub mod threshold;
+
+pub use alpaca::DutyCycleScheduler;
+pub use mayfly::MayflyScheduler;
+pub use threshold::RunningMeanThreshold;

@@ -1,0 +1,259 @@
+//! AR(IMA)-residual anomaly detector (§7.2's "ARIMA-based clustering").
+//!
+//! Fits an AR(p) model (optionally after d-th differencing — the "I" in
+//! ARIMA; no MA term, as is standard for residual-based anomaly detection
+//! on short embedded series) to each feature dimension's time series by
+//! ordinary least squares, then flags a vector whose one-step-ahead
+//! prediction residual exceeds k·σ in any dimension.
+
+use super::OfflineDetector;
+
+/// Per-dimension AR model.
+#[derive(Debug, Clone, Default)]
+struct ArDim {
+    /// AR coefficients φ_1..φ_p plus intercept at the end.
+    phi: Vec<f64>,
+    /// Residual std on the training series.
+    sigma: f64,
+    /// Last p observed values (for one-step prediction at test time).
+    tail: Vec<f64>,
+}
+
+/// AR(p) residual detector over multivariate series.
+#[derive(Debug, Clone)]
+pub struct ArDetector {
+    pub p: usize,
+    /// Differencing order (0 or 1).
+    pub d: usize,
+    /// Sigma multiplier for the anomaly gate.
+    pub k: f64,
+    dims: Vec<ArDim>,
+}
+
+impl ArDetector {
+    pub fn new(p: usize, k: f64) -> Self {
+        ArDetector {
+            p: p.max(1),
+            d: 0,
+            k,
+            dims: Vec::new(),
+        }
+    }
+
+    fn difference(series: &[f64], d: usize) -> Vec<f64> {
+        let mut s = series.to_vec();
+        for _ in 0..d {
+            s = s.windows(2).map(|w| w[1] - w[0]).collect();
+        }
+        s
+    }
+
+    /// OLS fit of x_t = c + Σ φ_i x_{t−i} + e_t via normal equations
+    /// (p+1 unknowns, solved by Gaussian elimination).
+    fn fit_dim(&self, series: &[f64]) -> ArDim {
+        let s = Self::difference(series, self.d);
+        let p = self.p;
+        let n = s.len();
+        let mut dim = ArDim {
+            phi: vec![0.0; p + 1],
+            sigma: 1e-6,
+            tail: series[series.len().saturating_sub(p + self.d)..].to_vec(),
+        };
+        if n <= p + 2 {
+            return dim;
+        }
+        let rows = n - p;
+        let cols = p + 1; // lags + intercept
+        // X^T X and X^T y
+        let mut xtx = vec![0.0f64; cols * cols];
+        let mut xty = vec![0.0f64; cols];
+        for t in p..n {
+            let mut row = Vec::with_capacity(cols);
+            for i in 1..=p {
+                row.push(s[t - i]);
+            }
+            row.push(1.0);
+            for a in 0..cols {
+                xty[a] += row[a] * s[t];
+                for b in 0..cols {
+                    xtx[a * cols + b] += row[a] * row[b];
+                }
+            }
+        }
+        // ridge for numerical safety
+        for a in 0..cols {
+            xtx[a * cols + a] += 1e-6;
+        }
+        if let Some(phi) = solve(&mut xtx, &mut xty, cols) {
+            dim.phi = phi;
+        }
+        // residual sigma
+        let mut sse = 0.0;
+        for t in p..n {
+            let mut pred = dim.phi[p];
+            for i in 1..=p {
+                pred += dim.phi[i - 1] * s[t - i];
+            }
+            let e = s[t] - pred;
+            sse += e * e;
+        }
+        dim.sigma = (sse / rows as f64).sqrt().max(1e-6);
+        dim
+    }
+
+    /// One-step residual of `x` given the training tail of dimension `d`.
+    fn residual(&self, didx: usize, x: f64) -> f64 {
+        let dim = &self.dims[didx];
+        let raw_tail = &dim.tail;
+        // reconstruct the differenced lags from the raw tail
+        let mut series: Vec<f64> = raw_tail.clone();
+        series.push(x);
+        let s = Self::difference(&series, self.d);
+        if s.len() < self.p + 1 {
+            return 0.0;
+        }
+        let t = s.len() - 1;
+        let mut pred = dim.phi[self.p];
+        for i in 1..=self.p {
+            pred += dim.phi[i - 1] * s[t - i];
+        }
+        (s[t] - pred) / dim.sigma
+    }
+}
+
+/// Gaussian elimination with partial pivoting; returns the solution.
+fn solve(a: &mut [f64], b: &mut [f64], n: usize) -> Option<Vec<f64>> {
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in (col + 1)..n {
+            if a[r * n + col].abs() > a[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv * n + col].abs() < 1e-12 {
+            return None;
+        }
+        if piv != col {
+            for c in 0..n {
+                a.swap(col * n + c, piv * n + c);
+            }
+            b.swap(col, piv);
+        }
+        let d = a[col * n + col];
+        for r in (col + 1)..n {
+            let f = a[r * n + col] / d;
+            for c in col..n {
+                a[r * n + c] -= f * a[col * n + c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for r in (0..n).rev() {
+        let mut s = b[r];
+        for c in (r + 1)..n {
+            s -= a[r * n + c] * x[c];
+        }
+        x[r] = s / a[r * n + r];
+    }
+    Some(x)
+}
+
+impl OfflineDetector for ArDetector {
+    /// Training data is interpreted as a time-ordered sequence of feature
+    /// vectors; each dimension is fit independently.
+    fn fit(&mut self, data: &[Vec<f32>]) {
+        if data.is_empty() {
+            return;
+        }
+        let dims = data[0].len();
+        self.dims = (0..dims)
+            .map(|d| {
+                let series: Vec<f64> = data.iter().map(|r| r[d] as f64).collect();
+                self.fit_dim(&series)
+            })
+            .collect();
+    }
+
+    fn score(&self, x: &[f32]) -> f32 {
+        if self.dims.is_empty() {
+            return 0.0;
+        }
+        // max normalized residual across dimensions
+        (0..self.dims.len())
+            .map(|d| self.residual(d, x[d] as f64).abs() as f32)
+            .fold(0.0, f32::max)
+    }
+
+    fn is_anomaly(&self, x: &[f32]) -> bool {
+        self.score(x) > self.k as f32
+    }
+
+    fn name(&self) -> &'static str {
+        "arima"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn ar1_series(seed: u64, n: usize, phi: f64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        let mut x = 0.0f64;
+        (0..n)
+            .map(|_| {
+                x = phi * x + rng.normal(0.0, 0.2);
+                vec![x as f32, (x * 0.5) as f32]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn recovers_ar1_coefficient() {
+        let det0 = ArDetector::new(1, 3.0);
+        let data = ar1_series(1, 4000, 0.7);
+        let series: Vec<f64> = data.iter().map(|r| r[0] as f64).collect();
+        let dim = det0.fit_dim(&series);
+        assert!((dim.phi[0] - 0.7).abs() < 0.07, "phi {:?}", dim.phi);
+    }
+
+    #[test]
+    fn flags_residual_spikes() {
+        let mut det = ArDetector::new(2, 3.5);
+        let data = ar1_series(2, 800, 0.6);
+        det.fit(&data);
+        // continuation consistent with the process -> normal
+        let last = data.last().unwrap()[0] as f64;
+        let normal = vec![(0.6 * last) as f32, (0.3 * last) as f32];
+        assert!(!det.is_anomaly(&normal));
+        // a 10-sigma jump -> anomaly
+        let spike = vec![(last + 5.0) as f32, ((last + 5.0) * 0.5) as f32];
+        assert!(det.is_anomaly(&spike));
+    }
+
+    #[test]
+    fn solver_solves_small_system() {
+        // 2x + y = 5 ; x + 3y = 10  -> x = 1, y = 3
+        let mut a = vec![2.0, 1.0, 1.0, 3.0];
+        let mut b = vec![5.0, 10.0];
+        let x = solve(&mut a, &mut b, 2).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-9 && (x[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn differencing_reduces_length() {
+        let s = [1.0, 3.0, 6.0, 10.0];
+        assert_eq!(ArDetector::difference(&s, 1), vec![2.0, 3.0, 4.0]);
+        assert_eq!(ArDetector::difference(&s, 2), vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn short_series_is_harmless() {
+        let mut det = ArDetector::new(3, 3.0);
+        det.fit(&[vec![1.0, 2.0]]);
+        assert_eq!(det.score(&[1.0, 2.0]), 0.0);
+    }
+}

@@ -1,0 +1,213 @@
+//! Isolation forest (Liu, Ting & Zhou, ICDM'08).
+//!
+//! Anomalies are isolated with fewer random axis-aligned splits than
+//! inliers. Score s(x) = 2^(−E[h(x)] / c(ψ)); the decision threshold is
+//! calibrated on the training scores at the configured contamination.
+
+use super::OfflineDetector;
+use crate::util::Rng;
+
+/// A node of an isolation tree.
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf {
+        size: usize,
+    },
+    Split {
+        dim: usize,
+        value: f32,
+        left: Box<Node>,
+        right: Box<Node>,
+    },
+}
+
+/// Average unsuccessful-search path length of a BST with n nodes.
+fn c(n: usize) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let n = n as f64;
+    2.0 * ((n - 1.0).ln() + 0.5772156649) - 2.0 * (n - 1.0) / n
+}
+
+fn build(data: &mut [usize], points: &[Vec<f32>], depth: usize, max_depth: usize, rng: &mut Rng) -> Node {
+    if data.len() <= 1 || depth >= max_depth {
+        return Node::Leaf { size: data.len() };
+    }
+    let dim_count = points[data[0]].len();
+    // pick a dim with spread; give up after a few tries
+    for _ in 0..4 {
+        let dim = rng.below_usize(dim_count);
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &i in data.iter() {
+            lo = lo.min(points[i][dim]);
+            hi = hi.max(points[i][dim]);
+        }
+        if hi <= lo {
+            continue;
+        }
+        let value = lo + (hi - lo) * rng.f32();
+        let mid = itertools_partition(data, |&i| points[i][dim] < value);
+        if mid == 0 || mid == data.len() {
+            continue;
+        }
+        let (l, r) = data.split_at_mut(mid);
+        let left = Box::new(build(l, points, depth + 1, max_depth, rng));
+        let right = Box::new(build(r, points, depth + 1, max_depth, rng));
+        return Node::Split {
+            dim,
+            value,
+            left,
+            right,
+        };
+    }
+    Node::Leaf { size: data.len() }
+}
+
+/// Stable partition in place; returns the split index.
+fn itertools_partition<T, F: FnMut(&T) -> bool>(xs: &mut [T], mut pred: F) -> usize {
+    let mut i = 0;
+    for j in 0..xs.len() {
+        if pred(&xs[j]) {
+            xs.swap(i, j);
+            i += 1;
+        }
+    }
+    i
+}
+
+fn path_len(node: &Node, x: &[f32], depth: usize) -> f64 {
+    match node {
+        Node::Leaf { size } => depth as f64 + c(*size),
+        Node::Split {
+            dim,
+            value,
+            left,
+            right,
+        } => {
+            if x[*dim] < *value {
+                path_len(left, x, depth + 1)
+            } else {
+                path_len(right, x, depth + 1)
+            }
+        }
+    }
+}
+
+/// The forest.
+#[derive(Debug, Clone)]
+pub struct IsolationForest {
+    pub n_trees: usize,
+    /// Subsample size ψ per tree (paper default 256).
+    pub subsample: usize,
+    /// Expected anomaly fraction for threshold calibration.
+    pub contamination: f64,
+    pub seed: u64,
+    trees: Vec<Node>,
+    psi: usize,
+    threshold: f32,
+}
+
+impl IsolationForest {
+    pub fn new(contamination: f64, seed: u64) -> Self {
+        IsolationForest {
+            n_trees: 100,
+            subsample: 256,
+            contamination: contamination.clamp(1e-3, 0.5),
+            seed,
+            trees: Vec::new(),
+            psi: 0,
+            threshold: 0.5,
+        }
+    }
+}
+
+impl OfflineDetector for IsolationForest {
+    fn fit(&mut self, data: &[Vec<f32>]) {
+        if data.is_empty() {
+            return;
+        }
+        let mut rng = Rng::with_stream(self.seed, 0x1F0BE57);
+        self.psi = self.subsample.min(data.len());
+        let max_depth = (self.psi as f64).log2().ceil() as usize + 1;
+        self.trees = (0..self.n_trees)
+            .map(|_| {
+                // subsample without replacement
+                let mut idx: Vec<usize> = (0..data.len()).collect();
+                rng.shuffle(&mut idx);
+                idx.truncate(self.psi);
+                build(&mut idx, data, 0, max_depth, &mut rng)
+            })
+            .collect();
+        // calibrate threshold at the contamination quantile
+        let mut scores: Vec<f32> = data.iter().map(|x| self.score(x)).collect();
+        scores.sort_by(|a, b| b.total_cmp(a)); // descending
+        let k = ((self.contamination * data.len() as f64) as usize).min(scores.len() - 1);
+        self.threshold = scores[k];
+    }
+
+    fn score(&self, x: &[f32]) -> f32 {
+        if self.trees.is_empty() {
+            return 0.0;
+        }
+        let mean_path: f64 = self
+            .trees
+            .iter()
+            .map(|t| path_len(t, x, 0))
+            .sum::<f64>()
+            / self.trees.len() as f64;
+        (2.0f64.powf(-mean_path / c(self.psi).max(1e-9))) as f32
+    }
+
+    fn is_anomaly(&self, x: &[f32]) -> bool {
+        self.score(x) > self.threshold
+    }
+
+    fn name(&self) -> &'static str {
+        "isolation_forest"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{detector_accuracy, testdata};
+    use super::*;
+
+    #[test]
+    fn separates_blob_from_outliers() {
+        let (train, probes) = testdata::blob_with_outliers(3, 256, 60, 8);
+        let mut f = IsolationForest::new(0.05, 7);
+        f.fit(&train);
+        let acc = detector_accuracy(&f, &probes);
+        assert!(acc >= 0.9, "acc {acc}");
+    }
+
+    #[test]
+    fn outlier_scores_higher_than_inlier() {
+        let (train, _) = testdata::blob_with_outliers(4, 200, 0, 4);
+        let mut f = IsolationForest::new(0.1, 1);
+        f.fit(&train);
+        let inlier = vec![1.0f32; 4];
+        let outlier = vec![30.0f32; 4];
+        assert!(f.score(&outlier) > f.score(&inlier));
+        assert!(f.score(&outlier) > 0.55);
+    }
+
+    #[test]
+    fn c_monotone() {
+        assert_eq!(c(1), 0.0);
+        assert!(c(10) < c(100));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (train, probes) = testdata::blob_with_outliers(5, 128, 20, 4);
+        let mut a = IsolationForest::new(0.1, 9);
+        let mut b = IsolationForest::new(0.1, 9);
+        a.fit(&train);
+        b.fit(&train);
+        for (x, _) in &probes {
+            assert_eq!(a.score(x), b.score(x));
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! Offline anomaly detectors (§7.2): one-class SVM with RBF kernel,
+//! isolation forest, and an AR(IMA)-residual detector — all trained once
+//! on the full example set (unlike the intermittent learner, which selects
+//! and learns online under an energy budget).
+
+pub mod arima;
+pub mod iforest;
+pub mod ocsvm;
+
+pub use arima::ArDetector;
+pub use iforest::IsolationForest;
+pub use ocsvm::OneClassSvm;
+
+/// Common interface: fit on unlabelled training vectors, then score test
+/// vectors (higher = more anomalous) against a learned threshold.
+pub trait OfflineDetector {
+    /// Fit on (n, dim) row-major training data.
+    fn fit(&mut self, data: &[Vec<f32>]);
+
+    /// Anomaly score of one vector (comparable across calls after fit).
+    fn score(&self, x: &[f32]) -> f32;
+
+    /// Decision: is `x` anomalous?
+    fn is_anomaly(&self, x: &[f32]) -> bool;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Accuracy of a detector over a labelled probe set.
+pub fn detector_accuracy(
+    det: &dyn OfflineDetector,
+    probes: &[(Vec<f32>, bool)],
+) -> f64 {
+    if probes.is_empty() {
+        return 0.0;
+    }
+    let ok = probes
+        .iter()
+        .filter(|(x, truth)| det.is_anomaly(x) == *truth)
+        .count();
+    ok as f64 / probes.len() as f64
+}
+
+#[cfg(test)]
+pub(crate) mod testdata {
+    use crate::util::Rng;
+
+    /// Gaussian blob training set + labelled probes with far outliers.
+    pub fn blob_with_outliers(
+        seed: u64,
+        n_train: usize,
+        n_probe: usize,
+        dim: usize,
+    ) -> (Vec<Vec<f32>>, Vec<(Vec<f32>, bool)>) {
+        let mut rng = Rng::new(seed);
+        let mut point = |outlier: bool| -> Vec<f32> {
+            (0..dim)
+                .map(|_| {
+                    let base = rng.normal(1.0, 0.5) as f32;
+                    if outlier {
+                        base + 8.0
+                    } else {
+                        base
+                    }
+                })
+                .collect()
+        };
+        let train: Vec<Vec<f32>> = (0..n_train).map(|_| point(false)).collect();
+        let probes: Vec<(Vec<f32>, bool)> = (0..n_probe)
+            .map(|i| {
+                let outlier = i % 2 == 1;
+                (point(outlier), outlier)
+            })
+            .collect();
+        (train, probes)
+    }
+}

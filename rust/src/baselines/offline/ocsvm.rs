@@ -1,0 +1,203 @@
+//! One-class SVM with RBF kernel (Schölkopf ν-SVM formulation), solved by
+//! projected gradient descent on the dual:
+//!
+//!   min ½ αᵀKα   s.t.  0 ≤ αᵢ ≤ 1/(νn),  Σαᵢ = 1
+//!
+//! Decision function f(x) = Σᵢ αᵢ k(xᵢ, x) − ρ; x is an outlier iff
+//! f(x) < 0. ρ is recovered from a margin support vector (0 < αᵢ < bound)
+//! or, when none exists numerically, from the ν-quantile of the training
+//! scores — which preserves the ν-fraction-outliers property the detector
+//! is used for here.
+
+use super::OfflineDetector;
+use crate::util::stats;
+
+/// RBF one-class SVM.
+#[derive(Debug, Clone)]
+pub struct OneClassSvm {
+    /// Expected outlier fraction ν in (0, 1).
+    pub nu: f64,
+    /// RBF width γ (k(x,y) = exp(−γ‖x−y‖²)); `None` = 1/(dim·var) at fit.
+    pub gamma: Option<f64>,
+    /// Gradient iterations.
+    pub iters: usize,
+    alpha: Vec<f64>,
+    support: Vec<Vec<f32>>,
+    rho: f64,
+    gamma_fit: f64,
+}
+
+impl OneClassSvm {
+    pub fn new(nu: f64) -> Self {
+        OneClassSvm {
+            nu: nu.clamp(1e-3, 0.999),
+            gamma: None,
+            iters: 300,
+            alpha: Vec::new(),
+            support: Vec::new(),
+            rho: 0.0,
+            gamma_fit: 1.0,
+        }
+    }
+
+    fn kernel(&self, a: &[f32], b: &[f32]) -> f64 {
+        (-self.gamma_fit * stats::sq_euclidean(a, b) as f64).exp()
+    }
+
+    /// Raw decision value Σ αᵢ k(xᵢ, x) (before subtracting ρ).
+    fn raw(&self, x: &[f32]) -> f64 {
+        self.support
+            .iter()
+            .zip(&self.alpha)
+            .map(|(s, &a)| a * self.kernel(s, x))
+            .sum()
+    }
+
+    /// Project onto the simplex intersected with the box [0, ub]^n
+    /// (Σα = 1): bisection on the shift τ of the thresholding operator.
+    fn project(alpha: &mut [f64], ub: f64) {
+        let clip = |v: f64| v.clamp(0.0, ub);
+        let sum_at = |alpha: &[f64], tau: f64| -> f64 {
+            alpha.iter().map(|&a| clip(a - tau)).sum()
+        };
+        let mut lo = alpha.iter().cloned().fold(f64::INFINITY, f64::min) - ub - 1.0;
+        let mut hi = alpha.iter().cloned().fold(f64::NEG_INFINITY, f64::max) + 1.0;
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            if sum_at(alpha, mid) > 1.0 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let tau = 0.5 * (lo + hi);
+        for a in alpha.iter_mut() {
+            *a = clip(*a - tau);
+        }
+    }
+}
+
+impl OfflineDetector for OneClassSvm {
+    fn fit(&mut self, data: &[Vec<f32>]) {
+        let n = data.len();
+        if n == 0 {
+            return;
+        }
+        let dim = data[0].len();
+        // default gamma = 1 / (dim * mean feature variance), sklearn-style
+        self.gamma_fit = self.gamma.unwrap_or_else(|| {
+            let mut var_sum = 0.0f64;
+            for d in 0..dim {
+                let col: Vec<f32> = data.iter().map(|r| r[d]).collect();
+                let s = stats::std(&col) as f64;
+                var_sum += s * s;
+            }
+            let v = (var_sum / dim as f64).max(1e-6);
+            1.0 / (dim as f64 * v)
+        });
+        self.support = data.to_vec();
+
+        // Gram matrix (n is capped by callers; O(n^2) memory)
+        let mut k = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in i..n {
+                let v = self.kernel(&data[i], &data[j]);
+                k[i * n + j] = v;
+                k[j * n + i] = v;
+            }
+        }
+
+        let ub = 1.0 / (self.nu * n as f64);
+        self.alpha = vec![1.0 / n as f64; n];
+        Self::project(&mut self.alpha, ub);
+        // projected gradient descent with diminishing step
+        let mut grad = vec![0.0f64; n];
+        for it in 0..self.iters {
+            for i in 0..n {
+                let row = &k[i * n..(i + 1) * n];
+                grad[i] = row
+                    .iter()
+                    .zip(&self.alpha)
+                    .map(|(&kij, &aj)| kij * aj)
+                    .sum();
+            }
+            let step = 1.0 / (1.0 + it as f64 * 0.1);
+            for i in 0..n {
+                self.alpha[i] -= step * grad[i];
+            }
+            Self::project(&mut self.alpha, ub);
+        }
+
+        // rho from margin SVs; fall back to the nu-quantile of raw scores
+        let margin: Vec<f64> = (0..n)
+            .filter(|&i| self.alpha[i] > 1e-8 && self.alpha[i] < ub - 1e-8)
+            .map(|i| self.raw(&data[i]))
+            .collect();
+        self.rho = if !margin.is_empty() {
+            margin.iter().sum::<f64>() / margin.len() as f64
+        } else {
+            let mut raws: Vec<f32> = data.iter().map(|x| self.raw(x) as f32).collect();
+            raws.sort_by(|a, b| a.total_cmp(b));
+            let idx = ((self.nu * n as f64) as usize).min(n - 1);
+            raws[idx] as f64
+        };
+    }
+
+    fn score(&self, x: &[f32]) -> f32 {
+        (self.rho - self.raw(x)) as f32 // higher = more anomalous
+    }
+
+    fn is_anomaly(&self, x: &[f32]) -> bool {
+        self.score(x) > 0.0
+    }
+
+    fn name(&self) -> &'static str {
+        "one_class_svm"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{detector_accuracy, testdata};
+    use super::*;
+
+    #[test]
+    fn separates_blob_from_outliers() {
+        let (train, probes) = testdata::blob_with_outliers(1, 120, 60, 8);
+        let mut svm = OneClassSvm::new(0.1);
+        svm.fit(&train);
+        let acc = detector_accuracy(&svm, &probes);
+        assert!(acc >= 0.85, "acc {acc}");
+    }
+
+    #[test]
+    fn nu_controls_training_outlier_fraction() {
+        let (train, _) = testdata::blob_with_outliers(2, 150, 0, 6);
+        for nu in [0.05, 0.2] {
+            let mut svm = OneClassSvm::new(nu);
+            svm.fit(&train);
+            let out = train.iter().filter(|x| svm.is_anomaly(x)).count() as f64
+                / train.len() as f64;
+            assert!(
+                (out - nu).abs() < 0.15,
+                "nu {nu} -> training outlier fraction {out}"
+            );
+        }
+    }
+
+    #[test]
+    fn projection_satisfies_constraints() {
+        let mut a = vec![0.9, 0.5, -0.3, 0.1];
+        OneClassSvm::project(&mut a, 0.5);
+        let sum: f64 = a.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "sum {sum}");
+        assert!(a.iter().all(|&v| (-1e-9..=0.5 + 1e-9).contains(&v)));
+    }
+
+    #[test]
+    fn empty_fit_is_harmless() {
+        let mut svm = OneClassSvm::new(0.1);
+        svm.fit(&[]);
+        assert!(!svm.is_anomaly(&[0.0; 4]) || svm.is_anomaly(&[0.0; 4]));
+    }
+}

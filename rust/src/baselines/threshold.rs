@@ -1,0 +1,151 @@
+//! Running-mean RSSI threshold baseline (Fig. 7(c)).
+//!
+//! The paper compares the presence learner against "a baseline system that
+//! uses a threshold changing over time based on the run-time mean of the
+//! RSSI values". It keeps a running mean/variance of the windowed RSSI
+//! level and flags presence when the current window's statistics deviate
+//! by more than `k` sigma. It does not generalize across areas — after a
+//! move, its long-memory mean is wrong for hours, which is what Fig. 7(c)
+//! shows.
+
+use crate::backend::ComputeBackend;
+use crate::error::Result;
+use crate::learning::{Example, Learner, Verdict};
+use crate::nvm::Nvm;
+
+/// Running mean ± k·std detector over one feature dimension.
+#[derive(Debug, Clone)]
+pub struct RunningMeanThreshold {
+    /// Which feature of the example to track (0 = per-window mean).
+    pub feature_idx: usize,
+    /// Sigma multiplier.
+    pub k: f32,
+    /// EMA smoothing factor (long memory — the baseline's weakness).
+    pub alpha: f32,
+    mean: f32,
+    var: f32,
+    n: u64,
+}
+
+impl RunningMeanThreshold {
+    pub fn new(feature_idx: usize, k: f32) -> Self {
+        RunningMeanThreshold {
+            feature_idx,
+            k,
+            alpha: 0.02,
+            mean: 0.0,
+            var: 0.0,
+            n: 0,
+        }
+    }
+
+    fn value(&self, ex: &Example) -> f32 {
+        ex.features.get(self.feature_idx).copied().unwrap_or(0.0)
+    }
+}
+
+impl Learner for RunningMeanThreshold {
+    fn learn(&mut self, ex: &Example, _be: &mut dyn ComputeBackend) -> Result<()> {
+        let x = self.value(ex);
+        if self.n == 0 {
+            self.mean = x;
+            self.var = 0.0;
+        } else {
+            let d = x - self.mean;
+            self.mean += self.alpha * d;
+            self.var = (1.0 - self.alpha) * (self.var + self.alpha * d * d);
+        }
+        self.n += 1;
+        Ok(())
+    }
+
+    fn infer(&mut self, ex: &Example, _be: &mut dyn ComputeBackend) -> Result<Verdict> {
+        if self.n < 5 {
+            return Ok(Verdict::Unknown);
+        }
+        let x = self.value(ex);
+        let std = self.var.max(1e-12).sqrt();
+        Ok(if (x - self.mean).abs() > self.k * std {
+            Verdict::Abnormal
+        } else {
+            Verdict::Normal
+        })
+    }
+
+    fn learnable(&self) -> bool {
+        true
+    }
+
+    fn evaluate(&mut self, _be: &mut dyn ComputeBackend) -> Result<f32> {
+        Ok(if self.n >= 5 { 0.5 } else { 0.0 })
+    }
+
+    fn learned_count(&self) -> u64 {
+        self.n
+    }
+
+    fn save(&self, nvm: &mut Nvm) -> Result<()> {
+        nvm.write_f32s("thr/state", &[self.mean, self.var])?;
+        nvm.write_u64("thr/n", self.n)
+    }
+
+    fn restore(&mut self, nvm: &mut Nvm) -> Result<()> {
+        if let Some(s) = nvm.read_f32s("thr/state") {
+            if s.len() == 2 {
+                self.mean = s[0];
+                self.var = s[1];
+            }
+        }
+        self.n = nvm.read_u64("thr/n");
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "running_mean_threshold"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::backend::shapes::FEAT_DIM;
+
+    fn ex(v: f32) -> Example {
+        let mut f = vec![0.0; FEAT_DIM];
+        f[0] = v;
+        Example::new(f, 0, false)
+    }
+
+    #[test]
+    fn flags_large_deviation() {
+        let mut be = NativeBackend::new();
+        let mut t = RunningMeanThreshold::new(0, 3.0);
+        for i in 0..100 {
+            t.learn(&ex(1.0 + 0.1 * ((i % 7) as f32 - 3.0)), &mut be).unwrap();
+        }
+        assert_eq!(t.infer(&ex(1.0), &mut be).unwrap(), Verdict::Normal);
+        assert_eq!(t.infer(&ex(10.0), &mut be).unwrap(), Verdict::Abnormal);
+    }
+
+    #[test]
+    fn unknown_when_cold() {
+        let mut be = NativeBackend::new();
+        let mut t = RunningMeanThreshold::new(0, 3.0);
+        assert_eq!(t.infer(&ex(1.0), &mut be).unwrap(), Verdict::Unknown);
+    }
+
+    #[test]
+    fn long_memory_lags_after_level_shift() {
+        // the baseline's documented weakness: after a mean shift, it keeps
+        // flagging normal data as abnormal for a long time
+        let mut be = NativeBackend::new();
+        let mut t = RunningMeanThreshold::new(0, 3.0);
+        for i in 0..200 {
+            t.learn(&ex(1.0 + 0.05 * ((i % 5) as f32 - 2.0)), &mut be).unwrap();
+        }
+        // new area: level jumps to 5.0; immediately after the move the
+        // baseline calls plain data abnormal
+        assert_eq!(t.infer(&ex(5.0), &mut be).unwrap(), Verdict::Abnormal);
+    }
+}

@@ -1,0 +1,203 @@
+//! Capacitor energy-storage model.
+//!
+//! The paper's platforms buffer harvested energy in a capacitor
+//! (0.2 F supercap / 50 mF / 6 mF for the three apps) and the MCU runs
+//! between a wake threshold `v_on` and a brown-out threshold `v_off`
+//! (§3.4: "the system sleeps and wakes up multiple times during the
+//! execution of an action"). Energy accounting is E = ½·C·V².
+
+/// Capacitor with charge/discharge bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Capacitor {
+    /// Capacitance in farads.
+    pub c_f: f64,
+    /// Maximum (clamp) voltage.
+    pub v_max: f64,
+    /// Wake-up threshold: the system boots when V reaches this.
+    pub v_on: f64,
+    /// Brown-out threshold: execution dies below this.
+    pub v_off: f64,
+    /// Leakage, watts (parasitic + sleep current).
+    pub leak_w: f64,
+    /// Harvest conversion efficiency in (0, 1].
+    pub eff: f64,
+    /// Current voltage.
+    v: f64,
+}
+
+impl Capacitor {
+    /// New capacitor starting fully discharged (at `v_off`).
+    pub fn new(c_f: f64, v_max: f64, v_on: f64, v_off: f64) -> Self {
+        assert!(v_max >= v_on && v_on > v_off && v_off >= 0.0);
+        Capacitor {
+            c_f,
+            v_max,
+            v_on,
+            v_off,
+            leak_w: 2e-6,
+            eff: 0.8,
+            v: v_off,
+        }
+    }
+
+    /// The air-quality platform's 0.2 F supercap (§6.1).
+    pub fn air_quality() -> Self {
+        Capacitor::new(0.2, 3.3, 2.8, 2.0)
+    }
+
+    /// The presence platform's 50 mF cap (§6.2).
+    pub fn presence() -> Self {
+        Capacitor::new(0.050, 3.3, 2.8, 2.0)
+    }
+
+    /// The vibration platform's 6 mF cap (§6.3, min operating 2 V).
+    pub fn vibration() -> Self {
+        Capacitor::new(0.006, 3.3, 2.8, 2.0)
+    }
+
+    /// Current voltage.
+    pub fn voltage(&self) -> f64 {
+        self.v
+    }
+
+    /// Stored energy above absolute zero, µJ.
+    pub fn energy_uj(&self) -> f64 {
+        0.5 * self.c_f * self.v * self.v * 1e6
+    }
+
+    /// Usable energy above the brown-out threshold, µJ.
+    pub fn usable_uj(&self) -> f64 {
+        (0.5 * self.c_f * (self.v * self.v - self.v_off * self.v_off) * 1e6).max(0.0)
+    }
+
+    /// Budget of one full charge cycle (v_max -> v_off), µJ. This is the
+    /// per-action energy ceiling the pre-inspection tool enforces.
+    pub fn full_budget_uj(&self) -> f64 {
+        0.5 * self.c_f * (self.v_max * self.v_max - self.v_off * self.v_off) * 1e6
+    }
+
+    /// Integrate harvesting for `dt_us` at constant input power `p_w`.
+    pub fn charge(&mut self, p_w: f64, dt_us: u64) {
+        let dt_s = dt_us as f64 / 1e6;
+        let de_j = (p_w * self.eff - self.leak_w) * dt_s;
+        let e_j = (0.5 * self.c_f * self.v * self.v + de_j).max(0.0);
+        self.v = (2.0 * e_j / self.c_f).sqrt().min(self.v_max);
+    }
+
+    /// Try to spend `e_uj` of usable energy. Returns `true` on success;
+    /// on failure the capacitor drains to `v_off` (the partial execution
+    /// consumed the remaining usable charge — the brown-out case).
+    pub fn deduct_uj(&mut self, e_uj: f64) -> bool {
+        if e_uj <= self.usable_uj() {
+            let e_j = 0.5 * self.c_f * self.v * self.v - e_uj * 1e-6;
+            self.v = (2.0 * e_j / self.c_f).sqrt();
+            true
+        } else {
+            self.v = self.v_off;
+            false
+        }
+    }
+
+    /// Is the voltage at/above the wake threshold?
+    pub fn awake_ready(&self) -> bool {
+        self.v >= self.v_on
+    }
+
+    /// Is the voltage above brown-out?
+    pub fn alive(&self) -> bool {
+        self.v > self.v_off
+    }
+
+    /// Force a voltage (testing / scenario setup).
+    pub fn set_voltage(&mut self, v: f64) {
+        self.v = v.clamp(0.0, self.v_max);
+    }
+
+    /// Time to charge from the current voltage to `v_on` at constant power,
+    /// seconds; `None` if input power does not exceed leakage.
+    pub fn time_to_wake_s(&self, p_w: f64) -> Option<f64> {
+        if self.v >= self.v_on {
+            return Some(0.0);
+        }
+        let net = p_w * self.eff - self.leak_w;
+        if net <= 0.0 {
+            return None;
+        }
+        let de_j = 0.5 * self.c_f * (self.v_on * self.v_on - self.v * self.v);
+        Some(de_j / net)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cap() -> Capacitor {
+        let mut c = Capacitor::new(0.006, 3.3, 2.8, 2.0);
+        c.leak_w = 0.0;
+        c.eff = 1.0;
+        c
+    }
+
+    #[test]
+    fn energy_formula() {
+        let mut c = cap();
+        c.set_voltage(3.0);
+        // 0.5 * 6 mF * 9 V^2 = 27 mJ
+        assert!((c.energy_uj() - 27_000.0).abs() < 1.0);
+        // usable above 2 V: 0.5 * 6 mF * (9 - 4) = 15 mJ
+        assert!((c.usable_uj() - 15_000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn charging_raises_voltage_to_clamp() {
+        let mut c = cap();
+        // 10 mW for 10 s = 100 mJ >> capacity -> clamps at v_max
+        c.charge(0.010, 10_000_000);
+        assert!((c.voltage() - 3.3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deduct_success_and_brownout() {
+        let mut c = cap();
+        c.set_voltage(3.0);
+        assert!(c.deduct_uj(10_000.0)); // 10 mJ of 15 mJ usable
+        assert!(c.usable_uj() < 15_000.0);
+        assert!(!c.deduct_uj(1e9)); // brown-out
+        assert!((c.voltage() - c.v_off).abs() < 1e-12);
+        assert!(!c.awake_ready());
+    }
+
+    #[test]
+    fn time_to_wake_matches_integration() {
+        let mut c = cap();
+        let p = 0.005; // 5 mW
+        let t = c.time_to_wake_s(p).unwrap();
+        c.charge(p, (t * 1e6) as u64 + 1);
+        assert!(c.awake_ready());
+    }
+
+    #[test]
+    fn time_to_wake_none_when_too_dark() {
+        let mut c = cap();
+        c.leak_w = 1e-3;
+        assert!(c.time_to_wake_s(0.5e-3).is_none());
+    }
+
+    #[test]
+    fn leakage_discharges_over_time() {
+        let mut c = cap();
+        c.leak_w = 1e-4;
+        c.set_voltage(2.5);
+        let e0 = c.energy_uj();
+        c.charge(0.0, 10_000_000);
+        assert!(c.energy_uj() < e0);
+    }
+
+    #[test]
+    fn paper_platform_constructors() {
+        assert_eq!(Capacitor::air_quality().c_f, 0.2);
+        assert_eq!(Capacitor::presence().c_f, 0.050);
+        assert_eq!(Capacitor::vibration().c_f, 0.006);
+    }
+}

@@ -1,0 +1,133 @@
+//! Energy pre-inspection — the development-time tool of §3.5.
+//!
+//! The paper's tool (built on TI EnergyTrace) runs the compiled actions on
+//! a battery-powered target over *all test inputs*, takes the worst-case
+//! energy per action, flags every action whose worst case exceeds the
+//! target budget, and prompts the programmer to split it. This module
+//! reproduces that contract against the simulated cost model: it measures
+//! worst-case sub-action energy, reports violations, and can compute the
+//! split factor that would make an action fit.
+
+use crate::actions::Action;
+use crate::energy::cost::{ActionCost, CostModel};
+
+/// One pre-inspection finding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Violation {
+    pub action: Action,
+    /// Worst-case energy of one (sub-)action, µJ.
+    pub worst_uj: f64,
+    /// The budget it must fit into, µJ.
+    pub budget_uj: f64,
+    /// Minimum number of sub-actions that makes every piece fit.
+    pub required_splits: u32,
+}
+
+/// Report for a whole cost model.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub violations: Vec<Violation>,
+    /// (action, worst-case sub-action energy) for every action measured.
+    pub measured: Vec<(Action, f64)>,
+}
+
+impl Report {
+    pub fn passed(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+/// Inspect every action of `model` against a per-wake energy budget
+/// (typically [`crate::energy::Capacitor::full_budget_uj`] minus a safety
+/// margin).
+///
+/// `jitter` emulates the measurement spread EnergyTrace observes across
+/// test inputs: the worst case is taken as `cost * (1 + jitter)`.
+pub fn inspect(model: &CostModel, budget_uj: f64, jitter: f64) -> Report {
+    let mut report = Report::default();
+    for a in Action::ALL {
+        let c = model.cost(a);
+        let worst = c.sub_energy_uj() * (1.0 + jitter);
+        report.measured.push((a, worst));
+        if worst > budget_uj {
+            report.violations.push(Violation {
+                action: a,
+                worst_uj: worst,
+                budget_uj,
+                required_splits: required_splits(c, budget_uj, jitter),
+            });
+        }
+    }
+    report
+}
+
+/// Smallest split count that makes each sub-action fit the budget.
+pub fn required_splits(c: ActionCost, budget_uj: f64, jitter: f64) -> u32 {
+    let worst_total = c.energy_uj * (1.0 + jitter);
+    (worst_total / budget_uj).ceil().max(1.0) as u32
+}
+
+/// Apply the pre-inspection loop of Fig. 4: keep splitting every violating
+/// action until the whole model passes, returning the adjusted model.
+/// Mirrors the interactive "split until all actions pass" workflow.
+pub fn auto_split(model: &CostModel, budget_uj: f64, jitter: f64) -> (CostModel, Report) {
+    let mut m = model.clone();
+    let before = inspect(&m, budget_uj, jitter);
+    for v in &before.violations {
+        let mut c = m.cost(v.action);
+        c.splits = v.required_splits;
+        m.set_cost(v.action, c);
+    }
+    let after = inspect(&m, budget_uj, jitter);
+    debug_assert!(after.passed(), "auto_split must converge in one pass");
+    (m, after)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn knn_fits_its_platform_budget() {
+        // 0.2 F supercap has a huge budget; nothing should violate.
+        let budget = crate::energy::Capacitor::air_quality().full_budget_uj() * 0.5;
+        let r = inspect(&CostModel::knn(), budget, 0.10);
+        assert!(r.passed(), "{:?}", r.violations);
+    }
+
+    #[test]
+    fn tight_budget_flags_learn_and_sense() {
+        // 2 mJ budget: kNN learn (3.103 mJ/sub) and sense (1.9 mJ/sub) at
+        // 10% jitter -> learn violates, sense is borderline-pass.
+        let r = inspect(&CostModel::knn(), 2_000.0, 0.10);
+        assert!(!r.passed());
+        assert!(r.violations.iter().any(|v| v.action == Action::Learn));
+    }
+
+    #[test]
+    fn required_splits_is_minimal() {
+        let c = ActionCost::new(9_309.0, 1_551_000, 3);
+        let s = required_splits(c, 2_000.0, 0.10);
+        // 9309*1.1 = 10239.9 / 2000 = 5.12 -> 6
+        assert_eq!(s, 6);
+        // with 6 splits each piece is 9309/6*1.1 = 1706 <= 2000
+        assert!(c.energy_uj / s as f64 * 1.1 <= 2_000.0);
+        // 5 would not fit
+        assert!(c.energy_uj / 5.0 * 1.1 > 2_000.0);
+    }
+
+    #[test]
+    fn auto_split_converges() {
+        let (m, report) = auto_split(&CostModel::knn(), 1_500.0, 0.10);
+        assert!(report.passed());
+        assert!(m.cost(Action::Learn).splits >= 7);
+        // energy is conserved by splitting
+        assert_eq!(m.cost(Action::Learn).energy_uj, 9_309.0);
+    }
+
+    #[test]
+    fn zero_jitter_uses_raw_costs() {
+        let r = inspect(&CostModel::kmeans(), 10_000.0, 0.0);
+        assert!(r.passed());
+    }
+}

@@ -1,0 +1,136 @@
+//! Run-time energy metering — the simulator's EnergyTrace analogue.
+//!
+//! Accumulates per-action energy/time/counts and a cumulative-energy time
+//! series; Figs. 11, 14, 16 and 17 are generated from this record.
+
+use crate::actions::Action;
+use std::collections::BTreeMap;
+
+/// One row of the per-action accounting table.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ActionTally {
+    pub count: u64,
+    pub energy_uj: f64,
+    pub time_us: u64,
+    /// Number of attempts that died mid-action (power failure, rolled back).
+    pub aborted: u64,
+    /// Energy wasted in aborted attempts, µJ.
+    pub wasted_uj: f64,
+}
+
+/// Energy meter: per-action tallies plus framework-overhead tallies.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyMeter {
+    per_action: BTreeMap<&'static str, ActionTally>,
+    /// (t_us, cumulative µJ) samples, appended on every completed charge.
+    pub series: Vec<(u64, f64)>,
+    total_uj: f64,
+}
+
+impl EnergyMeter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn entry(&mut self, key: &'static str) -> &mut ActionTally {
+        self.per_action.entry(key).or_default()
+    }
+
+    /// Record a completed action (or overhead component like "planner").
+    pub fn record(&mut self, key: &'static str, energy_uj: f64, time_us: u64) {
+        let t = self.entry(key);
+        t.count += 1;
+        t.energy_uj += energy_uj;
+        t.time_us += time_us;
+        self.total_uj += energy_uj;
+    }
+
+    /// Record a completed action primitive.
+    pub fn record_action(&mut self, a: Action, energy_uj: f64, time_us: u64) {
+        self.record(a.name(), energy_uj, time_us);
+    }
+
+    /// Record an aborted (rolled-back) attempt: the energy is burned but
+    /// the work is discarded.
+    pub fn record_abort(&mut self, a: Action, wasted_uj: f64) {
+        let t = self.entry(a.name());
+        t.aborted += 1;
+        t.wasted_uj += wasted_uj;
+        self.total_uj += wasted_uj;
+    }
+
+    /// Append a cumulative-energy sample at simulated time `t_us`.
+    pub fn sample(&mut self, t_us: u64) {
+        self.series.push((t_us, self.total_uj));
+    }
+
+    /// Total energy spent, µJ (including waste).
+    pub fn total_uj(&self) -> f64 {
+        self.total_uj
+    }
+
+    /// Tally for a key ("sense", "learn", "planner", "select:klast", ...).
+    pub fn tally(&self, key: &str) -> ActionTally {
+        self.per_action.get(key).copied().unwrap_or_default()
+    }
+
+    /// All tallies in key order.
+    pub fn tallies(&self) -> impl Iterator<Item = (&'static str, &ActionTally)> {
+        self.per_action.iter().map(|(k, v)| (*k, v))
+    }
+
+    /// Overhead fraction of one key relative to total energy.
+    pub fn fraction(&self, key: &str) -> f64 {
+        if self.total_uj <= 0.0 {
+            return 0.0;
+        }
+        self.tally(key).energy_uj / self.total_uj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tallies_accumulate() {
+        let mut m = EnergyMeter::new();
+        m.record_action(Action::Learn, 9_309.0, 1_551_000);
+        m.record_action(Action::Learn, 9_309.0, 1_551_000);
+        m.record_action(Action::Infer, 63.2, 9_470);
+        let learn = m.tally("learn");
+        assert_eq!(learn.count, 2);
+        assert!((learn.energy_uj - 18_618.0).abs() < 1e-9);
+        assert!((m.total_uj() - 18_681.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn aborts_count_as_waste() {
+        let mut m = EnergyMeter::new();
+        m.record_abort(Action::Learn, 1_000.0);
+        assert_eq!(m.tally("learn").aborted, 1);
+        assert_eq!(m.tally("learn").count, 0);
+        assert_eq!(m.total_uj(), 1_000.0);
+    }
+
+    #[test]
+    fn series_is_monotonic() {
+        let mut m = EnergyMeter::new();
+        for t in 0..10u64 {
+            m.record("sense", 10.0, 5);
+            m.sample(t * 100);
+        }
+        for w in m.series.windows(2) {
+            assert!(w[1].1 >= w[0].1 && w[1].0 >= w[0].0);
+        }
+    }
+
+    #[test]
+    fn fraction_of_overhead() {
+        let mut m = EnergyMeter::new();
+        m.record("planner", 57.0, 4_300);
+        m.record_action(Action::Learn, 5_417.0, 953_600);
+        let f = m.fraction("planner");
+        assert!((f - 57.0 / 5_474.0).abs() < 1e-9);
+    }
+}

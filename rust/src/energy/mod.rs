@@ -1,0 +1,19 @@
+//! Energy subsystem: harvesters, capacitor storage, per-action cost model,
+//! run-time energy metering, and the energy pre-inspection tool.
+//!
+//! Substitution note (DESIGN.md §1): the paper uses physical harvesters
+//! (solar panel, Powercast P2110 RF, PPA-2014 piezo) and TI EnergyTrace;
+//! here every element is a calibrated simulator. The per-action energy
+//! constants in [`cost`] are taken from the paper's own measurements
+//! (Figs. 16–17), so energy-efficiency *ratios* are preserved.
+
+pub mod capacitor;
+pub mod cost;
+pub mod harvester;
+pub mod inspect;
+pub mod meter;
+
+pub use capacitor::Capacitor;
+pub use cost::{ActionCost, CostModel};
+pub use harvester::{Harvester, HarvesterKind};
+pub use meter::EnergyMeter;

@@ -1,0 +1,52 @@
+//! Crate-wide error type.
+
+/// Errors surfaced by the ilearn library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// PJRT / XLA runtime failures (artifact loading, compile, execute).
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    /// An AOT artifact is missing or its manifest disagrees with the
+    /// buffer shapes the caller supplied.
+    #[error("artifact `{name}`: {msg}")]
+    Artifact { name: String, msg: String },
+
+    /// Configuration / CLI parsing problems.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// An action was requested that the action state diagram forbids from
+    /// the example's current state.
+    #[error("illegal action transition: {from:?} -> {to:?}")]
+    IllegalTransition {
+        from: crate::actions::Action,
+        to: crate::actions::Action,
+    },
+
+    /// Energy pre-inspection rejected an action (exceeds the budget the
+    /// capacitor can deliver in one wake cycle).
+    #[error("energy pre-inspection: action `{action}` needs {needed_uj:.1} uJ > budget {budget_uj:.1} uJ")]
+    EnergyBudget {
+        action: String,
+        needed_uj: f64,
+        budget_uj: f64,
+    },
+
+    /// NVM access errors (unknown variable, size mismatch).
+    #[error("nvm: {0}")]
+    Nvm(String),
+
+    /// I/O wrapper.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

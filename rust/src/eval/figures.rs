@@ -1,0 +1,618 @@
+//! Regeneration of every table and figure in the paper's evaluation (§7).
+//!
+//! Absolute numbers come from a simulated testbed (DESIGN.md §1), so the
+//! claims to check are the *shapes*: who wins, by roughly what factor, and
+//! where the crossovers fall. EXPERIMENTS.md records paper-vs-measured for
+//! each entry.
+
+use crate::actions::Action;
+use crate::apps::{AppConfig, AppKind, SchedulerKind};
+use crate::backend::native::NativeBackend;
+use crate::backend::shapes::{CHANNELS, WINDOW};
+use crate::backend::ComputeBackend;
+use crate::baselines::offline::{
+    detector_accuracy, ArDetector, IsolationForest, OfflineDetector, OneClassSvm,
+};
+use crate::baselines::RunningMeanThreshold;
+use crate::energy::CostModel;
+use crate::error::Result;
+use crate::eval::{FigData, Series};
+use crate::planner::{DynamicActionPlanner, PlanContext};
+use crate::selection::Heuristic;
+use crate::sensors::Sensor;
+use crate::sim::probe::build_probes;
+use crate::sim::RunResult;
+use crate::util::bench;
+
+const H: u64 = 3_600_000_000;
+
+/// Run a batch of app configs in parallel (one engine per worker thread).
+pub fn par_run(configs: Vec<AppConfig>) -> Result<Vec<RunResult>> {
+    let n = configs.len();
+    let mut results: Vec<Option<Result<RunResult>>> = (0..n).map(|_| None).collect();
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(4)
+        .min(n.max(1));
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let results_mx = std::sync::Mutex::new(&mut results);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let r = configs[i]
+                    .build_engine()
+                    .and_then(|e| e.run());
+                results_mx.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|r| r.expect("worker finished"))
+        .collect()
+}
+
+fn accuracy_series(name: &str, r: &RunResult) -> Series {
+    let mut s = Series::new(name);
+    for c in &r.checkpoints {
+        s.push(c.t_us as f64 / H as f64, c.accuracy);
+    }
+    s
+}
+
+/// All figure ids the harness can regenerate.
+pub const FIGURE_IDS: [&str; 15] = [
+    "fig6c", "fig7c", "fig8c", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
+    "fig16", "fig17", "table3", "table4", "table5",
+];
+
+/// Dispatch by figure id.
+pub fn generate(id: &str, seed: u64) -> Result<FigData> {
+    match id {
+        "fig6c" => fig6c(seed),
+        "fig7c" => fig7c(seed),
+        "fig8c" => fig8c(seed),
+        "fig9" => fig9_10(seed, false),
+        "fig10" => fig9_10(seed, true),
+        "fig11" => fig11(seed),
+        "fig12" => fig12(seed),
+        "fig13" => fig13_14(seed, false),
+        "fig14" => fig13_14(seed, true),
+        "fig15" => fig15(seed),
+        "fig16" => fig16(),
+        "fig17" => fig17(seed),
+        "table3" => table34(seed, false),
+        "table4" => table34(seed, true),
+        "table5" => table5(seed),
+        other => Err(crate::error::Error::Config(format!(
+            "unknown figure `{other}`; known: {FIGURE_IDS:?}"
+        ))),
+    }
+}
+
+/// Fig. 6(c): air-quality detection accuracy over deployment time
+/// (paper: 20 weeks at 81–83%; we compress to days — DESIGN.md §1).
+pub fn fig6c(seed: u64) -> Result<FigData> {
+    let mut fig = FigData::new(
+        "fig6c",
+        "Air-quality anomaly detection accuracy over time",
+        "days",
+        "accuracy",
+    );
+    let cfg = AppConfig::new(AppKind::AirQuality, seed, 5 * 24 * H);
+    let r = cfg.build_engine()?.run()?;
+    let mut s = Series::new("air_quality(knn, solar)");
+    for c in &r.checkpoints {
+        s.push(c.t_us as f64 / (24.0 * H as f64), c.accuracy);
+    }
+    fig.row(format!(
+        "air_quality: mean accuracy {:.2} (paper: 0.81-0.83), learned {}, inferred {}",
+        r.mean_accuracy(4),
+        r.learned,
+        r.inferred
+    ));
+    fig.series.push(s);
+    Ok(fig)
+}
+
+/// Fig. 7(c): presence accuracy across three areas vs the RSSI
+/// running-mean-threshold baseline.
+pub fn fig7c(seed: u64) -> Result<FigData> {
+    let mut fig = FigData::new(
+        "fig7c",
+        "Human presence accuracy across area moves (vs threshold baseline)",
+        "hours",
+        "accuracy",
+    );
+    let horizon = 30 * H;
+    let il = AppConfig::new(AppKind::Presence, seed, horizon);
+    // Baseline: same world, same duty-cycled execution, threshold learner.
+    let mut base_cfg = AppConfig::new(AppKind::Presence, seed, horizon);
+    base_cfg.scheduler = SchedulerKind::Alpaca { learn_pct: 0.5 };
+    let mut results = par_run(vec![il])?;
+    let il_r = results.remove(0);
+
+    // threshold baseline needs a custom learner: build engine manually
+    let base_r = {
+        let mut e = base_cfg.build_engine()?;
+        e.learner = Box::new(RunningMeanThreshold::new(0, 2.5));
+        e.run()?
+    };
+
+    fig.series.push(accuracy_series("intermittent_learning", &il_r));
+    fig.series.push(accuracy_series("rssi_threshold_baseline", &base_r));
+    fig.row(format!(
+        "IL mean {:.2} vs threshold baseline mean {:.2} (paper: baseline stays <0.50)",
+        il_r.mean_accuracy(3),
+        base_r.mean_accuracy(3)
+    ));
+    Ok(fig)
+}
+
+/// Fig. 8(c): vibration (gentle vs abrupt) classification accuracy, 4 h.
+pub fn fig8c(seed: u64) -> Result<FigData> {
+    let mut fig = FigData::new(
+        "fig8c",
+        "Vibration learning accuracy (gentle vs abrupt shaking)",
+        "hours",
+        "accuracy",
+    );
+    let cfg = AppConfig::new(AppKind::Vibration, seed, 4 * H);
+    let r = cfg.build_engine()?.run()?;
+    fig.series.push(accuracy_series("vibration(kmeans, piezo)", &r));
+    fig.row(format!(
+        "vibration: mean accuracy {:.2} (paper: 0.76), final {:.2}, learned {}",
+        r.mean_accuracy(2),
+        r.final_accuracy(),
+        r.learned
+    ));
+    Ok(fig)
+}
+
+fn duty_schedulers(mayfly: bool) -> Vec<SchedulerKind> {
+    let pcts = [0.1, 0.5, 0.9];
+    let mut v = vec![SchedulerKind::Planner];
+    for p in pcts {
+        v.push(if mayfly {
+            SchedulerKind::Mayfly {
+                learn_pct: p,
+                // Mayfly data-expiration: examples stale after 2 minutes
+                expiry_us: 120_000_000,
+            }
+        } else {
+            SchedulerKind::Alpaca { learn_pct: p }
+        });
+    }
+    v
+}
+
+fn app_horizon(kind: AppKind) -> u64 {
+    match kind {
+        AppKind::AirQuality => 48 * H,
+        AppKind::Presence => 24 * H,
+        AppKind::Vibration => 8 * H,
+    }
+}
+
+/// Figs. 9/10: accuracy of the intermittent learner vs Alpaca/Mayfly at
+/// [10/50/90]% learn duty cycles, for all three apps.
+pub fn fig9_10(seed: u64, mayfly: bool) -> Result<FigData> {
+    let (id, base) = if mayfly {
+        ("fig10", "Mayfly")
+    } else {
+        ("fig9", "Alpaca")
+    };
+    let mut fig = FigData::new(
+        id,
+        &format!("Accuracy vs {base} duty-cycled baselines"),
+        "hours",
+        "accuracy",
+    );
+    for kind in AppKind::ALL {
+        let mut cfgs = Vec::new();
+        for sched in duty_schedulers(mayfly) {
+            let mut c = AppConfig::new(kind, seed, app_horizon(kind));
+            c.scheduler = sched;
+            cfgs.push(c);
+        }
+        let scheds = duty_schedulers(mayfly);
+        let results = par_run(cfgs)?;
+        for (sched, r) in scheds.iter().zip(&results) {
+            let name = format!("{}/{}", kind.name(), sched.label());
+            fig.series.push(accuracy_series(&name, r));
+        }
+        let il = &results[0];
+        let best_base = results[1..]
+            .iter()
+            .map(|r| r.mean_accuracy(3))
+            .fold(0.0f64, f64::max);
+        let base90 = &results[3];
+        fig.row(format!(
+            "{}: IL {:.2} (learned {}) vs best {base} {:.2}; IL learn actions = {:.0}% of {base}[90l] ({} vs {})",
+            kind.name(),
+            il.mean_accuracy(3),
+            il.learned,
+            best_base,
+            100.0 * il.learned as f64 / base90.learned.max(1) as f64,
+            il.learned,
+            base90.learned,
+        ));
+    }
+    Ok(fig)
+}
+
+/// Fig. 11: cumulative energy vs Alpaca duty cycles over time.
+pub fn fig11(seed: u64) -> Result<FigData> {
+    let mut fig = FigData::new(
+        "fig11",
+        "Cumulative energy consumption vs Alpaca",
+        "hours",
+        "energy_mj",
+    );
+    for kind in AppKind::ALL {
+        let mut cfgs = Vec::new();
+        for sched in duty_schedulers(false) {
+            let mut c = AppConfig::new(kind, seed, app_horizon(kind));
+            c.scheduler = sched;
+            cfgs.push(c);
+        }
+        let scheds = duty_schedulers(false);
+        let results = par_run(cfgs)?;
+        for (sched, r) in scheds.iter().zip(&results) {
+            let mut s = Series::new(format!("{}/{}", kind.name(), sched.label()));
+            for &(t, e) in &r.energy_series {
+                s.push(t as f64 / H as f64, e / 1000.0);
+            }
+            fig.series.push(s);
+        }
+        let il = &results[0];
+        let a90 = &results[3];
+        fig.row(format!(
+            "{}: IL total {:.0} mJ vs Alpaca[90l] {:.0} mJ ({:+.0}%); accuracies {:.2} vs {:.2}",
+            kind.name(),
+            il.energy_uj / 1000.0,
+            a90.energy_uj / 1000.0,
+            100.0 * (il.energy_uj - a90.energy_uj) / a90.energy_uj.max(1.0),
+            il.mean_accuracy(3),
+            a90.mean_accuracy(3),
+        ));
+    }
+    Ok(fig)
+}
+
+/// Collect a training set + probes for the offline detectors by scanning
+/// the sensor world the same way the device would sense it.
+fn offline_dataset(
+    sensor: &dyn Sensor,
+    be: &mut dyn ComputeBackend,
+    horizon_us: u64,
+    n_train: usize,
+) -> Result<(Vec<Vec<f32>>, Vec<(Vec<f32>, bool)>)> {
+    let step = horizon_us / n_train as u64;
+    let mut train = Vec::with_capacity(n_train);
+    for i in 0..n_train {
+        let w = sensor.window(i as u64 * step, WINDOW).fit(WINDOW, CHANNELS);
+        train.push(be.extract(&w.data)?);
+    }
+    let probes = build_probes(sensor, be, horizon_us, 60, horizon_us / 700)?
+        .into_iter()
+        .map(|p| (p.example.features, p.example.truth_abnormal))
+        .collect();
+    Ok((train, probes))
+}
+
+/// Fig. 12 / Table 5: intermittent learner vs offline detectors.
+pub fn fig12(seed: u64) -> Result<FigData> {
+    let mut fig = FigData::new(
+        "fig12",
+        "Accuracy vs offline anomaly detectors (OC-SVM, iForest, AR(IMA))",
+        "app",
+        "accuracy",
+    );
+    let mut il_cfgs = Vec::new();
+    for kind in AppKind::ALL {
+        il_cfgs.push(AppConfig::new(kind, seed, app_horizon(kind)));
+    }
+    let il_results = par_run(il_cfgs)?;
+
+    for (kind, il) in AppKind::ALL.iter().zip(&il_results) {
+        let cfg = AppConfig::new(*kind, seed, app_horizon(*kind));
+        let sensor = cfg.build_sensor();
+        let mut be = NativeBackend::new();
+        let (train, probes) =
+            offline_dataset(sensor.as_ref(), &mut be, cfg.horizon_us, 240)?;
+
+        let mut svm = OneClassSvm::new(0.1);
+        svm.fit(&train);
+        let mut forest = IsolationForest::new(0.1, seed);
+        forest.fit(&train);
+        let mut ar = ArDetector::new(2, 3.0);
+        ar.fit(&train);
+
+        let accs: Vec<(String, f64)> = vec![
+            ("intermittent_learning".into(), il.mean_accuracy(4)),
+            ("one_class_svm".into(), detector_accuracy(&svm, &probes)),
+            ("isolation_forest".into(), detector_accuracy(&forest, &probes)),
+            ("arima".into(), detector_accuracy(&ar, &probes)),
+        ];
+        let learned_pct = 100.0 * il.learned as f64 / il.sensed.max(1) as f64;
+        fig.row(format!(
+            "{}: IL {:.2} (learned {:.1}% of sensed examples) | svm {:.2} | iforest {:.2} | arima {:.2}",
+            kind.name(),
+            accs[0].1,
+            learned_pct,
+            accs[1].1,
+            accs[2].1,
+            accs[3].1
+        ));
+        for (name, acc) in accs {
+            let mut s = Series::new(format!("{}/{}", kind.name(), name));
+            s.push(0.0, acc);
+            fig.series.push(s);
+        }
+    }
+    Ok(fig)
+}
+
+/// Figs. 13/14: effect of the example-selection heuristics — accuracy vs
+/// number of learned examples (13) or vs energy (14).
+pub fn fig13_14(seed: u64, vs_energy: bool) -> Result<FigData> {
+    let (id, x) = if vs_energy {
+        ("fig14", "energy_mj")
+    } else {
+        ("fig13", "learned_examples")
+    };
+    let mut fig = FigData::new(
+        id,
+        "Effect of example-selection heuristics",
+        x,
+        "accuracy",
+    );
+    for kind in AppKind::ALL {
+        let mut cfgs = Vec::new();
+        for h in Heuristic::ALL {
+            let mut c = AppConfig::new(kind, seed, app_horizon(kind));
+            c.heuristic = h;
+            cfgs.push(c);
+        }
+        let results = par_run(cfgs)?;
+        for (h, r) in Heuristic::ALL.iter().zip(&results) {
+            let mut s = Series::new(format!("{}/{}", kind.name(), h.name()));
+            for c in &r.checkpoints {
+                let xv = if vs_energy {
+                    c.energy_uj / 1000.0
+                } else {
+                    c.learned as f64
+                };
+                s.push(xv, c.accuracy);
+            }
+            fig.series.push(s);
+        }
+        let accs: Vec<String> = Heuristic::ALL
+            .iter()
+            .zip(&results)
+            .map(|(h, r)| {
+                format!(
+                    "{} {:.2}@{}ex",
+                    h.name(),
+                    r.mean_accuracy(4),
+                    r.learned
+                )
+            })
+            .collect();
+        fig.row(format!("{}: {}", kind.name(), accs.join(" | ")));
+    }
+    Ok(fig)
+}
+
+/// Fig. 15: energy-harvesting pattern vs accuracy for the three sources.
+pub fn fig15(seed: u64) -> Result<FigData> {
+    let mut fig = FigData::new(
+        "fig15",
+        "Energy harvesting pattern vs detection accuracy",
+        "hours",
+        "accuracy / voltage",
+    );
+    // (a) solar, 3 days
+    let mut solar = AppConfig::new(AppKind::AirQuality, seed, 72 * H);
+    solar.scheduler = SchedulerKind::Planner;
+    // (b) RF at 3/5/7 m for 3 h each
+    let mut rf = AppConfig::new(AppKind::Presence, seed, 9 * H);
+    rf.rf_distances = Some(vec![(0, 3.0), (3 * H, 5.0), (6 * H, 7.0)]);
+    // (c) piezo gentle/abrupt alternating 4 h (the app default)
+    let piezo = AppConfig::new(AppKind::Vibration, seed, 4 * H);
+
+    let results = par_run(vec![solar, rf, piezo])?;
+    let names = ["solar_3days", "rf_3_5_7m", "piezo_gentle_abrupt"];
+    for (name, r) in names.iter().zip(&results) {
+        fig.series.push(accuracy_series(&format!("{name}/accuracy"), r));
+        let mut v = Series::new(format!("{name}/voltage"));
+        for c in &r.checkpoints {
+            v.push(c.t_us as f64 / H as f64, c.voltage);
+        }
+        fig.series.push(v);
+    }
+    let rf_r = &results[1];
+    // the paper reports accuracy *at* hours 3/6/9 — the end of each
+    // distance segment (the learner has adapted as much as it will)
+    let thirds: Vec<f64> = (0..3)
+        .map(|i| {
+            let lo = i as u64 * 3 * H;
+            let hi = lo + 3 * H;
+            rf_r.checkpoints
+                .iter()
+                .filter(|c| c.t_us > lo && c.t_us <= hi)
+                .last()
+                .map(|c| c.accuracy)
+                .unwrap_or(0.0)
+        })
+        .collect();
+    fig.row(format!(
+        "rf accuracy at segment end (h3/h6/h9): 3m {:.2}, 5m {:.2}, 7m {:.2} (paper: 0.86/0.74/0.46 decreasing)",
+        thirds[0], thirds[1], thirds[2]
+    ));
+    fig.row(format!(
+        "solar: mean {:.2}; piezo: final {:.2} (paper: solar diurnal recovery; piezo converges 0.80)",
+        results[0].mean_accuracy(6),
+        results[2].final_accuracy()
+    ));
+    Ok(fig)
+}
+
+/// Fig. 16: energy and time of each action (k-NN and NN-k-means tables).
+pub fn fig16() -> Result<FigData> {
+    let mut fig = FigData::new(
+        "fig16",
+        "Energy and execution time per action",
+        "action",
+        "energy_uj / time_ms",
+    );
+    for m in [CostModel::knn(), CostModel::kmeans()] {
+        fig.row(format!("-- {} --", m.name));
+        for a in Action::ALL {
+            let c = m.cost(a);
+            fig.row(format!(
+                "{:<10} {:>12.1} uJ {:>12.2} ms  (splits {})",
+                a.name(),
+                c.energy_uj,
+                c.time_us as f64 / 1000.0,
+                c.splits
+            ));
+            let mut s = Series::new(format!("{}/{}", m.name, a.name()));
+            s.push(0.0, c.energy_uj);
+            s.push(1.0, c.time_us as f64 / 1000.0);
+            fig.series.push(s);
+        }
+    }
+    fig.row("paper anchors: knn.learn 9309 uJ/1551 ms; kmeans.learn 5417 uJ/953.6 ms; kmeans.infer 63.2 uJ/9.47 ms");
+    Ok(fig)
+}
+
+/// Fig. 17: overhead of the dynamic action planner and the selection
+/// heuristics — cost-model values plus *measured* decision latency.
+pub fn fig17(seed: u64) -> Result<FigData> {
+    let mut fig = FigData::new(
+        "fig17",
+        "Planner and example-selection overhead",
+        "component",
+        "energy_uj / time",
+    );
+    let m = CostModel::kmeans();
+    fig.row(format!(
+        "planner        {:>8.1} uJ {:>8.2} ms (paper: 57 uJ / 4.3 ms)",
+        m.planner.energy_uj,
+        m.planner.time_us as f64 / 1000.0
+    ));
+    fig.row(format!(
+        "round_robin    {:>8.1} uJ   |  k_last {:>8.1} uJ  |  randomized {:>8.1} uJ (paper: 270 uJ vs 1.8 uJ)",
+        m.sel_round_robin.energy_uj, m.sel_k_last.energy_uj, m.sel_randomized.energy_uj
+    ));
+
+    // measured host-side decision latency of the planner search
+    let mut planner = DynamicActionPlanner::default();
+    let ctx = PlanContext {
+        learned_total: 10,
+        quality: 0.5,
+        window_learns: 1,
+        window_infers: 1,
+    };
+    let pending = vec![Action::Decide, Action::Sense];
+    let meas = bench::bench("planner.next_action", 60, || {
+        bench::black_box(planner.next_action(&pending, &ctx, &m));
+    });
+    fig.row(format!("measured planner decision: {}", meas.row()));
+
+    // overhead fraction from a real run (paper: <= 3.5% energy)
+    let cfg = AppConfig::new(AppKind::Vibration, seed, 2 * H);
+    let mut engine = cfg.build_engine()?;
+    engine.meter = crate::energy::EnergyMeter::new();
+    let r = engine.run()?;
+    let planner_uj: f64 = r
+        .action_tallies
+        .iter()
+        .filter(|(n, ..)| n == "planner")
+        .map(|(_, _, e, _)| *e)
+        .sum();
+    fig.row(format!(
+        "planner energy share in a 2h vibration run: {:.1}% (paper: <=3.5%... 4.3%)",
+        100.0 * planner_uj / r.energy_uj.max(1.0)
+    ));
+    let mut s = Series::new("planner_overhead_pct");
+    s.push(0.0, 100.0 * planner_uj / r.energy_uj.max(1.0));
+    fig.series.push(s);
+    Ok(fig)
+}
+
+/// Tables 3/4: average accuracy summary vs Alpaca/Mayfly.
+pub fn table34(seed: u64, mayfly: bool) -> Result<FigData> {
+    let base = if mayfly { "Mayfly" } else { "Alpaca" };
+    let mut fig = fig9_10(seed, mayfly)?;
+    fig.id = if mayfly { "table4" } else { "table3" }.into();
+    fig.title = format!("Average accuracy: intermittent learning vs {base}");
+    // rows already carry the summary; add the overall average
+    let il_mean: f64 = fig
+        .series
+        .iter()
+        .filter(|s| s.name.contains("intermittent_learning"))
+        .map(|s| s.mean_y())
+        .sum::<f64>()
+        / 3.0;
+    fig.row(format!(
+        "overall IL average accuracy {:.2} (paper: 0.80 vs {base} 0.54-0.79)",
+        il_mean
+    ));
+    Ok(fig)
+}
+
+/// Table 5: summary vs offline detectors.
+pub fn table5(seed: u64) -> Result<FigData> {
+    let mut fig = fig12(seed)?;
+    fig.id = "table5".into();
+    fig.title = "Average accuracy vs offline detectors (paper: IL 0.80 vs 0.78/0.86/0.83, learning 44% of examples)".into();
+    Ok(fig)
+}
+
+/// Make a learner checkpoint/restore stress run for failure injection
+/// tests (exposed for integration tests).
+pub fn quick_run(kind: AppKind, seed: u64, hours: u64) -> Result<RunResult> {
+    AppConfig::new(kind, seed, hours * H).build_engine()?.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_ids_dispatch() {
+        // only the cheap ones here; the expensive figures run in benches
+        let f = generate("fig16", 1).unwrap();
+        assert!(f.rows.iter().any(|r| r.contains("9309")));
+        assert!(generate("nope", 1).is_err());
+    }
+
+    #[test]
+    fn fig8c_reaches_reasonable_accuracy() {
+        let f = fig8c(3).unwrap();
+        assert!(!f.series.is_empty());
+        let last = f.series[0].last_y();
+        assert!(last >= 0.6, "vibration final accuracy {last}");
+    }
+
+    #[test]
+    fn par_run_preserves_order_and_determinism() {
+        let mk = || {
+            let mut c = AppConfig::new(AppKind::Vibration, 9, 2 * H);
+            c.heuristic = Heuristic::Randomized;
+            c
+        };
+        let a = par_run(vec![mk(), mk()]).unwrap();
+        assert_eq!(a[0].learned, a[1].learned);
+        assert_eq!(a[0].energy_uj, a[1].energy_uj);
+        let b = par_run(vec![mk()]).unwrap();
+        assert_eq!(a[0].learned, b[0].learned);
+    }
+}

@@ -1,0 +1,153 @@
+//! Evaluation harness: runs the experiment matrix and regenerates every
+//! table and figure of the paper's §7 (see DESIGN.md §4 for the index).
+//!
+//! Each `fig*`/`table*` function in [`figures`] returns a [`FigData`] —
+//! a set of named series plus formatted rows — which the CLI prints and
+//! optionally writes as JSON under `out/`.
+
+pub mod figures;
+
+use crate::util::json::Json;
+
+/// One named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Series {
+            name: name.into(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+
+    pub fn mean_y(&self) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        self.points.iter().map(|p| p.1).sum::<f64>() / self.points.len() as f64
+    }
+
+    pub fn last_y(&self) -> f64 {
+        self.points.last().map(|p| p.1).unwrap_or(0.0)
+    }
+}
+
+/// A regenerated figure/table: series for plotting + rows for the console.
+#[derive(Debug, Clone, Default)]
+pub struct FigData {
+    pub id: String,
+    pub title: String,
+    /// Axis labels (x, y).
+    pub axes: (String, String),
+    pub series: Vec<Series>,
+    /// Pre-formatted summary rows (what the paper's table shows).
+    pub rows: Vec<String>,
+}
+
+impl FigData {
+    pub fn new(id: &str, title: &str, x: &str, y: &str) -> Self {
+        FigData {
+            id: id.to_string(),
+            title: title.to_string(),
+            axes: (x.to_string(), y.to_string()),
+            series: Vec::new(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, s: impl Into<String>) {
+        self.rows.push(s.into());
+    }
+
+    /// Console rendering.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("== {} — {} ==\n", self.id, self.title));
+        out.push_str(&format!("   x: {}   y: {}\n", self.axes.0, self.axes.1));
+        for row in &self.rows {
+            out.push_str(row);
+            out.push('\n');
+        }
+        for s in &self.series {
+            out.push_str(&format!(
+                "  series {:<28} n={:<4} mean={:.3} last={:.3}\n",
+                s.name,
+                s.points.len(),
+                s.mean_y(),
+                s.last_y()
+            ));
+        }
+        out
+    }
+
+    /// JSON rendering (for plotting scripts).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Str(self.id.clone())),
+            ("title", Json::Str(self.title.clone())),
+            ("x", Json::Str(self.axes.0.clone())),
+            ("y", Json::Str(self.axes.1.clone())),
+            (
+                "series",
+                Json::Arr(
+                    self.series
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("name", Json::Str(s.name.clone())),
+                                (
+                                    "points",
+                                    Json::Arr(
+                                        s.points
+                                            .iter()
+                                            .map(|&(x, y)| Json::nums([x, y]))
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "rows",
+                Json::Arr(self.rows.iter().map(|r| Json::Str(r.clone())).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_stats() {
+        let mut s = Series::new("a");
+        s.push(0.0, 0.5);
+        s.push(1.0, 1.0);
+        assert_eq!(s.mean_y(), 0.75);
+        assert_eq!(s.last_y(), 1.0);
+    }
+
+    #[test]
+    fn figdata_renders_and_serializes() {
+        let mut f = FigData::new("fig9a", "test", "t", "acc");
+        let mut s = Series::new("il");
+        s.push(0.0, 0.8);
+        f.series.push(s);
+        f.row("il: 0.80");
+        let txt = f.render();
+        assert!(txt.contains("fig9a") && txt.contains("il: 0.80"));
+        let j = f.to_json().to_string();
+        assert!(j.contains("\"id\":\"fig9a\"") && j.contains("[0,0.8]"));
+    }
+}

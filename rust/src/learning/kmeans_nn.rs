@@ -1,0 +1,329 @@
+//! Neural-network k-means (competitive learning) with cluster-then-label
+//! semi-supervision — the vibration learner of paper §6.3.
+//!
+//! A two-layer network: the input layer is the feature vector, the two
+//! output neurons are the clusters (normal / abnormal vibration). Only the
+//! winner neuron (largest activation a_j = Σ w_ij x_i) is updated per
+//! example: Δw = η(x − w). Classification feeds the features forward and
+//! takes the winner.
+//!
+//! Cluster→label assignment follows the cluster-then-label scheme: a small
+//! number of *labelled* examples (the semi-supervised budget) vote on the
+//! label of the cluster they fall into; unlabelled examples only move the
+//! cluster means.
+
+use crate::backend::shapes::*;
+use crate::backend::ComputeBackend;
+use crate::error::Result;
+use crate::learning::{Example, Learner, Verdict};
+use crate::nvm::Nvm;
+
+/// Competitive-learning k-means with cluster labelling.
+#[derive(Debug, Clone)]
+pub struct ClusterLabelLearner {
+    /// (N_CLUSTERS, FEAT_DIM) weights.
+    w: Vec<f32>,
+    /// Learning rate η.
+    pub eta: f32,
+    /// Per-cluster (normal votes, abnormal votes) from labelled examples.
+    votes: [[u32; 2]; N_CLUSTERS],
+    /// Labelled examples still allowed to vote (semi-supervised budget).
+    label_budget: u32,
+    /// The budget the learner started with (per-cluster cap base).
+    initial_budget: u32,
+    learned: u64,
+    /// Per-cluster running mean of the winning activation (drift monitor
+    /// used by `evaluate`).
+    act_ema: [f32; N_CLUSTERS],
+    quality: f32,
+    key: &'static str,
+}
+
+impl ClusterLabelLearner {
+    /// `label_budget` = number of ground-truth labels the deployment can
+    /// afford to reveal (paper's controlled experiment effectively labels
+    /// the calibration gestures).
+    pub fn new(seed: u64, label_budget: u32) -> Self {
+        // deterministic small random init, distinct per cluster
+        let mut rng = crate::util::Rng::with_stream(seed, 0x5EED);
+        let w = (0..N_CLUSTERS * FEAT_DIM)
+            .map(|_| rng.normal(0.0, 0.05) as f32)
+            .collect();
+        ClusterLabelLearner {
+            w,
+            eta: 0.15,
+            votes: [[0; 2]; N_CLUSTERS],
+            label_budget,
+            initial_budget: label_budget,
+            learned: 0,
+            act_ema: [0.0; N_CLUSTERS],
+            quality: 0.0,
+            key: "kmeans",
+        }
+    }
+
+    /// Winner cluster for a feature vector.
+    pub fn winner(&self, x: &[f32], be: &mut dyn ComputeBackend) -> Result<usize> {
+        let acts = be.kmeans_infer(&self.w, x)?;
+        Ok(argmax(&acts))
+    }
+
+    /// Label of a cluster by majority vote; `None` if unvoted.
+    pub fn cluster_label(&self, cluster: usize) -> Option<bool> {
+        let [n, a] = self.votes[cluster];
+        if n == a {
+            None
+        } else {
+            Some(a > n)
+        }
+    }
+
+    /// Current weights (tests/benches).
+    pub fn weights(&self) -> &[f32] {
+        &self.w
+    }
+
+    /// Remaining labelled-example budget.
+    pub fn labels_remaining(&self) -> u32 {
+        self.label_budget
+    }
+
+    /// Spend one label on `cluster` if budget remains AND the cluster has
+    /// not used its per-cluster share. Without the per-cluster cap, a
+    /// deployment whose early phase is all one class (e.g. the vibration
+    /// protocol's gentle-only first hour) burns the whole budget labelling
+    /// one cluster and the other stays forever unlabelled.
+    fn spend_label(&mut self, cluster: usize, abnormal: bool) {
+        let initial = self.initial_budget.max(self.label_budget);
+        let cap = (initial / N_CLUSTERS as u32).max(1);
+        let used: u32 = self.votes[cluster].iter().sum();
+        if self.label_budget > 0 && used < cap {
+            self.votes[cluster][abnormal as usize] += 1;
+            self.label_budget -= 1;
+        }
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+impl Learner for ClusterLabelLearner {
+    fn learn(&mut self, ex: &Example, be: &mut dyn ComputeBackend) -> Result<()> {
+        debug_assert_eq!(ex.features.len(), FEAT_DIM);
+        // Init-from-data: the first K examples seed the K cluster weights
+        // directly (standard k-means init). Without this, a near-zero
+        // random init lets one neuron capture both populations (the
+        // classic competitive-learning dead-unit problem).
+        if self.learned < N_CLUSTERS as u64 {
+            let c = self.learned as usize;
+            self.w[c * FEAT_DIM..(c + 1) * FEAT_DIM].copy_from_slice(&ex.features);
+            self.spend_label(c, ex.truth_abnormal);
+            self.learned += 1;
+            return Ok(());
+        }
+        let (new_w, acts) = be.kmeans_learn(&self.w, &ex.features, self.eta)?;
+        self.w = new_w;
+        let win = argmax(&acts);
+        self.act_ema[win] = 0.9 * self.act_ema[win] + 0.1 * acts[win];
+        self.spend_label(win, ex.truth_abnormal);
+        self.learned += 1;
+        Ok(())
+    }
+
+    fn infer(&mut self, ex: &Example, be: &mut dyn ComputeBackend) -> Result<Verdict> {
+        if self.learned < 2 {
+            return Ok(Verdict::Unknown);
+        }
+        let win = self.winner(&ex.features, be)?;
+        Ok(match self.cluster_label(win) {
+            Some(true) => Verdict::Abnormal,
+            Some(false) => Verdict::Normal,
+            None => Verdict::Unknown,
+        })
+    }
+
+    fn learnable(&self) -> bool {
+        true
+    }
+
+    fn evaluate(&mut self, _be: &mut dyn ComputeBackend) -> Result<f32> {
+        // Quality: do both clusters have a confident (non-tied) label and
+        // have both been exercised? 0.5 per labelled cluster.
+        let q = (0..N_CLUSTERS)
+            .map(|c| if self.cluster_label(c).is_some() { 0.5 } else { 0.0 })
+            .sum();
+        self.quality = q;
+        Ok(q)
+    }
+
+    fn learned_count(&self) -> u64 {
+        self.learned
+    }
+
+    fn save(&self, nvm: &mut Nvm) -> Result<()> {
+        nvm.write_f32s(&format!("{}/w", self.key), &self.w)?;
+        let mut misc = vec![
+            self.eta,
+            self.quality,
+            self.label_budget as f32,
+            self.initial_budget as f32,
+        ];
+        for c in 0..N_CLUSTERS {
+            misc.push(self.votes[c][0] as f32);
+            misc.push(self.votes[c][1] as f32);
+            misc.push(self.act_ema[c]);
+        }
+        nvm.write_f32s(&format!("{}/misc", self.key), &misc)?;
+        nvm.write_u64(&format!("{}/learned", self.key), self.learned)?;
+        Ok(())
+    }
+
+    fn restore(&mut self, nvm: &mut Nvm) -> Result<()> {
+        if let Some(w) = nvm.read_f32s(&format!("{}/w", self.key)) {
+            if w.len() == N_CLUSTERS * FEAT_DIM {
+                self.w = w;
+            }
+        }
+        if let Some(m) = nvm.read_f32s(&format!("{}/misc", self.key)) {
+            if m.len() == 4 + 3 * N_CLUSTERS {
+                self.eta = m[0];
+                self.quality = m[1];
+                self.label_budget = m[2] as u32;
+                self.initial_budget = m[3] as u32;
+                for c in 0..N_CLUSTERS {
+                    self.votes[c][0] = m[4 + 3 * c] as u32;
+                    self.votes[c][1] = m[5 + 3 * c] as u32;
+                    self.act_ema[c] = m[6 + 3 * c];
+                }
+            }
+        }
+        self.learned = nvm.read_u64(&format!("{}/learned", self.key));
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "kmeans_cluster_label"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::util::Rng;
+
+    /// Two well-separated example populations on distinct axes.
+    fn population(rng: &mut Rng, abnormal: bool) -> Example {
+        let mut f = vec![0.0f32; FEAT_DIM];
+        let base = if abnormal { 8 } else { 0 };
+        for i in 0..8 {
+            f[base + i] = 2.0 + rng.normal(0.0, 0.2) as f32;
+        }
+        Example::new(f, 0, abnormal)
+    }
+
+    #[test]
+    fn separates_two_populations() {
+        let mut be = NativeBackend::new();
+        let mut l = ClusterLabelLearner::new(7, 40);
+        let mut rng = Rng::new(7);
+        for i in 0..120 {
+            let ex = population(&mut rng, i % 2 == 0);
+            l.learn(&ex, &mut be).unwrap();
+        }
+        // evaluate: both clusters labelled
+        assert_eq!(l.evaluate(&mut be).unwrap(), 1.0);
+        let mut correct = 0;
+        for i in 0..40 {
+            let ex = population(&mut rng, i % 2 == 0);
+            let v = l.infer(&ex, &mut be).unwrap();
+            if v.abnormal() == ex.truth_abnormal {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 36, "correct {correct}/40");
+    }
+
+    #[test]
+    fn unknown_until_learned() {
+        let mut be = NativeBackend::new();
+        let mut l = ClusterLabelLearner::new(1, 10);
+        let mut rng = Rng::new(1);
+        let ex = population(&mut rng, false);
+        assert_eq!(l.infer(&ex, &mut be).unwrap(), Verdict::Unknown);
+    }
+
+    #[test]
+    fn label_budget_is_finite() {
+        let mut be = NativeBackend::new();
+        let mut l = ClusterLabelLearner::new(2, 5);
+        let mut rng = Rng::new(2);
+        for i in 0..20 {
+            l.learn(&population(&mut rng, i % 2 == 0), &mut be).unwrap();
+        }
+        // budget 5, per-cluster cap = 5/2 = 2: at most 4 spendable
+        let total_votes: u32 = l.votes.iter().flatten().sum();
+        assert_eq!(total_votes, 4);
+        assert_eq!(l.labels_remaining(), 1);
+        for c in 0..N_CLUSTERS {
+            let used: u32 = l.votes[c].iter().sum();
+            assert!(used <= 2, "cluster {c} used {used}");
+        }
+    }
+
+    #[test]
+    fn save_restore_round_trip() {
+        let mut be = NativeBackend::new();
+        let mut nvm = Nvm::new();
+        let mut l = ClusterLabelLearner::new(3, 20);
+        let mut rng = Rng::new(3);
+        for i in 0..30 {
+            l.learn(&population(&mut rng, i % 2 == 0), &mut be).unwrap();
+        }
+        l.save(&mut nvm).unwrap();
+        let mut l2 = ClusterLabelLearner::new(999, 0); // different init
+        l2.restore(&mut nvm).unwrap();
+        assert_eq!(l2.learned_count(), 30);
+        assert_eq!(l2.weights(), l.weights());
+        let ex = population(&mut rng, true);
+        assert_eq!(
+            l.infer(&ex, &mut be).unwrap(),
+            l2.infer(&ex, &mut be).unwrap()
+        );
+    }
+
+    #[test]
+    fn eta_controls_step_size() {
+        let mut be = NativeBackend::new();
+        let mut slow = ClusterLabelLearner::new(4, 0);
+        let mut fast = ClusterLabelLearner::new(4, 0);
+        slow.eta = 0.01;
+        fast.eta = 0.5;
+        let mut rng = Rng::new(4);
+        // first two examples seed the clusters (init-from-data);
+        // the third exercises the competitive update whose step is eta.
+        let seeds = [population(&mut rng, false), population(&mut rng, true)];
+        for l in [&mut slow, &mut fast] {
+            l.learn(&seeds[0], &mut be).unwrap();
+            l.learn(&seeds[1], &mut be).unwrap();
+        }
+        let snapshot = slow.weights().to_vec();
+        assert_eq!(snapshot, fast.weights());
+        let ex = population(&mut rng, false);
+        slow.learn(&ex, &mut be).unwrap();
+        fast.learn(&ex, &mut be).unwrap();
+        let delta = |l: &ClusterLabelLearner| -> f32 {
+            l.weights()
+                .iter()
+                .zip(&snapshot)
+                .map(|(a, b)| (a - b).abs())
+                .sum()
+        };
+        assert!(delta(&fast) > 5.0 * delta(&slow));
+    }
+}

@@ -1,0 +1,263 @@
+//! k-NN anomaly learner (paper §6.1).
+//!
+//! Maintains a ring buffer of the most recent learned examples. The
+//! `learn` payload recomputes every buffered example's anomaly score
+//! AS_i = Σ_{j∈kNN(i)} d(e_i, e_j) and sets the detection threshold AS_TH
+//! to the 90th percentile of the scores; `infer` computes the score of a
+//! new example and classifies it abnormal iff AS_new > AS_TH. The
+//! threshold evolves as new examples are learned — the paper's
+//! "anomaly threshold AS_TH evolves over time".
+
+use crate::backend::shapes::*;
+use crate::backend::ComputeBackend;
+use crate::error::Result;
+use crate::learning::{Example, Learner, Verdict};
+use crate::nvm::Nvm;
+
+/// k-NN anomaly learner state (all state is NVM-checkpointable).
+#[derive(Debug, Clone)]
+pub struct KnnAnomalyLearner {
+    /// Ring buffer, (N_BUF, FEAT_DIM) row-major.
+    buf: Vec<f32>,
+    /// Validity mask (1.0 = row holds a learned example).
+    mask: Vec<f32>,
+    /// Next ring slot to overwrite.
+    next: usize,
+    /// Learned-example counter (monotonic).
+    learned: u64,
+    /// Current anomaly threshold AS_TH.
+    threshold: f32,
+    /// Last `evaluate` quality indicator.
+    quality: f32,
+    /// NVM key prefix (several learners may share one store).
+    key: &'static str,
+}
+
+impl Default for KnnAnomalyLearner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl KnnAnomalyLearner {
+    pub fn new() -> Self {
+        KnnAnomalyLearner {
+            buf: vec![0.0; N_BUF * FEAT_DIM],
+            mask: vec![0.0; N_BUF],
+            next: 0,
+            learned: 0,
+            threshold: 0.0,
+            quality: 0.0,
+            key: "knn",
+        }
+    }
+
+    /// Current detection threshold.
+    pub fn threshold(&self) -> f32 {
+        self.threshold
+    }
+
+    /// Number of valid examples currently buffered.
+    pub fn buffered(&self) -> usize {
+        self.mask.iter().filter(|&&m| m > 0.5).count()
+    }
+
+    /// Raw buffer access (benches / parity tests).
+    pub fn buffer(&self) -> (&[f32], &[f32]) {
+        (&self.buf, &self.mask)
+    }
+
+    /// Anomaly score of an example under the current model.
+    pub fn score(&self, ex: &Example, be: &mut dyn ComputeBackend) -> Result<f32> {
+        be.knn_infer(&self.buf, &self.mask, &ex.features)
+    }
+}
+
+impl Learner for KnnAnomalyLearner {
+    fn learn(&mut self, ex: &Example, be: &mut dyn ComputeBackend) -> Result<()> {
+        debug_assert_eq!(ex.features.len(), FEAT_DIM);
+        let slot = self.next;
+        self.buf[slot * FEAT_DIM..(slot + 1) * FEAT_DIM].copy_from_slice(&ex.features);
+        self.mask[slot] = 1.0;
+        self.next = (self.next + 1) % N_BUF;
+        self.learned += 1;
+        let (_scores, thr) = be.knn_learn(&self.buf, &self.mask)?;
+        self.threshold = thr;
+        Ok(())
+    }
+
+    fn infer(&mut self, ex: &Example, be: &mut dyn ComputeBackend) -> Result<Verdict> {
+        if self.buffered() <= K_NEIGHBORS || self.threshold <= 0.0 {
+            return Ok(Verdict::Unknown);
+        }
+        let s = be.knn_infer(&self.buf, &self.mask, &ex.features)?;
+        Ok(if s > self.threshold {
+            Verdict::Abnormal
+        } else {
+            Verdict::Normal
+        })
+    }
+
+    fn learnable(&self) -> bool {
+        // k-NN can always absorb an example (ring overwrite); the paper's
+        // precondition is about having a sensed example available, which
+        // the engine enforces. A model-level precondition: buffer space or
+        // ring age — always true here.
+        true
+    }
+
+    fn evaluate(&mut self, be: &mut dyn ComputeBackend) -> Result<f32> {
+        // Quality: fraction of buffered examples whose score is below the
+        // threshold (how well the normal envelope fits). 0 when untrained.
+        if self.buffered() <= K_NEIGHBORS {
+            self.quality = 0.0;
+            return Ok(0.0);
+        }
+        let (scores, thr) = be.knn_learn(&self.buf, &self.mask)?;
+        self.threshold = thr;
+        let n = self.buffered();
+        let ok = (0..N_BUF)
+            .filter(|&i| self.mask[i] > 0.5 && scores[i] <= thr)
+            .count();
+        self.quality = ok as f32 / n as f32;
+        Ok(self.quality)
+    }
+
+    fn learned_count(&self) -> u64 {
+        self.learned
+    }
+
+    fn save(&self, nvm: &mut Nvm) -> Result<()> {
+        nvm.write_f32s(&format!("{}/buf", self.key), &self.buf)?;
+        nvm.write_f32s(&format!("{}/mask", self.key), &self.mask)?;
+        nvm.write_f32s(
+            &format!("{}/scalars", self.key),
+            &[self.next as f32, self.threshold, self.quality],
+        )?;
+        nvm.write_u64(&format!("{}/learned", self.key), self.learned)?;
+        Ok(())
+    }
+
+    fn restore(&mut self, nvm: &mut Nvm) -> Result<()> {
+        if let Some(buf) = nvm.read_f32s(&format!("{}/buf", self.key)) {
+            if buf.len() == N_BUF * FEAT_DIM {
+                self.buf = buf;
+            }
+        }
+        if let Some(mask) = nvm.read_f32s(&format!("{}/mask", self.key)) {
+            if mask.len() == N_BUF {
+                self.mask = mask;
+            }
+        }
+        if let Some(s) = nvm.read_f32s(&format!("{}/scalars", self.key)) {
+            if s.len() == 3 {
+                self.next = (s[0] as usize) % N_BUF;
+                self.threshold = s[1];
+                self.quality = s[2];
+            }
+        }
+        self.learned = nvm.read_u64(&format!("{}/learned", self.key));
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "knn_anomaly"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::util::Rng;
+
+    fn normal_ex(rng: &mut Rng, t: u64) -> Example {
+        Example::new(
+            (0..FEAT_DIM).map(|_| rng.normal(0.0, 1.0) as f32).collect(),
+            t,
+            false,
+        )
+    }
+
+    #[test]
+    fn detects_far_outlier_after_learning() {
+        let mut be = NativeBackend::new();
+        let mut l = KnnAnomalyLearner::new();
+        let mut rng = Rng::new(1);
+        for t in 0..30 {
+            l.learn(&normal_ex(&mut rng, t), &mut be).unwrap();
+        }
+        assert!(l.threshold() > 0.0);
+        let outlier = Example::new(vec![40.0; FEAT_DIM], 99, true);
+        assert_eq!(l.infer(&outlier, &mut be).unwrap(), Verdict::Abnormal);
+        let typical = normal_ex(&mut rng, 100);
+        // most typical points are below the 90th percentile threshold
+        let mut normals = 0;
+        for _ in 0..20 {
+            if l.infer(&normal_ex(&mut rng, 0), &mut be).unwrap() == Verdict::Normal {
+                normals += 1;
+            }
+        }
+        assert!(normals >= 14, "normals {normals}");
+        let _ = typical;
+    }
+
+    #[test]
+    fn unknown_before_enough_examples() {
+        let mut be = NativeBackend::new();
+        let mut l = KnnAnomalyLearner::new();
+        let mut rng = Rng::new(2);
+        let ex = normal_ex(&mut rng, 0);
+        assert_eq!(l.infer(&ex, &mut be).unwrap(), Verdict::Unknown);
+        for t in 0..3 {
+            l.learn(&normal_ex(&mut rng, t), &mut be).unwrap();
+        }
+        assert_eq!(l.infer(&ex, &mut be).unwrap(), Verdict::Unknown);
+    }
+
+    #[test]
+    fn ring_buffer_wraps() {
+        let mut be = NativeBackend::new();
+        let mut l = KnnAnomalyLearner::new();
+        let mut rng = Rng::new(3);
+        for t in 0..(N_BUF as u64 + 10) {
+            l.learn(&normal_ex(&mut rng, t), &mut be).unwrap();
+        }
+        assert_eq!(l.buffered(), N_BUF);
+        assert_eq!(l.learned_count(), N_BUF as u64 + 10);
+    }
+
+    #[test]
+    fn save_restore_round_trip() {
+        let mut be = NativeBackend::new();
+        let mut nvm = Nvm::new();
+        let mut l = KnnAnomalyLearner::new();
+        let mut rng = Rng::new(4);
+        for t in 0..10 {
+            l.learn(&normal_ex(&mut rng, t), &mut be).unwrap();
+        }
+        l.save(&mut nvm).unwrap();
+        let mut l2 = KnnAnomalyLearner::new();
+        l2.restore(&mut nvm).unwrap();
+        assert_eq!(l2.learned_count(), 10);
+        assert_eq!(l2.threshold(), l.threshold());
+        let ex = normal_ex(&mut rng, 99);
+        assert_eq!(
+            l.infer(&ex, &mut be).unwrap(),
+            l2.infer(&ex, &mut be).unwrap()
+        );
+    }
+
+    #[test]
+    fn evaluate_reports_fit_quality() {
+        let mut be = NativeBackend::new();
+        let mut l = KnnAnomalyLearner::new();
+        let mut rng = Rng::new(5);
+        assert_eq!(l.evaluate(&mut be).unwrap(), 0.0);
+        for t in 0..20 {
+            l.learn(&normal_ex(&mut rng, t), &mut be).unwrap();
+        }
+        let q = l.evaluate(&mut be).unwrap();
+        assert!((0.8..=1.0).contains(&q), "q {q}");
+    }
+}

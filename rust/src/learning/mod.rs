@@ -1,0 +1,86 @@
+//! On-device learners (the paper's "library of learning algorithms",
+//! §3.1): the k-NN anomaly learner used by the air-quality and
+//! human-presence apps (§6.1, §6.2) and the neural-network k-means
+//! (competitive learning) cluster-then-label learner used by the
+//! vibration app (§6.3).
+//!
+//! Learners hold their model state in plain vectors, dispatch all numeric
+//! work through a [`crate::backend::ComputeBackend`], and can checkpoint
+//! themselves to [`crate::nvm::Nvm`] so the model survives power failures.
+
+pub mod kmeans_nn;
+pub mod knn;
+
+pub use kmeans_nn::ClusterLabelLearner;
+pub use knn::KnnAnomalyLearner;
+
+use crate::backend::ComputeBackend;
+use crate::error::Result;
+use crate::nvm::Nvm;
+
+/// One example: a feature vector plus bookkeeping. The ground-truth label
+/// is carried for *evaluation only* — the unsupervised learners never read
+/// it, the semi-supervised learner reads it only for the few bootstrap
+/// labels the paper's cluster-then-label scheme assumes.
+#[derive(Debug, Clone)]
+pub struct Example {
+    /// FEAT_DIM feature vector (output of `extract`).
+    pub features: Vec<f32>,
+    /// Acquisition time, µs.
+    pub t_us: u64,
+    /// Ground truth (evaluation only).
+    pub truth_abnormal: bool,
+}
+
+impl Example {
+    pub fn new(features: Vec<f32>, t_us: u64, truth_abnormal: bool) -> Self {
+        Example {
+            features,
+            t_us,
+            truth_abnormal,
+        }
+    }
+}
+
+/// Verdict of an inference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Normal,
+    Abnormal,
+    /// The model cannot decide yet (e.g. not enough learned examples).
+    Unknown,
+}
+
+impl Verdict {
+    pub fn abnormal(self) -> bool {
+        self == Verdict::Abnormal
+    }
+}
+
+/// An online learner whose `learn`/`infer` payloads run on a backend.
+pub trait Learner: Send {
+    /// Incorporate one example (the `learn` action's payload).
+    fn learn(&mut self, ex: &Example, be: &mut dyn ComputeBackend) -> Result<()>;
+
+    /// Classify one example (the `infer` action's payload).
+    fn infer(&mut self, ex: &Example, be: &mut dyn ComputeBackend) -> Result<Verdict>;
+
+    /// Prerequisites of `learn` (the `learnable` action): e.g. clustering
+    /// needs a minimum number of examples.
+    fn learnable(&self) -> bool;
+
+    /// Re-assess model quality (the `evaluate` action's payload); returns
+    /// a scalar quality indicator in [0, 1] the planner may consult.
+    fn evaluate(&mut self, be: &mut dyn ComputeBackend) -> Result<f32>;
+
+    /// Number of examples learned so far.
+    fn learned_count(&self) -> u64;
+
+    /// Checkpoint model state to NVM.
+    fn save(&self, nvm: &mut Nvm) -> Result<()>;
+
+    /// Restore model state from NVM (no-op if nothing saved).
+    fn restore(&mut self, nvm: &mut Nvm) -> Result<()>;
+
+    fn name(&self) -> &'static str;
+}

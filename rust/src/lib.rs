@@ -1,0 +1,48 @@
+//! # ilearn — Intermittent Learning on intermittently powered systems
+//!
+//! A full reproduction of *"Intermittent Learning: On-Device Machine
+//! Learning on Intermittently Powered Systems"* (Lee, Islam, Luo, Nirjon —
+//! Proc. ACM IMWUT 3(4):141, 2019) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **L3 (this crate)** — the intermittent-execution coordinator: energy
+//!   harvesters and capacitor storage ([`energy`]), the non-volatile memory
+//!   model with action atomicity ([`nvm`]), the eight action primitives and
+//!   their state diagram ([`actions`]), the dynamic action planner
+//!   ([`planner`]), the example-selection heuristics ([`selection`]), the
+//!   on-device learners ([`learning`]), the discrete-event intermittent
+//!   engine ([`sim`]), the three paper applications ([`apps`]), the
+//!   intermittent-computing and offline-ML baselines ([`baselines`]) and
+//!   the full evaluation harness ([`eval`]).
+//! * **L2 (python/compile/model.py)** — the numeric payload of each action
+//!   (k-NN anomaly scoring, competitive-learning k-means, feature
+//!   extraction) as jitted JAX functions, AOT-lowered once to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
+//!   hot-spots, pinned to a pure-jnp oracle by pytest.
+//!
+//! The [`runtime`] module loads the AOT artifacts via the PJRT C API and
+//! the [`backend`] module lets every learner run either on the PJRT
+//! executables (proving the three layers compose) or on a pure-rust native
+//! implementation of the same math (float-tolerance compatible, used for
+//! large simulation sweeps).
+//!
+//! Python never runs on the request path: `make artifacts` is a build-time
+//! step and the `ilearn` binary is self-contained afterwards.
+
+pub mod actions;
+pub mod apps;
+pub mod backend;
+pub mod baselines;
+pub mod energy;
+pub mod error;
+pub mod eval;
+pub mod learning;
+pub mod nvm;
+pub mod planner;
+pub mod runtime;
+pub mod selection;
+pub mod sensors;
+pub mod sim;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,252 @@
+//! `ilearn` — CLI for the intermittent-learning reproduction.
+//!
+//! Subcommands:
+//!   run     — run one application end-to-end and print the run summary
+//!   figure  — regenerate a paper figure/table (fig6c..fig17, table3..5)
+//!   inspect — energy pre-inspection of an app's action set (§3.5 tool)
+//!   list    — list apps, figures, heuristics, schedulers
+//!
+//! Examples:
+//!   ilearn run vibration --hours 4 --backend pjrt
+//!   ilearn figure fig9 --out out/
+//!   ilearn inspect air_quality --budget-uj 2000
+
+use anyhow::{bail, Context, Result};
+use ilearn::apps::{AppConfig, AppKind, BackendKind, SchedulerKind};
+use ilearn::energy::inspect;
+use ilearn::eval::figures;
+use ilearn::selection::Heuristic;
+
+const H: u64 = 3_600_000_000;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("figure") => cmd_figure(&args[1..]),
+        Some("inspect") => cmd_inspect(&args[1..]),
+        Some("list") => cmd_list(),
+        Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => bail!("unknown command `{other}` (try `ilearn help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "ilearn — Intermittent Learning (IMWUT'19) reproduction\n\
+         \n\
+         USAGE: ilearn <command> [options]\n\
+         \n\
+         COMMANDS:\n\
+           run <app>        run an application (air_quality|presence|vibration)\n\
+               --hours N        simulated hours            [default per app]\n\
+               --seed N         experiment seed            [default 42]\n\
+               --backend B      native|pjrt                [default native]\n\
+               --scheduler S    planner|alpaca:<pct>|mayfly:<pct>:<expiry_s>\n\
+               --heuristic X    round_robin|k_last_lists|randomized|none\n\
+           figure <id>      regenerate a figure/table (see `ilearn list`; `all`)\n\
+               --seed N --out DIR   write <id>.json under DIR\n\
+           inspect <app>    energy pre-inspection (per-action worst case)\n\
+               --budget-uj E    per-wake energy budget     [default: capacitor]\n\
+           list             apps, figures, schedulers, heuristics"
+    );
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+fn parse_scheduler(s: &str) -> Result<SchedulerKind> {
+    if s == "planner" {
+        return Ok(SchedulerKind::Planner);
+    }
+    let parts: Vec<&str> = s.split(':').collect();
+    match parts.as_slice() {
+        ["alpaca", pct] => Ok(SchedulerKind::Alpaca {
+            learn_pct: pct.parse::<f64>()? / 100.0,
+        }),
+        ["mayfly", pct, expiry_s] => Ok(SchedulerKind::Mayfly {
+            learn_pct: pct.parse::<f64>()? / 100.0,
+            expiry_us: expiry_s.parse::<u64>()? * 1_000_000,
+        }),
+        _ => bail!("bad scheduler `{s}` (planner | alpaca:<pct> | mayfly:<pct>:<expiry_s>)"),
+    }
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let app = args
+        .first()
+        .context("usage: ilearn run <app> [options]")?;
+    let kind = AppKind::parse(app).with_context(|| format!("unknown app `{app}`"))?;
+    let seed: u64 = flag(args, "--seed").map_or(Ok(42), |s| s.parse())?;
+    let hours: u64 = match flag(args, "--hours") {
+        Some(h) => h.parse()?,
+        None => match kind {
+            AppKind::AirQuality => 48,
+            AppKind::Presence => 24,
+            AppKind::Vibration => 8,
+        },
+    };
+    let mut cfg = AppConfig::new(kind, seed, hours * H);
+    if let Some(b) = flag(args, "--backend") {
+        cfg.backend = match b.as_str() {
+            "native" => BackendKind::Native,
+            "pjrt" => BackendKind::Pjrt,
+            other => bail!("unknown backend `{other}`"),
+        };
+    }
+    if let Some(s) = flag(args, "--scheduler") {
+        cfg.scheduler = parse_scheduler(&s)?;
+    }
+    if let Some(h) = flag(args, "--heuristic") {
+        cfg.heuristic = Heuristic::ALL
+            .into_iter()
+            .find(|x| x.name() == h)
+            .with_context(|| format!("unknown heuristic `{h}`"))?;
+    }
+
+    eprintln!(
+        "running {} for {hours} h (seed {seed}, backend {:?}, scheduler {}) ...",
+        kind.name(),
+        cfg.backend,
+        cfg.scheduler.label()
+    );
+    let t0 = std::time::Instant::now();
+    let r = cfg.build_engine()?.run()?;
+    let wall = t0.elapsed();
+    println!("== run summary: {} / {} ==", kind.name(), r.scheduler);
+    println!("  wake cycles        {}", r.cycles);
+    println!("  examples sensed    {}", r.sensed);
+    println!("  examples learned   {}", r.learned);
+    println!("  inferences         {}", r.inferred);
+    println!("  discarded (select) {}", r.discarded_select);
+    println!("  expired (mayfly)   {}", r.expired);
+    println!("  power failures     {}", r.power_failures);
+    println!("  energy             {:.1} mJ", r.energy_uj / 1000.0);
+    println!("  mean probe acc.    {:.3}", r.mean_accuracy(3));
+    println!("  final probe acc.   {:.3}", r.final_accuracy());
+    println!("  online infer acc.  {:.3}", r.online_accuracy());
+    println!("  wallclock          {:.2}s", wall.as_secs_f64());
+    println!("  accuracy trajectory:");
+    for c in &r.checkpoints {
+        println!(
+            "    t={:>6.1}h acc={:.2} learned={:<5} E={:>9.1} mJ V={:.2}",
+            c.t_us as f64 / H as f64,
+            c.accuracy,
+            c.learned,
+            c.energy_uj / 1000.0,
+            c.voltage
+        );
+    }
+    Ok(())
+}
+
+fn cmd_figure(args: &[String]) -> Result<()> {
+    let id = args
+        .first()
+        .context("usage: ilearn figure <id> [--seed N] [--out DIR]")?;
+    let seed: u64 = flag(args, "--seed").map_or(Ok(42), |s| s.parse())?;
+    let t0 = std::time::Instant::now();
+    let ids: Vec<String> = if id == "all" {
+        figures::FIGURE_IDS.iter().map(|s| s.to_string()).collect()
+    } else {
+        vec![id.clone()]
+    };
+    for id in &ids {
+        let fig = figures::generate(id, seed)?;
+        println!("{}", fig.render());
+        if let Some(dir) = flag(args, "--out") {
+            std::fs::create_dir_all(&dir)?;
+            let path = format!("{dir}/{id}.json");
+            std::fs::write(&path, fig.to_json().to_string())?;
+            eprintln!("wrote {path}");
+        }
+    }
+    eprintln!(
+        "({} figure(s) in {:.1}s)",
+        ids.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let app = args
+        .first()
+        .context("usage: ilearn inspect <app> [--budget-uj E]")?;
+    let kind = AppKind::parse(app).with_context(|| format!("unknown app `{app}`"))?;
+    let cfg = AppConfig::new(kind, 0, H);
+    let cap = cfg.build_capacitor();
+    let budget: f64 = flag(args, "--budget-uj")
+        .map_or(Ok(cap.full_budget_uj() * 0.8), |s| s.parse())?;
+    let model = kind.cost_model();
+    println!(
+        "energy pre-inspection: app {} (cost model {}), budget {:.1} uJ/wake",
+        kind.name(),
+        model.name,
+        budget
+    );
+    let report = inspect::inspect(&model, budget, 0.10);
+    for (a, worst) in &report.measured {
+        let verdict = if report.violations.iter().any(|v| v.action == *a) {
+            "VIOLATION"
+        } else {
+            "ok"
+        };
+        println!(
+            "  {:<10} worst-case {:>10.1} uJ   {}",
+            a.name(),
+            worst,
+            verdict
+        );
+    }
+    if report.passed() {
+        println!("all actions fit the budget.");
+    } else {
+        println!("{} action(s) need splitting:", report.violations.len());
+        for v in &report.violations {
+            println!(
+                "  {} -> split into {} sub-actions",
+                v.action.name(),
+                v.required_splits
+            );
+        }
+        let (fixed, after) = inspect::auto_split(&model, budget, 0.10);
+        assert!(after.passed());
+        println!("auto-split result:");
+        for a in ilearn::actions::Action::ALL {
+            let c = fixed.cost(a);
+            if c.splits > 1 {
+                println!(
+                    "  {:<10} {} sub-actions of {:.1} uJ",
+                    a.name(),
+                    c.splits,
+                    c.sub_energy_uj()
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("apps:       air_quality  presence  vibration");
+    println!("figures:    {}", figures::FIGURE_IDS.join("  "));
+    println!("schedulers: planner  alpaca:<pct>  mayfly:<pct>:<expiry_s>");
+    println!(
+        "heuristics: {}",
+        Heuristic::ALL
+            .iter()
+            .map(|h| h.name())
+            .collect::<Vec<_>>()
+            .join("  ")
+    );
+    println!("backends:   native  pjrt (requires `make artifacts`)");
+    Ok(())
+}

@@ -1,0 +1,249 @@
+//! Non-volatile memory model with action atomicity.
+//!
+//! Paper §3.5 memory model: *action-shared* variables live in non-volatile
+//! memory (EEPROM/FRAM) and survive power failures; *action-local* state
+//! is volatile and lost. An action's writes become visible to other
+//! actions only when the action completes ("once an action completes
+//! writing a value ... the value can be read by any action"); if power
+//! fails mid-action, the framework discards the intermediate results and
+//! the action restarts from scratch (§3.5 action-based programming).
+//!
+//! This module implements exactly that: a committed store plus a staging
+//! buffer with read-your-writes semantics, `commit` on action completion,
+//! `abort` on power failure, and read/write accounting so the energy model
+//! can charge NVM traffic.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Byte-granular non-volatile store with transactional action semantics.
+#[derive(Debug, Clone, Default)]
+pub struct Nvm {
+    committed: BTreeMap<String, Vec<u8>>,
+    /// Writes staged by the in-flight action (None = no action open).
+    staged: Option<BTreeMap<String, Vec<u8>>>,
+    /// Capacity limit in bytes (0 = unlimited). The paper's platforms
+    /// range from 512 B (PIC) to 256 KB (MSP430 FRAM).
+    pub capacity: usize,
+    // accounting
+    pub bytes_written: u64,
+    pub bytes_read: u64,
+    pub commits: u64,
+    pub aborts: u64,
+}
+
+impl Nvm {
+    /// Unlimited-capacity store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Store with a byte capacity (over-capacity writes fail).
+    pub fn with_capacity(capacity: usize) -> Self {
+        Nvm {
+            capacity,
+            ..Self::default()
+        }
+    }
+
+    /// Open an action transaction. Nested transactions are an error (an
+    /// intermittent MCU runs one action at a time).
+    pub fn begin_action(&mut self) -> Result<()> {
+        if self.staged.is_some() {
+            return Err(Error::Nvm("action already in flight".into()));
+        }
+        self.staged = Some(BTreeMap::new());
+        Ok(())
+    }
+
+    /// Commit the in-flight action's writes.
+    pub fn commit_action(&mut self) -> Result<()> {
+        let staged = self
+            .staged
+            .take()
+            .ok_or_else(|| Error::Nvm("commit without begin".into()))?;
+        for (k, v) in staged {
+            self.committed.insert(k, v);
+        }
+        self.commits += 1;
+        Ok(())
+    }
+
+    /// Discard the in-flight action's writes (power failure mid-action).
+    pub fn abort_action(&mut self) {
+        if self.staged.take().is_some() {
+            self.aborts += 1;
+        }
+    }
+
+    /// Is an action transaction open?
+    pub fn in_action(&self) -> bool {
+        self.staged.is_some()
+    }
+
+    fn used_bytes(&self) -> usize {
+        self.committed.values().map(|v| v.len()).sum()
+    }
+
+    /// Raw write. Inside an action the write is staged; outside (framework
+    /// bookkeeping, e.g. at boot) it commits immediately.
+    pub fn write(&mut self, key: &str, bytes: &[u8]) -> Result<()> {
+        if self.capacity > 0 {
+            let old = self
+                .staged
+                .as_ref()
+                .and_then(|s| s.get(key))
+                .or_else(|| self.committed.get(key))
+                .map(|v| v.len())
+                .unwrap_or(0);
+            if self.used_bytes() + bytes.len().saturating_sub(old) > self.capacity {
+                return Err(Error::Nvm(format!(
+                    "capacity exceeded writing `{key}` ({} B used of {} B)",
+                    self.used_bytes(),
+                    self.capacity
+                )));
+            }
+        }
+        self.bytes_written += bytes.len() as u64;
+        match &mut self.staged {
+            Some(s) => {
+                s.insert(key.to_string(), bytes.to_vec());
+            }
+            None => {
+                self.committed.insert(key.to_string(), bytes.to_vec());
+            }
+        }
+        Ok(())
+    }
+
+    /// Raw read with read-your-writes semantics.
+    pub fn read(&mut self, key: &str) -> Option<Vec<u8>> {
+        let v = self
+            .staged
+            .as_ref()
+            .and_then(|s| s.get(key))
+            .or_else(|| self.committed.get(key))
+            .cloned();
+        if let Some(ref v) = v {
+            self.bytes_read += v.len() as u64;
+        }
+        v
+    }
+
+    /// Does a committed or staged value exist?
+    pub fn contains(&self, key: &str) -> bool {
+        self.staged
+            .as_ref()
+            .map(|s| s.contains_key(key))
+            .unwrap_or(false)
+            || self.committed.contains_key(key)
+    }
+
+    // ---- typed helpers -------------------------------------------------
+
+    /// Write an f32 slice.
+    pub fn write_f32s(&mut self, key: &str, xs: &[f32]) -> Result<()> {
+        let mut bytes = Vec::with_capacity(xs.len() * 4);
+        for x in xs {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        self.write(key, &bytes)
+    }
+
+    /// Read an f32 slice.
+    pub fn read_f32s(&mut self, key: &str) -> Option<Vec<f32>> {
+        let bytes = self.read(key)?;
+        Some(
+            bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect(),
+        )
+    }
+
+    /// Write a u64 counter.
+    pub fn write_u64(&mut self, key: &str, v: u64) -> Result<()> {
+        self.write(key, &v.to_le_bytes())
+    }
+
+    /// Read a u64 counter (0 if absent).
+    pub fn read_u64(&mut self, key: &str) -> u64 {
+        self.read(key)
+            .filter(|b| b.len() == 8)
+            .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn committed_writes_survive() {
+        let mut nvm = Nvm::new();
+        nvm.write_f32s("w", &[1.0, 2.0]).unwrap();
+        assert_eq!(nvm.read_f32s("w").unwrap(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn abort_discards_staged_writes() {
+        let mut nvm = Nvm::new();
+        nvm.write_f32s("model", &[1.0]).unwrap();
+        nvm.begin_action().unwrap();
+        nvm.write_f32s("model", &[9.0]).unwrap();
+        // read-your-writes inside the action
+        assert_eq!(nvm.read_f32s("model").unwrap(), vec![9.0]);
+        nvm.abort_action(); // power failure
+        assert_eq!(nvm.read_f32s("model").unwrap(), vec![1.0]);
+        assert_eq!(nvm.aborts, 1);
+    }
+
+    #[test]
+    fn commit_publishes_staged_writes() {
+        let mut nvm = Nvm::new();
+        nvm.begin_action().unwrap();
+        nvm.write_u64("count", 7).unwrap();
+        nvm.commit_action().unwrap();
+        assert_eq!(nvm.read_u64("count"), 7);
+        assert_eq!(nvm.commits, 1);
+    }
+
+    #[test]
+    fn nested_begin_rejected() {
+        let mut nvm = Nvm::new();
+        nvm.begin_action().unwrap();
+        assert!(nvm.begin_action().is_err());
+    }
+
+    #[test]
+    fn commit_without_begin_rejected() {
+        let mut nvm = Nvm::new();
+        assert!(nvm.commit_action().is_err());
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut nvm = Nvm::with_capacity(8);
+        nvm.write_f32s("a", &[1.0, 2.0]).unwrap(); // 8 bytes
+        assert!(nvm.write_f32s("b", &[3.0]).is_err());
+        // overwriting the same key with the same size is fine
+        nvm.write_f32s("a", &[4.0, 5.0]).unwrap();
+    }
+
+    #[test]
+    fn accounting_counts_bytes() {
+        let mut nvm = Nvm::new();
+        nvm.write_f32s("x", &[0.0; 4]).unwrap();
+        nvm.read_f32s("x");
+        assert_eq!(nvm.bytes_written, 16);
+        assert_eq!(nvm.bytes_read, 16);
+    }
+
+    #[test]
+    fn missing_counter_defaults_zero() {
+        let mut nvm = Nvm::new();
+        assert_eq!(nvm.read_u64("nope"), 0);
+    }
+}

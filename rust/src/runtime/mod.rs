@@ -1,0 +1,331 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them once on the PJRT CPU client, and
+//! execute them from the L3 hot path.
+//!
+//! Interchange format is **HLO text** (`HloModuleProto::from_text_file`):
+//! jax ≥ 0.5 emits serialized protos with 64-bit instruction ids that the
+//! crate's xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//! All payloads are lowered with `return_tuple=True`, so every execution
+//! unwraps a tuple.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Artifact names the runtime knows how to serve.
+pub const ARTIFACTS: [&str; 7] = [
+    "extract",
+    "knn_learn",
+    "knn_infer",
+    "knn_infer_batch",
+    "kmeans_learn",
+    "kmeans_infer",
+    "diversity_repr",
+];
+
+/// An input/output shape parsed from `manifest.txt`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShapeSpec(pub Vec<usize>);
+
+impl ShapeSpec {
+    pub fn elements(&self) -> usize {
+        self.0.iter().product()
+    }
+}
+
+/// Manifest entry for one artifact.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub inputs: Vec<ShapeSpec>,
+    pub outputs: Vec<ShapeSpec>,
+}
+
+/// Parse `manifest.txt` (written by aot.py).
+pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
+    let parse_shapes = |s: &str| -> Vec<ShapeSpec> {
+        s.split(';')
+            .map(|one| {
+                if one == "scalar" || one.is_empty() {
+                    ShapeSpec(vec![])
+                } else {
+                    ShapeSpec(
+                        one.split('x')
+                            .filter_map(|d| d.parse::<usize>().ok())
+                            .collect(),
+                    )
+                }
+            })
+            .collect()
+    };
+    let mut entries = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut parts = line.split('\t');
+        let name = parts
+            .next()
+            .ok_or_else(|| Error::Runtime(format!("bad manifest line: {line}")))?;
+        let mut inputs = Vec::new();
+        let mut outputs = Vec::new();
+        for p in parts {
+            if let Some(s) = p.strip_prefix("in=") {
+                inputs = parse_shapes(s);
+            } else if let Some(s) = p.strip_prefix("out=") {
+                outputs = parse_shapes(s);
+            }
+        }
+        entries.push(ManifestEntry {
+            name: name.to_string(),
+            inputs,
+            outputs,
+        });
+    }
+    Ok(entries)
+}
+
+/// An input to [`Executable::run_args`]: either host data (uploaded on
+/// this call) or an already-resident device buffer (the §Perf lever for
+/// large, rarely-changing inputs like the k-NN example buffer).
+pub enum Arg<'a> {
+    Host(&'a [f32]),
+    Device(&'a xla::PjRtBuffer),
+}
+
+/// A compiled artifact ready for execution.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub entry: ManifestEntry,
+}
+
+impl Executable {
+    /// Execute with a mix of host slices and device-resident buffers.
+    /// Host inputs are uploaded here; device inputs skip the copy.
+    pub fn run_args(&self, inputs: &[Arg<'_>]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.entry.inputs.len() {
+            return Err(Error::Artifact {
+                name: self.entry.name.clone(),
+                msg: format!(
+                    "expected {} inputs, got {}",
+                    self.entry.inputs.len(),
+                    inputs.len()
+                ),
+            });
+        }
+        let client = self.exe.client().clone();
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        // two passes so `owned` is fully built before taking references
+        let mut slots: Vec<Option<usize>> = Vec::with_capacity(inputs.len());
+        for (i, (arg, spec)) in inputs.iter().zip(&self.entry.inputs).enumerate() {
+            match arg {
+                Arg::Host(buf) => {
+                    if buf.len() != spec.elements() {
+                        return Err(Error::Artifact {
+                            name: self.entry.name.clone(),
+                            msg: format!(
+                                "input {i}: expected {} elements, got {}",
+                                spec.elements(),
+                                buf.len()
+                            ),
+                        });
+                    }
+                    let dims: Vec<usize> =
+                        if spec.0.is_empty() { vec![] } else { spec.0.clone() };
+                    owned.push(client.buffer_from_host_buffer::<f32>(buf, &dims, None)?);
+                    slots.push(Some(owned.len() - 1));
+                }
+                Arg::Device(_) => slots.push(None),
+            }
+        }
+        for (arg, slot) in inputs.iter().zip(&slots) {
+            match (arg, slot) {
+                (Arg::Device(b), _) => refs.push(b),
+                (Arg::Host(_), Some(k)) => refs.push(&owned[*k]),
+                _ => unreachable!(),
+            }
+        }
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(&refs)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+
+    /// Execute with f32 inputs shaped per the manifest; returns one f32
+    /// vector per output (scalars are length-1).
+    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.entry.inputs.len() {
+            return Err(Error::Artifact {
+                name: self.entry.name.clone(),
+                msg: format!(
+                    "expected {} inputs, got {}",
+                    self.entry.inputs.len(),
+                    inputs.len()
+                ),
+            });
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (buf, spec)) in inputs.iter().zip(&self.entry.inputs).enumerate() {
+            if buf.len() != spec.elements() {
+                return Err(Error::Artifact {
+                    name: self.entry.name.clone(),
+                    msg: format!(
+                        "input {i}: expected {} elements for shape {:?}, got {}",
+                        spec.elements(),
+                        spec.0,
+                        buf.len()
+                    ),
+                });
+            }
+            let lit = if spec.0.is_empty() {
+                xla::Literal::scalar(buf[0])
+            } else {
+                let dims: Vec<i64> = spec.0.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(buf).reshape(&dims)?
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != self.entry.outputs.len() {
+            return Err(Error::Artifact {
+                name: self.entry.name.clone(),
+                msg: format!(
+                    "expected {} outputs, got {}",
+                    self.entry.outputs.len(),
+                    parts.len()
+                ),
+            });
+        }
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}
+
+/// The PJRT runtime: one CPU client + a cache of compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<String, ManifestEntry>,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifact directory (reads `manifest.txt`).
+    pub fn new<P: AsRef<Path>>(artifact_dir: P) -> Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let manifest = parse_manifest(&text)?
+            .into_iter()
+            .map(|e| (e.name.clone(), e))
+            .collect();
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu()?,
+            dir,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Locate the artifact dir by walking up from CWD (repo-root layout).
+    pub fn discover() -> Result<Self> {
+        let mut dir = std::env::current_dir()?;
+        loop {
+            let cand = dir.join(DEFAULT_ARTIFACT_DIR);
+            if cand.join("manifest.txt").exists() {
+                return Self::new(cand);
+            }
+            if !dir.pop() {
+                return Err(Error::Runtime(
+                    "artifacts/manifest.txt not found in any ancestor; run `make artifacts`"
+                        .into(),
+                ));
+            }
+        }
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let entry = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| Error::Artifact {
+                    name: name.to_string(),
+                    msg: "not in manifest".into(),
+                })?
+                .clone();
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache
+                .insert(name.to_string(), Executable { exe, entry });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Compile every artifact up front (amortizes compile cost before the
+    /// simulated hot path starts).
+    pub fn preload(&mut self) -> Result<()> {
+        for name in ARTIFACTS {
+            if self.manifest.contains_key(name) {
+                self.load(name)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Upload a host buffer to the default device (for caching large,
+    /// rarely-changing inputs across calls).
+    pub fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f32>(data, dims, None)?)
+    }
+
+    /// Names available in the manifest.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.manifest.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses_shapes_and_scalars() {
+        let text = "knn_infer\tin=64x32;64;32\tout=scalar\nextract\tin=64x4\tout=4x8\n";
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].inputs.len(), 3);
+        assert_eq!(m[0].inputs[0].0, vec![64, 32]);
+        assert_eq!(m[0].inputs[0].elements(), 2048);
+        assert_eq!(m[0].outputs[0].0, Vec::<usize>::new());
+        assert_eq!(m[0].outputs[0].elements(), 1);
+        assert_eq!(m[1].outputs[0].0, vec![4, 8]);
+    }
+
+    #[test]
+    fn manifest_skips_blank_lines() {
+        let m = parse_manifest("\n\na\tin=2\tout=2\n\n").unwrap();
+        assert_eq!(m.len(), 1);
+    }
+}

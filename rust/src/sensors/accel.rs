@@ -1,0 +1,245 @@
+//! Accelerometer sensor + the motion profile that drives BOTH the sensor
+//! and the piezoelectric harvester (the paper's §2.3 energy↔data
+//! correlation: arm shaking generates the vibration data *and* the energy
+//! to learn it).
+//!
+//! §6.3's controlled experiment: gentle shaking (<5 shakes / 5 s) vs
+//! abrupt shaking (>10 shakes / 5 s), alternating one-hour segments,
+//! sampled by a LIS3DH at 50 Hz. Gentle = normal, abrupt = abnormal.
+
+use super::{Sensor, Window};
+
+/// A motion episode: sinusoidal shaking with given amplitude & frequency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MotionEpisode {
+    pub start_us: u64,
+    pub end_us: u64,
+    /// Peak acceleration amplitude, g.
+    pub amp: f64,
+    /// Shake frequency, Hz.
+    pub freq_hz: f64,
+    /// Ground-truth label: is this abrupt (abnormal) motion?
+    pub abnormal: bool,
+}
+
+/// Piecewise motion schedule shared by [`Accel`] and
+/// [`crate::energy::harvester::Piezo`].
+#[derive(Debug, Clone, Default)]
+pub struct MotionProfile {
+    pub episodes: Vec<MotionEpisode>,
+}
+
+impl MotionProfile {
+    /// The paper's §6.3/§7.4 protocol: alternating one-hour segments of
+    /// gentle and abrupt shaking, *100 discrete gestures per hour* (the
+    /// paper performs 100 shaking gestures in each hour), each ~5 s long.
+    /// Between gestures there is no motion — and therefore neither data
+    /// nor harvested energy (the §2.3 correlation).
+    pub fn alternating_hours(gentle: f64, abrupt: f64, hours: u64) -> Self {
+        Self::gesture_hours(gentle, abrupt, hours, 100)
+    }
+
+    /// Like [`Self::alternating_hours`] with an explicit gesture count.
+    pub fn gesture_hours(gentle: f64, abrupt: f64, hours: u64, per_hour: u64) -> Self {
+        const H: u64 = 3_600_000_000;
+        const GESTURE_US: u64 = 5_000_000;
+        let spacing = H / per_hour.max(1);
+        let mut episodes = Vec::with_capacity((hours * per_hour) as usize);
+        for h in 0..hours {
+            let is_abrupt = h % 2 == 1;
+            for g in 0..per_hour {
+                // deterministic jitter so gestures don't alias with the
+                // engine's checkpoint cadence
+                let jitter = (h.wrapping_mul(31) ^ g.wrapping_mul(7)) % (spacing / 4);
+                let start = h * H + g * spacing + jitter;
+                episodes.push(MotionEpisode {
+                    start_us: start,
+                    end_us: (start + GESTURE_US).min((h + 1) * H),
+                    amp: if is_abrupt { abrupt } else { gentle },
+                    // gentle: <5 shakes per 5 s (≈0.9 Hz); abrupt: >10 per 5 s (≈2.6 Hz)
+                    freq_hz: if is_abrupt { 2.6 } else { 0.9 },
+                    abnormal: is_abrupt,
+                });
+            }
+        }
+        MotionProfile { episodes }
+    }
+
+    /// The active episode at `t_us`, if any (binary search; episodes are
+    /// sorted and non-overlapping).
+    pub fn episode_at(&self, t_us: u64) -> Option<&MotionEpisode> {
+        let idx = match self
+            .episodes
+            .binary_search_by(|e| e.start_us.cmp(&t_us))
+        {
+            Ok(i) => i,
+            Err(0) => return None,
+            Err(i) => i - 1,
+        };
+        let e = &self.episodes[idx];
+        (t_us < e.end_us).then_some(e)
+    }
+
+    /// Start time of the n-th gesture (testing helper).
+    pub fn gesture_start(&self, n: usize) -> u64 {
+        self.episodes[n].start_us
+    }
+
+    /// Instantaneous motion amplitude (g); 0 when idle.
+    pub fn amplitude(&self, t_us: u64) -> f64 {
+        self.episode_at(t_us).map(|e| e.amp).unwrap_or(0.0)
+    }
+}
+
+/// Simulated 3-axis accelerometer.
+#[derive(Debug, Clone)]
+pub struct Accel {
+    pub profile: MotionProfile,
+    /// Sampling rate (paper: 50 Hz).
+    pub rate_hz: f64,
+    /// Sensor noise std, g.
+    pub noise_g: f64,
+    pub seed: u64,
+}
+
+impl Accel {
+    pub fn new(profile: MotionProfile, seed: u64) -> Self {
+        Accel {
+            profile,
+            rate_hz: 50.0,
+            noise_g: 0.03,
+            seed,
+        }
+    }
+
+    /// Deterministic per-sample noise (hash of sample index).
+    fn noise(&self, idx: u64, axis: u64) -> f32 {
+        let mut z = self.seed ^ idx.wrapping_mul(0x9E3779B97F4A7C15) ^ (axis << 56);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^= z >> 31;
+        let u = (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        ((u - 0.5) * 2.0 * self.noise_g * 1.7320508) as f32 // uniform, same std
+    }
+}
+
+impl Sensor for Accel {
+    fn channels(&self) -> usize {
+        3
+    }
+
+    fn window(&self, t_us: u64, w: usize) -> Window {
+        let dt_us = self.sample_period_us();
+        let mut data = vec![0.0f32; w * 3];
+        let mut any_abnormal = false;
+        for r in 0..w {
+            let t = t_us + r as u64 * dt_us;
+            let t_s = t as f64 / 1e6;
+            let (amp, freq, abn) = self
+                .profile
+                .episode_at(t)
+                .map(|e| (e.amp, e.freq_hz, e.abnormal))
+                .unwrap_or((0.0, 0.0, false));
+            any_abnormal |= abn;
+            let phase = 2.0 * std::f64::consts::PI * freq * t_s;
+            let idx = t / dt_us.max(1);
+            // x: main shake axis; y: half-amplitude, quarter-phase lag;
+            // z: gravity plus small coupling.
+            data[r * 3] = (amp * phase.sin()) as f32 + self.noise(idx, 0);
+            data[r * 3 + 1] =
+                (0.5 * amp * (phase - 0.7).sin()) as f32 + self.noise(idx, 1);
+            data[r * 3 + 2] =
+                1.0 + (0.2 * amp * (2.0 * phase).sin()) as f32 + self.noise(idx, 2);
+        }
+        Window {
+            t_us,
+            data,
+            w,
+            c: 3,
+            truth_abnormal: any_abnormal,
+        }
+    }
+
+    fn truth_at(&self, t_us: u64) -> bool {
+        self.profile
+            .episode_at(t_us)
+            .map(|e| e.abnormal)
+            .unwrap_or(false)
+    }
+
+    fn sample_period_us(&self) -> u64 {
+        (1e6 / self.rate_hz) as u64
+    }
+
+    fn name(&self) -> &'static str {
+        "accel"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alternating_profile_labels() {
+        let p = MotionProfile::alternating_hours(1.0, 3.0, 4);
+        assert_eq!(p.episodes.len(), 400); // 100 gestures x 4 hours
+        const H: u64 = 3_600_000_000;
+        // gestures in even hours are gentle, odd hours abrupt
+        assert!(!p.episodes[0].abnormal);
+        assert!(p.episodes[150].abnormal);
+        assert_eq!(p.amplitude(p.gesture_start(0) + 1), 1.0);
+        assert_eq!(p.amplitude(p.gesture_start(150) + 1), 3.0);
+        assert_eq!(p.amplitude(4 * H + 1), 0.0); // after the experiment
+        // between gestures: idle
+        assert_eq!(p.amplitude(p.episodes[0].end_us + 1_000), 0.0);
+    }
+
+    #[test]
+    fn episode_binary_search_agrees_with_scan() {
+        let p = MotionProfile::alternating_hours(1.0, 3.0, 2);
+        for t in (0..7_200_000_000u64).step_by(13_777_777) {
+            let scan = p
+                .episodes
+                .iter()
+                .find(|e| e.start_us <= t && t < e.end_us)
+                .map(|e| e.start_us);
+            let fast = p.episode_at(t).map(|e| e.start_us);
+            assert_eq!(scan, fast, "t={t}");
+        }
+    }
+
+    #[test]
+    fn windows_are_deterministic() {
+        let a = Accel::new(MotionProfile::alternating_hours(1.0, 3.0, 2), 5);
+        let w1 = a.window(1_000_000, 64);
+        let w2 = a.window(1_000_000, 64);
+        assert_eq!(w1.data, w2.data);
+    }
+
+    #[test]
+    fn abrupt_windows_have_higher_energy() {
+        let a = Accel::new(MotionProfile::alternating_hours(1.0, 3.0, 2), 5);
+        // sample inside actual gestures (hour 0 = gentle, hour 1 = abrupt)
+        let gentle = a.window(a.profile.gesture_start(50), 128);
+        let abrupt = a.window(a.profile.gesture_start(150), 128);
+        let rms = |w: &Window| crate::util::stats::rms(&w.channel(0));
+        assert!(rms(&abrupt) > 2.0 * rms(&gentle));
+        assert!(!gentle.truth_abnormal);
+        assert!(abrupt.truth_abnormal);
+    }
+
+    #[test]
+    fn z_axis_carries_gravity() {
+        let a = Accel::new(MotionProfile::default(), 5);
+        let w = a.window(0, 64);
+        let mean_z = crate::util::stats::mean(&w.channel(2));
+        assert!((mean_z - 1.0).abs() < 0.1, "mean_z {mean_z}");
+    }
+
+    #[test]
+    fn sample_period_matches_rate() {
+        let a = Accel::new(MotionProfile::default(), 1);
+        assert_eq!(a.sample_period_us(), 20_000); // 50 Hz
+    }
+}

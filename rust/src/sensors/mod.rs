@@ -1,0 +1,186 @@
+//! Synthetic sensor-world generators with ground truth.
+//!
+//! Substitution (DESIGN.md §1): the paper's deployments sense real
+//! UV/eCO2/TVOC, RSSI and 3-axis acceleration, with anomalies labelled by
+//! human experts after the fact. Here each sensor is a deterministic
+//! generator seeded per experiment, with anomaly episodes injected on a
+//! known schedule — so accuracy can be *computed* against exact ground
+//! truth while the learner sees the same windowed statistics it would on
+//! the physical platform.
+//!
+//! A sensor is sampled at `sense` time by the intermittent engine; the
+//! returned [`Window`] carries the ground-truth label for later scoring
+//! (the label is never visible to the unsupervised learner; the
+//! semi-supervised vibration learner receives a few labelled windows at
+//! bootstrap, as in §6.3's cluster-then-label scheme).
+
+pub mod accel;
+pub mod air_quality;
+pub mod rssi;
+
+pub use accel::{Accel, MotionProfile};
+pub use air_quality::AirQuality;
+pub use rssi::Rssi;
+
+/// One sensing window: `w` samples × `c` channels, row-major.
+#[derive(Debug, Clone)]
+pub struct Window {
+    /// Simulated acquisition time (start of window), µs.
+    pub t_us: u64,
+    /// Row-major (w, c) samples.
+    pub data: Vec<f32>,
+    pub w: usize,
+    pub c: usize,
+    /// Ground truth: is the phenomenon abnormal during this window?
+    pub truth_abnormal: bool,
+}
+
+impl Window {
+    /// Sample at (row, channel).
+    #[inline]
+    pub fn at(&self, row: usize, ch: usize) -> f32 {
+        self.data[row * self.c + ch]
+    }
+
+    /// One channel as a contiguous vector.
+    pub fn channel(&self, ch: usize) -> Vec<f32> {
+        (0..self.w).map(|r| self.at(r, ch)).collect()
+    }
+
+    /// Pad/truncate to (w_out, c_out) — used to fit the fixed AOT artifact
+    /// shapes (missing channels zero-filled, missing rows repeat the last
+    /// sample so window statistics are minimally perturbed).
+    pub fn fit(&self, w_out: usize, c_out: usize) -> Window {
+        let mut data = vec![0.0f32; w_out * c_out];
+        for r in 0..w_out {
+            let src_r = r.min(self.w.saturating_sub(1));
+            for ch in 0..c_out.min(self.c) {
+                data[r * c_out + ch] = if self.w == 0 { 0.0 } else { self.at(src_r, ch) };
+            }
+        }
+        Window {
+            t_us: self.t_us,
+            data,
+            w: w_out,
+            c: c_out,
+            truth_abnormal: self.truth_abnormal,
+        }
+    }
+}
+
+/// A deterministic, seekable sensor stream.
+pub trait Sensor: Send {
+    /// Number of physical channels.
+    fn channels(&self) -> usize;
+
+    /// Acquire a window of `w` samples starting at `t_us`.
+    fn window(&self, t_us: u64, w: usize) -> Window;
+
+    /// Ground truth at an instant (for evaluation probes).
+    fn truth_at(&self, t_us: u64) -> bool;
+
+    /// Native inter-sample period, µs.
+    fn sample_period_us(&self) -> u64;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Episode list helper: half-open [start, end) intervals in µs, sorted.
+#[derive(Debug, Clone, Default)]
+pub struct Episodes(pub Vec<(u64, u64)>);
+
+impl Episodes {
+    /// Is `t` inside any episode?
+    pub fn contains(&self, t: u64) -> bool {
+        // episodes are sorted by start; binary search for the candidate
+        match self.0.binary_search_by(|&(s, _)| s.cmp(&t)) {
+            Ok(_) => true,
+            Err(0) => false,
+            Err(i) => t < self.0[i - 1].1,
+        }
+    }
+
+    /// Does [t0, t1) overlap any episode?
+    pub fn overlaps(&self, t0: u64, t1: u64) -> bool {
+        self.0.iter().any(|&(s, e)| s < t1 && t0 < e)
+    }
+
+    /// Generate episodes with mean inter-arrival `gap_us` and duration in
+    /// [dur_lo, dur_hi], deterministically from `seed`, covering [0, horizon).
+    pub fn poisson(seed: u64, horizon_us: u64, gap_us: u64, dur_lo: u64, dur_hi: u64) -> Self {
+        let mut rng = crate::util::Rng::with_stream(seed, 0xE1150DE5);
+        let mut eps = Vec::new();
+        let mut t = (gap_us as f64 * (0.3 + rng.f64())) as u64;
+        while t < horizon_us {
+            let dur = dur_lo + (rng.f64() * (dur_hi - dur_lo) as f64) as u64;
+            eps.push((t, (t + dur).min(horizon_us)));
+            // exponential-ish gap: -ln(U) * mean
+            let gap = (-(rng.f64().max(1e-12)).ln() * gap_us as f64) as u64;
+            t = t + dur + gap.max(gap_us / 10);
+        }
+        Episodes(eps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_indexing_and_channel() {
+        let w = Window {
+            t_us: 0,
+            data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0],
+            w: 3,
+            c: 2,
+            truth_abnormal: false,
+        };
+        assert_eq!(w.at(0, 1), 2.0);
+        assert_eq!(w.at(2, 0), 5.0);
+        assert_eq!(w.channel(1), vec![2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn fit_pads_rows_and_channels() {
+        let w = Window {
+            t_us: 9,
+            data: vec![1.0, 2.0, 3.0, 4.0],
+            w: 2,
+            c: 2,
+            truth_abnormal: true,
+        };
+        let f = w.fit(4, 3);
+        assert_eq!((f.w, f.c), (4, 3));
+        assert_eq!(f.at(0, 0), 1.0);
+        assert_eq!(f.at(3, 1), 4.0); // repeated last row
+        assert_eq!(f.at(1, 2), 0.0); // zero-filled channel
+        assert!(f.truth_abnormal);
+    }
+
+    #[test]
+    fn episodes_contains_and_overlaps() {
+        let e = Episodes(vec![(10, 20), (50, 60)]);
+        assert!(!e.contains(9));
+        assert!(e.contains(10));
+        assert!(e.contains(19));
+        assert!(!e.contains(20));
+        assert!(e.overlaps(15, 55));
+        assert!(!e.overlaps(20, 50));
+    }
+
+    #[test]
+    fn poisson_episodes_deterministic_and_bounded() {
+        let h = 3_600_000_000; // 1 h
+        let a = Episodes::poisson(7, h, 300_000_000, 10_000_000, 60_000_000);
+        let b = Episodes::poisson(7, h, 300_000_000, 10_000_000, 60_000_000);
+        assert_eq!(a.0, b.0);
+        assert!(!a.0.is_empty());
+        for &(s, e) in &a.0 {
+            assert!(s < e && e <= h);
+        }
+        // sorted & non-overlapping
+        for w in a.0.windows(2) {
+            assert!(w[0].1 <= w[1].0);
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! RSSI sensor for the RF human-presence learner (§6.2).
+//!
+//! Presence detection works on *short-term variation* of RSSI: a person
+//! moving near the antenna perturbs the multipath pattern, raising the
+//! variance (and shifting the mean) of consecutive RSSI readings. Each
+//! *area* (the paper moves the system between three areas) has its own
+//! base RSSI level and noise floor, so a model learned in one area
+//! mispredicts in the next until it re-learns — reproducing Fig. 7(c).
+
+use super::{Episodes, Sensor, Window};
+
+/// Per-area RF characteristics.
+#[derive(Debug, Clone, Copy)]
+pub struct Area {
+    /// When the system is moved into this area.
+    pub start_us: u64,
+    /// Base RSSI in dBm at the deployment spot.
+    pub base_dbm: f64,
+    /// Ambient (no-human) noise std, dB.
+    pub noise_db: f64,
+    /// Extra std added while a human is present, dB.
+    pub human_db: f64,
+    /// Mean shift while a human is present (body shadowing), dB.
+    pub human_shift_db: f64,
+}
+
+/// Synthetic RSSI world with presence episodes and area moves.
+#[derive(Debug, Clone)]
+pub struct Rssi {
+    pub areas: Vec<Area>,
+    pub presence: Episodes,
+    pub seed: u64,
+}
+
+impl Rssi {
+    /// The paper's 3-area deployment: distinct base levels / noise, with
+    /// presence episodes (someone walking by) every few minutes.
+    pub fn three_areas(seed: u64, horizon_us: u64, area_len_us: u64) -> Self {
+        let areas = vec![
+            Area {
+                start_us: 0,
+                base_dbm: -52.0,
+                noise_db: 0.8,
+                human_db: 3.0,
+                human_shift_db: -4.0,
+            },
+            Area {
+                start_us: area_len_us,
+                base_dbm: -63.0,
+                noise_db: 1.6,
+                human_db: 2.2,
+                human_shift_db: 2.5,
+            },
+            Area {
+                start_us: 2 * area_len_us,
+                base_dbm: -58.0,
+                noise_db: 1.1,
+                human_db: 4.0,
+                human_shift_db: -3.0,
+            },
+        ];
+        Rssi {
+            areas,
+            presence: Episodes::poisson(
+                seed,
+                horizon_us,
+                240_000_000,  // someone passes every ~4 min
+                20_000_000,   // stays 20 s ..
+                90_000_000,   // .. to 90 s
+            ),
+            seed,
+        }
+    }
+
+    /// The active area at `t_us`.
+    pub fn area_at(&self, t_us: u64) -> &Area {
+        let mut cur = &self.areas[0];
+        for a in &self.areas {
+            if t_us >= a.start_us {
+                cur = a;
+            } else {
+                break;
+            }
+        }
+        cur
+    }
+
+    fn hash01(&self, bucket: u64, salt: u64) -> f64 {
+        let mut z = self.seed ^ bucket.wrapping_mul(0x9E3779B97F4A7C15) ^ (salt << 40);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^= z >> 31;
+        (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Approximate standard normal from 4 hashed uniforms (CLT).
+    fn gauss(&self, bucket: u64, salt: u64) -> f64 {
+        let s: f64 = (0..4).map(|i| self.hash01(bucket, salt * 4 + i)).sum();
+        (s - 2.0) * (12.0f64 / 4.0).sqrt()
+    }
+
+    /// One RSSI reading (dBm) at time `t_us`.
+    pub fn reading_dbm(&self, t_us: u64) -> f64 {
+        let a = self.area_at(t_us);
+        let present = self.presence.contains(t_us);
+        let idx = t_us / 10_000; // 10 ms buckets: consecutive reads decorrelate
+        let mut v = a.base_dbm + a.noise_db * self.gauss(idx, 1);
+        if present {
+            v += a.human_shift_db + a.human_db * self.gauss(idx, 2);
+        }
+        v
+    }
+}
+
+impl Sensor for Rssi {
+    fn channels(&self) -> usize {
+        1
+    }
+
+    fn window(&self, t_us: u64, w: usize) -> Window {
+        let dt = self.sample_period_us();
+        let mut data = vec![0.0f32; w];
+        let mut abnormal = false;
+        for r in 0..w {
+            let t = t_us + r as u64 * dt;
+            // normalize dBm into a small range for the learner
+            data[r] = ((self.reading_dbm(t) + 60.0) / 10.0) as f32;
+            abnormal |= self.presence.contains(t);
+        }
+        Window {
+            t_us,
+            data,
+            w,
+            c: 1,
+            truth_abnormal: abnormal,
+        }
+    }
+
+    fn truth_at(&self, t_us: u64) -> bool {
+        self.presence.contains(t_us)
+    }
+
+    /// §6.2: 10–30 RSSI readings per example at tens of ms cadence.
+    fn sample_period_us(&self) -> u64 {
+        30_000
+    }
+
+    fn name(&self) -> &'static str {
+        "rssi"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const H: u64 = 3_600_000_000;
+
+    #[test]
+    fn area_schedule_lookup() {
+        let r = Rssi::three_areas(1, 9 * H, 3 * H);
+        assert_eq!(r.area_at(0).base_dbm, -52.0);
+        assert_eq!(r.area_at(3 * H + 1).base_dbm, -63.0);
+        assert_eq!(r.area_at(8 * H).base_dbm, -58.0);
+    }
+
+    #[test]
+    fn presence_raises_short_term_variance() {
+        let mut r = Rssi::three_areas(2, 9 * H, 3 * H);
+        r.presence = Episodes(vec![(H, H + 600_000_000)]);
+        let var = |t0: u64| {
+            let w = r.window(t0, 30);
+            crate::util::stats::std(&w.data)
+        };
+        // average over several windows to beat noise
+        let quiet: f32 = (0..8).map(|i| var(2 * H + i * 2_000_000)).sum::<f32>() / 8.0;
+        let busy: f32 = (0..8).map(|i| var(H + i * 2_000_000)).sum::<f32>() / 8.0;
+        assert!(busy > 1.5 * quiet, "busy {busy} quiet {quiet}");
+    }
+
+    #[test]
+    fn different_areas_have_different_levels() {
+        let r = Rssi::three_areas(3, 9 * H, 3 * H);
+        let m = |t0: u64| {
+            let w = r.window(t0, 30);
+            crate::util::stats::mean(&w.data)
+        };
+        assert!((m(H) - m(4 * H)).abs() > 0.5);
+    }
+
+    #[test]
+    fn deterministic() {
+        let r = Rssi::three_areas(4, 9 * H, 3 * H);
+        assert_eq!(r.window(H, 20).data, r.window(H, 20).data);
+    }
+}

@@ -1,0 +1,475 @@
+//! The discrete-event intermittent execution engine.
+//!
+//! One `Engine` owns a full device world and advances it through
+//! charge/wake/execute cycles:
+//!
+//! ```text
+//! loop {
+//!   charge capacitor until V >= v_on          (sleep; time jumps)
+//!   while V > v_off {
+//!     scheduler picks next transition          (planner overhead charged)
+//!     execute it sub-action by sub-action      (atomic; NVM commit each)
+//!     on energy exhaustion: abort + rollback   (power failure)
+//!   }
+//! }
+//! ```
+//!
+//! Action semantics map the paper's Table 1 onto the learner/selector
+//! payloads; the boolean gates `select` and `learnable` discard examples
+//! (the example "leaves the system", §4.1).
+
+use crate::actions::Action;
+use crate::backend::shapes::{CHANNELS, WINDOW};
+use crate::backend::ComputeBackend;
+use crate::energy::cost::CostModel;
+use crate::energy::harvester::Harvester;
+use crate::energy::{Capacitor, EnergyMeter};
+use crate::error::{Error, Result};
+use crate::learning::{Example, Learner, Verdict};
+use crate::nvm::Nvm;
+use crate::planner::{PlanContext, Planned};
+use crate::selection::Selector;
+use crate::sensors::Sensor;
+use crate::sim::probe::{build_probes_range, probe_accuracy};
+use crate::sim::{Checkpoint, PendingEx, RunResult, Scheduler, SimConfig};
+
+/// Outcome of attempting one action.
+enum Exec {
+    Done,
+    PowerFailed,
+}
+
+/// The assembled device world.
+pub struct Engine {
+    pub cfg: SimConfig,
+    pub harvester: Box<dyn Harvester>,
+    pub cap: Capacitor,
+    pub nvm: Nvm,
+    pub sensor: Box<dyn Sensor>,
+    pub learner: Box<dyn Learner>,
+    pub selector: Box<dyn Selector>,
+    pub scheduler: Box<dyn Scheduler>,
+    pub backend: Box<dyn ComputeBackend>,
+    pub costs: CostModel,
+    pub meter: EnergyMeter,
+
+    t_us: u64,
+    pending: Vec<PendingEx>,
+    result: RunResult,
+    next_eval_us: u64,
+    quality: f32,
+}
+
+impl Engine {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        cfg: SimConfig,
+        harvester: Box<dyn Harvester>,
+        cap: Capacitor,
+        sensor: Box<dyn Sensor>,
+        learner: Box<dyn Learner>,
+        selector: Box<dyn Selector>,
+        scheduler: Box<dyn Scheduler>,
+        backend: Box<dyn ComputeBackend>,
+        costs: CostModel,
+    ) -> Self {
+        Engine {
+            cfg,
+            harvester,
+            cap,
+            nvm: Nvm::new(),
+            sensor,
+            learner,
+            selector,
+            scheduler,
+            backend,
+            costs,
+            meter: EnergyMeter::new(),
+            t_us: 0,
+            pending: Vec::new(),
+            result: RunResult::default(),
+            next_eval_us: 0,
+            quality: 0.0,
+        }
+    }
+
+    /// Current simulated time (µs).
+    pub fn now_us(&self) -> u64 {
+        self.t_us
+    }
+
+    /// Run to the horizon and return the results.
+    pub fn run(mut self) -> Result<RunResult> {
+        self.result.scheduler = self.scheduler.name().to_string();
+        while self.t_us < self.cfg.horizon_us {
+            if !self.charge_until_wake() {
+                break; // horizon reached while asleep
+            }
+            self.result.cycles += 1;
+            self.scheduler.on_cycle();
+            self.awake_burst()?;
+            self.maybe_checkpoint()?;
+        }
+        // final checkpoint at the horizon
+        self.checkpoint()?;
+        self.result.energy_uj = self.meter.total_uj();
+        self.result.energy_series = self.meter.series.clone();
+        self.result.action_tallies = self
+            .meter
+            .tallies()
+            .map(|(k, t)| (k.to_string(), t.count, t.energy_uj, t.time_us))
+            .collect();
+        Ok(self.result)
+    }
+
+    /// Sleep/charge until the wake threshold; false if the horizon passed.
+    fn charge_until_wake(&mut self) -> bool {
+        while self.t_us < self.cfg.horizon_us {
+            if self.cap.awake_ready() {
+                return true;
+            }
+            let p = self.harvester.power_w(self.t_us);
+            let step = match self.cap.time_to_wake_s(p) {
+                Some(s) => ((s * 1e6) as u64 + 1).min(self.cfg.charge_step_us),
+                None => self.cfg.charge_step_us,
+            }
+            .max(1_000);
+            self.cap.charge(p, step);
+            self.t_us += step;
+            // checkpoints continue during darkness
+            if self.t_us >= self.next_eval_us {
+                let _ = self.checkpoint();
+            }
+        }
+        false
+    }
+
+    /// Execute actions until energy is exhausted or nothing remains.
+    fn awake_burst(&mut self) -> Result<()> {
+        // stay below a bounded number of actions per wake to keep single
+        // cycles from monopolizing the horizon (real platforms drain far
+        // earlier; this is a safety valve)
+        for _ in 0..256 {
+            if !self.cap.alive() || self.t_us >= self.cfg.horizon_us {
+                break;
+            }
+            // Mayfly-style expiration sweep
+            if let Some(exp) = self.scheduler.expiry_us() {
+                let t = self.t_us;
+                let before = self.pending.len();
+                self.pending
+                    .retain(|p| p.last == Action::Sense && p.sensed_at_us + exp > t || p.last != Action::Sense);
+                // expire *unprocessed* sensed data only (Mayfly discards stale
+                // sensor data, not models)
+                self.result.expired += (before - self.pending.len()) as u64;
+            }
+
+            // scheduler decision (+ overhead)
+            let ctx = self.plan_context();
+            let pending_actions: Vec<Action> = self.pending.iter().map(|p| p.last).collect();
+            let oh = self.scheduler.overhead(&self.costs);
+            if oh.energy_uj > 0.0 {
+                if !self.cap.deduct_uj(oh.energy_uj) {
+                    self.result.power_failures += 1;
+                    break;
+                }
+                self.t_us += oh.time_us;
+                self.meter.record("planner", oh.energy_uj, oh.time_us);
+            }
+            let planned = self
+                .scheduler
+                .next(&pending_actions, &ctx, &self.costs);
+
+            match planned {
+                Planned::Idle => {
+                    // nothing useful; burn the cycle by napping 1 s
+                    self.t_us += 1_000_000;
+                    break;
+                }
+                Planned::SenseNew => {
+                    let mut ex = PendingEx::new(Action::Sense, self.t_us);
+                    match self.execute(Action::Sense, &mut ex)? {
+                        Exec::Done => {
+                            ex.last = Action::Sense;
+                            ex.sub_done = 0;
+                            self.post_action(Action::Sense, &mut ex)?;
+                            self.pending.push(ex);
+                            self.result.sensed += 1;
+                        }
+                        Exec::PowerFailed => break,
+                    }
+                }
+                Planned::Advance { slot, action } => {
+                    if slot >= self.pending.len() {
+                        // stale plan (shouldn't happen); skip
+                        continue;
+                    }
+                    let mut ex = self.pending[slot].clone();
+                    match self.execute(action, &mut ex)? {
+                        Exec::Done => {
+                            ex.last = action;
+                            ex.sub_done = 0;
+                            let leaves = self.post_action(action, &mut ex)?;
+                            if leaves || action.next().is_empty() {
+                                self.pending.remove(slot);
+                            } else {
+                                self.pending[slot] = ex;
+                            }
+                        }
+                        Exec::PowerFailed => {
+                            // keep sub-action progress (splitting's purpose)
+                            self.pending[slot] = ex;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn plan_context(&self) -> PlanContext {
+        PlanContext {
+            learned_total: self.result.learned,
+            quality: self.quality,
+            window_learns: 0,
+            window_infers: 0,
+        }
+    }
+
+    /// Execute `action` on `ex`, sub-action by sub-action. Payload effects
+    /// materialize only when the last sub-action commits.
+    fn execute(&mut self, action: Action, ex: &mut PendingEx) -> Result<Exec> {
+        let mut cost = self.costs.cost(action);
+        // selection heuristic cost rides on the select action
+        if action == Action::Select {
+            let sc = self.selector.cost(&self.costs);
+            cost.energy_uj += sc.energy_uj;
+            cost.time_us += sc.time_us;
+        }
+        let sub_e = cost.sub_energy_uj();
+        let sub_t = cost.sub_time_us();
+        if sub_e > self.cap.full_budget_uj() {
+            return Err(Error::EnergyBudget {
+                action: action.name().into(),
+                needed_uj: sub_e,
+                budget_uj: self.cap.full_budget_uj(),
+            });
+        }
+        while ex.sub_done < cost.splits {
+            self.nvm.begin_action()?;
+            if !self.cap.deduct_uj(sub_e) {
+                // power failure mid-sub-action: roll back
+                self.nvm.abort_action();
+                self.meter.record_abort(action, self.cap.usable_uj().max(0.0));
+                self.result.power_failures += 1;
+                return Ok(Exec::PowerFailed);
+            }
+            self.t_us += sub_t;
+            ex.sub_done += 1;
+            self.nvm.commit_action()?;
+            self.meter.record_action(action, sub_e, sub_t);
+        }
+        Ok(Exec::Done)
+    }
+
+    /// Apply the payload of a completed action. Returns `true` if the
+    /// example leaves the system (discarded or terminal).
+    fn post_action(&mut self, action: Action, ex: &mut PendingEx) -> Result<bool> {
+        match action {
+            Action::Sense => {
+                let win = self
+                    .sensor
+                    .window(self.t_us, WINDOW)
+                    .fit(WINDOW, CHANNELS);
+                ex.window = Some(win);
+                Ok(false)
+            }
+            Action::Extract => {
+                let win = ex
+                    .window
+                    .as_ref()
+                    .ok_or_else(|| Error::Nvm("extract without window".into()))?;
+                let feats = self.backend.extract(&win.data)?;
+                ex.example = Some(Example::new(feats, win.t_us, win.truth_abnormal));
+                ex.window = None; // raw window released
+                Ok(false)
+            }
+            Action::Decide => Ok(false),
+            Action::Select => {
+                let e = ex
+                    .example
+                    .as_ref()
+                    .ok_or_else(|| Error::Nvm("select without example".into()))?;
+                let keep = if self.scheduler.uses_selection() {
+                    self.selector.select(e, self.backend.as_mut())?
+                } else {
+                    true
+                };
+                self.scheduler.observe_select(keep);
+                if !keep {
+                    self.result.discarded_select += 1;
+                }
+                Ok(!keep)
+            }
+            Action::Learnable => Ok(!self.learner.learnable()),
+            Action::Learn => {
+                let e = ex
+                    .example
+                    .as_ref()
+                    .ok_or_else(|| Error::Nvm("learn without example".into()))?;
+                self.learner.learn(e, self.backend.as_mut())?;
+                self.learner.save(&mut self.nvm)?;
+                self.result.learned += 1;
+                self.scheduler.observe_completion(Action::Learn);
+                Ok(false)
+            }
+            Action::Evaluate => {
+                self.quality = self.learner.evaluate(self.backend.as_mut())?;
+                Ok(true) // terminal
+            }
+            Action::Infer => {
+                let e = ex
+                    .example
+                    .as_ref()
+                    .ok_or_else(|| Error::Nvm("infer without example".into()))?;
+                let v = self.learner.infer(e, self.backend.as_mut())?;
+                self.result.inferred += 1;
+                self.result.infer_log.push((
+                    self.t_us,
+                    v == Verdict::Abnormal,
+                    e.truth_abnormal,
+                ));
+                self.scheduler.observe_completion(Action::Infer);
+                Ok(true) // terminal
+            }
+        }
+    }
+
+    fn maybe_checkpoint(&mut self) -> Result<()> {
+        if self.t_us >= self.next_eval_us {
+            self.checkpoint()?;
+        }
+        Ok(())
+    }
+
+    fn checkpoint(&mut self) -> Result<()> {
+        self.next_eval_us = self.t_us + self.cfg.eval_period_us;
+        // Probe the *current* environment: test cases from the lookback
+        // window ending now (paper: hourly tests against live conditions).
+        let from = self.t_us.saturating_sub(self.cfg.probe_lookback_us);
+        let to = self.t_us.max(from + self.cfg.eval_period_us.min(600_000_000)).max(1);
+        let span = to - from;
+        let scan = (span / 600).max(500_000);
+        let probes = build_probes_range(
+            self.sensor.as_ref(),
+            self.backend.as_mut(),
+            from,
+            to,
+            self.cfg.probe_count,
+            scan,
+        )?;
+        let acc = probe_accuracy(&probes, self.learner.as_mut(), self.backend.as_mut())?;
+        self.meter.sample(self.t_us);
+        self.result.checkpoints.push(Checkpoint {
+            t_us: self.t_us,
+            accuracy: acc,
+            learned: self.result.learned,
+            inferred: self.result.inferred,
+            energy_uj: self.meter.total_uj(),
+            voltage: self.cap.voltage(),
+        });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::energy::harvester::Constant;
+    use crate::learning::KnnAnomalyLearner;
+    use crate::planner::DynamicActionPlanner;
+    use crate::selection::{Heuristic, Selector};
+    use crate::sensors::accel::{Accel, MotionProfile};
+    use crate::sim::PlannerScheduler;
+
+    fn small_engine(power_w: f64, horizon_s: u64) -> Engine {
+        let profile = MotionProfile::alternating_hours(1.0, 3.0, 8);
+        let sensor = Accel::new(profile, 11);
+        let selector: Box<dyn Selector> = Heuristic::RoundRobin.build(1);
+        Engine::new(
+            SimConfig {
+                seed: 1,
+                horizon_us: horizon_s * 1_000_000,
+                eval_period_us: 300_000_000,
+                probe_count: 20,
+                charge_step_us: 10_000_000,
+                probe_lookback_us: 3_600_000_000,
+            },
+            Box::new(Constant(power_w)),
+            Capacitor::vibration(),
+            Box::new(sensor),
+            Box::new(KnnAnomalyLearner::new()),
+            selector,
+            Box::new(PlannerScheduler(DynamicActionPlanner::default())),
+            Box::new(NativeBackend::new()),
+            CostModel::kmeans(),
+        )
+    }
+
+    #[test]
+    fn engine_makes_progress_with_power() {
+        let r = small_engine(0.010, 1800).run().unwrap();
+        assert!(r.cycles > 0);
+        assert!(r.sensed > 0, "{r:?}");
+        assert!(r.learned > 0);
+        assert!(r.energy_uj > 0.0);
+        assert!(!r.checkpoints.is_empty());
+    }
+
+    #[test]
+    fn engine_starves_without_power() {
+        let r = small_engine(0.0, 1800).run().unwrap();
+        assert_eq!(r.learned, 0);
+        assert_eq!(r.sensed, 0);
+    }
+
+    #[test]
+    fn weak_power_causes_power_failures_but_still_progresses() {
+        // 1.2 mW: one vibration-cap charge holds ~3.6 mJ usable — less than
+        // a full learn path, so mid-action failures must occur.
+        let r = small_engine(0.0012, 3600).run().unwrap();
+        assert!(r.power_failures > 0, "{r:?}");
+        assert!(r.sensed > 0);
+    }
+
+    #[test]
+    fn energy_series_is_monotone() {
+        let r = small_engine(0.010, 1800).run().unwrap();
+        for w in r.energy_series.windows(2) {
+            assert!(w[1].1 >= w[0].1);
+        }
+    }
+
+    #[test]
+    fn checkpoints_cover_horizon() {
+        let r = small_engine(0.010, 3600).run().unwrap();
+        assert!(r.checkpoints.len() >= 3);
+        let last = r.checkpoints.last().unwrap();
+        assert!(last.t_us >= 3_600_000_000 * 9 / 10);
+    }
+
+    #[test]
+    fn learning_improves_probe_accuracy() {
+        let r = small_engine(0.012, 7200).run().unwrap();
+        let first = r.checkpoints.first().unwrap().accuracy;
+        let best = r
+            .checkpoints
+            .iter()
+            .map(|c| c.accuracy)
+            .fold(0.0f64, f64::max);
+        assert!(best > first, "first {first} best {best}");
+        assert!(best > 0.5, "best {best}");
+    }
+}

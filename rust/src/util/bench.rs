@@ -1,0 +1,132 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Measures wall-clock with warmup, reports mean / p50 / p95 / min over a
+//! fixed iteration budget, and prevents dead-code elimination with a
+//! `black_box`. Used by every binary in `benches/`.
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+/// Re-export of `std::hint::black_box` under the name bench code expects.
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Measurement {
+    /// Render one human-readable row (also machine-greppable).
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p95_ns),
+            fmt_ns(self.min_ns),
+        )
+    }
+}
+
+/// Pretty-print nanoseconds with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} us", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark `f`, auto-scaling the iteration count so total measured time
+/// is ~`budget_ms` milliseconds (after a 10% warmup).
+pub fn bench<F: FnMut()>(name: &str, budget_ms: u64, mut f: F) -> Measurement {
+    // Calibrate: run until 5ms or 100 iterations to estimate per-iter cost.
+    let cal_start = Instant::now();
+    let mut cal_iters = 0usize;
+    while cal_start.elapsed().as_millis() < 5 && cal_iters < 100 {
+        f();
+        cal_iters += 1;
+    }
+    let per_iter = cal_start.elapsed().as_nanos() as f64 / cal_iters.max(1) as f64;
+    let budget_ns = (budget_ms as f64) * 1e6;
+    let iters = ((budget_ns / per_iter.max(1.0)) as usize).clamp(10, 1_000_000);
+
+    // Warmup 10%.
+    for _ in 0..(iters / 10).max(1) {
+        f();
+    }
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let pct = |q: f64| samples[((q * samples.len() as f64) as usize).min(samples.len() - 1)];
+    Measurement {
+        name: name.to_string(),
+        iters,
+        mean_ns: mean,
+        p50_ns: pct(0.50),
+        p95_ns: pct(0.95),
+        min_ns: samples[0],
+    }
+}
+
+/// Run a one-shot timed section (for end-to-end figure benches where a
+/// single run is already seconds long).
+pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, Measurement) {
+    let t = Instant::now();
+    let out = f();
+    let ns = t.elapsed().as_nanos() as f64;
+    (
+        out,
+        Measurement {
+            name: name.to_string(),
+            iters: 1,
+            mean_ns: ns,
+            p50_ns: ns,
+            p95_ns: ns,
+            min_ns: ns,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let m = bench("noop-ish", 5, || {
+            black_box(2u64.wrapping_mul(3));
+        });
+        assert!(m.iters >= 10);
+        assert!(m.min_ns <= m.p50_ns && m.p50_ns <= m.p95_ns);
+        assert!(m.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(2_500.0), "2.50 us");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+        assert_eq!(fmt_ns(2_500_000_000.0), "2.500 s");
+    }
+}

@@ -1,0 +1,13 @@
+//! Small self-contained utilities: deterministic PRNG, statistics,
+//! a JSON writer, a micro-benchmark harness and a property-test driver.
+//!
+//! The offline vendor set has no `rand`/`serde`/`criterion`/`proptest`, so
+//! these are in-repo implementations sized to what the framework needs.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Rng;

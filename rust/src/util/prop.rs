@@ -1,0 +1,66 @@
+//! Tiny property-testing driver (proptest is not in the offline vendor
+//! set). A property is a closure over a seeded [`Rng`]; the driver runs it
+//! for `cases` independent seeds and reports the first failing seed so a
+//! failure is reproducible with `check_seeded`.
+//!
+//! No shrinking — generators here are expected to produce small inputs
+//! already (the coordinator-invariant tests generate scenario parameters,
+//! not deep structures).
+
+use super::rng::Rng;
+
+/// Number of cases used by default across the test suite.
+pub const DEFAULT_CASES: u64 = 64;
+
+/// Run `prop` for `cases` seeds derived from `base_seed`. Panics with the
+/// failing seed embedded in the message.
+pub fn check_cases<F: Fn(&mut Rng)>(name: &str, base_seed: u64, cases: u64, prop: F) {
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9e3779b97f4a7c15)
+            .wrapping_add(case);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property `{name}` failed at seed {seed} (case {case}/{cases}): {msg}");
+        }
+    }
+}
+
+/// Run `prop` with the default number of cases.
+pub fn check<F: Fn(&mut Rng)>(name: &str, prop: F) {
+    check_cases(name, 0xC0FFEE, DEFAULT_CASES, prop);
+}
+
+/// Re-run a single failing seed (paste from the panic message).
+pub fn check_seeded<F: Fn(&mut Rng)>(seed: u64, prop: F) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", |rng| {
+            let a = rng.below(1000) as u64;
+            let b = rng.below(1000) as u64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed at seed")]
+    fn failing_property_reports_seed() {
+        check_cases("always-fails", 1, 4, |_| panic!("boom"));
+    }
+}

@@ -1,0 +1,186 @@
+//! Descriptive statistics shared by sensors, learners and the evaluator.
+
+/// Arithmetic mean; 0 for an empty slice.
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() as f32 / xs.len() as f32
+}
+
+/// Population standard deviation (matches `jnp.std` and the L1 kernel).
+pub fn std(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs) as f64;
+    let var = xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64;
+    var.max(0.0).sqrt() as f32
+}
+
+/// Median; for even lengths the mean of the two middle values (matches the
+/// L1 features kernel).
+pub fn median(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Root mean square.
+pub fn rms(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let s = xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+    (s / xs.len() as f64).sqrt() as f32
+}
+
+/// Peak-to-peak amplitude (max − min).
+pub fn p2p(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in xs {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    hi - lo
+}
+
+/// Zero-crossing rate of the mean-removed signal, normalized to [0, 1]
+/// (fraction of consecutive pairs that cross zero) — matches the kernel.
+pub fn zcr(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let sign = |x: f32| if x - m >= 0.0 { 1.0f32 } else { -1.0 };
+    let crossings: f32 = xs
+        .windows(2)
+        .map(|w| (sign(w[1]) - sign(w[0])).abs())
+        .sum::<f32>()
+        / 2.0;
+    crossings / (xs.len() - 1) as f32
+}
+
+/// Average absolute variation, mean |x_t − x_{t−1}| (paper's AAV).
+pub fn aav(xs: &[f32]) -> f32 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    xs.windows(2).map(|w| (w[1] - w[0]).abs()).sum::<f32>() / (xs.len() - 1) as f32
+}
+
+/// Mean absolute value.
+pub fn mav(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x.abs() as f64).sum::<f64>() as f32 / xs.len() as f32
+}
+
+/// q-th percentile (0..=1) using the paper's rule: the value at index
+/// ceil(q·n) − 1 of the ascending sort (matches the L2 `knn_learn` HLO).
+pub fn percentile(xs: &[f32], q: f64) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((q * v.len() as f64).ceil() as usize).max(1) - 1;
+    v[idx.min(v.len() - 1)]
+}
+
+/// Euclidean distance between two feature vectors (paper §6.1).
+pub fn euclidean(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f64;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]) as f64;
+        s += d * d;
+    }
+    s.sqrt() as f32
+}
+
+/// Squared Euclidean distance (avoids the sqrt on hot paths).
+pub fn sq_euclidean(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0f64;
+    for i in 0..a.len() {
+        let d = (a[i] - b[i]) as f64;
+        s += d * d;
+    }
+    s as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-6);
+        assert!((std(&xs) - 1.118034).abs() < 1e-5);
+        assert!((median(&xs) - 2.5).abs() < 1e-6);
+        assert!((rms(&xs) - 2.7386127).abs() < 1e-5);
+        assert!((p2p(&xs) - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn median_odd() {
+        assert_eq!(median(&[5.0, 1.0, 3.0]), 3.0);
+    }
+
+    #[test]
+    fn zcr_alternating() {
+        let xs = [1.0, -1.0, 1.0, -1.0, 1.0, -1.0];
+        assert!((zcr(&xs) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zcr_constant_is_zero() {
+        assert_eq!(zcr(&[2.0; 16]), 0.0);
+    }
+
+    #[test]
+    fn aav_ramp() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        assert!((aav(&xs) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_matches_paper_rule() {
+        let xs: Vec<f32> = (1..=40).map(|i| i as f32).collect();
+        // ceil(0.9*40)-1 = 35 -> value 36
+        assert_eq!(percentile(&xs, 0.9), 36.0);
+        assert_eq!(percentile(&xs, 1.0), 40.0);
+        assert_eq!(percentile(&[7.0], 0.9), 7.0);
+    }
+
+    #[test]
+    fn euclidean_matches_hand() {
+        assert!((euclidean(&[0.0, 3.0], &[4.0, 0.0]) - 5.0).abs() < 1e-6);
+        assert!((sq_euclidean(&[0.0, 3.0], &[4.0, 0.0]) - 25.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_slices_are_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std(&[]), 0.0);
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(rms(&[]), 0.0);
+        assert_eq!(p2p(&[]), 0.0);
+        assert_eq!(percentile(&[], 0.9), 0.0);
+    }
+}

@@ -1,0 +1,163 @@
+//! Backend parity: the PJRT backend (AOT HLO artifacts — L1 Pallas kernels
+//! lowered through the L2 JAX model) must agree with the native rust
+//! backend on every payload, over randomized inputs.
+//!
+//! pytest pins kernels ↔ jnp oracle; this test pins pjrt ↔ native; together
+//! they pin all three layers to one semantics.
+//!
+//! Requires `make artifacts`; the suite fails with a clear message if the
+//! artifacts are missing.
+
+use ilearn::backend::native::NativeBackend;
+use ilearn::backend::pjrt::PjrtBackend;
+use ilearn::backend::shapes::*;
+use ilearn::backend::ComputeBackend;
+use ilearn::util::Rng;
+
+fn pjrt() -> PjrtBackend {
+    PjrtBackend::discover().expect(
+        "PJRT artifacts not found — run `make artifacts` before `cargo test`",
+    )
+}
+
+fn buf(rng: &mut Rng, count: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut ex = vec![0.0f32; N_BUF * FEAT_DIM];
+    let mut mask = vec![0.0f32; N_BUF];
+    for i in 0..count {
+        mask[i] = 1.0;
+        for j in 0..FEAT_DIM {
+            ex[i * FEAT_DIM + j] = rng.normal(0.0, 3.0) as f32;
+        }
+    }
+    (ex, mask)
+}
+
+fn vecn(rng: &mut Rng, n: usize, scale: f64) -> Vec<f32> {
+    (0..n).map(|_| rng.normal(0.0, scale) as f32).collect()
+}
+
+fn close(a: f32, b: f32, tol: f32) -> bool {
+    let denom = a.abs().max(b.abs()).max(1.0);
+    (a - b).abs() / denom < tol
+}
+
+#[test]
+fn extract_parity() {
+    let mut p = pjrt();
+    let mut n = NativeBackend::new();
+    let mut rng = Rng::new(1);
+    for _ in 0..5 {
+        let win = vecn(&mut rng, WINDOW * CHANNELS, 2.0);
+        let a = p.extract(&win).unwrap();
+        let b = n.extract(&win).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert!(close(*x, *y, 1e-4), "feature {i}: pjrt {x} native {y}");
+        }
+    }
+}
+
+#[test]
+fn knn_learn_parity() {
+    let mut p = pjrt();
+    let mut n = NativeBackend::new();
+    let mut rng = Rng::new(2);
+    for count in [4, 17, 40, 64] {
+        let (ex, mask) = buf(&mut rng, count);
+        let (sp, tp) = p.knn_learn(&ex, &mask).unwrap();
+        let (sn, tn) = n.knn_learn(&ex, &mask).unwrap();
+        assert!(close(tp, tn, 1e-4), "threshold: pjrt {tp} native {tn} (count {count})");
+        for i in 0..N_BUF {
+            assert!(close(sp[i], sn[i], 1e-3), "score {i}: {} vs {}", sp[i], sn[i]);
+        }
+    }
+}
+
+#[test]
+fn knn_infer_parity_scalar_and_batch() {
+    let mut p = pjrt();
+    let mut n = NativeBackend::new();
+    let mut rng = Rng::new(3);
+    let (ex, mask) = buf(&mut rng, 30);
+    for _ in 0..5 {
+        let x = vecn(&mut rng, FEAT_DIM, 3.0);
+        let a = p.knn_infer(&ex, &mask, &x).unwrap();
+        let b = n.knn_infer(&ex, &mask, &x).unwrap();
+        assert!(close(a, b, 1e-4), "pjrt {a} native {b}");
+    }
+    let xs = vecn(&mut rng, BATCH * FEAT_DIM, 3.0);
+    let a = p.knn_infer_batch(&ex, &mask, &xs).unwrap();
+    let b = n.knn_infer_batch(&ex, &mask, &xs).unwrap();
+    for i in 0..BATCH {
+        assert!(close(a[i], b[i], 1e-4), "batch {i}: {} vs {}", a[i], b[i]);
+    }
+}
+
+#[test]
+fn kmeans_parity() {
+    let mut p = pjrt();
+    let mut n = NativeBackend::new();
+    let mut rng = Rng::new(4);
+    for _ in 0..10 {
+        let w = vecn(&mut rng, N_CLUSTERS * FEAT_DIM, 1.0);
+        let x = vecn(&mut rng, FEAT_DIM, 1.0);
+        let eta = rng.f32() * 0.8;
+        let (wp, ap) = p.kmeans_learn(&w, &x, eta).unwrap();
+        let (wn, an) = n.kmeans_learn(&w, &x, eta).unwrap();
+        for i in 0..N_CLUSTERS {
+            assert!(close(ap[i], an[i], 1e-4), "act {i}: {} vs {}", ap[i], an[i]);
+        }
+        for i in 0..w.len() {
+            assert!(close(wp[i], wn[i], 1e-4), "w {i}: {} vs {}", wp[i], wn[i]);
+        }
+        let ip = p.kmeans_infer(&w, &x).unwrap();
+        let inn = n.kmeans_infer(&w, &x).unwrap();
+        for i in 0..N_CLUSTERS {
+            assert!(close(ip[i], inn[i], 1e-4));
+        }
+    }
+}
+
+#[test]
+fn diversity_repr_parity() {
+    let mut p = pjrt();
+    let mut n = NativeBackend::new();
+    let mut rng = Rng::new(5);
+    for _ in 0..5 {
+        let b = vecn(&mut rng, KLAST * FEAT_DIM, 2.0);
+        let bp = vecn(&mut rng, KLAST * FEAT_DIM, 2.0);
+        let x = vecn(&mut rng, FEAT_DIM, 2.0);
+        let a = p.diversity_repr(&b, &bp, &x).unwrap();
+        let c = n.diversity_repr(&b, &bp, &x).unwrap();
+        for i in 0..4 {
+            assert!(close(a[i], c[i], 1e-3), "score {i}: {} vs {}", a[i], c[i]);
+        }
+    }
+}
+
+#[test]
+fn learners_agree_across_backends() {
+    // identical learner fed identical examples on both backends must make
+    // identical decisions (within tolerance of the threshold comparison)
+    use ilearn::learning::{Example, KnnAnomalyLearner, Learner};
+    let mut p = pjrt();
+    let mut n = NativeBackend::new();
+    let mut lp = KnnAnomalyLearner::new();
+    let mut ln = KnnAnomalyLearner::new();
+    let mut rng = Rng::new(6);
+    for t in 0..25u64 {
+        let ex = Example::new(vecn(&mut rng, FEAT_DIM, 1.0), t, false);
+        lp.learn(&ex, &mut p).unwrap();
+        ln.learn(&ex, &mut n).unwrap();
+    }
+    assert!(close(lp.threshold(), ln.threshold(), 1e-4));
+    let mut agree = 0;
+    for t in 0..20u64 {
+        let scale = if t % 4 == 0 { 10.0 } else { 1.0 };
+        let ex = Example::new(vecn(&mut rng, FEAT_DIM, scale), 100 + t, false);
+        let vp = lp.infer(&ex, &mut p).unwrap();
+        let vn = ln.infer(&ex, &mut n).unwrap();
+        agree += (vp == vn) as u32;
+    }
+    assert!(agree >= 19, "verdict agreement {agree}/20");
+}

@@ -1,0 +1,164 @@
+//! Failure-injection and persistence tests: the §3.5 guarantees under
+//! adversarial energy conditions, and model survival through NVM.
+
+use ilearn::backend::native::NativeBackend;
+use ilearn::backend::shapes::FEAT_DIM;
+use ilearn::energy::harvester::Trace;
+use ilearn::energy::{Capacitor, CostModel};
+use ilearn::learning::{Example, KnnAnomalyLearner, Learner};
+use ilearn::nvm::Nvm;
+use ilearn::planner::DynamicActionPlanner;
+use ilearn::selection::Heuristic;
+use ilearn::sim::engine::Engine;
+use ilearn::sim::{PlannerScheduler, SimConfig};
+use ilearn::util::Rng;
+
+fn engine_with_trace(points: Vec<(u64, f64)>, horizon_s: u64) -> Engine {
+    let profile = ilearn::sensors::accel::MotionProfile::alternating_hours(1.0, 3.0, 8);
+    let sensor = ilearn::sensors::accel::Accel::new(profile, 3);
+    Engine::new(
+        SimConfig {
+            seed: 3,
+            horizon_us: horizon_s * 1_000_000,
+            eval_period_us: 600_000_000,
+            probe_count: 10,
+            charge_step_us: 2_000_000,
+            probe_lookback_us: 3_600_000_000,
+        },
+        Box::new(Trace { points }),
+        Capacitor::vibration(),
+        Box::new(sensor),
+        Box::new(KnnAnomalyLearner::new()),
+        Heuristic::None.build(1),
+        Box::new(PlannerScheduler(DynamicActionPlanner::default())),
+        Box::new(NativeBackend::new()),
+        CostModel::kmeans(),
+    )
+}
+
+#[test]
+fn blackout_mid_run_loses_no_committed_learning() {
+    // power for 10 min, dead for 20 min, power again: the learned counter
+    // must be monotone through the blackout (no rollback of committed
+    // learns) and learning must resume afterwards.
+    let on = 0.010;
+    let r = engine_with_trace(
+        vec![(0, on), (600_000_000, 0.0), (1_800_000_000, on)],
+        3_000,
+    )
+    .run()
+    .unwrap();
+    assert!(r.learned > 0);
+    let mut last = 0;
+    for c in &r.checkpoints {
+        assert!(c.learned >= last, "learned went backwards");
+        last = c.learned;
+    }
+    // progress after the blackout
+    let before: u64 = r
+        .checkpoints
+        .iter()
+        .filter(|c| c.t_us <= 600_000_000)
+        .map(|c| c.learned)
+        .max()
+        .unwrap_or(0);
+    assert!(
+        r.learned > before,
+        "no learning after power returned ({before} -> {})",
+        r.learned
+    );
+}
+
+#[test]
+fn flickering_power_never_corrupts_bookkeeping() {
+    // 2 s on / 8 s off flicker: lots of mid-action deaths
+    let mut points = Vec::new();
+    for i in 0..300u64 {
+        points.push((i * 10_000_000, 0.012));
+        points.push((i * 10_000_000 + 2_000_000, 0.0));
+    }
+    let r = engine_with_trace(points, 3_000).run().unwrap();
+    assert!(r.power_failures > 0, "flicker produced no failures");
+    // accounting stays coherent
+    assert!(r.learned + r.inferred + r.discarded_select + r.expired + 2 >= r.sensed);
+}
+
+#[test]
+fn learner_state_survives_via_nvm_restore() {
+    // train a learner, persist to NVM, restore into a fresh instance (the
+    // cold-boot path on a real platform), verify identical behaviour
+    let mut be = NativeBackend::new();
+    let mut nvm = Nvm::new();
+    let mut rng = Rng::new(5);
+    let mut learner = KnnAnomalyLearner::new();
+    for t in 0..30u64 {
+        let f: Vec<f32> = (0..FEAT_DIM).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        learner.learn(&Example::new(f, t, false), &mut be).unwrap();
+    }
+    learner.save(&mut nvm).unwrap();
+
+    let mut rebooted = KnnAnomalyLearner::new();
+    rebooted.restore(&mut nvm).unwrap();
+    assert_eq!(rebooted.learned_count(), 30);
+    assert_eq!(rebooted.threshold(), learner.threshold());
+    for t in 0..10u64 {
+        let scale = if t % 3 == 0 { 8.0 } else { 1.0 };
+        let f: Vec<f32> = (0..FEAT_DIM)
+            .map(|_| rng.normal(0.0, scale) as f32)
+            .collect();
+        let ex = Example::new(f, 100 + t, false);
+        assert_eq!(
+            learner.infer(&ex, &mut be).unwrap(),
+            rebooted.infer(&ex, &mut be).unwrap()
+        );
+    }
+}
+
+#[test]
+fn aborted_action_rolls_back_nvm_writes() {
+    let mut nvm = Nvm::new();
+    nvm.write_u64("model_version", 1).unwrap();
+    nvm.begin_action().unwrap();
+    nvm.write_u64("model_version", 2).unwrap();
+    nvm.write_f32s("weights", &[9.9; 8]).unwrap();
+    // power failure
+    nvm.abort_action();
+    assert_eq!(nvm.read_u64("model_version"), 1);
+    assert!(nvm.read_f32s("weights").is_none());
+}
+
+#[test]
+fn energy_budget_error_when_action_cannot_ever_fit() {
+    // a capacitor so small that a sense sub-action exceeds one full charge
+    // must surface the pre-inspection error, not loop forever
+    let profile = ilearn::sensors::accel::MotionProfile::alternating_hours(1.0, 3.0, 1);
+    let sensor = ilearn::sensors::accel::Accel::new(profile, 3);
+    // 50 uF: the planner's 57 uJ decision fits one charge, but a sense
+    // sub-action (1.81 mJ) exceeds even a full 3.3 V -> 2.0 V discharge
+    let tiny_cap = Capacitor::new(0.00005, 3.3, 2.8, 2.0);
+    let engine = Engine::new(
+        SimConfig {
+            seed: 1,
+            horizon_us: 600_000_000,
+            eval_period_us: 600_000_000,
+            probe_count: 4,
+            charge_step_us: 2_000_000,
+            probe_lookback_us: 600_000_000,
+        },
+        Box::new(Trace {
+            points: vec![(0, 0.010)],
+        }),
+        tiny_cap,
+        Box::new(sensor),
+        Box::new(KnnAnomalyLearner::new()),
+        Heuristic::None.build(1),
+        Box::new(PlannerScheduler(DynamicActionPlanner::default())),
+        Box::new(NativeBackend::new()),
+        CostModel::kmeans(),
+    );
+    let err = engine.run().unwrap_err();
+    assert!(
+        matches!(err, ilearn::Error::EnergyBudget { .. }),
+        "expected EnergyBudget, got {err:?}"
+    );
+}
