@@ -7,8 +7,7 @@
 //!     cargo bench --bench ablations
 
 use ilearn::actions::Action;
-use ilearn::apps::{AppConfig, AppKind};
-use ilearn::backend::native::NativeBackend;
+use ilearn::apps::AppKind;
 use ilearn::energy::CostModel;
 use ilearn::learning::KnnAnomalyLearner;
 use ilearn::planner::{DynamicActionPlanner, PlanContext, PlannerConfig};
@@ -20,21 +19,21 @@ use ilearn::util::bench::{bench, black_box, time_once};
 const H: u64 = 3_600_000_000;
 
 fn run_with_planner(cfg_mod: impl Fn(&mut PlannerConfig)) -> ilearn::sim::RunResult {
-    let app = AppConfig::new(AppKind::Vibration, 42, 4 * H);
+    let spec = AppKind::Vibration.spec(42, 4 * H);
     let mut pc = PlannerConfig::default();
     cfg_mod(&mut pc);
-    let planner = DynamicActionPlanner::new(app.kind.goal(), pc);
-    let engine = Engine::new(
-        app.sim_config(),
-        app.build_harvester(),
-        app.build_capacitor(),
-        app.build_sensor(),
-        Box::new(KnnAnomalyLearner::new()),
-        Heuristic::RoundRobin.build(42),
-        Box::new(PlannerScheduler(planner)),
-        Box::new(NativeBackend::new()),
-        app.kind.cost_model(),
-    );
+    let planner = DynamicActionPlanner::new(spec.goal, pc);
+    let engine = Engine::builder()
+        .sim(spec.sim_config())
+        .harvester(spec.build_harvester())
+        .capacitor(spec.build_capacitor())
+        .sensor(spec.build_sensor())
+        .learner(Box::new(KnnAnomalyLearner::new()))
+        .selector(Heuristic::RoundRobin.build(42))
+        .scheduler(Box::new(PlannerScheduler(planner)))
+        .costs(spec.cost.build())
+        .build()
+        .unwrap();
     engine.run().unwrap()
 }
 
@@ -94,13 +93,13 @@ fn main() {
 
     println!("\n== ablation: planner vs fixed duty cycles on identical world ==");
     for (name, sched) in [
-        ("planner", ilearn::apps::SchedulerKind::Planner),
-        ("alpaca:50", ilearn::apps::SchedulerKind::Alpaca { learn_pct: 0.5 }),
-        ("alpaca:90", ilearn::apps::SchedulerKind::Alpaca { learn_pct: 0.9 }),
+        ("planner", ilearn::scenario::SchedulerKind::Planner),
+        ("alpaca:50", ilearn::scenario::SchedulerKind::Alpaca { learn_pct: 0.5 }),
+        ("alpaca:90", ilearn::scenario::SchedulerKind::Alpaca { learn_pct: 0.9 }),
     ] {
-        let mut app = AppConfig::new(AppKind::Vibration, 42, 4 * H);
-        app.scheduler = sched;
-        let (r, _) = time_once("run", || app.build_engine().unwrap().run().unwrap());
+        let mut spec = AppKind::Vibration.spec(42, 4 * H);
+        spec.scheduler = sched;
+        let (r, _) = time_once("run", || spec.build_engine().unwrap().run().unwrap());
         println!(
             "{name:>10}: mean_acc {:.2} learned {:>5} energy {:>8.1} mJ",
             r.mean_accuracy(3),

@@ -4,14 +4,20 @@
 //!
 //!     make artifacts && cargo bench --bench backends
 
-use ilearn::backend::native::NativeBackend;
-use ilearn::backend::pjrt::PjrtBackend;
-use ilearn::backend::shapes::*;
-use ilearn::backend::ComputeBackend;
-use ilearn::util::bench::{bench, black_box};
-use ilearn::util::Rng;
-
+#[cfg(not(feature = "pjrt"))]
 fn main() {
+    eprintln!("skipping: the backends bench compares native vs PJRT — rebuild with `--features pjrt`");
+}
+
+#[cfg(feature = "pjrt")]
+fn main() {
+    use ilearn::backend::native::NativeBackend;
+    use ilearn::backend::pjrt::PjrtBackend;
+    use ilearn::backend::shapes::*;
+    use ilearn::backend::ComputeBackend;
+    use ilearn::util::bench::{bench, black_box};
+    use ilearn::util::Rng;
+
     let mut rng = Rng::new(2);
     let mut ex = vec![0.0f32; N_BUF * FEAT_DIM];
     let mut mask = vec![0.0f32; N_BUF];

@@ -1,25 +1,23 @@
-//! The three intermittent-learning applications of §6, assembled from the
-//! substrate modules: air-quality (solar, k-NN), human presence (RF,
-//! k-NN over RSSI), vibration (piezoelectric, NN-k-means cluster-then-
-//! label). Each app bundles its harvester, capacitor, sensor world, cost
-//! model, learner and goal parameters; `build_engine` wires a ready-to-run
-//! [`crate::sim::engine::Engine`] for any (app × scheduler × heuristic ×
-//! backend) combination — which is exactly the matrix §7 sweeps.
+//! The three intermittent-learning applications of §6 as *thin preset
+//! factories* over the scenario API: air-quality (solar, k-NN), human
+//! presence (RF, k-NN over RSSI), vibration (piezo, NN-k-means
+//! cluster-then-label).
+//!
+//! All world-construction knowledge lives in [`crate::scenario`] presets;
+//! this module only names the apps and carries the legacy [`AppConfig`]
+//! convenience struct, whose `build_engine` is a one-liner over
+//! [`ScenarioSpec::build_engine`]. New code should use
+//! [`crate::scenario::preset`] / [`ScenarioSpec`] directly — that is the
+//! (app × scheduler × heuristic × backend) matrix §7 sweeps, and more.
 
-use crate::backend::native::NativeBackend;
-use crate::backend::pjrt::PjrtBackend;
-use crate::backend::ComputeBackend;
-use crate::baselines::{DutyCycleScheduler, MayflyScheduler};
-use crate::energy::harvester::{Harvester, Piezo, Rf, Solar};
-use crate::energy::{Capacitor, CostModel};
+use crate::energy::CostModel;
 use crate::error::Result;
-use crate::learning::{ClusterLabelLearner, KnnAnomalyLearner, Learner};
-use crate::planner::{DynamicActionPlanner, Goal, PlannerConfig};
+use crate::planner::Goal;
+use crate::scenario::{self, LearnerSpec, ScenarioSpec};
 use crate::selection::Heuristic;
-use crate::sensors::accel::{Accel, MotionProfile};
-use crate::sensors::{AirQuality, Rssi, Sensor};
 use crate::sim::engine::Engine;
-use crate::sim::{PlannerScheduler, Scheduler, SimConfig};
+
+pub use crate::scenario::{BackendKind, SchedulerKind};
 
 /// Which of the paper's applications to instantiate.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,106 +45,25 @@ impl AppKind {
         AppKind::ALL.iter().copied().find(|a| a.name() == s)
     }
 
+    /// The paper preset for this app as a scenario spec.
+    pub fn spec(self, seed: u64, horizon_us: u64) -> ScenarioSpec {
+        scenario::preset(self.name(), seed, horizon_us).expect("paper presets exist")
+    }
+
     /// The paper's cost table for this app's algorithm.
     pub fn cost_model(self) -> CostModel {
-        match self {
-            AppKind::AirQuality => CostModel::knn(),
-            AppKind::Presence => CostModel::knn_rssi(),
-            AppKind::Vibration => CostModel::kmeans(),
-        }
+        self.spec(0, 3_600_000_000).cost.build()
     }
 
     /// Goal-state parameters (§4.2), per application cadence.
     pub fn goal(self) -> Goal {
-        match self {
-            // slow world: modest learning rate; the environment drifts
-            // (diurnal + seasonal), so learning never ends (n_learn = MAX:
-            // lifelong adaptation — §4.2 notes the switch parameters are
-            // application dependent)
-            AppKind::AirQuality => Goal {
-                rho_learn: 0.4,
-                n_learn: u64::MAX,
-                rho_infer: 0.8,
-                window: 12,
-            },
-            // fast RF world: the device is mobile (area moves), so it must
-            // keep learning forever to re-adapt — lifelong learning phase
-            AppKind::Presence => Goal {
-                rho_learn: 0.7,
-                n_learn: u64::MAX,
-                rho_infer: 1.2,
-                window: 10,
-            },
-            AppKind::Vibration => Goal {
-                rho_learn: 0.6,
-                n_learn: 100,
-                rho_infer: 1.0,
-                window: 10,
-            },
-        }
+        self.spec(0, 3_600_000_000).goal
     }
 }
 
-/// Scheduler selection for the experiment matrix.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum SchedulerKind {
-    /// The paper's dynamic action planner.
-    Planner,
-    /// Alpaca-style fixed duty cycle, `learn_pct` of examples learned.
-    Alpaca { learn_pct: f64 },
-    /// Mayfly-style duty cycle + data expiration.
-    Mayfly { learn_pct: f64, expiry_us: u64 },
-}
-
-impl SchedulerKind {
-    pub fn build(self, goal: Goal) -> Box<dyn Scheduler> {
-        match self {
-            SchedulerKind::Planner => Box::new(PlannerScheduler(DynamicActionPlanner::new(
-                goal,
-                PlannerConfig::default(),
-            ))),
-            SchedulerKind::Alpaca { learn_pct } => {
-                Box::new(DutyCycleScheduler::new(learn_pct))
-            }
-            SchedulerKind::Mayfly {
-                learn_pct,
-                expiry_us,
-            } => Box::new(MayflyScheduler::new(learn_pct, expiry_us)),
-        }
-    }
-
-    pub fn label(self) -> String {
-        match self {
-            SchedulerKind::Planner => "intermittent_learning".into(),
-            SchedulerKind::Alpaca { learn_pct } => {
-                format!("alpaca_{}l", (learn_pct * 100.0) as u32)
-            }
-            SchedulerKind::Mayfly { learn_pct, .. } => {
-                format!("mayfly_{}l", (learn_pct * 100.0) as u32)
-            }
-        }
-    }
-}
-
-/// Compute-backend selection.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum BackendKind {
-    /// Pure-rust math (fast; used for the big sweeps).
-    Native,
-    /// AOT HLO artifacts on the PJRT CPU client (full 3-layer stack).
-    Pjrt,
-}
-
-impl BackendKind {
-    pub fn build(self) -> Result<Box<dyn ComputeBackend>> {
-        Ok(match self {
-            BackendKind::Native => Box::new(NativeBackend::new()),
-            BackendKind::Pjrt => Box::new(PjrtBackend::discover()?),
-        })
-    }
-}
-
-/// Full experiment configuration.
+/// Legacy experiment configuration: (app × scheduler × heuristic ×
+/// backend) plus the app-specific overrides. Thin: `to_spec` resolves it
+/// to a [`ScenarioSpec`] and everything else delegates.
 #[derive(Debug, Clone)]
 pub struct AppConfig {
     pub kind: AppKind,
@@ -175,127 +92,27 @@ impl AppConfig {
         }
     }
 
-    /// The motion profile shared by the vibration sensor and harvester.
-    pub fn motion_profile(&self) -> MotionProfile {
-        let hours = (self.horizon_us / 3_600_000_000).max(1);
-        MotionProfile::alternating_hours(1.2, 3.4, hours)
-    }
-
-    /// Build the sensor world.
-    pub fn build_sensor(&self) -> Box<dyn Sensor> {
-        match self.kind {
-            AppKind::AirQuality => Box::new(AirQuality::new(self.seed, self.horizon_us)),
-            AppKind::Presence => {
-                let mut r = Rssi::three_areas(self.seed, self.horizon_us, self.horizon_us / 3);
-                if let Some(sched) = &self.rf_distances {
-                    // fig15(b) scenario: the device stays in one RF
-                    // environment but its distance to the powered antenna
-                    // changes. The human-presence perturbation rides on the
-                    // same carrier, so its observable magnitude scales with
-                    // the link budget (paper §7.4: "difficulty in learning
-                    // RSSI patterns from weaker signals at a longer
-                    // distance") — encode each distance step as an area
-                    // with the same baseline but distance-scaled SNR.
-                    let base = r.areas[0];
-                    r.areas = sched
-                        .iter()
-                        .map(|&(start_us, d_m)| {
-                            // received power scales with d^-2; the observable
-                            // human perturbation rides on it
-                            let scale = (3.0 / d_m.max(0.1)).powi(2).min(1.5);
-                            crate::sensors::rssi::Area {
-                                start_us,
-                                base_dbm: base.base_dbm,
-                                noise_db: base.noise_db,
-                                human_db: base.human_db * scale,
-                                human_shift_db: base.human_shift_db * scale,
-                            }
-                        })
-                        .collect();
-                }
-                Box::new(r)
-            }
-            AppKind::Vibration => Box::new(Accel::new(self.motion_profile(), self.seed)),
+    /// Resolve to the declarative scenario spec.
+    pub fn to_spec(&self) -> ScenarioSpec {
+        let mut spec = self.kind.spec(self.seed, self.horizon_us);
+        spec.scheduler = self.scheduler;
+        spec.heuristic = self.heuristic;
+        spec.backend = self.backend;
+        if let LearnerSpec::ClusterLabel { label_budget } = &mut spec.learner {
+            *label_budget = self.label_budget;
         }
-    }
-
-    /// Build the harvester.
-    pub fn build_harvester(&self) -> Box<dyn Harvester> {
-        match self.kind {
-            AppKind::AirQuality => Box::new(Solar {
-                seed: self.seed ^ 0xA0,
-                ..Solar::default()
-            }),
-            AppKind::Presence => {
-                let mut rf = Rf {
-                    seed: self.seed ^ 0xB0,
-                    ..Rf::default()
-                };
-                if let Some(sched) = &self.rf_distances {
-                    rf.schedule = sched.clone();
-                }
-                Box::new(rf)
-            }
-            AppKind::Vibration => Box::new(Piezo::new(self.motion_profile())),
+        if let Some(sched) = &self.rf_distances {
+            // pre-spec behavior: the override only applies to worlds with
+            // an RF harvester / RSSI sensor and is silently ignored
+            // elsewhere — keep that contract for this legacy struct
+            let _ = spec.set_rf_distances(sched.clone());
         }
-    }
-
-    /// Build the capacitor (§6 platform parameters).
-    pub fn build_capacitor(&self) -> Capacitor {
-        match self.kind {
-            AppKind::AirQuality => Capacitor::air_quality(),
-            AppKind::Presence => Capacitor::presence(),
-            AppKind::Vibration => Capacitor::vibration(),
-        }
-    }
-
-    /// Build the learner.
-    pub fn build_learner(&self) -> Box<dyn Learner> {
-        match self.kind {
-            AppKind::AirQuality | AppKind::Presence => Box::new(KnnAnomalyLearner::new()),
-            AppKind::Vibration => {
-                Box::new(ClusterLabelLearner::new(self.seed, self.label_budget))
-            }
-        }
-    }
-
-    /// Default simulation parameters for this horizon.
-    pub fn sim_config(&self) -> SimConfig {
-        SimConfig {
-            seed: self.seed,
-            horizon_us: self.horizon_us,
-            eval_period_us: (self.horizon_us / 24).max(60_000_000),
-            probe_count: 30,
-            probe_lookback_us: match self.kind {
-                // slow diurnal world: anomalies are hours apart
-                AppKind::AirQuality => 6 * 3_600_000_000,
-                // fast worlds: test against the last couple of hours
-                _ => 2 * 3_600_000_000,
-            },
-            // The vibration world's energy arrives in 5 s gesture bursts;
-            // a 60 s charging step would sample right past them. Solar/RF
-            // power varies on minute scales, where 60 s is fine.
-            charge_step_us: match self.kind {
-                AppKind::Vibration => 1_000_000,
-                _ => 60_000_000,
-            },
-        }
+        spec
     }
 
     /// Wire everything into an engine.
     pub fn build_engine(&self) -> Result<Engine> {
-        let goal = self.kind.goal();
-        Ok(Engine::new(
-            self.sim_config(),
-            self.build_harvester(),
-            self.build_capacitor(),
-            self.build_sensor(),
-            self.build_learner(),
-            self.heuristic.build(self.seed ^ 0x5E1),
-            self.scheduler.build(goal),
-            self.backend.build()?,
-            self.kind.cost_model(),
-        ))
+        self.to_spec().build_engine()
     }
 }
 
@@ -344,26 +161,30 @@ mod tests {
     }
 
     #[test]
-    fn labels_distinguish_duty_cycles() {
-        assert_eq!(
-            SchedulerKind::Alpaca { learn_pct: 0.9 }.label(),
-            "alpaca_90l"
-        );
-        assert_eq!(
-            SchedulerKind::Mayfly {
-                learn_pct: 0.1,
-                expiry_us: 1
-            }
-            .label(),
-            "mayfly_10l"
-        );
+    fn app_config_overrides_reach_the_spec() {
+        let mut cfg = AppConfig::new(AppKind::Vibration, 3, 2 * H);
+        cfg.heuristic = Heuristic::Randomized;
+        cfg.scheduler = SchedulerKind::Alpaca { learn_pct: 0.5 };
+        cfg.label_budget = 7;
+        let spec = cfg.to_spec();
+        assert_eq!(spec.heuristic, Heuristic::Randomized);
+        assert_eq!(spec.scheduler, SchedulerKind::Alpaca { learn_pct: 0.5 });
+        assert_eq!(spec.learner, LearnerSpec::ClusterLabel { label_budget: 7 });
+    }
+
+    #[test]
+    fn rf_distances_on_non_rf_app_is_ignored_not_fatal() {
+        // legacy contract: the override only means something for RF worlds
+        let mut cfg = AppConfig::new(AppKind::Vibration, 1, H);
+        cfg.rf_distances = Some(vec![(0, 3.0)]);
+        assert!(cfg.build_engine().is_ok());
     }
 
     #[test]
     fn rf_distance_override_applies() {
         let mut cfg = AppConfig::new(AppKind::Presence, 3, 9 * H);
         cfg.rf_distances = Some(vec![(0, 3.0), (3 * H, 5.0), (6 * H, 7.0)]);
-        let h = cfg.build_harvester();
+        let h = cfg.to_spec().build_harvester();
         // power at 7 m (hour 7) should be far below power at 3 m (hour 1)
         let avg = |t0: u64| -> f64 {
             (0..60).map(|i| h.power_w(t0 + i * 1_000_000)).sum::<f64>() / 60.0

@@ -16,6 +16,7 @@
 //! native).
 
 pub mod native;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 use crate::error::Result;

@@ -42,6 +42,7 @@ pub enum Error {
     Io(#[from] std::io::Error),
 }
 
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())

@@ -6,7 +6,7 @@
 //! each entry.
 
 use crate::actions::Action;
-use crate::apps::{AppConfig, AppKind, SchedulerKind};
+use crate::apps::AppKind;
 use crate::backend::native::NativeBackend;
 use crate::backend::shapes::{CHANNELS, WINDOW};
 use crate::backend::ComputeBackend;
@@ -18,6 +18,8 @@ use crate::energy::CostModel;
 use crate::error::Result;
 use crate::eval::{FigData, Series};
 use crate::planner::{DynamicActionPlanner, PlanContext};
+use crate::scenario::sweep::run_parallel;
+use crate::scenario::{ScenarioSpec, SchedulerKind};
 use crate::selection::Heuristic;
 use crate::sensors::Sensor;
 use crate::sim::probe::build_probes;
@@ -26,34 +28,11 @@ use crate::util::bench;
 
 const H: u64 = 3_600_000_000;
 
-/// Run a batch of app configs in parallel (one engine per worker thread).
-pub fn par_run(configs: Vec<AppConfig>) -> Result<Vec<RunResult>> {
-    let n = configs.len();
-    let mut results: Vec<Option<Result<RunResult>>> = (0..n).map(|_| None).collect();
-    let workers = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(4)
-        .min(n.max(1));
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let results_mx = std::sync::Mutex::new(&mut results);
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-                if i >= n {
-                    break;
-                }
-                let r = configs[i]
-                    .build_engine()
-                    .and_then(|e| e.run());
-                results_mx.lock().unwrap()[i] = Some(r);
-            });
-        }
-    });
-    results
-        .into_iter()
-        .map(|r| r.expect("worker finished"))
-        .collect()
+/// Run a batch of scenarios in parallel (one engine per worker thread) —
+/// a thin alias over [`crate::scenario::sweep::run_parallel`] with
+/// auto-sized workers.
+pub fn par_run(specs: Vec<ScenarioSpec>) -> Result<Vec<RunResult>> {
+    run_parallel(&specs, 0)
 }
 
 fn accuracy_series(name: &str, r: &RunResult) -> Series {
@@ -103,8 +82,8 @@ pub fn fig6c(seed: u64) -> Result<FigData> {
         "days",
         "accuracy",
     );
-    let cfg = AppConfig::new(AppKind::AirQuality, seed, 5 * 24 * H);
-    let r = cfg.build_engine()?.run()?;
+    let spec = AppKind::AirQuality.spec(seed, 5 * 24 * H);
+    let r = spec.build_engine()?.run()?;
     let mut s = Series::new("air_quality(knn, solar)");
     for c in &r.checkpoints {
         s.push(c.t_us as f64 / (24.0 * H as f64), c.accuracy);
@@ -129,16 +108,17 @@ pub fn fig7c(seed: u64) -> Result<FigData> {
         "accuracy",
     );
     let horizon = 30 * H;
-    let il = AppConfig::new(AppKind::Presence, seed, horizon);
+    let il = AppKind::Presence.spec(seed, horizon);
     // Baseline: same world, same duty-cycled execution, threshold learner.
-    let mut base_cfg = AppConfig::new(AppKind::Presence, seed, horizon);
-    base_cfg.scheduler = SchedulerKind::Alpaca { learn_pct: 0.5 };
+    let mut base_spec = AppKind::Presence.spec(seed, horizon);
+    base_spec.scheduler = SchedulerKind::Alpaca { learn_pct: 0.5 };
     let mut results = par_run(vec![il])?;
     let il_r = results.remove(0);
 
-    // threshold baseline needs a custom learner: build engine manually
+    // threshold baseline needs a custom learner: swap it on the built
+    // engine (the builder wires the default; engine parts stay public)
     let base_r = {
-        let mut e = base_cfg.build_engine()?;
+        let mut e = base_spec.build_engine()?;
         e.learner = Box::new(RunningMeanThreshold::new(0, 2.5));
         e.run()?
     };
@@ -161,8 +141,7 @@ pub fn fig8c(seed: u64) -> Result<FigData> {
         "hours",
         "accuracy",
     );
-    let cfg = AppConfig::new(AppKind::Vibration, seed, 4 * H);
-    let r = cfg.build_engine()?.run()?;
+    let r = AppKind::Vibration.spec(seed, 4 * H).build_engine()?.run()?;
     fig.series.push(accuracy_series("vibration(kmeans, piezo)", &r));
     fig.row(format!(
         "vibration: mean accuracy {:.2} (paper: 0.76), final {:.2}, learned {}",
@@ -213,14 +192,14 @@ pub fn fig9_10(seed: u64, mayfly: bool) -> Result<FigData> {
         "accuracy",
     );
     for kind in AppKind::ALL {
-        let mut cfgs = Vec::new();
+        let mut specs = Vec::new();
         for sched in duty_schedulers(mayfly) {
-            let mut c = AppConfig::new(kind, seed, app_horizon(kind));
-            c.scheduler = sched;
-            cfgs.push(c);
+            let mut s = kind.spec(seed, app_horizon(kind));
+            s.scheduler = sched;
+            specs.push(s);
         }
         let scheds = duty_schedulers(mayfly);
-        let results = par_run(cfgs)?;
+        let results = par_run(specs)?;
         for (sched, r) in scheds.iter().zip(&results) {
             let name = format!("{}/{}", kind.name(), sched.label());
             fig.series.push(accuracy_series(&name, r));
@@ -254,14 +233,14 @@ pub fn fig11(seed: u64) -> Result<FigData> {
         "energy_mj",
     );
     for kind in AppKind::ALL {
-        let mut cfgs = Vec::new();
+        let mut specs = Vec::new();
         for sched in duty_schedulers(false) {
-            let mut c = AppConfig::new(kind, seed, app_horizon(kind));
-            c.scheduler = sched;
-            cfgs.push(c);
+            let mut s = kind.spec(seed, app_horizon(kind));
+            s.scheduler = sched;
+            specs.push(s);
         }
         let scheds = duty_schedulers(false);
-        let results = par_run(cfgs)?;
+        let results = par_run(specs)?;
         for (sched, r) in scheds.iter().zip(&results) {
             let mut s = Series::new(format!("{}/{}", kind.name(), sched.label()));
             for &(t, e) in &r.energy_series {
@@ -313,18 +292,18 @@ pub fn fig12(seed: u64) -> Result<FigData> {
         "app",
         "accuracy",
     );
-    let mut il_cfgs = Vec::new();
+    let mut il_specs = Vec::new();
     for kind in AppKind::ALL {
-        il_cfgs.push(AppConfig::new(kind, seed, app_horizon(kind)));
+        il_specs.push(kind.spec(seed, app_horizon(kind)));
     }
-    let il_results = par_run(il_cfgs)?;
+    let il_results = par_run(il_specs)?;
 
     for (kind, il) in AppKind::ALL.iter().zip(&il_results) {
-        let cfg = AppConfig::new(*kind, seed, app_horizon(*kind));
-        let sensor = cfg.build_sensor();
+        let spec = kind.spec(seed, app_horizon(*kind));
+        let sensor = spec.build_sensor();
         let mut be = NativeBackend::new();
         let (train, probes) =
-            offline_dataset(sensor.as_ref(), &mut be, cfg.horizon_us, 240)?;
+            offline_dataset(sensor.as_ref(), &mut be, spec.horizon_us, 240)?;
 
         let mut svm = OneClassSvm::new(0.1);
         svm.fit(&train);
@@ -373,13 +352,13 @@ pub fn fig13_14(seed: u64, vs_energy: bool) -> Result<FigData> {
         "accuracy",
     );
     for kind in AppKind::ALL {
-        let mut cfgs = Vec::new();
+        let mut specs = Vec::new();
         for h in Heuristic::ALL {
-            let mut c = AppConfig::new(kind, seed, app_horizon(kind));
-            c.heuristic = h;
-            cfgs.push(c);
+            let mut s = kind.spec(seed, app_horizon(kind));
+            s.heuristic = h;
+            specs.push(s);
         }
-        let results = par_run(cfgs)?;
+        let results = par_run(specs)?;
         for (h, r) in Heuristic::ALL.iter().zip(&results) {
             let mut s = Series::new(format!("{}/{}", kind.name(), h.name()));
             for c in &r.checkpoints {
@@ -418,13 +397,13 @@ pub fn fig15(seed: u64) -> Result<FigData> {
         "accuracy / voltage",
     );
     // (a) solar, 3 days
-    let mut solar = AppConfig::new(AppKind::AirQuality, seed, 72 * H);
+    let mut solar = AppKind::AirQuality.spec(seed, 72 * H);
     solar.scheduler = SchedulerKind::Planner;
     // (b) RF at 3/5/7 m for 3 h each
-    let mut rf = AppConfig::new(AppKind::Presence, seed, 9 * H);
-    rf.rf_distances = Some(vec![(0, 3.0), (3 * H, 5.0), (6 * H, 7.0)]);
+    let mut rf = AppKind::Presence.spec(seed, 9 * H);
+    rf.set_rf_distances(vec![(0, 3.0), (3 * H, 5.0), (6 * H, 7.0)])?;
     // (c) piezo gentle/abrupt alternating 4 h (the app default)
-    let piezo = AppConfig::new(AppKind::Vibration, seed, 4 * H);
+    let piezo = AppKind::Vibration.spec(seed, 4 * H);
 
     let results = par_run(vec![solar, rf, piezo])?;
     let names = ["solar_3days", "rf_3_5_7m", "piezo_gentle_abrupt"];
@@ -527,8 +506,7 @@ pub fn fig17(seed: u64) -> Result<FigData> {
     fig.row(format!("measured planner decision: {}", meas.row()));
 
     // overhead fraction from a real run (paper: <= 3.5% energy)
-    let cfg = AppConfig::new(AppKind::Vibration, seed, 2 * H);
-    let mut engine = cfg.build_engine()?;
+    let mut engine = AppKind::Vibration.spec(seed, 2 * H).build_engine()?;
     engine.meter = crate::energy::EnergyMeter::new();
     let r = engine.run()?;
     let planner_uj: f64 = r
@@ -579,7 +557,7 @@ pub fn table5(seed: u64) -> Result<FigData> {
 /// Make a learner checkpoint/restore stress run for failure injection
 /// tests (exposed for integration tests).
 pub fn quick_run(kind: AppKind, seed: u64, hours: u64) -> Result<RunResult> {
-    AppConfig::new(kind, seed, hours * H).build_engine()?.run()
+    kind.spec(seed, hours * H).build_engine()?.run()
 }
 
 #[cfg(test)]
@@ -605,9 +583,9 @@ mod tests {
     #[test]
     fn par_run_preserves_order_and_determinism() {
         let mk = || {
-            let mut c = AppConfig::new(AppKind::Vibration, 9, 2 * H);
-            c.heuristic = Heuristic::Randomized;
-            c
+            let mut s = AppKind::Vibration.spec(9, 2 * H);
+            s.heuristic = Heuristic::Randomized;
+            s
         };
         let a = par_run(vec![mk(), mk()]).unwrap();
         assert_eq!(a[0].learned, a[1].learned);

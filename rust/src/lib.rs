@@ -3,7 +3,7 @@
 //! A full reproduction of *"Intermittent Learning: On-Device Machine
 //! Learning on Intermittently Powered Systems"* (Lee, Islam, Luo, Nirjon —
 //! Proc. ACM IMWUT 3(4):141, 2019) as a three-layer Rust + JAX + Pallas
-//! stack:
+//! stack, organized around a declarative **scenario API**:
 //!
 //! * **L3 (this crate)** — the intermittent-execution coordinator: energy
 //!   harvesters and capacitor storage ([`energy`]), the non-volatile memory
@@ -11,20 +11,38 @@
 //!   their state diagram ([`actions`]), the dynamic action planner
 //!   ([`planner`]), the example-selection heuristics ([`selection`]), the
 //!   on-device learners ([`learning`]), the discrete-event intermittent
-//!   engine ([`sim`]), the three paper applications ([`apps`]), the
-//!   intermittent-computing and offline-ML baselines ([`baselines`]) and
-//!   the full evaluation harness ([`eval`]).
+//!   engine ([`sim`]), the intermittent-computing and offline-ML baselines
+//!   ([`baselines`]) and the full evaluation harness ([`eval`]).
 //! * **L2 (python/compile/model.py)** — the numeric payload of each action
 //!   (k-NN anomaly scoring, competitive-learning k-means, feature
 //!   extraction) as jitted JAX functions, AOT-lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the compute
 //!   hot-spots, pinned to a pure-jnp oracle by pytest.
 //!
-//! The [`runtime`] module loads the AOT artifacts via the PJRT C API and
-//! the [`backend`] module lets every learner run either on the PJRT
-//! executables (proving the three layers compose) or on a pure-rust native
-//! implementation of the same math (float-tolerance compatible, used for
-//! large simulation sweeps).
+//! ## Scenario API
+//!
+//! Experiment construction is data, not code. A
+//! [`scenario::ScenarioSpec`] names every part of a device world —
+//! harvester, capacitor, sensor, cost model, learner, goal, scheduler,
+//! selection heuristic, backend, horizon, seed — validates, round-trips
+//! through JSON, and compiles into a runnable engine via the typed
+//! [`sim::engine::EngineBuilder`]. The three paper applications are named
+//! presets ([`scenario::preset`]; [`apps`] is a thin veneer over them),
+//! and [`scenario::SweepSpec`] expands (scenarios × schedulers ×
+//! heuristics × backends × seeds) grids that a [`scenario::SweepRunner`]
+//! executes across worker threads — one engine per thread, since compute
+//! backends are deliberately not `Send` — emitting one JSON
+//! [`sim::RunResult`] per cell. The `ilearn` CLI exposes this as
+//! `run [--spec file.json]` and `sweep grid.json`.
+//!
+//! ## Backends
+//!
+//! The [`runtime`] module loads AOT artifacts via the PJRT C API and the
+//! [`backend`] module lets every learner run either on the PJRT
+//! executables (proving the three layers compose; `pjrt` cargo feature)
+//! or on a pure-rust native implementation of the same math
+//! (float-tolerance compatible, used for large simulation sweeps; the
+//! default build is pure rust).
 //!
 //! Python never runs on the request path: `make artifacts` is a build-time
 //! step and the `ilearn` binary is self-contained afterwards.
@@ -40,6 +58,7 @@ pub mod learning;
 pub mod nvm;
 pub mod planner;
 pub mod runtime;
+pub mod scenario;
 pub mod selection;
 pub mod sensors;
 pub mod sim;

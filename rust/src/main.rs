@@ -1,21 +1,27 @@
 //! `ilearn` — CLI for the intermittent-learning reproduction.
 //!
 //! Subcommands:
-//!   run     — run one application end-to-end and print the run summary
+//!   run     — run one scenario (paper preset or JSON spec) end-to-end
+//!   sweep   — expand a JSON grid spec and run every cell on worker threads
 //!   figure  — regenerate a paper figure/table (fig6c..fig17, table3..5)
 //!   inspect — energy pre-inspection of an app's action set (§3.5 tool)
-//!   list    — list apps, figures, heuristics, schedulers
+//!   list    — list scenario presets, figures, heuristics, schedulers
 //!
 //! Examples:
-//!   ilearn run vibration --hours 4 --backend pjrt
+//!   ilearn run vibration --hours 4 --scheduler alpaca:50
+//!   ilearn run --spec my_scenario.json
+//!   ilearn sweep examples/paper_matrix.json --out out/sweep --threads 8
 //!   ilearn figure fig9 --out out/
-//!   ilearn inspect air_quality --budget-uj 2000
 
 use anyhow::{bail, Context, Result};
-use ilearn::apps::{AppConfig, AppKind, BackendKind, SchedulerKind};
+use ilearn::apps::AppKind;
 use ilearn::energy::inspect;
 use ilearn::eval::figures;
+use ilearn::scenario::{
+    BackendKind, ScenarioSpec, SchedulerKind, SweepRunner, SweepSpec, PRESETS,
+};
 use ilearn::selection::Heuristic;
+use ilearn::sim::RunResult;
 
 const H: u64 = 3_600_000_000;
 
@@ -23,6 +29,7 @@ fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("run") => cmd_run(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
         Some("figure") => cmd_figure(&args[1..]),
         Some("inspect") => cmd_inspect(&args[1..]),
         Some("list") => cmd_list(),
@@ -41,17 +48,25 @@ fn print_help() {
          USAGE: ilearn <command> [options]\n\
          \n\
          COMMANDS:\n\
-           run <app>        run an application (air_quality|presence|vibration)\n\
+           run <scenario>   run a scenario preset (air_quality|presence|vibration)\n\
                --hours N        simulated hours            [default per app]\n\
                --seed N         experiment seed            [default 42]\n\
                --backend B      native|pjrt                [default native]\n\
                --scheduler S    planner|alpaca:<pct>|mayfly:<pct>:<expiry_s>\n\
                --heuristic X    round_robin|k_last_lists|randomized|none\n\
+           run --spec FILE  run a declarative scenario spec (JSON)\n\
+               --seed/--backend/--scheduler/--heuristic override the spec\n\
+               (--hours is preset-only: spec worlds are horizon-derived)\n\
+           sweep <FILE>     expand a JSON grid spec (scenarios x schedulers x\n\
+                            heuristics x backends x seeds) and run every cell\n\
+                            on worker threads, one JSON result per cell\n\
+               --out DIR        output directory           [default out/sweep]\n\
+               --threads N      worker threads             [default: all cores]\n\
            figure <id>      regenerate a figure/table (see `ilearn list`; `all`)\n\
                --seed N --out DIR   write <id>.json under DIR\n\
            inspect <app>    energy pre-inspection (per-action worst case)\n\
                --budget-uj E    per-wake energy budget     [default: capacitor]\n\
-           list             apps, figures, schedulers, heuristics"
+           list             scenario presets, figures, schedulers, heuristics"
     );
 }
 
@@ -62,65 +77,72 @@ fn flag(args: &[String], name: &str) -> Option<String> {
         .cloned()
 }
 
-fn parse_scheduler(s: &str) -> Result<SchedulerKind> {
-    if s == "planner" {
-        return Ok(SchedulerKind::Planner);
-    }
-    let parts: Vec<&str> = s.split(':').collect();
-    match parts.as_slice() {
-        ["alpaca", pct] => Ok(SchedulerKind::Alpaca {
-            learn_pct: pct.parse::<f64>()? / 100.0,
-        }),
-        ["mayfly", pct, expiry_s] => Ok(SchedulerKind::Mayfly {
-            learn_pct: pct.parse::<f64>()? / 100.0,
-            expiry_us: expiry_s.parse::<u64>()? * 1_000_000,
-        }),
-        _ => bail!("bad scheduler `{s}` (planner | alpaca:<pct> | mayfly:<pct>:<expiry_s>)"),
-    }
+fn hours_to_us(hours: u64) -> Result<u64> {
+    hours
+        .checked_mul(H)
+        .with_context(|| format!("--hours {hours} overflows the simulated horizon"))
 }
 
-fn cmd_run(args: &[String]) -> Result<()> {
-    let app = args
-        .first()
-        .context("usage: ilearn run <app> [options]")?;
-    let kind = AppKind::parse(app).with_context(|| format!("unknown app `{app}`"))?;
-    let seed: u64 = flag(args, "--seed").map_or(Ok(42), |s| s.parse())?;
-    let hours: u64 = match flag(args, "--hours") {
-        Some(h) => h.parse()?,
-        None => match kind {
-            AppKind::AirQuality => 48,
-            AppKind::Presence => 24,
-            AppKind::Vibration => 8,
-        },
-    };
-    let mut cfg = AppConfig::new(kind, seed, hours * H);
-    if let Some(b) = flag(args, "--backend") {
-        cfg.backend = match b.as_str() {
-            "native" => BackendKind::Native,
-            "pjrt" => BackendKind::Pjrt,
-            other => bail!("unknown backend `{other}`"),
+/// Resolve the `run` arguments to a scenario spec. Flags apply on top of
+/// both sources: a preset or a `--spec` file.
+fn run_spec(args: &[String]) -> Result<ScenarioSpec> {
+    let mut spec = if let Some(path) = flag(args, "--spec") {
+        if let Some(name) = args.first().filter(|a| !a.starts_with("--")) {
+            bail!(
+                "`ilearn run {name} --spec {path}` is ambiguous — pass either a preset \
+                 name or --spec, not both"
+            );
+        }
+        if flag(args, "--hours").is_some() {
+            // presets regenerate horizon-derived parts (motion protocol,
+            // checkpoint cadence) for the requested hours; a spec file
+            // pins them, so stretching only horizon_us would run a world
+            // that goes dead past the spec's original horizon
+            bail!(
+                "--hours cannot rescale a spec file (its motion/sensor worlds are \
+                 horizon-derived); edit `horizon_us` and the dependent fields in `{path}`"
+            );
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("cannot read spec file `{path}`"))?;
+        ScenarioSpec::parse(&text).with_context(|| format!("bad scenario spec `{path}`"))?
+    } else {
+        let app = args
+            .first()
+            .filter(|a| !a.starts_with("--"))
+            .context("usage: ilearn run <scenario> [options] | ilearn run --spec <file>")?;
+        let kind = AppKind::parse(app).with_context(|| {
+            format!("unknown scenario `{app}` (presets: {})", PRESETS.join(", "))
+        })?;
+        let hours: u64 = match flag(args, "--hours") {
+            Some(h) => h.parse()?,
+            None => match kind {
+                AppKind::AirQuality => 48,
+                AppKind::Presence => 24,
+                AppKind::Vibration => 8,
+            },
         };
+        kind.spec(42, hours_to_us(hours)?)
+    };
+    if let Some(s) = flag(args, "--seed") {
+        spec.seed = s.parse()?;
+    }
+    if let Some(b) = flag(args, "--backend") {
+        spec.backend = BackendKind::parse(&b)
+            .with_context(|| format!("unknown backend `{b}` (native|pjrt)"))?;
     }
     if let Some(s) = flag(args, "--scheduler") {
-        cfg.scheduler = parse_scheduler(&s)?;
+        spec.scheduler = SchedulerKind::parse(&s)?;
     }
     if let Some(h) = flag(args, "--heuristic") {
-        cfg.heuristic = Heuristic::ALL
-            .into_iter()
-            .find(|x| x.name() == h)
-            .with_context(|| format!("unknown heuristic `{h}`"))?;
+        spec.heuristic =
+            Heuristic::parse(&h).with_context(|| format!("unknown heuristic `{h}`"))?;
     }
+    Ok(spec)
+}
 
-    eprintln!(
-        "running {} for {hours} h (seed {seed}, backend {:?}, scheduler {}) ...",
-        kind.name(),
-        cfg.backend,
-        cfg.scheduler.label()
-    );
-    let t0 = std::time::Instant::now();
-    let r = cfg.build_engine()?.run()?;
-    let wall = t0.elapsed();
-    println!("== run summary: {} / {} ==", kind.name(), r.scheduler);
+fn print_run_summary(spec: &ScenarioSpec, r: &RunResult, wall_s: f64) {
+    println!("== run summary: {} / {} ==", spec.name, r.scheduler);
     println!("  wake cycles        {}", r.cycles);
     println!("  examples sensed    {}", r.sensed);
     println!("  examples learned   {}", r.learned);
@@ -132,7 +154,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
     println!("  mean probe acc.    {:.3}", r.mean_accuracy(3));
     println!("  final probe acc.   {:.3}", r.final_accuracy());
     println!("  online infer acc.  {:.3}", r.online_accuracy());
-    println!("  wallclock          {:.2}s", wall.as_secs_f64());
+    println!("  wallclock          {wall_s:.2}s");
     println!("  accuracy trajectory:");
     for c in &r.checkpoints {
         println!(
@@ -143,6 +165,78 @@ fn cmd_run(args: &[String]) -> Result<()> {
             c.energy_uj / 1000.0,
             c.voltage
         );
+    }
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let spec = run_spec(args)?;
+    eprintln!(
+        "running scenario `{}` for {:.1} h (seed {}, backend {}, scheduler {}) ...",
+        spec.name,
+        spec.horizon_us as f64 / H as f64,
+        spec.seed,
+        spec.backend.name(),
+        spec.scheduler.label()
+    );
+    let t0 = std::time::Instant::now();
+    let r = spec.build_engine()?.run()?;
+    print_run_summary(&spec, &r, t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let path = args
+        .first()
+        .filter(|a| !a.starts_with("--"))
+        .context("usage: ilearn sweep <grid.json> [--out DIR] [--threads N]")?;
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("cannot read sweep spec `{path}`"))?;
+    let sweep = SweepSpec::parse(&text).with_context(|| format!("bad sweep spec `{path}`"))?;
+    let threads: usize = flag(args, "--threads").map_or(Ok(0), |s| s.parse())?;
+    let out_dir = flag(args, "--out").unwrap_or_else(|| "out/sweep".into());
+
+    let cells = sweep.expand()?;
+    eprintln!(
+        "sweep `{}`: {} cell(s) on {} worker thread(s), writing {out_dir}/<cell>.json ...",
+        sweep.name,
+        cells.len(),
+        ilearn::scenario::sweep::resolve_workers(threads, cells.len())
+    );
+    let t0 = std::time::Instant::now();
+    let outcomes = SweepRunner::new(threads).run_cells(cells);
+
+    std::fs::create_dir_all(&out_dir)?;
+    println!(
+        "{:<58} {:>7} {:>7} {:>9} {:>9} {:>9}",
+        "cell", "learned", "infer", "mean_acc", "final_acc", "energy_mJ"
+    );
+    let mut failed = 0usize;
+    for o in &outcomes {
+        let path = format!("{out_dir}/{}.json", o.id);
+        std::fs::write(&path, o.to_json().to_string())?;
+        match &o.result {
+            Ok(r) => println!(
+                "{:<58} {:>7} {:>7} {:>9.3} {:>9.3} {:>9.1}",
+                o.id,
+                r.learned,
+                r.inferred,
+                r.mean_accuracy(3),
+                r.final_accuracy(),
+                r.energy_uj / 1000.0
+            ),
+            Err(e) => {
+                failed += 1;
+                println!("{:<58} FAILED: {e}", o.id);
+            }
+        }
+    }
+    eprintln!(
+        "({} cell(s) in {:.1}s; results under {out_dir}/)",
+        outcomes.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    if failed > 0 {
+        bail!("{failed} of {} sweep cell(s) failed (see FAILED rows above; per-cell errors are in the JSON files)", outcomes.len());
     }
     Ok(())
 }
@@ -181,8 +275,8 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
         .first()
         .context("usage: ilearn inspect <app> [--budget-uj E]")?;
     let kind = AppKind::parse(app).with_context(|| format!("unknown app `{app}`"))?;
-    let cfg = AppConfig::new(kind, 0, H);
-    let cap = cfg.build_capacitor();
+    let spec = kind.spec(0, H);
+    let cap = spec.build_capacitor();
     let budget: f64 = flag(args, "--budget-uj")
         .map_or(Ok(cap.full_budget_uj() * 0.8), |s| s.parse())?;
     let model = kind.cost_model();
@@ -236,7 +330,7 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
 }
 
 fn cmd_list() -> Result<()> {
-    println!("apps:       air_quality  presence  vibration");
+    println!("scenarios:  {}  (presets; or any JSON spec via `run --spec`)", PRESETS.join("  "));
     println!("figures:    {}", figures::FIGURE_IDS.join("  "));
     println!("schedulers: planner  alpaca:<pct>  mayfly:<pct>:<expiry_s>");
     println!(
@@ -247,6 +341,16 @@ fn cmd_list() -> Result<()> {
             .collect::<Vec<_>>()
             .join("  ")
     );
-    println!("backends:   native  pjrt (requires `make artifacts`)");
+    println!("backends:   native  pjrt (requires `--features pjrt` + `make artifacts`)");
+    println!();
+    println!("sweep grid spec example:");
+    println!(
+        "{}",
+        r#"  {"name": "matrix", "hours": 4,
+   "scenarios": ["vibration", "presence"],
+   "seeds": [1, 2],
+   "schedulers": ["planner", "alpaca:50"],
+   "heuristics": ["round_robin"]}"#
+    );
     Ok(())
 }

@@ -24,7 +24,7 @@ use std::collections::HashMap;
 
 /// Goal-state parameters (§4.2). Rates are per planning window of
 /// `window` harvesting cycles.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Goal {
     /// Desired learned examples per window while in the learning phase.
     pub rho_learn: f64,

@@ -1,6 +1,7 @@
 //! PJRT runtime: load the AOT HLO-text artifacts produced by
 //! `python/compile/aot.py`, compile them once on the PJRT CPU client, and
-//! execute them from the L3 hot path.
+//! execute them from the L3 hot path. The XLA-backed pieces require the
+//! `pjrt` cargo feature; manifest parsing is always available.
 //!
 //! Interchange format is **HLO text** (`HloModuleProto::from_text_file`):
 //! jax ≥ 0.5 emits serialized protos with 64-bit instruction ids that the
@@ -8,7 +9,9 @@
 //! All payloads are lowered with `return_tuple=True`, so every execution
 //! unwraps a tuple.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
@@ -45,19 +48,27 @@ pub struct ManifestEntry {
     pub outputs: Vec<ShapeSpec>,
 }
 
-/// Parse `manifest.txt` (written by aot.py).
+/// Parse `manifest.txt` (written by aot.py). Strict: an unparseable shape
+/// dimension is an [`Error::Runtime`], never silently dropped — a corrupt
+/// manifest must not yield a wrong-but-plausible shape that only fails
+/// (or worse, misreads buffers) at execution time.
 pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
-    let parse_shapes = |s: &str| -> Vec<ShapeSpec> {
+    let parse_shapes = |s: &str| -> Result<Vec<ShapeSpec>> {
         s.split(';')
             .map(|one| {
                 if one == "scalar" || one.is_empty() {
-                    ShapeSpec(vec![])
+                    Ok(ShapeSpec(vec![]))
                 } else {
-                    ShapeSpec(
-                        one.split('x')
-                            .filter_map(|d| d.parse::<usize>().ok())
-                            .collect(),
-                    )
+                    one.split('x')
+                        .map(|d| {
+                            d.parse::<usize>().map_err(|_| {
+                                Error::Runtime(format!(
+                                    "bad shape dimension `{d}` in manifest shape `{s}`"
+                                ))
+                            })
+                        })
+                        .collect::<Result<Vec<usize>>>()
+                        .map(ShapeSpec)
                 }
             })
             .collect()
@@ -76,9 +87,9 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
         let mut outputs = Vec::new();
         for p in parts {
             if let Some(s) = p.strip_prefix("in=") {
-                inputs = parse_shapes(s);
+                inputs = parse_shapes(s)?;
             } else if let Some(s) = p.strip_prefix("out=") {
-                outputs = parse_shapes(s);
+                outputs = parse_shapes(s)?;
             }
         }
         entries.push(ManifestEntry {
@@ -93,17 +104,20 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
 /// An input to [`Executable::run_args`]: either host data (uploaded on
 /// this call) or an already-resident device buffer (the §Perf lever for
 /// large, rarely-changing inputs like the k-NN example buffer).
+#[cfg(feature = "pjrt")]
 pub enum Arg<'a> {
     Host(&'a [f32]),
     Device(&'a xla::PjRtBuffer),
 }
 
 /// A compiled artifact ready for execution.
+#[cfg(feature = "pjrt")]
 pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
     pub entry: ManifestEntry,
 }
 
+#[cfg(feature = "pjrt")]
 impl Executable {
     /// Execute with a mix of host slices and device-resident buffers.
     /// Host inputs are uploaded here; device inputs skip the copy.
@@ -213,6 +227,7 @@ impl Executable {
 }
 
 /// The PJRT runtime: one CPU client + a cache of compiled executables.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
@@ -220,6 +235,7 @@ pub struct Runtime {
     cache: HashMap<String, Executable>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a runtime over an artifact directory (reads `manifest.txt`).
     pub fn new<P: AsRef<Path>>(artifact_dir: P) -> Result<Self> {
@@ -327,5 +343,17 @@ mod tests {
     fn manifest_skips_blank_lines() {
         let m = parse_manifest("\n\na\tin=2\tout=2\n\n").unwrap();
         assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn corrupt_shape_dims_are_an_error_not_a_guess() {
+        // a corrupt dim must not shrink 64xZZ to just [64]
+        let err = parse_manifest("knn_infer\tin=64xZZ\tout=scalar\n").unwrap_err();
+        assert!(
+            matches!(&err, Error::Runtime(m) if m.contains("ZZ")),
+            "{err:?}"
+        );
+        assert!(parse_manifest("a\tin=6 4\tout=2\n").is_err());
+        assert!(parse_manifest("a\tin=\tout=2\n").is_ok(), "empty = scalar stays valid");
     }
 }

@@ -1,0 +1,1359 @@
+//! The declarative scenario specification: every knob of a device world —
+//! harvester, capacitor, sensor, cost model, learner, goal, scheduler,
+//! selection heuristic, backend, horizon, seed — as plain serializable
+//! data. A [`ScenarioSpec`] can be validated, round-tripped through JSON
+//! (`util::json`), and compiled into a ready-to-run engine via the
+//! [`crate::sim::engine::EngineBuilder`].
+
+use crate::backend::native::NativeBackend;
+#[cfg(feature = "pjrt")]
+use crate::backend::pjrt::PjrtBackend;
+use crate::backend::ComputeBackend;
+use crate::baselines::{DutyCycleScheduler, MayflyScheduler};
+use crate::energy::harvester::{Constant, Harvester, Piezo, Rf, Solar, Trace};
+use crate::energy::{Capacitor, CostModel};
+use crate::error::{Error, Result};
+use crate::learning::{ClusterLabelLearner, KnnAnomalyLearner, Learner};
+use crate::planner::{DynamicActionPlanner, Goal, PlannerConfig};
+use crate::selection::Heuristic;
+use crate::sensors::accel::{Accel, MotionProfile};
+use crate::sensors::rssi::Area;
+use crate::sensors::{AirQuality, Rssi, Sensor};
+use crate::sim::engine::Engine;
+use crate::sim::{PlannerScheduler, Scheduler, SimConfig};
+use crate::util::json::Json;
+
+// ------------------------------------------------------------ json helpers
+
+fn req<'a>(j: &'a Json, key: &str, what: &str) -> Result<&'a Json> {
+    j.get(key)
+        .ok_or_else(|| Error::Config(format!("{what}: missing field `{key}`")))
+}
+
+fn req_f64(j: &Json, key: &str, what: &str) -> Result<f64> {
+    req(j, key, what)?
+        .as_f64()
+        .ok_or_else(|| Error::Config(format!("{what}: field `{key}` must be a number")))
+}
+
+fn req_u64(j: &Json, key: &str, what: &str) -> Result<u64> {
+    req(j, key, what)?
+        .as_u64()
+        .ok_or_else(|| {
+            Error::Config(format!("{what}: field `{key}` must be a non-negative integer"))
+        })
+}
+
+fn req_u32(j: &Json, key: &str, what: &str) -> Result<u32> {
+    let v = req_u64(j, key, what)?;
+    u32::try_from(v).map_err(|_| {
+        Error::Config(format!("{what}: field `{key}` value {v} exceeds u32 range"))
+    })
+}
+
+fn req_str<'a>(j: &'a Json, key: &str, what: &str) -> Result<&'a str> {
+    req(j, key, what)?
+        .as_str()
+        .ok_or_else(|| Error::Config(format!("{what}: field `{key}` must be a string")))
+}
+
+fn opt_u64(j: &Json, key: &str, what: &str) -> Result<Option<u64>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) if v.is_null() => Ok(None),
+        Some(v) => v.as_u64().map(Some).ok_or_else(|| {
+            Error::Config(format!("{what}: field `{key}` must be an integer or null"))
+        }),
+    }
+}
+
+/// `[[t_us, value], ...]` pair lists (harvester schedules / traces).
+fn pairs_to_json(pairs: &[(u64, f64)]) -> Json {
+    Json::Arr(
+        pairs
+            .iter()
+            .map(|&(t, v)| Json::nums([t as f64, v]))
+            .collect(),
+    )
+}
+
+fn pairs_from_json(j: &Json, what: &str) -> Result<Vec<(u64, f64)>> {
+    let arr = j
+        .as_arr()
+        .ok_or_else(|| Error::Config(format!("{what}: expected an array of [t_us, value]")))?;
+    arr.iter()
+        .map(|p| {
+            let pair = p.as_arr().filter(|a| a.len() == 2).ok_or_else(|| {
+                Error::Config(format!("{what}: each entry must be a [t_us, value] pair"))
+            })?;
+            let t = pair[0].as_u64().ok_or_else(|| {
+                Error::Config(format!("{what}: pair time must be a non-negative integer"))
+            })?;
+            let v = pair[1]
+                .as_f64()
+                .ok_or_else(|| Error::Config(format!("{what}: pair value must be a number")))?;
+            Ok((t, v))
+        })
+        .collect()
+}
+
+// ------------------------------------------------------------ motion spec
+
+/// The §6.3 gesture protocol: alternating gentle/abrupt shaking hours.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MotionSpec {
+    /// Gentle-hour shake amplitude.
+    pub gentle: f64,
+    /// Abrupt-hour shake amplitude.
+    pub abrupt: f64,
+    /// Hours of alternating protocol to generate.
+    pub hours: u64,
+}
+
+impl MotionSpec {
+    pub fn build(&self) -> MotionProfile {
+        MotionProfile::alternating_hours(self.gentle, self.abrupt, self.hours)
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("gentle", Json::Num(self.gentle)),
+            ("abrupt", Json::Num(self.abrupt)),
+            ("hours", Json::Num(self.hours as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<MotionSpec> {
+        Ok(MotionSpec {
+            gentle: req_f64(j, "gentle", "motion")?,
+            abrupt: req_f64(j, "abrupt", "motion")?,
+            hours: req_u64(j, "hours", "motion")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------- harvester spec
+
+/// Which energy source powers the scenario. Per-source seeds are optional:
+/// `None` reproduces the paper apps' wiring exactly — solar and RF derive
+/// from the scenario seed (`^ 0xA0` / `^ 0xB0`, so seed sweeps re-seed
+/// their noise streams), while piezo keeps its fixed default jitter seed
+/// (the legacy apps never varied it; its randomness rides mostly on the
+/// motion profile). Pin `Some(seed)` to control any of them explicitly.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HarvesterSpec {
+    Solar {
+        peak_w: f64,
+        sunrise_s: f64,
+        sunset_s: f64,
+        cloud_prob: f64,
+        seed: Option<u64>,
+    },
+    Rf {
+        p_ref_w: f64,
+        d_ref_m: f64,
+        /// (start_us, distance_m) schedule, sorted by time.
+        schedule: Vec<(u64, f64)>,
+        seed: Option<u64>,
+    },
+    Piezo {
+        motion: MotionSpec,
+        w_per_amp2: f64,
+        seed: Option<u64>,
+    },
+    Constant {
+        power_w: f64,
+    },
+    Trace {
+        points: Vec<(u64, f64)>,
+    },
+}
+
+impl HarvesterSpec {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            HarvesterSpec::Solar { .. } => "solar",
+            HarvesterSpec::Rf { .. } => "rf",
+            HarvesterSpec::Piezo { .. } => "piezo",
+            HarvesterSpec::Constant { .. } => "constant",
+            HarvesterSpec::Trace { .. } => "trace",
+        }
+    }
+
+    /// Instantiate; `scenario_seed` feeds the per-source seed derivations
+    /// (`^ 0xA0` solar, `^ 0xB0` RF — the paper apps' wiring).
+    pub fn build(&self, scenario_seed: u64) -> Box<dyn Harvester> {
+        match self {
+            HarvesterSpec::Solar {
+                peak_w,
+                sunrise_s,
+                sunset_s,
+                cloud_prob,
+                seed,
+            } => Box::new(Solar {
+                peak_w: *peak_w,
+                sunrise_s: *sunrise_s,
+                sunset_s: *sunset_s,
+                cloud_prob: *cloud_prob,
+                seed: seed.unwrap_or(scenario_seed ^ 0xA0),
+            }),
+            HarvesterSpec::Rf {
+                p_ref_w,
+                d_ref_m,
+                schedule,
+                seed,
+            } => Box::new(Rf {
+                p_ref_w: *p_ref_w,
+                d_ref_m: *d_ref_m,
+                schedule: schedule.clone(),
+                seed: seed.unwrap_or(scenario_seed ^ 0xB0),
+            }),
+            HarvesterSpec::Piezo {
+                motion,
+                w_per_amp2,
+                seed,
+            } => {
+                let mut p = Piezo::new(motion.build());
+                p.w_per_amp2 = *w_per_amp2;
+                if let Some(s) = seed {
+                    p.seed = *s;
+                }
+                Box::new(p)
+            }
+            HarvesterSpec::Constant { power_w } => Box::new(Constant(*power_w)),
+            HarvesterSpec::Trace { points } => Box::new(Trace {
+                points: points.clone(),
+            }),
+        }
+    }
+
+    fn validate(&self, what: &str) -> Result<()> {
+        let bad = |msg: String| Err(Error::Config(format!("{what}: {msg}")));
+        match self {
+            HarvesterSpec::Solar {
+                peak_w,
+                sunrise_s,
+                sunset_s,
+                cloud_prob,
+                ..
+            } => {
+                if *peak_w < 0.0 {
+                    return bad(format!("solar peak_w {peak_w} must be >= 0"));
+                }
+                if sunrise_s >= sunset_s {
+                    return bad(format!("solar sunrise {sunrise_s} must precede sunset {sunset_s}"));
+                }
+                if !(0.0..=1.0).contains(cloud_prob) {
+                    return bad(format!("solar cloud_prob {cloud_prob} must be in [0, 1]"));
+                }
+            }
+            HarvesterSpec::Rf {
+                p_ref_w,
+                d_ref_m,
+                schedule,
+                ..
+            } => {
+                if *p_ref_w < 0.0 || *d_ref_m <= 0.0 {
+                    return bad("rf p_ref_w must be >= 0 and d_ref_m > 0".into());
+                }
+                if schedule.is_empty() {
+                    return bad("rf schedule must not be empty".into());
+                }
+                if schedule.windows(2).any(|w| w[0].0 >= w[1].0) {
+                    return bad("rf schedule times must be strictly increasing".into());
+                }
+                if schedule.iter().any(|&(_, d)| d <= 0.0) {
+                    return bad("rf schedule distances must be > 0".into());
+                }
+            }
+            HarvesterSpec::Piezo {
+                motion, w_per_amp2, ..
+            } => {
+                if *w_per_amp2 <= 0.0 {
+                    return bad("piezo w_per_amp2 must be > 0".into());
+                }
+                if motion.hours == 0 {
+                    return bad("piezo motion hours must be > 0".into());
+                }
+            }
+            HarvesterSpec::Constant { power_w } => {
+                if *power_w < 0.0 {
+                    return bad(format!("constant power_w {power_w} must be >= 0"));
+                }
+            }
+            HarvesterSpec::Trace { points } => {
+                if points.is_empty() {
+                    return bad("trace must not be empty (a permanently 0 W world)".into());
+                }
+                if points.windows(2).any(|w| w[0].0 >= w[1].0) {
+                    return bad("trace times must be strictly increasing".into());
+                }
+                if points.iter().any(|&(_, p)| p < 0.0) {
+                    return bad("trace powers must be >= 0".into());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn seed_json(seed: &Option<u64>) -> Json {
+        match seed {
+            Some(s) => Json::Num(*s as f64),
+            None => Json::Null,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            HarvesterSpec::Solar {
+                peak_w,
+                sunrise_s,
+                sunset_s,
+                cloud_prob,
+                seed,
+            } => Json::obj(vec![
+                ("kind", "solar".into()),
+                ("peak_w", Json::Num(*peak_w)),
+                ("sunrise_s", Json::Num(*sunrise_s)),
+                ("sunset_s", Json::Num(*sunset_s)),
+                ("cloud_prob", Json::Num(*cloud_prob)),
+                ("seed", Self::seed_json(seed)),
+            ]),
+            HarvesterSpec::Rf {
+                p_ref_w,
+                d_ref_m,
+                schedule,
+                seed,
+            } => Json::obj(vec![
+                ("kind", "rf".into()),
+                ("p_ref_w", Json::Num(*p_ref_w)),
+                ("d_ref_m", Json::Num(*d_ref_m)),
+                ("schedule", pairs_to_json(schedule)),
+                ("seed", Self::seed_json(seed)),
+            ]),
+            HarvesterSpec::Piezo {
+                motion,
+                w_per_amp2,
+                seed,
+            } => Json::obj(vec![
+                ("kind", "piezo".into()),
+                ("motion", motion.to_json()),
+                ("w_per_amp2", Json::Num(*w_per_amp2)),
+                ("seed", Self::seed_json(seed)),
+            ]),
+            HarvesterSpec::Constant { power_w } => Json::obj(vec![
+                ("kind", "constant".into()),
+                ("power_w", Json::Num(*power_w)),
+            ]),
+            HarvesterSpec::Trace { points } => Json::obj(vec![
+                ("kind", "trace".into()),
+                ("points", pairs_to_json(points)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<HarvesterSpec> {
+        let what = "harvester";
+        match req_str(j, "kind", what)? {
+            "solar" => Ok(HarvesterSpec::Solar {
+                peak_w: req_f64(j, "peak_w", what)?,
+                sunrise_s: req_f64(j, "sunrise_s", what)?,
+                sunset_s: req_f64(j, "sunset_s", what)?,
+                cloud_prob: req_f64(j, "cloud_prob", what)?,
+                seed: opt_u64(j, "seed", what)?,
+            }),
+            "rf" => Ok(HarvesterSpec::Rf {
+                p_ref_w: req_f64(j, "p_ref_w", what)?,
+                d_ref_m: req_f64(j, "d_ref_m", what)?,
+                schedule: pairs_from_json(req(j, "schedule", what)?, "harvester schedule")?,
+                seed: opt_u64(j, "seed", what)?,
+            }),
+            "piezo" => Ok(HarvesterSpec::Piezo {
+                motion: MotionSpec::from_json(req(j, "motion", what)?)?,
+                w_per_amp2: req_f64(j, "w_per_amp2", what)?,
+                seed: opt_u64(j, "seed", what)?,
+            }),
+            "constant" => Ok(HarvesterSpec::Constant {
+                power_w: req_f64(j, "power_w", what)?,
+            }),
+            "trace" => Ok(HarvesterSpec::Trace {
+                points: pairs_from_json(req(j, "points", what)?, "harvester trace")?,
+            }),
+            other => Err(Error::Config(format!(
+                "unknown harvester kind `{other}` (solar|rf|piezo|constant|trace)"
+            ))),
+        }
+    }
+}
+
+// ---------------------------------------------------------- capacitor spec
+
+/// Capacitor parameters (§6 platform columns).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CapacitorSpec {
+    pub c_f: f64,
+    pub v_max: f64,
+    pub v_on: f64,
+    pub v_off: f64,
+    pub leak_w: f64,
+    pub eff: f64,
+}
+
+impl CapacitorSpec {
+    pub fn from_capacitor(c: &Capacitor) -> CapacitorSpec {
+        CapacitorSpec {
+            c_f: c.c_f,
+            v_max: c.v_max,
+            v_on: c.v_on,
+            v_off: c.v_off,
+            leak_w: c.leak_w,
+            eff: c.eff,
+        }
+    }
+
+    pub fn build(&self) -> Capacitor {
+        let mut c = Capacitor::new(self.c_f, self.v_max, self.v_on, self.v_off);
+        c.leak_w = self.leak_w;
+        c.eff = self.eff;
+        c
+    }
+
+    fn validate(&self, what: &str) -> Result<()> {
+        if self.c_f <= 0.0 {
+            return Err(Error::Config(format!(
+                "{what}: capacitance {} F must be > 0",
+                self.c_f
+            )));
+        }
+        if !(self.v_max >= self.v_on && self.v_on > self.v_off && self.v_off >= 0.0) {
+            return Err(Error::Config(format!(
+                "{what}: need v_max >= v_on > v_off >= 0, got {} / {} / {}",
+                self.v_max, self.v_on, self.v_off
+            )));
+        }
+        if !(0.0 < self.eff && self.eff <= 1.0) {
+            return Err(Error::Config(format!(
+                "{what}: efficiency {} must be in (0, 1]",
+                self.eff
+            )));
+        }
+        if self.leak_w < 0.0 {
+            return Err(Error::Config(format!(
+                "{what}: leakage {} W must be >= 0",
+                self.leak_w
+            )));
+        }
+        Ok(())
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("c_f", Json::Num(self.c_f)),
+            ("v_max", Json::Num(self.v_max)),
+            ("v_on", Json::Num(self.v_on)),
+            ("v_off", Json::Num(self.v_off)),
+            ("leak_w", Json::Num(self.leak_w)),
+            ("eff", Json::Num(self.eff)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<CapacitorSpec> {
+        let what = "capacitor";
+        Ok(CapacitorSpec {
+            c_f: req_f64(j, "c_f", what)?,
+            v_max: req_f64(j, "v_max", what)?,
+            v_on: req_f64(j, "v_on", what)?,
+            v_off: req_f64(j, "v_off", what)?,
+            leak_w: req_f64(j, "leak_w", what)?,
+            eff: req_f64(j, "eff", what)?,
+        })
+    }
+}
+
+// ------------------------------------------------------------- sensor spec
+
+/// Which sensor world the scenario observes. Seeded from the scenario seed
+/// and spanning the scenario horizon at build time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SensorSpec {
+    /// §6.1 UV/eCO2/TVOC world with diurnal structure.
+    AirQuality,
+    /// §6.2 RSSI presence world (three areas). `distances` reproduces the
+    /// Fig. 15(b) protocol: one area whose observable human perturbation
+    /// scales with the RF link budget at each (start_us, distance_m) step.
+    Rssi { distances: Option<Vec<(u64, f64)>> },
+    /// §6.3 accelerometer gesture world.
+    Accel { motion: MotionSpec },
+}
+
+impl SensorSpec {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SensorSpec::AirQuality => "air_quality",
+            SensorSpec::Rssi { .. } => "rssi",
+            SensorSpec::Accel { .. } => "accel",
+        }
+    }
+
+    pub fn build(&self, seed: u64, horizon_us: u64) -> Box<dyn Sensor> {
+        match self {
+            SensorSpec::AirQuality => Box::new(AirQuality::new(seed, horizon_us)),
+            SensorSpec::Rssi { distances } => {
+                let mut r = Rssi::three_areas(seed, horizon_us, horizon_us / 3);
+                if let Some(sched) = distances {
+                    // The device stays in one RF environment but its
+                    // distance to the powered antenna changes; the human
+                    // perturbation rides on the carrier, so its observable
+                    // magnitude scales with the link budget (§7.4). The
+                    // scale is referenced to the paper's 3 m deployment
+                    // distance — it intentionally does NOT track a custom
+                    // harvester `d_ref_m`, which calibrates received
+                    // *power*, not the observable perturbation baseline.
+                    const REF_DISTANCE_M: f64 = 3.0;
+                    let base = r.areas[0];
+                    r.areas = sched
+                        .iter()
+                        .map(|&(start_us, d_m)| {
+                            let scale =
+                                (REF_DISTANCE_M / d_m.max(0.1)).powi(2).min(1.5);
+                            Area {
+                                start_us,
+                                base_dbm: base.base_dbm,
+                                noise_db: base.noise_db,
+                                human_db: base.human_db * scale,
+                                human_shift_db: base.human_shift_db * scale,
+                            }
+                        })
+                        .collect();
+                }
+                Box::new(r)
+            }
+            SensorSpec::Accel { motion } => Box::new(Accel::new(motion.build(), seed)),
+        }
+    }
+
+    fn validate(&self, what: &str) -> Result<()> {
+        match self {
+            SensorSpec::Rssi {
+                distances: Some(d),
+            } => {
+                if d.is_empty() {
+                    return Err(Error::Config(format!(
+                        "{what}: rssi distances must not be empty when given"
+                    )));
+                }
+                if d.windows(2).any(|w| w[0].0 >= w[1].0) {
+                    return Err(Error::Config(format!(
+                        "{what}: rssi distance times must be strictly increasing"
+                    )));
+                }
+                if d.iter().any(|&(_, m)| m <= 0.0) {
+                    return Err(Error::Config(format!(
+                        "{what}: rssi distances must be > 0"
+                    )));
+                }
+            }
+            SensorSpec::Accel { motion } if motion.hours == 0 => {
+                return Err(Error::Config(format!(
+                    "{what}: accel motion hours must be > 0"
+                )));
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            SensorSpec::AirQuality => Json::obj(vec![("kind", "air_quality".into())]),
+            SensorSpec::Rssi { distances } => Json::obj(vec![
+                ("kind", "rssi".into()),
+                (
+                    "distances",
+                    match distances {
+                        Some(d) => pairs_to_json(d),
+                        None => Json::Null,
+                    },
+                ),
+            ]),
+            SensorSpec::Accel { motion } => Json::obj(vec![
+                ("kind", "accel".into()),
+                ("motion", motion.to_json()),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<SensorSpec> {
+        let what = "sensor";
+        match req_str(j, "kind", what)? {
+            "air_quality" => Ok(SensorSpec::AirQuality),
+            "rssi" => {
+                let distances = match j.get("distances") {
+                    None => None,
+                    Some(v) if v.is_null() => None,
+                    Some(v) => Some(pairs_from_json(v, "sensor distances")?),
+                };
+                Ok(SensorSpec::Rssi { distances })
+            }
+            "accel" => Ok(SensorSpec::Accel {
+                motion: MotionSpec::from_json(req(j, "motion", what)?)?,
+            }),
+            other => Err(Error::Config(format!(
+                "unknown sensor kind `{other}` (air_quality|rssi|accel)"
+            ))),
+        }
+    }
+}
+
+// --------------------------------------------------------------- cost kind
+
+/// Which of the paper's calibrated cost tables (Fig. 16) the scenario pays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CostKind {
+    Knn,
+    Kmeans,
+    KnnRssi,
+}
+
+impl CostKind {
+    pub const ALL: [CostKind; 3] = [CostKind::Knn, CostKind::Kmeans, CostKind::KnnRssi];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CostKind::Knn => "knn",
+            CostKind::Kmeans => "kmeans",
+            CostKind::KnnRssi => "knn_rssi",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CostKind> {
+        CostKind::ALL.into_iter().find(|c| c.name() == s)
+    }
+
+    pub fn build(self) -> CostModel {
+        match self {
+            CostKind::Knn => CostModel::knn(),
+            CostKind::Kmeans => CostModel::kmeans(),
+            CostKind::KnnRssi => CostModel::knn_rssi(),
+        }
+    }
+}
+
+// ------------------------------------------------------------ learner spec
+
+/// Which on-device learner processes the examples.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LearnerSpec {
+    /// k-NN anomaly learner (air-quality / presence apps).
+    Knn,
+    /// NN-k-means cluster-then-label learner with a semi-supervised label
+    /// budget (vibration app).
+    ClusterLabel { label_budget: u32 },
+}
+
+impl LearnerSpec {
+    pub fn kind(self) -> &'static str {
+        match self {
+            LearnerSpec::Knn => "knn",
+            LearnerSpec::ClusterLabel { .. } => "cluster_label",
+        }
+    }
+
+    pub fn build(self, seed: u64) -> Box<dyn Learner> {
+        match self {
+            LearnerSpec::Knn => Box::new(KnnAnomalyLearner::new()),
+            LearnerSpec::ClusterLabel { label_budget } => {
+                Box::new(ClusterLabelLearner::new(seed, label_budget))
+            }
+        }
+    }
+
+    fn to_json(self) -> Json {
+        match self {
+            LearnerSpec::Knn => Json::obj(vec![("kind", "knn".into())]),
+            LearnerSpec::ClusterLabel { label_budget } => Json::obj(vec![
+                ("kind", "cluster_label".into()),
+                ("label_budget", Json::Num(label_budget as f64)),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<LearnerSpec> {
+        match req_str(j, "kind", "learner")? {
+            "knn" => Ok(LearnerSpec::Knn),
+            "cluster_label" => Ok(LearnerSpec::ClusterLabel {
+                label_budget: req_u32(j, "label_budget", "learner")?,
+            }),
+            other => Err(Error::Config(format!(
+                "unknown learner kind `{other}` (knn|cluster_label)"
+            ))),
+        }
+    }
+}
+
+// ---------------------------------------------------------- scheduler kind
+
+/// Scheduler selection for the experiment matrix.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SchedulerKind {
+    /// The paper's dynamic action planner.
+    Planner,
+    /// Alpaca-style fixed duty cycle, `learn_pct` of examples learned.
+    Alpaca { learn_pct: f64 },
+    /// Mayfly-style duty cycle + data expiration.
+    Mayfly { learn_pct: f64, expiry_us: u64 },
+}
+
+impl SchedulerKind {
+    pub fn build(self, goal: Goal) -> Box<dyn Scheduler> {
+        match self {
+            SchedulerKind::Planner => Box::new(PlannerScheduler(DynamicActionPlanner::new(
+                goal,
+                PlannerConfig::default(),
+            ))),
+            SchedulerKind::Alpaca { learn_pct } => Box::new(DutyCycleScheduler::new(learn_pct)),
+            SchedulerKind::Mayfly {
+                learn_pct,
+                expiry_us,
+            } => Box::new(MayflyScheduler::new(learn_pct, expiry_us)),
+        }
+    }
+
+    /// Duty cycle as a clean percent string: rounded to 1/10000th of a
+    /// percent and stripped of float noise ("50", "12.5" — never
+    /// "28.999999999999996").
+    fn pct(learn_pct: f64) -> String {
+        let s = format!("{:.4}", learn_pct * 100.0);
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    }
+
+    /// Display label matching the paper's series naming (rounds the duty
+    /// cycle to a whole percent, drops the expiry). For identity use
+    /// [`SchedulerKind::id`].
+    pub fn label(self) -> String {
+        match self {
+            SchedulerKind::Planner => "intermittent_learning".into(),
+            SchedulerKind::Alpaca { learn_pct } => {
+                format!("alpaca_{}l", (learn_pct * 100.0).round() as u32)
+            }
+            SchedulerKind::Mayfly { learn_pct, .. } => {
+                format!("mayfly_{}l", (learn_pct * 100.0).round() as u32)
+            }
+        }
+    }
+
+    /// Filename-safe identity: distinguishes every parameter (duty cycle
+    /// to 1/10000th of a percent, mayfly expiry exactly) so sweep cells
+    /// over e.g. two mayfly expiries or fractional duty cycles never
+    /// collide.
+    pub fn id(self) -> String {
+        match self {
+            SchedulerKind::Planner => "intermittent_learning".into(),
+            SchedulerKind::Alpaca { learn_pct } => {
+                format!("alpaca_{}l", Self::pct(learn_pct))
+            }
+            SchedulerKind::Mayfly {
+                learn_pct,
+                expiry_us,
+            } => format!("mayfly_{}l_{}us", Self::pct(learn_pct), expiry_us),
+        }
+    }
+
+    /// Parse the CLI/sweep shorthand:
+    /// `planner` | `alpaca:<pct>` | `mayfly:<pct>:<expiry_s>`.
+    pub fn parse(s: &str) -> Result<SchedulerKind> {
+        if s == "planner" {
+            return Ok(SchedulerKind::Planner);
+        }
+        let parts: Vec<&str> = s.split(':').collect();
+        let bad = || {
+            Error::Config(format!(
+                "bad scheduler `{s}` (planner | alpaca:<pct> | mayfly:<pct>:<expiry_s>)"
+            ))
+        };
+        match parts.as_slice() {
+            ["alpaca", pct] => Ok(SchedulerKind::Alpaca {
+                learn_pct: pct.parse::<f64>().map_err(|_| bad())? / 100.0,
+            }),
+            ["mayfly", pct, expiry_s] => Ok(SchedulerKind::Mayfly {
+                learn_pct: pct.parse::<f64>().map_err(|_| bad())? / 100.0,
+                expiry_us: expiry_s
+                    .parse::<u64>()
+                    .ok()
+                    .and_then(|s| s.checked_mul(1_000_000))
+                    .ok_or_else(bad)?,
+            }),
+            _ => Err(bad()),
+        }
+    }
+
+    fn validate(&self, what: &str) -> Result<()> {
+        let pct = match self {
+            SchedulerKind::Planner => return Ok(()),
+            SchedulerKind::Alpaca { learn_pct } => *learn_pct,
+            SchedulerKind::Mayfly {
+                learn_pct,
+                expiry_us,
+            } => {
+                if *expiry_us == 0 {
+                    return Err(Error::Config(format!(
+                        "{what}: mayfly expiry_us must be > 0"
+                    )));
+                }
+                *learn_pct
+            }
+        };
+        if !(0.0..=1.0).contains(&pct) {
+            return Err(Error::Config(format!(
+                "{what}: learn_pct {pct} must be in [0, 1]"
+            )));
+        }
+        Ok(())
+    }
+
+    fn to_json(self) -> Json {
+        match self {
+            SchedulerKind::Planner => Json::obj(vec![("kind", "planner".into())]),
+            SchedulerKind::Alpaca { learn_pct } => Json::obj(vec![
+                ("kind", "alpaca".into()),
+                ("learn_pct", Json::Num(learn_pct)),
+            ]),
+            SchedulerKind::Mayfly {
+                learn_pct,
+                expiry_us,
+            } => Json::obj(vec![
+                ("kind", "mayfly".into()),
+                ("learn_pct", Json::Num(learn_pct)),
+                ("expiry_us", Json::Num(expiry_us as f64)),
+            ]),
+        }
+    }
+
+    /// Accepts both the object form (`{"kind": "alpaca", "learn_pct": 0.5}`)
+    /// and the CLI shorthand string (`"alpaca:50"`).
+    pub fn from_json(j: &Json) -> Result<SchedulerKind> {
+        if let Some(s) = j.as_str() {
+            return SchedulerKind::parse(s);
+        }
+        match req_str(j, "kind", "scheduler")? {
+            "planner" => Ok(SchedulerKind::Planner),
+            "alpaca" => Ok(SchedulerKind::Alpaca {
+                learn_pct: req_f64(j, "learn_pct", "scheduler")?,
+            }),
+            "mayfly" => Ok(SchedulerKind::Mayfly {
+                learn_pct: req_f64(j, "learn_pct", "scheduler")?,
+                expiry_us: req_u64(j, "expiry_us", "scheduler")?,
+            }),
+            other => Err(Error::Config(format!(
+                "unknown scheduler kind `{other}` (planner|alpaca|mayfly)"
+            ))),
+        }
+    }
+}
+
+// ------------------------------------------------------------ backend kind
+
+/// Compute-backend selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-rust math (fast; used for the big sweeps).
+    Native,
+    /// AOT HLO artifacts on the PJRT CPU client (full 3-layer stack;
+    /// requires the `pjrt` cargo feature and `make artifacts`).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Native => "native",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "native" => Some(BackendKind::Native),
+            "pjrt" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn build(self) -> Result<Box<dyn ComputeBackend>> {
+        match self {
+            BackendKind::Native => Ok(Box::new(NativeBackend::new())),
+            #[cfg(feature = "pjrt")]
+            BackendKind::Pjrt => Ok(Box::new(PjrtBackend::discover()?)),
+            #[cfg(not(feature = "pjrt"))]
+            BackendKind::Pjrt => Err(Error::Config(
+                "this binary was built without PJRT support; rebuild with \
+                 `--features pjrt` (and run `make artifacts`)"
+                    .into(),
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------- scenario spec
+
+/// A complete, declarative experiment scenario. Everything an engine needs
+/// is plain data here; `build_engine` compiles it through the
+/// [`crate::sim::engine::EngineBuilder`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Scenario label (used in sweep-cell ids and output filenames).
+    pub name: String,
+    /// Master seed: sensors, selection heuristics and (by derivation)
+    /// harvesters are all re-seeded from this.
+    pub seed: u64,
+    /// Simulated horizon, µs.
+    pub horizon_us: u64,
+    pub harvester: HarvesterSpec,
+    pub capacitor: CapacitorSpec,
+    pub sensor: SensorSpec,
+    pub cost: CostKind,
+    pub learner: LearnerSpec,
+    pub goal: Goal,
+    pub scheduler: SchedulerKind,
+    pub heuristic: Heuristic,
+    pub backend: BackendKind,
+    /// Accuracy-probe checkpoint period, µs.
+    pub eval_period_us: u64,
+    /// Probe-set size per checkpoint.
+    pub probe_count: usize,
+    /// Probe lookback window, µs.
+    pub probe_lookback_us: u64,
+    /// Max charging step while asleep, µs.
+    pub charge_step_us: u64,
+}
+
+impl ScenarioSpec {
+    /// Sweep-cell identity: scenario, seed, scheduler, heuristic, backend.
+    /// Uses the lossless [`SchedulerKind::id`] so distinct cells never
+    /// collide (and stays filename-safe; see `validate` on `name`).
+    pub fn label(&self) -> String {
+        format!(
+            "{}-{}-{}-{}-s{}",
+            self.name,
+            self.scheduler.id(),
+            self.heuristic.name(),
+            self.backend.name(),
+            self.seed
+        )
+    }
+
+    /// Largest integer (seed, horizon) that survives the JSON round trip
+    /// exactly — specs serialize numbers as f64. 2^53 µs is ~285 years of
+    /// simulated time, so this bounds nothing real.
+    pub const MAX_SEED: u64 = 1 << 53;
+
+    /// Check every part before building; the error names the scenario.
+    pub fn validate(&self) -> Result<()> {
+        let what = format!("scenario `{}`", self.name);
+        if self.name.is_empty() {
+            return Err(Error::Config("scenario name must not be empty".into()));
+        }
+        // names feed sweep-cell ids and output *filenames*: keep them to a
+        // safe charset so `sweep --out` can never fail late or escape the
+        // output directory
+        if !self
+            .name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+        {
+            return Err(Error::Config(format!(
+                "{what}: name may only contain [A-Za-z0-9._-] (it becomes a filename)"
+            )));
+        }
+        if self.seed > Self::MAX_SEED {
+            return Err(Error::Config(format!(
+                "{what}: seed {} exceeds 2^53 and would not survive the JSON round trip",
+                self.seed
+            )));
+        }
+        if let HarvesterSpec::Solar { seed: Some(s), .. }
+        | HarvesterSpec::Rf { seed: Some(s), .. }
+        | HarvesterSpec::Piezo { seed: Some(s), .. } = &self.harvester
+        {
+            if *s > Self::MAX_SEED {
+                return Err(Error::Config(format!(
+                    "{what}: harvester seed {s} exceeds 2^53 and would not survive the JSON round trip"
+                )));
+            }
+        }
+        if self.horizon_us == 0 {
+            return Err(Error::Config(format!("{what}: horizon_us must be > 0")));
+        }
+        if self.horizon_us > Self::MAX_SEED {
+            return Err(Error::Config(format!(
+                "{what}: horizon_us {} exceeds 2^53 (µs) and would not survive the JSON round trip",
+                self.horizon_us
+            )));
+        }
+        if self.eval_period_us == 0 || self.charge_step_us == 0 {
+            return Err(Error::Config(format!(
+                "{what}: eval_period_us and charge_step_us must be > 0"
+            )));
+        }
+        if self.probe_count == 0 {
+            return Err(Error::Config(format!("{what}: probe_count must be > 0")));
+        }
+        if self.goal.window == 0 {
+            return Err(Error::Config(format!("{what}: goal window must be > 0")));
+        }
+        if self.goal.rho_learn < 0.0 || self.goal.rho_infer < 0.0 {
+            return Err(Error::Config(format!(
+                "{what}: goal rates must be >= 0"
+            )));
+        }
+        // u64::MAX is the lifelong sentinel (serialized as null); every
+        // other n_learn travels as an f64 number
+        if self.goal.n_learn != u64::MAX && self.goal.n_learn > Self::MAX_SEED {
+            return Err(Error::Config(format!(
+                "{what}: goal n_learn {} exceeds 2^53 and would not survive the JSON round trip \
+                 (use null / u64::MAX for lifelong learning)",
+                self.goal.n_learn
+            )));
+        }
+        if let SchedulerKind::Mayfly { expiry_us, .. } = self.scheduler {
+            if expiry_us > Self::MAX_SEED {
+                return Err(Error::Config(format!(
+                    "{what}: mayfly expiry_us {expiry_us} exceeds 2^53 and would not survive \
+                     the JSON round trip"
+                )));
+            }
+        }
+        self.harvester.validate(&what)?;
+        self.capacitor.validate(&what)?;
+        self.sensor.validate(&what)?;
+        self.scheduler.validate(&what)?;
+        // A motion profile shorter than the horizon means zero gestures and
+        // (for piezo) zero harvest past its last episode — a mostly-dead
+        // world that would "succeed" with empty results. A fractional
+        // trailing hour is tolerated (the legacy apps rounded down).
+        let whole_hours = self.horizon_us / 3_600_000_000;
+        let check_motion = |m: &MotionSpec, part: &str| -> Result<()> {
+            if m.hours < whole_hours {
+                return Err(Error::Config(format!(
+                    "{what}: {part} motion covers {} h but the horizon is {} h — \
+                     the world is dead past the motion protocol",
+                    m.hours, whole_hours
+                )));
+            }
+            Ok(())
+        };
+        if let HarvesterSpec::Piezo { motion, .. } = &self.harvester {
+            check_motion(motion, "piezo")?;
+        }
+        if let SensorSpec::Accel { motion } = &self.sensor {
+            check_motion(motion, "accel")?;
+        }
+        Ok(())
+    }
+
+    /// Simulation parameters for the engine.
+    pub fn sim_config(&self) -> SimConfig {
+        SimConfig {
+            seed: self.seed,
+            horizon_us: self.horizon_us,
+            eval_period_us: self.eval_period_us,
+            probe_count: self.probe_count,
+            charge_step_us: self.charge_step_us,
+            probe_lookback_us: self.probe_lookback_us,
+        }
+    }
+
+    pub fn build_harvester(&self) -> Box<dyn Harvester> {
+        self.harvester.build(self.seed)
+    }
+
+    pub fn build_capacitor(&self) -> Capacitor {
+        self.capacitor.build()
+    }
+
+    pub fn build_sensor(&self) -> Box<dyn Sensor> {
+        self.sensor.build(self.seed, self.horizon_us)
+    }
+
+    pub fn build_learner(&self) -> Box<dyn Learner> {
+        self.learner.build(self.seed)
+    }
+
+    /// Point both the RF harvester and the RSSI sensor at a
+    /// (start_us, distance_m) schedule — the Fig. 15(b) protocol. Errors
+    /// if the scenario has neither an RF harvester nor an RSSI sensor.
+    pub fn set_rf_distances(&mut self, sched: Vec<(u64, f64)>) -> Result<()> {
+        let mut applied = false;
+        if let HarvesterSpec::Rf { schedule, .. } = &mut self.harvester {
+            *schedule = sched.clone();
+            applied = true;
+        }
+        if let SensorSpec::Rssi { distances } = &mut self.sensor {
+            *distances = Some(sched);
+            applied = true;
+        }
+        if applied {
+            Ok(())
+        } else {
+            Err(Error::Config(format!(
+                "scenario `{}` has no RF harvester or RSSI sensor to apply distances to",
+                self.name
+            )))
+        }
+    }
+
+    /// Validate and compile into a ready-to-run engine.
+    pub fn build_engine(&self) -> Result<Engine> {
+        self.validate()?;
+        Engine::builder()
+            .sim(self.sim_config())
+            .harvester(self.build_harvester())
+            .capacitor(self.build_capacitor())
+            .sensor(self.build_sensor())
+            .learner(self.build_learner())
+            .selector(self.heuristic.build(self.seed ^ 0x5E1))
+            .scheduler(self.scheduler.build(self.goal))
+            .backend(self.backend.build()?)
+            .costs(self.cost.build())
+            .build()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let n_learn = if self.goal.n_learn == u64::MAX {
+            Json::Null // lifelong learning phase
+        } else {
+            Json::Num(self.goal.n_learn as f64)
+        };
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("horizon_us", Json::Num(self.horizon_us as f64)),
+            ("harvester", self.harvester.to_json()),
+            ("capacitor", self.capacitor.to_json()),
+            ("sensor", self.sensor.to_json()),
+            ("cost_model", Json::Str(self.cost.name().into())),
+            ("learner", self.learner.to_json()),
+            (
+                "goal",
+                Json::obj(vec![
+                    ("rho_learn", Json::Num(self.goal.rho_learn)),
+                    ("n_learn", n_learn),
+                    ("rho_infer", Json::Num(self.goal.rho_infer)),
+                    ("window", Json::Num(self.goal.window as f64)),
+                ]),
+            ),
+            ("scheduler", self.scheduler.to_json()),
+            ("heuristic", Json::Str(self.heuristic.name().into())),
+            ("backend", Json::Str(self.backend.name().into())),
+            ("eval_period_us", Json::Num(self.eval_period_us as f64)),
+            ("probe_count", Json::Num(self.probe_count as f64)),
+            ("probe_lookback_us", Json::Num(self.probe_lookback_us as f64)),
+            ("charge_step_us", Json::Num(self.charge_step_us as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ScenarioSpec> {
+        let what = "scenario";
+        let goal_j = req(j, "goal", what)?;
+        let goal = Goal {
+            rho_learn: req_f64(goal_j, "rho_learn", "goal")?,
+            n_learn: opt_u64(goal_j, "n_learn", "goal")?.unwrap_or(u64::MAX),
+            rho_infer: req_f64(goal_j, "rho_infer", "goal")?,
+            window: req_u32(goal_j, "window", "goal")?,
+        };
+        let cost_name = req_str(j, "cost_model", what)?;
+        let cost = CostKind::parse(cost_name).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown cost model `{cost_name}` (knn|kmeans|knn_rssi)"
+            ))
+        })?;
+        let heuristic_name = req_str(j, "heuristic", what)?;
+        let heuristic = Heuristic::parse(heuristic_name).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown heuristic `{heuristic_name}` (round_robin|k_last_lists|randomized|none)"
+            ))
+        })?;
+        let backend_name = req_str(j, "backend", what)?;
+        let backend = BackendKind::parse(backend_name).ok_or_else(|| {
+            Error::Config(format!("unknown backend `{backend_name}` (native|pjrt)"))
+        })?;
+        let spec = ScenarioSpec {
+            name: req_str(j, "name", what)?.to_string(),
+            seed: req_u64(j, "seed", what)?,
+            horizon_us: req_u64(j, "horizon_us", what)?,
+            harvester: HarvesterSpec::from_json(req(j, "harvester", what)?)?,
+            capacitor: CapacitorSpec::from_json(req(j, "capacitor", what)?)?,
+            sensor: SensorSpec::from_json(req(j, "sensor", what)?)?,
+            cost,
+            learner: LearnerSpec::from_json(req(j, "learner", what)?)?,
+            goal,
+            scheduler: SchedulerKind::from_json(req(j, "scheduler", what)?)?,
+            heuristic,
+            backend,
+            eval_period_us: req_u64(j, "eval_period_us", what)?,
+            probe_count: req_u32(j, "probe_count", what)? as usize,
+            probe_lookback_us: req_u64(j, "probe_lookback_us", what)?,
+            charge_step_us: req_u64(j, "charge_step_us", what)?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Parse a spec from JSON text.
+    pub fn parse(text: &str) -> Result<ScenarioSpec> {
+        Self::from_json(&Json::parse(text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::preset;
+
+    const H: u64 = 3_600_000_000;
+
+    #[test]
+    fn scheduler_parse_matches_cli_shorthand() {
+        assert_eq!(SchedulerKind::parse("planner").unwrap(), SchedulerKind::Planner);
+        assert_eq!(
+            SchedulerKind::parse("alpaca:90").unwrap(),
+            SchedulerKind::Alpaca { learn_pct: 0.9 }
+        );
+        assert_eq!(
+            SchedulerKind::parse("mayfly:50:120").unwrap(),
+            SchedulerKind::Mayfly {
+                learn_pct: 0.5,
+                expiry_us: 120_000_000
+            }
+        );
+        assert!(SchedulerKind::parse("alpaca").is_err());
+        assert!(SchedulerKind::parse("nope:1").is_err());
+    }
+
+    #[test]
+    fn labels_distinguish_duty_cycles() {
+        assert_eq!(SchedulerKind::Alpaca { learn_pct: 0.9 }.label(), "alpaca_90l");
+        assert_eq!(
+            SchedulerKind::Mayfly {
+                learn_pct: 0.1,
+                expiry_us: 1
+            }
+            .label(),
+            "mayfly_10l"
+        );
+    }
+
+    #[test]
+    fn ids_are_lossless_where_labels_round() {
+        // label() collapses these; id() must not (sweep-cell identity)
+        let a = SchedulerKind::Mayfly { learn_pct: 0.5, expiry_us: 60_000_000 };
+        let b = SchedulerKind::Mayfly { learn_pct: 0.5, expiry_us: 120_000_000 };
+        assert_eq!(a.label(), b.label());
+        assert_ne!(a.id(), b.id());
+        let c = SchedulerKind::Alpaca { learn_pct: 0.12 };
+        let d = SchedulerKind::Alpaca { learn_pct: 0.1204 };
+        assert_eq!(c.label(), d.label()); // both round to "alpaca_12l"
+        assert_eq!(c.id(), "alpaca_12l");
+        assert_eq!(d.id(), "alpaca_12.04l");
+        // label rounds (not truncates): 29% is not "alpaca_28l"
+        assert_eq!(SchedulerKind::Alpaca { learn_pct: 0.29 }.label(), "alpaca_29l");
+        assert_ne!(c.id(), d.id());
+        // ids stay filename-safe
+        for id in [a.id(), b.id(), c.id(), d.id()] {
+            assert!(
+                id.chars().all(|ch| ch.is_ascii_alphanumeric() || "._-".contains(ch)),
+                "{id}"
+            );
+        }
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        let mut s = preset("vibration", 1, 2 * H).unwrap();
+        s.capacitor.v_off = s.capacitor.v_on + 1.0;
+        assert!(s.validate().is_err());
+
+        let mut s = preset("presence", 1, 2 * H).unwrap();
+        s.scheduler = SchedulerKind::Alpaca { learn_pct: 1.7 };
+        assert!(s.validate().is_err());
+
+        let mut s = preset("air_quality", 1, 2 * H).unwrap();
+        if let HarvesterSpec::Solar {
+            sunrise_s, sunset_s, ..
+        } = &mut s.harvester
+        {
+            std::mem::swap(sunrise_s, sunset_s);
+        }
+        assert!(s.validate().is_err());
+
+        let mut s = preset("vibration", 1, 2 * H).unwrap();
+        s.horizon_us = 0;
+        assert!(s.validate().is_err());
+
+        // names become sweep output filenames: path characters rejected
+        let mut s = preset("vibration", 1, 2 * H).unwrap();
+        s.name = "foo/../bar".into();
+        assert!(s.validate().is_err());
+
+        // seeds beyond f64-exact range would corrupt on JSON round trip
+        let mut s = preset("vibration", 1, 2 * H).unwrap();
+        s.seed = ScenarioSpec::MAX_SEED + 1;
+        assert!(s.validate().is_err());
+        let mut s = preset("presence", 1, 2 * H).unwrap();
+        if let HarvesterSpec::Rf { seed, .. } = &mut s.harvester {
+            *seed = Some(u64::MAX - 1);
+        }
+        assert!(s.validate().is_err());
+
+        // a motion protocol shorter than the horizon is a dead world
+        let mut s = preset("vibration", 1, 10 * H).unwrap();
+        if let SensorSpec::Accel { motion } = &mut s.sensor {
+            motion.hours = 1;
+        }
+        assert!(s.validate().is_err());
+
+        // an empty trace is a permanently dark world
+        let mut s = preset("vibration", 1, 2 * H).unwrap();
+        s.harvester = HarvesterSpec::Trace { points: vec![] };
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn lifelong_goal_survives_json() {
+        let s = preset("air_quality", 3, 2 * H).unwrap();
+        assert_eq!(s.goal.n_learn, u64::MAX);
+        let back = ScenarioSpec::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(back.goal.n_learn, u64::MAX);
+    }
+
+    #[test]
+    fn rf_distances_patch_both_sides() {
+        let mut s = preset("presence", 3, 9 * H).unwrap();
+        s.set_rf_distances(vec![(0, 3.0), (3 * H, 5.0), (6 * H, 7.0)])
+            .unwrap();
+        let h = s.build_harvester();
+        let avg = |t0: u64| -> f64 {
+            (0..60).map(|i| h.power_w(t0 + i * 1_000_000)).sum::<f64>() / 60.0
+        };
+        // power at 7 m (hour 7) far below power at 3 m (hour 1)
+        assert!(avg(H) > 3.0 * avg(7 * H));
+        // sensor side took the schedule too
+        match &s.sensor {
+            SensorSpec::Rssi { distances: Some(d) } => assert_eq!(d.len(), 3),
+            other => panic!("unexpected sensor {other:?}"),
+        }
+        // and a vibration scenario refuses the patch
+        let mut v = preset("vibration", 3, 2 * H).unwrap();
+        assert!(v.set_rf_distances(vec![(0, 3.0)]).is_err());
+    }
+
+    #[test]
+    fn scheduler_from_json_accepts_both_forms() {
+        let a = SchedulerKind::from_json(&Json::parse("\"alpaca:50\"").unwrap()).unwrap();
+        let b = SchedulerKind::from_json(
+            &Json::parse(r#"{"kind":"alpaca","learn_pct":0.5}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(a, b);
+    }
+}

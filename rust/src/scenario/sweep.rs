@@ -1,0 +1,450 @@
+//! Grid sweeps over scenario specs, executed across worker threads.
+//!
+//! A [`SweepSpec`] is a declarative grid: base scenarios (named presets or
+//! inline [`ScenarioSpec`] objects) crossed with optional scheduler /
+//! heuristic / backend / seed axes. [`SweepSpec::expand`] materializes one
+//! [`SweepCell`] per grid point; [`SweepRunner`] executes the cells on a
+//! pool of worker threads — one engine per thread, because the compute
+//! backends are deliberately not `Send` — and returns results in cell
+//! order, so the output is identical for any thread count.
+
+use crate::error::{Error, Result};
+use crate::scenario::spec::{BackendKind, ScenarioSpec, SchedulerKind};
+use crate::scenario::{preset, PRESETS};
+use crate::selection::Heuristic;
+use crate::sim::RunResult;
+use crate::util::json::Json;
+
+/// Worker-thread count `threads` resolves to for `n` jobs
+/// (`0` = available parallelism, always clamped to the job count).
+pub fn resolve_workers(threads: usize, n: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4)
+    } else {
+        threads
+    }
+    .min(n.max(1))
+}
+
+/// Run many scenarios concurrently (one engine per worker thread),
+/// keeping one `Result` per scenario: a failing cell never discards its
+/// siblings' finished work. `threads == 0` uses the available
+/// parallelism. Results come back in input order regardless of
+/// scheduling.
+pub fn run_parallel_each(specs: &[ScenarioSpec], threads: usize) -> Vec<Result<RunResult>> {
+    let n = specs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = resolve_workers(threads, n);
+    let mut results: Vec<Option<Result<RunResult>>> = (0..n).map(|_| None).collect();
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let results_mx = std::sync::Mutex::new(&mut results);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let r = specs[i].build_engine().and_then(|e| e.run());
+                results_mx.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|r| r.expect("worker finished"))
+        .collect()
+}
+
+/// All-or-nothing variant of [`run_parallel_each`] (the figure harness's
+/// contract: any failed run fails the figure).
+pub fn run_parallel(specs: &[ScenarioSpec], threads: usize) -> Result<Vec<RunResult>> {
+    run_parallel_each(specs, threads).into_iter().collect()
+}
+
+/// One grid point of a sweep: a fully resolved scenario plus its id.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    /// `<scenario>-<scheduler>-<heuristic>-<backend>-s<seed>`.
+    pub id: String,
+    pub spec: ScenarioSpec,
+}
+
+/// A finished cell. Failed cells carry the error text instead of a
+/// result, so one bad cell never discards a sweep's completed work.
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    pub id: String,
+    pub spec: ScenarioSpec,
+    pub result: std::result::Result<RunResult, String>,
+}
+
+impl SweepOutcome {
+    /// The per-cell JSON document the CLI writes: spec + result (or the
+    /// cell's error).
+    pub fn to_json(&self) -> Json {
+        let payload = match &self.result {
+            Ok(r) => ("result", r.to_json()),
+            Err(e) => ("error", Json::Str(e.clone())),
+        };
+        Json::obj(vec![
+            ("id", Json::Str(self.id.clone())),
+            ("spec", self.spec.to_json()),
+            payload,
+        ])
+    }
+}
+
+/// A declarative experiment grid.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub name: String,
+    /// Base scenarios; every axis below crosses each of them.
+    pub scenarios: Vec<ScenarioSpec>,
+    /// Seed axis (empty: keep each scenario's own seed).
+    pub seeds: Vec<u64>,
+    /// Scheduler axis (empty: keep each scenario's own scheduler).
+    pub schedulers: Vec<SchedulerKind>,
+    /// Heuristic axis (empty: keep each scenario's own heuristic).
+    pub heuristics: Vec<Heuristic>,
+    /// Backend axis (empty: keep each scenario's own backend).
+    pub backends: Vec<BackendKind>,
+}
+
+impl SweepSpec {
+    /// Parse a sweep grid from JSON text. Format:
+    ///
+    /// ```json
+    /// {
+    ///   "name": "paper-matrix",
+    ///   "hours": 4,
+    ///   "scenarios": ["vibration", "presence"],
+    ///   "seeds": [1, 2],
+    ///   "schedulers": ["planner", "alpaca:50"],
+    ///   "heuristics": ["round_robin"],
+    ///   "backends": ["native"]
+    /// }
+    /// ```
+    ///
+    /// `scenarios` entries are preset names (instantiated at `hours`
+    /// simulated hours, default 4) or inline scenario objects; the other
+    /// axes are optional and default to each scenario's own setting.
+    pub fn parse(text: &str) -> Result<SweepSpec> {
+        let j = Json::parse(text)?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<SweepSpec> {
+        let what = "sweep";
+        // axes are optional, so a typo'd key ("scheduler" for
+        // "schedulers") would silently drop a whole axis — reject unknown
+        // keys instead of running a different experiment
+        const KNOWN: [&str; 7] = [
+            "name",
+            "hours",
+            "scenarios",
+            "seeds",
+            "schedulers",
+            "heuristics",
+            "backends",
+        ];
+        let Json::Obj(kvs) = j else {
+            return Err(Error::Config(format!("{what}: expected a JSON object")));
+        };
+        for (k, _) in kvs {
+            if !KNOWN.contains(&k.as_str()) {
+                return Err(Error::Config(format!(
+                    "{what}: unknown field `{k}` (known: {})",
+                    KNOWN.join(", ")
+                )));
+            }
+        }
+        let name = match j.get("name") {
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| Error::Config("sweep: `name` must be a string".into()))?
+                .to_string(),
+            None => "sweep".to_string(),
+        };
+        let hours = match j.get("hours") {
+            Some(v) => v
+                .as_u64()
+                .ok_or_else(|| Error::Config("sweep: `hours` must be an integer".into()))?,
+            None => 4,
+        };
+        if hours == 0 {
+            return Err(Error::Config("sweep: `hours` must be > 0".into()));
+        }
+        let horizon_us = hours
+            .checked_mul(3_600_000_000)
+            .ok_or_else(|| Error::Config(format!("sweep: `hours` {hours} overflows the horizon")))?;
+
+        let scen_j = j
+            .get("scenarios")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Config(format!("{what}: `scenarios` array is required")))?;
+        if scen_j.is_empty() {
+            return Err(Error::Config(format!(
+                "{what}: `scenarios` must not be empty (presets: {})",
+                PRESETS.join(", ")
+            )));
+        }
+        let mut scenarios = Vec::with_capacity(scen_j.len());
+        for s in scen_j {
+            match s {
+                // seed 42 matches `ilearn run <preset>`'s default, so a
+                // grid without a seeds axis reproduces the run command
+                Json::Str(name) => scenarios.push(preset(name, 42, horizon_us)?),
+                Json::Obj(_) => scenarios.push(ScenarioSpec::from_json(s)?),
+                other => {
+                    return Err(Error::Config(format!(
+                        "{what}: scenario entries must be preset names or objects, got {other:?}"
+                    )))
+                }
+            }
+        }
+
+        let mut seeds = Vec::new();
+        if let Some(v) = j.get("seeds") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| Error::Config(format!("{what}: `seeds` must be an array")))?;
+            for s in arr {
+                seeds.push(s.as_u64().ok_or_else(|| {
+                    Error::Config(format!("{what}: seeds must be non-negative integers"))
+                })?);
+            }
+        }
+
+        let mut schedulers = Vec::new();
+        if let Some(v) = j.get("schedulers") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| Error::Config(format!("{what}: `schedulers` must be an array")))?;
+            for s in arr {
+                schedulers.push(SchedulerKind::from_json(s)?);
+            }
+        }
+
+        let mut heuristics = Vec::new();
+        if let Some(v) = j.get("heuristics") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| Error::Config(format!("{what}: `heuristics` must be an array")))?;
+            for s in arr {
+                let name = s.as_str().ok_or_else(|| {
+                    Error::Config(format!("{what}: heuristic entries must be strings"))
+                })?;
+                heuristics.push(Heuristic::parse(name).ok_or_else(|| {
+                    Error::Config(format!("{what}: unknown heuristic `{name}`"))
+                })?);
+            }
+        }
+
+        let mut backends = Vec::new();
+        if let Some(v) = j.get("backends") {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| Error::Config(format!("{what}: `backends` must be an array")))?;
+            for s in arr {
+                let name = s.as_str().ok_or_else(|| {
+                    Error::Config(format!("{what}: backend entries must be strings"))
+                })?;
+                backends.push(BackendKind::parse(name).ok_or_else(|| {
+                    Error::Config(format!("{what}: unknown backend `{name}` (native|pjrt)"))
+                })?);
+            }
+        }
+
+        Ok(SweepSpec {
+            name,
+            scenarios,
+            seeds,
+            schedulers,
+            heuristics,
+            backends,
+        })
+    }
+
+    /// Materialize the grid in deterministic order:
+    /// scenario → scheduler → heuristic → backend → seed (outer to inner).
+    /// Every cell is validated; duplicate cell ids are an error.
+    pub fn expand(&self) -> Result<Vec<SweepCell>> {
+        let mut cells = Vec::new();
+        for base in &self.scenarios {
+            let schedulers = if self.schedulers.is_empty() {
+                vec![base.scheduler]
+            } else {
+                self.schedulers.clone()
+            };
+            let heuristics = if self.heuristics.is_empty() {
+                vec![base.heuristic]
+            } else {
+                self.heuristics.clone()
+            };
+            let backends = if self.backends.is_empty() {
+                vec![base.backend]
+            } else {
+                self.backends.clone()
+            };
+            let seeds = if self.seeds.is_empty() {
+                vec![base.seed]
+            } else {
+                self.seeds.clone()
+            };
+            for &scheduler in &schedulers {
+                for &heuristic in &heuristics {
+                    for &backend in &backends {
+                        for &seed in &seeds {
+                            let mut spec = base.clone();
+                            spec.scheduler = scheduler;
+                            spec.heuristic = heuristic;
+                            spec.backend = backend;
+                            spec.seed = seed;
+                            spec.validate()?;
+                            cells.push(SweepCell {
+                                id: spec.label(),
+                                spec,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        let mut seen = std::collections::HashSet::with_capacity(cells.len());
+        for cell in &cells {
+            if !seen.insert(cell.id.as_str()) {
+                return Err(Error::Config(format!(
+                    "sweep `{}`: duplicate cell id `{}` (same scenario name and axes twice?)",
+                    self.name, cell.id
+                )));
+            }
+        }
+        Ok(cells)
+    }
+}
+
+/// Executes expanded sweep cells across worker threads.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepRunner {
+    /// Worker threads; 0 = available parallelism.
+    pub threads: usize,
+}
+
+impl SweepRunner {
+    pub fn new(threads: usize) -> Self {
+        SweepRunner { threads }
+    }
+
+    /// Expand and run the whole grid; outcomes come back in cell order,
+    /// identical for any thread count. Per-cell failures are embedded in
+    /// the outcomes, not propagated (only grid expansion can error).
+    pub fn run(&self, sweep: &SweepSpec) -> Result<Vec<SweepOutcome>> {
+        Ok(self.run_cells(sweep.expand()?))
+    }
+
+    /// Run pre-expanded cells.
+    pub fn run_cells(&self, cells: Vec<SweepCell>) -> Vec<SweepOutcome> {
+        let specs: Vec<ScenarioSpec> = cells.iter().map(|c| c.spec.clone()).collect();
+        let results = run_parallel_each(&specs, self.threads);
+        cells
+            .into_iter()
+            .zip(results)
+            .map(|(cell, result)| SweepOutcome {
+                id: cell.id,
+                spec: cell.spec,
+                result: result.map_err(|e| e.to_string()),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GRID: &str = r#"{
+        "name": "t",
+        "hours": 2,
+        "scenarios": ["vibration", "presence"],
+        "seeds": [1, 2],
+        "schedulers": ["planner", "alpaca:50"],
+        "heuristics": ["round_robin"]
+    }"#;
+
+    #[test]
+    fn grid_expansion_covers_the_matrix_in_order() {
+        let sweep = SweepSpec::parse(GRID).unwrap();
+        let cells = sweep.expand().unwrap();
+        // 2 scenarios x 2 schedulers x 1 heuristic x 1 backend x 2 seeds
+        assert_eq!(cells.len(), 8);
+        assert_eq!(
+            cells[0].id,
+            "vibration-intermittent_learning-round_robin-native-s1"
+        );
+        assert_eq!(
+            cells[1].id,
+            "vibration-intermittent_learning-round_robin-native-s2"
+        );
+        assert_eq!(cells[2].id, "vibration-alpaca_50l-round_robin-native-s1");
+        assert!(cells[4].id.starts_with("presence-"));
+        // ids unique
+        for (i, a) in cells.iter().enumerate() {
+            assert!(!cells[i + 1..].iter().any(|b| b.id == a.id), "{}", a.id);
+        }
+    }
+
+    #[test]
+    fn empty_axes_keep_scenario_defaults() {
+        let sweep =
+            SweepSpec::parse(r#"{"hours": 2, "scenarios": ["vibration"]}"#).unwrap();
+        let cells = sweep.expand().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].spec.scheduler, SchedulerKind::Planner);
+        assert_eq!(cells[0].spec.heuristic, Heuristic::RoundRobin);
+    }
+
+    #[test]
+    fn seed_axis_reseeds_the_whole_world() {
+        let sweep = SweepSpec::parse(
+            r#"{"hours": 2, "scenarios": ["presence"], "seeds": [5]}"#,
+        )
+        .unwrap();
+        let cells = sweep.expand().unwrap();
+        assert_eq!(cells[0].spec.seed, 5);
+        // RF harvester seed stays derived (None in spec), so the cell's
+        // scenario seed re-seeds its fading stream at build time
+        match &cells[0].spec.harvester {
+            crate::scenario::HarvesterSpec::Rf { seed, .. } => assert!(seed.is_none()),
+            other => panic!("unexpected harvester {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_grids_are_rejected() {
+        assert!(SweepSpec::parse(r#"{"scenarios": []}"#).is_err());
+        // a typo'd axis key must not silently drop the axis
+        assert!(
+            SweepSpec::parse(r#"{"scenarios": ["vibration"], "scheduler": ["planner"]}"#)
+                .is_err()
+        );
+        assert!(SweepSpec::parse(r#"{"scenarios": ["nope"]}"#).is_err());
+        assert!(SweepSpec::parse(r#"{"scenarios": ["vibration"], "hours": 0}"#).is_err());
+        assert!(
+            SweepSpec::parse(r#"{"scenarios": ["vibration"], "heuristics": ["zzz"]}"#)
+                .is_err()
+        );
+        // duplicate scenario entry -> duplicate cell ids
+        let dup = SweepSpec::parse(r#"{"scenarios": ["vibration", "vibration"]}"#).unwrap();
+        assert!(dup.expand().is_err());
+    }
+
+    #[test]
+    fn run_parallel_handles_empty_input() {
+        assert!(run_parallel(&[], 4).unwrap().is_empty());
+    }
+}

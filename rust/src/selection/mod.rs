@@ -64,6 +64,11 @@ impl Heuristic {
         Heuristic::Randomized,
         Heuristic::None,
     ];
+
+    /// Inverse of [`Heuristic::name`].
+    pub fn parse(s: &str) -> Option<Heuristic> {
+        Heuristic::ALL.into_iter().find(|h| h.name() == s)
+    }
 }
 
 // ---------------------------------------------------------------- round-robin

@@ -19,6 +19,7 @@
 //! (the example "leaves the system", §4.1).
 
 use crate::actions::Action;
+use crate::backend::native::NativeBackend;
 use crate::backend::shapes::{CHANNELS, WINDOW};
 use crate::backend::ComputeBackend;
 use crate::energy::cost::CostModel;
@@ -27,11 +28,11 @@ use crate::energy::{Capacitor, EnergyMeter};
 use crate::error::{Error, Result};
 use crate::learning::{Example, Learner, Verdict};
 use crate::nvm::Nvm;
-use crate::planner::{PlanContext, Planned};
-use crate::selection::Selector;
+use crate::planner::{DynamicActionPlanner, PlanContext, Planned};
+use crate::selection::{Heuristic, Selector};
 use crate::sensors::Sensor;
 use crate::sim::probe::{build_probes_range, probe_accuracy};
-use crate::sim::{Checkpoint, PendingEx, RunResult, Scheduler, SimConfig};
+use crate::sim::{Checkpoint, PendingEx, PlannerScheduler, RunResult, Scheduler, SimConfig};
 
 /// Outcome of attempting one action.
 enum Exec {
@@ -60,37 +61,148 @@ pub struct Engine {
     quality: f32,
 }
 
-impl Engine {
-    #[allow(clippy::too_many_arguments)]
-    pub fn new(
-        cfg: SimConfig,
-        harvester: Box<dyn Harvester>,
-        cap: Capacitor,
-        sensor: Box<dyn Sensor>,
-        learner: Box<dyn Learner>,
-        selector: Box<dyn Selector>,
-        scheduler: Box<dyn Scheduler>,
-        backend: Box<dyn ComputeBackend>,
-        costs: CostModel,
-    ) -> Self {
-        Engine {
+/// Step-by-step construction of an [`Engine`].
+///
+/// The world parts that define a scenario — harvester, capacitor, sensor,
+/// learner and cost model — are *required*: [`EngineBuilder::build`] fails
+/// fast with a [`Error::Config`] naming every missing part. The remaining
+/// parts carry typed defaults: [`SimConfig::default`], the round-robin
+/// selection heuristic, the dynamic action planner, and the native
+/// backend. Declarative construction lives one level up in
+/// [`crate::scenario::ScenarioSpec`], which drives this builder.
+#[derive(Default)]
+pub struct EngineBuilder {
+    cfg: Option<SimConfig>,
+    harvester: Option<Box<dyn Harvester>>,
+    cap: Option<Capacitor>,
+    sensor: Option<Box<dyn Sensor>>,
+    learner: Option<Box<dyn Learner>>,
+    selector: Option<Box<dyn Selector>>,
+    scheduler: Option<Box<dyn Scheduler>>,
+    backend: Option<Box<dyn ComputeBackend>>,
+    costs: Option<CostModel>,
+}
+
+impl EngineBuilder {
+    pub fn new() -> Self {
+        EngineBuilder::default()
+    }
+
+    /// Simulation parameters (default: [`SimConfig::default`]).
+    pub fn sim(mut self, cfg: SimConfig) -> Self {
+        self.cfg = Some(cfg);
+        self
+    }
+
+    /// Energy source (required).
+    pub fn harvester(mut self, h: Box<dyn Harvester>) -> Self {
+        self.harvester = Some(h);
+        self
+    }
+
+    /// Energy store (required).
+    pub fn capacitor(mut self, c: Capacitor) -> Self {
+        self.cap = Some(c);
+        self
+    }
+
+    /// Sensor world (required).
+    pub fn sensor(mut self, s: Box<dyn Sensor>) -> Self {
+        self.sensor = Some(s);
+        self
+    }
+
+    /// On-device learner (required).
+    pub fn learner(mut self, l: Box<dyn Learner>) -> Self {
+        self.learner = Some(l);
+        self
+    }
+
+    /// Example-selection policy (default: round-robin, seeded from the
+    /// sim config's seed).
+    pub fn selector(mut self, s: Box<dyn Selector>) -> Self {
+        self.selector = Some(s);
+        self
+    }
+
+    /// Action scheduler (default: the dynamic action planner with the
+    /// default goal).
+    pub fn scheduler(mut self, s: Box<dyn Scheduler>) -> Self {
+        self.scheduler = Some(s);
+        self
+    }
+
+    /// Compute backend (default: native).
+    pub fn backend(mut self, b: Box<dyn ComputeBackend>) -> Self {
+        self.backend = Some(b);
+        self
+    }
+
+    /// Per-action cost model (required).
+    pub fn costs(mut self, m: CostModel) -> Self {
+        self.costs = Some(m);
+        self
+    }
+
+    /// Assemble the engine; fails fast naming every missing required part.
+    pub fn build(self) -> Result<Engine> {
+        let mut missing = Vec::new();
+        if self.harvester.is_none() {
+            missing.push("harvester");
+        }
+        if self.cap.is_none() {
+            missing.push("capacitor");
+        }
+        if self.sensor.is_none() {
+            missing.push("sensor");
+        }
+        if self.learner.is_none() {
+            missing.push("learner");
+        }
+        if self.costs.is_none() {
+            missing.push("costs");
+        }
+        if !missing.is_empty() {
+            return Err(Error::Config(format!(
+                "EngineBuilder: missing required part(s): {}",
+                missing.join(", ")
+            )));
+        }
+        let cfg = self.cfg.unwrap_or_default();
+        let selector = self
+            .selector
+            .unwrap_or_else(|| Heuristic::RoundRobin.build(cfg.seed ^ 0x5E1));
+        let scheduler = self
+            .scheduler
+            .unwrap_or_else(|| Box::new(PlannerScheduler(DynamicActionPlanner::default())));
+        let backend = self
+            .backend
+            .unwrap_or_else(|| Box::new(NativeBackend::new()));
+        Ok(Engine {
             cfg,
-            harvester,
-            cap,
+            harvester: self.harvester.expect("checked"),
+            cap: self.cap.expect("checked"),
             nvm: Nvm::new(),
-            sensor,
-            learner,
+            sensor: self.sensor.expect("checked"),
+            learner: self.learner.expect("checked"),
             selector,
             scheduler,
             backend,
-            costs,
+            costs: self.costs.expect("checked"),
             meter: EnergyMeter::new(),
             t_us: 0,
             pending: Vec::new(),
             result: RunResult::default(),
             next_eval_us: 0,
             quality: 0.0,
-        }
+        })
+    }
+}
+
+impl Engine {
+    /// Start assembling an engine.
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
     }
 
     /// Current simulated time (µs).
@@ -398,24 +510,60 @@ mod tests {
         let profile = MotionProfile::alternating_hours(1.0, 3.0, 8);
         let sensor = Accel::new(profile, 11);
         let selector: Box<dyn Selector> = Heuristic::RoundRobin.build(1);
-        Engine::new(
-            SimConfig {
+        Engine::builder()
+            .sim(SimConfig {
                 seed: 1,
                 horizon_us: horizon_s * 1_000_000,
                 eval_period_us: 300_000_000,
                 probe_count: 20,
                 charge_step_us: 10_000_000,
                 probe_lookback_us: 3_600_000_000,
-            },
-            Box::new(Constant(power_w)),
-            Capacitor::vibration(),
-            Box::new(sensor),
-            Box::new(KnnAnomalyLearner::new()),
-            selector,
-            Box::new(PlannerScheduler(DynamicActionPlanner::default())),
-            Box::new(NativeBackend::new()),
-            CostModel::kmeans(),
-        )
+            })
+            .harvester(Box::new(Constant(power_w)))
+            .capacitor(Capacitor::vibration())
+            .sensor(Box::new(sensor))
+            .learner(Box::new(KnnAnomalyLearner::new()))
+            .selector(selector)
+            .scheduler(Box::new(PlannerScheduler(DynamicActionPlanner::default())))
+            .backend(Box::new(NativeBackend::new()))
+            .costs(CostModel::kmeans())
+            .build()
+            .expect("all parts provided")
+    }
+
+    #[test]
+    fn builder_fails_fast_naming_missing_parts() {
+        let err = Engine::builder().build().unwrap_err();
+        let msg = err.to_string();
+        for part in ["harvester", "capacitor", "sensor", "learner", "costs"] {
+            assert!(msg.contains(part), "missing `{part}` in: {msg}");
+        }
+        // partially specified: only the still-missing parts are named
+        let err = Engine::builder()
+            .harvester(Box::new(Constant(0.01)))
+            .capacitor(Capacitor::vibration())
+            .build()
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(!msg.contains("harvester") && !msg.contains("capacitor"), "{msg}");
+        assert!(msg.contains("sensor") && msg.contains("learner"), "{msg}");
+    }
+
+    #[test]
+    fn builder_defaults_fill_optional_parts() {
+        let profile = MotionProfile::alternating_hours(1.0, 3.0, 2);
+        let e = Engine::builder()
+            .harvester(Box::new(Constant(0.01)))
+            .capacitor(Capacitor::vibration())
+            .sensor(Box::new(Accel::new(profile, 7)))
+            .learner(Box::new(KnnAnomalyLearner::new()))
+            .costs(CostModel::kmeans())
+            .build()
+            .unwrap();
+        assert_eq!(e.selector.name(), "round_robin");
+        assert_eq!(e.scheduler.name(), "intermittent_learning");
+        assert_eq!(e.backend.name(), "native");
+        assert_eq!(e.cfg.seed, SimConfig::default().seed);
     }
 
     #[test]

@@ -15,6 +15,7 @@ use crate::energy::cost::{ActionCost, CostModel};
 use crate::learning::Example;
 use crate::planner::{DynamicActionPlanner, PlanContext, Planned, Pending};
 use crate::sensors::Window;
+use crate::util::json::Json;
 
 /// An action scheduler: given the in-flight examples and the goal context,
 /// pick the next transition. Implemented by the dynamic action planner and
@@ -208,5 +209,59 @@ impl RunResult {
             .filter(|&&(_, p, t)| p == t)
             .count();
         ok as f64 / self.infer_log.len() as f64
+    }
+
+    /// JSON rendering of the run (sweep-cell output format). Covers the
+    /// counters, accuracy summaries, checkpoints and per-action tallies;
+    /// the per-inference log is summarized, not dumped.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scheduler", Json::Str(self.scheduler.clone())),
+            ("cycles", Json::Num(self.cycles as f64)),
+            ("sensed", Json::Num(self.sensed as f64)),
+            ("learned", Json::Num(self.learned as f64)),
+            ("inferred", Json::Num(self.inferred as f64)),
+            ("discarded_select", Json::Num(self.discarded_select as f64)),
+            ("expired", Json::Num(self.expired as f64)),
+            ("power_failures", Json::Num(self.power_failures as f64)),
+            ("energy_uj", Json::Num(self.energy_uj)),
+            ("mean_accuracy", Json::Num(self.mean_accuracy(3))),
+            ("final_accuracy", Json::Num(self.final_accuracy())),
+            ("online_accuracy", Json::Num(self.online_accuracy())),
+            (
+                "checkpoints",
+                Json::Arr(
+                    self.checkpoints
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("t_us", Json::Num(c.t_us as f64)),
+                                ("accuracy", Json::Num(c.accuracy)),
+                                ("learned", Json::Num(c.learned as f64)),
+                                ("inferred", Json::Num(c.inferred as f64)),
+                                ("energy_uj", Json::Num(c.energy_uj)),
+                                ("voltage", Json::Num(c.voltage)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "action_tallies",
+                Json::Arr(
+                    self.action_tallies
+                        .iter()
+                        .map(|(name, count, e_uj, t_us)| {
+                            Json::obj(vec![
+                                ("action", Json::Str(name.clone())),
+                                ("count", Json::Num(*count as f64)),
+                                ("energy_uj", Json::Num(*e_uj)),
+                                ("time_us", Json::Num(*t_us as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
     }
 }

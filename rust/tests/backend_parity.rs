@@ -5,8 +5,9 @@
 //! pytest pins kernels ↔ jnp oracle; this test pins pjrt ↔ native; together
 //! they pin all three layers to one semantics.
 //!
-//! Requires `make artifacts`; the suite fails with a clear message if the
-//! artifacts are missing.
+//! Requires `make artifacts` and the `pjrt` cargo feature; the suite
+//! fails with a clear message if the artifacts are missing.
+#![cfg(feature = "pjrt")]
 
 use ilearn::backend::native::NativeBackend;
 use ilearn::backend::pjrt::PjrtBackend;

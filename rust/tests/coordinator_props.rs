@@ -21,26 +21,27 @@ fn run_constant_power(seed: u64, power_mw: f64, minutes: u64) -> RunResult {
     let profile =
         ilearn::sensors::accel::MotionProfile::alternating_hours(1.0, 3.0, minutes / 60 + 1);
     let sensor = ilearn::sensors::accel::Accel::new(profile, seed);
-    Engine::new(
-        SimConfig {
+    Engine::builder()
+        .sim(SimConfig {
             seed,
             horizon_us: minutes * 60_000_000,
             eval_period_us: 10 * 60_000_000,
             probe_count: 10,
             charge_step_us: 5_000_000,
             probe_lookback_us: H,
-        },
-        Box::new(Constant(power_mw / 1000.0)),
-        Capacitor::vibration(),
-        Box::new(sensor),
-        Box::new(KnnAnomalyLearner::new()),
-        Heuristic::RoundRobin.build(seed),
-        Box::new(PlannerScheduler(DynamicActionPlanner::default())),
-        Box::new(NativeBackend::new()),
-        CostModel::kmeans(),
-    )
-    .run()
-    .unwrap()
+        })
+        .harvester(Box::new(Constant(power_mw / 1000.0)))
+        .capacitor(Capacitor::vibration())
+        .sensor(Box::new(sensor))
+        .learner(Box::new(KnnAnomalyLearner::new()))
+        .selector(Heuristic::RoundRobin.build(seed))
+        .scheduler(Box::new(PlannerScheduler(DynamicActionPlanner::default())))
+        .backend(Box::new(NativeBackend::new()))
+        .costs(CostModel::kmeans())
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
 }
 
 #[test]

@@ -2,7 +2,7 @@
 //! injection, and the complete three-layer stack (PJRT backend) driving a
 //! real simulated workload.
 
-use ilearn::apps::{AppConfig, AppKind, BackendKind, SchedulerKind};
+use ilearn::apps::{AppConfig, AppKind, SchedulerKind};
 use ilearn::selection::Heuristic;
 
 const H: u64 = 3_600_000_000;
@@ -112,11 +112,13 @@ fn selection_heuristics_cut_learned_examples() {
 }
 
 #[test]
+#[cfg(feature = "pjrt")]
 fn full_stack_pjrt_backend_runs_the_paper_workload() {
+    use ilearn::apps::BackendKind;
     // The three-layer proof: Pallas kernels (L1) lowered through the JAX
     // model (L2), executed by the rust coordinator (L3) on PJRT, drive a
     // real intermittent-learning workload end to end.
-    let mut cfg = AppConfig::new(AppKind::Vibration, 42, 1 * H);
+    let mut cfg = AppConfig::new(AppKind::Vibration, 42, H);
     cfg.backend = BackendKind::Pjrt;
     let r = cfg
         .build_engine()
@@ -126,7 +128,7 @@ fn full_stack_pjrt_backend_runs_the_paper_workload() {
     assert!(r.learned > 0 && r.inferred > 0);
 
     // and it must agree with the native backend on the same world
-    let mut native = AppConfig::new(AppKind::Vibration, 42, 1 * H);
+    let mut native = AppConfig::new(AppKind::Vibration, 42, H);
     native.backend = BackendKind::Native;
     let n = native.build_engine().unwrap().run().unwrap();
     assert_eq!(r.learned, n.learned, "learned diverged across backends");

@@ -16,24 +16,25 @@ use ilearn::util::Rng;
 fn engine_with_trace(points: Vec<(u64, f64)>, horizon_s: u64) -> Engine {
     let profile = ilearn::sensors::accel::MotionProfile::alternating_hours(1.0, 3.0, 8);
     let sensor = ilearn::sensors::accel::Accel::new(profile, 3);
-    Engine::new(
-        SimConfig {
+    Engine::builder()
+        .sim(SimConfig {
             seed: 3,
             horizon_us: horizon_s * 1_000_000,
             eval_period_us: 600_000_000,
             probe_count: 10,
             charge_step_us: 2_000_000,
             probe_lookback_us: 3_600_000_000,
-        },
-        Box::new(Trace { points }),
-        Capacitor::vibration(),
-        Box::new(sensor),
-        Box::new(KnnAnomalyLearner::new()),
-        Heuristic::None.build(1),
-        Box::new(PlannerScheduler(DynamicActionPlanner::default())),
-        Box::new(NativeBackend::new()),
-        CostModel::kmeans(),
-    )
+        })
+        .harvester(Box::new(Trace { points }))
+        .capacitor(Capacitor::vibration())
+        .sensor(Box::new(sensor))
+        .learner(Box::new(KnnAnomalyLearner::new()))
+        .selector(Heuristic::None.build(1))
+        .scheduler(Box::new(PlannerScheduler(DynamicActionPlanner::default())))
+        .backend(Box::new(NativeBackend::new()))
+        .costs(CostModel::kmeans())
+        .build()
+        .unwrap()
 }
 
 #[test]
@@ -136,26 +137,27 @@ fn energy_budget_error_when_action_cannot_ever_fit() {
     // 50 uF: the planner's 57 uJ decision fits one charge, but a sense
     // sub-action (1.81 mJ) exceeds even a full 3.3 V -> 2.0 V discharge
     let tiny_cap = Capacitor::new(0.00005, 3.3, 2.8, 2.0);
-    let engine = Engine::new(
-        SimConfig {
+    let engine = Engine::builder()
+        .sim(SimConfig {
             seed: 1,
             horizon_us: 600_000_000,
             eval_period_us: 600_000_000,
             probe_count: 4,
             charge_step_us: 2_000_000,
             probe_lookback_us: 600_000_000,
-        },
-        Box::new(Trace {
+        })
+        .harvester(Box::new(Trace {
             points: vec![(0, 0.010)],
-        }),
-        tiny_cap,
-        Box::new(sensor),
-        Box::new(KnnAnomalyLearner::new()),
-        Heuristic::None.build(1),
-        Box::new(PlannerScheduler(DynamicActionPlanner::default())),
-        Box::new(NativeBackend::new()),
-        CostModel::kmeans(),
-    );
+        }))
+        .capacitor(tiny_cap)
+        .sensor(Box::new(sensor))
+        .learner(Box::new(KnnAnomalyLearner::new()))
+        .selector(Heuristic::None.build(1))
+        .scheduler(Box::new(PlannerScheduler(DynamicActionPlanner::default())))
+        .backend(Box::new(NativeBackend::new()))
+        .costs(CostModel::kmeans())
+        .build()
+        .unwrap();
     let err = engine.run().unwrap_err();
     assert!(
         matches!(err, ilearn::Error::EnergyBudget { .. }),
