@@ -1,0 +1,268 @@
+"""Executable Python mirror of the Rust charge kernels (toolchain-free check).
+
+Line-for-line port of ``rust/src/sim/world.rs``'s two charge kernels
+(``ChargeKernel::Event`` / ``ChargeKernel::Stepped``), the capacitor
+energy model, and the Solar piecewise view, driven by the same
+charge-phase/eval-clipping loop the engine uses. It exists so the event
+kernel's equivalence and speedup claims can be inspected and re-run in
+environments without a Rust toolchain (the PR-session sandbox), and it is
+the source of the projected speedup recorded in CHANGES.md for PR 2.
+
+Run:
+
+    python3 python/tools/kernel_mirror.py
+
+Expected output (one line per regime): event vs stepped wake counts must
+match within a fraction of a percent on smooth sources (identical in the
+starved regimes), and the stepped kernel's iteration count shows the cost
+the event kernel removes (>10x on the starved 24 h solar cell, ~60x on a
+fully dark day).
+
+Keep this file in sync with ``world.rs`` when the kernel changes — it is
+a mirror, not a spec.
+"""
+
+import math
+
+RESOLVE_US = 60_000_000
+SLEEP_HOP_MAX_US = 3_600_000_000
+MINUTE_US = 60_000_000
+DAY_US = 86_400_000_000
+MASK = (1 << 64) - 1
+
+
+def bucket_noise(seed, bucket):
+    """splitmix64 of (seed, bucket), mirroring harvester.rs."""
+    z = (seed ^ (bucket * 0x9E3779B97F4A7C15 & MASK)) & MASK
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    z ^= z >> 31
+    return (z >> 11) * (1.0 / (1 << 53))
+
+
+class Capacitor:
+    """Mirror of energy/capacitor.rs (charge/deduct/time_to_wake)."""
+
+    def __init__(self, c_f, v_max, v_on, v_off):
+        self.c_f, self.v_max, self.v_on, self.v_off = c_f, v_max, v_on, v_off
+        self.leak_w, self.eff, self.v = 2e-6, 0.8, v_off
+
+    def charge(self, p_w, dt_us):
+        de = (p_w * self.eff - self.leak_w) * (dt_us / 1e6)
+        e = max(0.5 * self.c_f * self.v * self.v + de, 0.0)
+        self.v = min(math.sqrt(2 * e / self.c_f), self.v_max)
+
+    def awake_ready(self):
+        return self.v >= self.v_on
+
+    def drain(self):
+        self.v = self.v_off
+
+    def time_to_wake_s(self, p_w):
+        if self.v >= self.v_on:
+            return 0.0
+        net = p_w * self.eff - self.leak_w
+        if net <= 0:
+            return None
+        return 0.5 * self.c_f * (self.v_on**2 - self.v**2) / net
+
+
+class Solar:
+    """Mirror of harvester.rs Solar incl. the piecewise view."""
+
+    def __init__(self, peak_w=0.045, seed=42 ^ 0xA0):
+        self.peak_w, self.seed = peak_w, seed
+        self.sunrise_s, self.sunset_s, self.cloud_prob = 6 * 3600.0, 19 * 3600.0, 0.08
+
+    def tex_at(self, minute):
+        n1 = bucket_noise(self.seed, minute)
+        n2 = bucket_noise(self.seed ^ 0xABCD, minute)
+        return (0.85 + 0.15 * n1) * (0.06 if n2 < self.cloud_prob else 1.0)
+
+    def power_w(self, t_us):
+        t_s = t_us / 1e6
+        tod = t_s % 86400.0
+        if tod < self.sunrise_s or tod > self.sunset_s:
+            return 0.0
+        phase = (tod - self.sunrise_s) / (self.sunset_s - self.sunrise_s)
+        irr = max(math.sin(math.pi * phase), 0.0)
+        return self.peak_w * irr * self.tex_at(int(t_s / 60.0))
+
+    def _sun_us(self):
+        return (
+            min(int(self.sunrise_s * 1e6), DAY_US),
+            min(int(self.sunset_s * 1e6), DAY_US),
+        )
+
+    def segment_end_us(self, t_us):
+        sunrise_us, sunset_us = self._sun_us()
+        tod = t_us % DAY_US
+        day0 = t_us - tod
+        if tod < sunrise_us:
+            return day0 + sunrise_us
+        if tod >= sunset_us:
+            return day0 + DAY_US + sunrise_us
+        return day0 + sunset_us
+
+    def _tex_mean_weighted(self, lo_us, hi_us):
+        m0, m1 = lo_us // MINUTE_US, (hi_us - 1) // MINUTE_US
+        if m0 == m1:
+            return self.tex_at(m0)
+        first_w = (m0 + 1) * MINUTE_US - lo_us
+        last_w = hi_us - m1 * MINUTE_US
+        acc = self.tex_at(m0) * first_w + self.tex_at(m1) * last_w
+        for m in range(m0 + 1, m1):
+            acc += self.tex_at(m) * MINUTE_US
+        return acc / (hi_us - lo_us)
+
+    def mean_power_w(self, from_us, to_us):
+        if to_us <= from_us:
+            return self.power_w(from_us)
+        sunrise_us, sunset_us = self._sun_us()
+        if sunset_us <= sunrise_us:
+            return 0.0
+        day0 = from_us - from_us % DAY_US
+        lo = max(from_us, day0 + sunrise_us)
+        hi = min(to_us, day0 + sunset_us)
+        if hi <= lo:
+            return 0.0
+        span_sun = float(sunset_us - sunrise_us)
+        ua = (lo - day0 - sunrise_us) / span_sun
+        ub = (hi - day0 - sunrise_us) / span_sun
+        if ub - ua < 1e-9:
+            mean_irr = max(math.sin(math.pi * 0.5 * (ua + ub)), 0.0)
+        else:
+            mean_irr = max(
+                (math.cos(math.pi * ua) - math.cos(math.pi * ub))
+                / (math.pi * (ub - ua)),
+                0.0,
+            )
+        tex = self._tex_mean_weighted(lo, hi)
+        sunlit = (hi - lo) / (to_us - from_us)
+        return self.peak_w * mean_irr * tex * sunlit
+
+
+class Constant:
+    def __init__(self, p):
+        self.p = p
+
+    def power_w(self, _t):
+        return self.p
+
+    def segment_end_us(self, _t):
+        return MASK
+
+    def mean_power_w(self, _a, _b):
+        return self.p
+
+
+class World:
+    """Mirror of sim/world.rs World::{charge_event, charge_stepped}."""
+
+    def __init__(self, harvester, cap):
+        self.h, self.cap, self.t_us, self.iters = harvester, cap, 0, 0
+
+    def charge_stepped(self, until_us, charge_step_us):
+        while self.t_us < until_us:
+            if self.cap.awake_ready():
+                return True
+            p = self.h.power_w(self.t_us)
+            tw = self.cap.time_to_wake_s(p)
+            step = min(int(tw * 1e6) + 1, charge_step_us) if tw is not None else charge_step_us
+            step = min(max(step, 1000), until_us - self.t_us)
+            self.cap.charge(p, step)
+            self.t_us += step
+            self.iters += 1
+        return self.cap.awake_ready()
+
+    def charge_event(self, until_us):
+        while self.t_us < until_us:
+            if self.cap.awake_ready():
+                return True
+            seg_end = min(max(self.h.segment_end_us(self.t_us), self.t_us + 1), until_us)
+            seg_span = seg_end - self.t_us
+            p0 = self.h.power_w(self.t_us)
+            tw0 = self.cap.time_to_wake_s(p0)
+            guess = min(int(tw0 * 1e6) + 1, MASK) if tw0 is not None else seg_span
+            end = self.t_us + max(min(RESOLVE_US, seg_span), min(guess, seg_span))
+            while True:
+                self.iters += 1
+                span = end - self.t_us
+                p = self.h.mean_power_w(self.t_us, end)
+                tw = self.cap.time_to_wake_s(p)
+                dt = min(int(tw * 1e6) + 1, MASK) if tw is not None else None
+                if dt is not None and dt < span:
+                    if span <= RESOLVE_US:
+                        self.cap.charge(p, dt)
+                        self.t_us += dt
+                        break
+                    lo = max(min(RESOLVE_US, span - 1), 1)
+                    hi = max(span // 2, lo)
+                    end = self.t_us + max(lo, min(dt, hi))
+                else:
+                    hop_end = self.t_us + min(span, SLEEP_HOP_MAX_US)
+                    p_hop = p if hop_end == end else self.h.mean_power_w(self.t_us, hop_end)
+                    self.cap.charge(p_hop, hop_end - self.t_us)
+                    self.t_us = hop_end
+                    break
+        return self.cap.awake_ready()
+
+
+def drive(harvester, cap, kernel, hours=24, charge_step_us=60_000_000,
+          eval_period_us=3_600_000_000):
+    """Engine charge-phase mirror: wake bursts emulated as a full drain."""
+    world = World(harvester, cap)
+    horizon = hours * 3_600_000_000
+    next_eval = 0
+    wakes = 0
+    while world.t_us < horizon:
+        awake = False
+        while True:
+            if world.cap.awake_ready():
+                awake = world.t_us < horizon
+                break
+            if world.t_us >= horizon:
+                break
+            if world.t_us >= next_eval:
+                next_eval = world.t_us + eval_period_us
+            until = min(horizon, max(next_eval, world.t_us + 1))
+            ok = (world.charge_event(until) if kernel == "event"
+                  else world.charge_stepped(until, charge_step_us))
+            if ok:
+                awake = world.t_us < horizon
+                break
+        if not awake:
+            break
+        wakes += 1
+        world.cap.drain()
+        world.t_us += 1_000_000
+    return wakes, world.iters
+
+
+def main():
+    aq_cap = (0.2, 3.3, 2.8, 2.0)  # air-quality 0.2 F supercap
+    regimes = [
+        ("solar 45mW (preset)", lambda: Solar(), aq_cap, 3_600_000_000),
+        ("solar 0.5mW (starved, 6h eval)", lambda: Solar(peak_w=0.0005), aq_cap,
+         6 * 3_600_000_000),
+        ("constant 0 (dark day)", lambda: Constant(0.0), (0.006, 3.3, 2.8, 2.0),
+         3_600_000_000),
+    ]
+    ok = True
+    for name, mk, cap_args, evalp in regimes:
+        we, ie = drive(mk(), Capacitor(*cap_args), "event", eval_period_us=evalp)
+        ws, is_ = drive(mk(), Capacitor(*cap_args), "stepped", eval_period_us=evalp)
+        ratio = is_ / max(ie, 1)
+        dw = abs(we - ws)
+        print(f"{name:<34} event {we:>5}w/{ie:>6}i | stepped {ws:>5}w/{is_:>6}i "
+              f"| iter ratio {ratio:>5.1f}x | dwakes {dw}")
+        if dw > max(0.01 * max(ws, 1), 8):
+            ok = False
+            print(f"  !! wake-count divergence beyond tolerance: {we} vs {ws}")
+    if not ok:
+        raise SystemExit(1)
+    print("kernel mirror OK")
+
+
+if __name__ == "__main__":
+    main()

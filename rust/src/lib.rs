@@ -11,8 +11,10 @@
 //!   their state diagram ([`actions`]), the dynamic action planner
 //!   ([`planner`]), the example-selection heuristics ([`selection`]), the
 //!   on-device learners ([`learning`]), the discrete-event intermittent
-//!   engine ([`sim`]), the intermittent-computing and offline-ML baselines
-//!   ([`baselines`]) and the full evaluation harness ([`eval`]).
+//!   engine ([`sim`] — split into World/Executor/Policy layers with an
+//!   event-driven charge kernel; see `ARCHITECTURE.md`), the
+//!   intermittent-computing and offline-ML baselines ([`baselines`]) and
+//!   the full evaluation harness ([`eval`]).
 //! * **L2 (python/compile/model.py)** — the numeric payload of each action
 //!   (k-NN anomaly scoring, competitive-learning k-means, feature
 //!   extraction) as jitted JAX functions, AOT-lowered once to HLO text.

@@ -31,6 +31,7 @@ use crate::energy::Capacitor;
 use crate::error::{Error, Result};
 use crate::planner::Goal;
 use crate::selection::Heuristic;
+use crate::sim::ChargeKernel;
 
 /// Names accepted by [`preset`].
 pub const PRESETS: [&str; 3] = ["air_quality", "presence", "vibration"];
@@ -88,6 +89,7 @@ pub fn air_quality(seed: u64, horizon_us: u64) -> ScenarioSpec {
         // slow diurnal world: anomalies are hours apart
         probe_lookback_us: 6 * 3_600_000_000,
         charge_step_us: 60_000_000,
+        charge_kernel: ChargeKernel::default(),
     }
 }
 
@@ -122,6 +124,7 @@ pub fn presence(seed: u64, horizon_us: u64) -> ScenarioSpec {
         probe_count: 30,
         probe_lookback_us: 2 * 3_600_000_000,
         charge_step_us: 60_000_000,
+        charge_kernel: ChargeKernel::default(),
     }
 }
 
@@ -162,6 +165,7 @@ pub fn vibration(seed: u64, horizon_us: u64) -> ScenarioSpec {
         // energy arrives in 5 s gesture bursts; a 60 s charging step would
         // sample right past them
         charge_step_us: 1_000_000,
+        charge_kernel: ChargeKernel::default(),
     }
 }
 

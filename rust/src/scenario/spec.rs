@@ -10,7 +10,7 @@ use crate::backend::native::NativeBackend;
 use crate::backend::pjrt::PjrtBackend;
 use crate::backend::ComputeBackend;
 use crate::baselines::{DutyCycleScheduler, MayflyScheduler};
-use crate::energy::harvester::{Constant, Harvester, Piezo, Rf, Solar, Trace};
+use crate::energy::harvester::{Constant, Harvester, Piezo, Rf, Solar, Trace, DAY_S};
 use crate::energy::{Capacitor, CostModel};
 use crate::error::{Error, Result};
 use crate::learning::{ClusterLabelLearner, KnnAnomalyLearner, Learner};
@@ -20,7 +20,7 @@ use crate::sensors::accel::{Accel, MotionProfile};
 use crate::sensors::rssi::Area;
 use crate::sensors::{AirQuality, Rssi, Sensor};
 use crate::sim::engine::Engine;
-use crate::sim::{PlannerScheduler, Scheduler, SimConfig};
+use crate::sim::{ChargeKernel, PlannerScheduler, Scheduler, SimConfig};
 use crate::util::json::Json;
 
 // ------------------------------------------------------------ json helpers
@@ -190,13 +190,13 @@ impl HarvesterSpec {
                 sunset_s,
                 cloud_prob,
                 seed,
-            } => Box::new(Solar {
-                peak_w: *peak_w,
-                sunrise_s: *sunrise_s,
-                sunset_s: *sunset_s,
-                cloud_prob: *cloud_prob,
-                seed: seed.unwrap_or(scenario_seed ^ 0xA0),
-            }),
+            } => Box::new(Solar::new(
+                *peak_w,
+                *sunrise_s,
+                *sunset_s,
+                *cloud_prob,
+                seed.unwrap_or(scenario_seed ^ 0xA0),
+            )),
             HarvesterSpec::Rf {
                 p_ref_w,
                 d_ref_m,
@@ -242,6 +242,14 @@ impl HarvesterSpec {
                 }
                 if sunrise_s >= sunset_s {
                     return bad(format!("solar sunrise {sunrise_s} must precede sunset {sunset_s}"));
+                }
+                // both kernels assume seconds-of-day; out-of-range values
+                // would make the stepped and event integrators disagree
+                if !(0.0..DAY_S).contains(sunrise_s) || !(0.0..=DAY_S).contains(sunset_s) {
+                    return bad(format!(
+                        "solar sunrise {sunrise_s} / sunset {sunset_s} must be seconds-of-day \
+                         within [0, {DAY_S}]"
+                    ));
                 }
                 if !(0.0..=1.0).contains(cloud_prob) {
                     return bad(format!("solar cloud_prob {cloud_prob} must be in [0, 1]"));
@@ -923,8 +931,11 @@ pub struct ScenarioSpec {
     pub probe_count: usize,
     /// Probe lookback window, µs.
     pub probe_lookback_us: u64,
-    /// Max charging step while asleep, µs.
+    /// Max charging step while asleep, µs (stepped-kernel resolution).
     pub charge_step_us: u64,
+    /// Charging integrator: the event-driven analytic kernel (default) or
+    /// the stepped reference oracle.
+    pub charge_kernel: ChargeKernel,
 }
 
 impl ScenarioSpec {
@@ -1060,6 +1071,7 @@ impl ScenarioSpec {
             probe_count: self.probe_count,
             charge_step_us: self.charge_step_us,
             probe_lookback_us: self.probe_lookback_us,
+            charge_kernel: self.charge_kernel,
         }
     }
 
@@ -1149,6 +1161,7 @@ impl ScenarioSpec {
             ("probe_count", Json::Num(self.probe_count as f64)),
             ("probe_lookback_us", Json::Num(self.probe_lookback_us as f64)),
             ("charge_step_us", Json::Num(self.charge_step_us as f64)),
+            ("charge_kernel", Json::Str(self.charge_kernel.name().into())),
         ])
     }
 
@@ -1177,6 +1190,21 @@ impl ScenarioSpec {
         let backend = BackendKind::parse(backend_name).ok_or_else(|| {
             Error::Config(format!("unknown backend `{backend_name}` (native|pjrt)"))
         })?;
+        // optional (older specs predate the event kernel): default kernel
+        let charge_kernel = match j.get("charge_kernel") {
+            None => ChargeKernel::default(),
+            Some(v) if v.is_null() => ChargeKernel::default(),
+            Some(v) => {
+                let name = v.as_str().ok_or_else(|| {
+                    Error::Config(format!("{what}: `charge_kernel` must be a string"))
+                })?;
+                ChargeKernel::parse(name).ok_or_else(|| {
+                    Error::Config(format!(
+                        "unknown charge kernel `{name}` (event|stepped)"
+                    ))
+                })?
+            }
+        };
         let spec = ScenarioSpec {
             name: req_str(j, "name", what)?.to_string(),
             seed: req_u64(j, "seed", what)?,
@@ -1194,6 +1222,7 @@ impl ScenarioSpec {
             probe_count: req_u32(j, "probe_count", what)? as usize,
             probe_lookback_us: req_u64(j, "probe_lookback_us", what)?,
             charge_step_us: req_u64(j, "charge_step_us", what)?,
+            charge_kernel,
         };
         spec.validate()?;
         Ok(spec)
@@ -1286,6 +1315,13 @@ mod tests {
         }
         assert!(s.validate().is_err());
 
+        // out-of-day solar times would make the charge kernels disagree
+        let mut s = preset("air_quality", 1, 2 * H).unwrap();
+        if let HarvesterSpec::Solar { sunset_s, .. } = &mut s.harvester {
+            *sunset_s = 90_000.0; // past 24 h
+        }
+        assert!(s.validate().is_err());
+
         let mut s = preset("vibration", 1, 2 * H).unwrap();
         s.horizon_us = 0;
         assert!(s.validate().is_err());
@@ -1316,6 +1352,27 @@ mod tests {
         let mut s = preset("vibration", 1, 2 * H).unwrap();
         s.harvester = HarvesterSpec::Trace { points: vec![] };
         assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn charge_kernel_round_trips_and_defaults() {
+        let mut s = preset("vibration", 1, 2 * H).unwrap();
+        assert_eq!(s.charge_kernel, ChargeKernel::default());
+        s.charge_kernel = ChargeKernel::Stepped;
+        let back = ScenarioSpec::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(back.charge_kernel, ChargeKernel::Stepped);
+        // spec files predating the event kernel (no field): default kernel
+        let mut j = preset("vibration", 1, 2 * H).unwrap().to_json();
+        if let Json::Obj(kvs) = &mut j {
+            kvs.retain(|(k, _)| k != "charge_kernel");
+        }
+        let back = ScenarioSpec::from_json(&j).unwrap();
+        assert_eq!(back.charge_kernel, ChargeKernel::default());
+        // unknown kernel names are rejected
+        if let Json::Obj(kvs) = &mut j {
+            kvs.push(("charge_kernel".into(), Json::Str("warp".into())));
+        }
+        assert!(ScenarioSpec::from_json(&j).is_err());
     }
 
     #[test]

@@ -85,6 +85,22 @@ impl MotionProfile {
         self.episodes[n].start_us
     }
 
+    /// End (exclusive) of the piecewise-constant motion segment containing
+    /// `t_us`: the active episode's end while shaking, otherwise the next
+    /// episode's start (`u64::MAX` once the protocol is over).
+    pub fn segment_end_us(&self, t_us: u64) -> u64 {
+        if let Some(e) = self.episode_at(t_us) {
+            return e.end_us;
+        }
+        let idx = self
+            .episodes
+            .partition_point(|e| e.start_us <= t_us);
+        self.episodes
+            .get(idx)
+            .map(|e| e.start_us)
+            .unwrap_or(u64::MAX)
+    }
+
     /// Instantaneous motion amplitude (g); 0 when idle.
     pub fn amplitude(&self, t_us: u64) -> f64 {
         self.episode_at(t_us).map(|e| e.amp).unwrap_or(0.0)
@@ -206,6 +222,24 @@ mod tests {
                 .map(|e| e.start_us);
             let fast = p.episode_at(t).map(|e| e.start_us);
             assert_eq!(scan, fast, "t={t}");
+        }
+    }
+
+    #[test]
+    fn segment_end_tracks_episode_boundaries() {
+        let p = MotionProfile::alternating_hours(1.0, 3.0, 2);
+        // inside a gesture: the segment ends with the gesture
+        let g0 = p.episodes[0];
+        assert_eq!(p.segment_end_us(g0.start_us), g0.end_us);
+        assert_eq!(p.segment_end_us(g0.start_us + 1_000), g0.end_us);
+        // idle gap: the segment ends at the next gesture's start
+        assert_eq!(p.segment_end_us(g0.end_us), p.episodes[1].start_us);
+        // past the protocol: one segment forever
+        let last = p.episodes.last().unwrap();
+        assert_eq!(p.segment_end_us(last.end_us + 1), u64::MAX);
+        // before the first gesture
+        if g0.start_us > 0 {
+            assert_eq!(p.segment_end_us(0), g0.start_us);
         }
     }
 

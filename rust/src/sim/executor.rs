@@ -1,0 +1,154 @@
+//! The sub-action transaction machinery (§3.4 action splitting, §3.5
+//! atomicity), lifted out of the engine so alternative executors (e.g.
+//! per-shard or speculative ones) can be swapped in behind the same
+//! seam.
+//!
+//! One [`Executor`] owns the NVM store and runs a single action to
+//! completion sub-action by sub-action: each sub-action opens an NVM
+//! transaction, deducts its energy share from the capacitor, advances the
+//! clock, and commits. A mid-sub-action power failure aborts the open
+//! transaction (the §3.5 rollback) but keeps the completed sub-action
+//! count — that persistence is the whole point of action splitting.
+
+use crate::actions::Action;
+use crate::energy::cost::ActionCost;
+use crate::energy::EnergyMeter;
+use crate::error::{Error, Result};
+use crate::nvm::Nvm;
+use crate::sim::world::World;
+use crate::sim::PendingEx;
+
+/// Outcome of attempting one action.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Exec {
+    /// All sub-actions committed; the payload may be applied.
+    Done,
+    /// Power failed mid-sub-action: open transaction rolled back,
+    /// completed sub-actions preserved on the example.
+    PowerFailed,
+}
+
+/// Transactional action executor over an NVM store.
+#[derive(Debug, Default)]
+pub struct Executor {
+    pub nvm: Nvm,
+}
+
+impl Executor {
+    pub fn new() -> Self {
+        Executor { nvm: Nvm::new() }
+    }
+
+    /// Execute `action` on `ex` at the given cost, sub-action by
+    /// sub-action, against `world`'s capacitor and clock. Payload effects
+    /// belong to the caller and must only be applied on [`Exec::Done`].
+    pub fn run_action(
+        &mut self,
+        world: &mut World,
+        meter: &mut EnergyMeter,
+        action: Action,
+        cost: ActionCost,
+        ex: &mut PendingEx,
+    ) -> Result<Exec> {
+        let sub_e = cost.sub_energy_uj();
+        let sub_t = cost.sub_time_us();
+        if sub_e > world.cap.full_budget_uj() {
+            return Err(Error::EnergyBudget {
+                action: action.name().into(),
+                needed_uj: sub_e,
+                budget_uj: world.cap.full_budget_uj(),
+            });
+        }
+        while ex.sub_done < cost.splits {
+            self.nvm.begin_action()?;
+            if !world.cap.deduct_uj(sub_e) {
+                // power failure mid-sub-action: roll back
+                self.nvm.abort_action();
+                meter.record_abort(action, world.cap.usable_uj().max(0.0));
+                return Ok(Exec::PowerFailed);
+            }
+            world.advance_us(sub_t);
+            ex.sub_done += 1;
+            self.nvm.commit_action()?;
+            meter.record_action(action, sub_e, sub_t);
+        }
+        Ok(Exec::Done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::harvester::Constant;
+    use crate::energy::Capacitor;
+    use crate::sensors::accel::{Accel, MotionProfile};
+
+    fn world_at(v: f64) -> World {
+        let sensor = Accel::new(MotionProfile::alternating_hours(1.0, 3.0, 2), 1);
+        let mut w = World::new(
+            Box::new(Constant(0.0)),
+            Capacitor::vibration(),
+            Box::new(sensor),
+        );
+        w.cap.set_voltage(v);
+        w
+    }
+
+    #[test]
+    fn completed_action_commits_every_sub_action() {
+        let mut exec = Executor::new();
+        let mut meter = EnergyMeter::new();
+        let mut world = world_at(3.3);
+        let mut ex = PendingEx::new(Action::Sense, 0);
+        let cost = ActionCost::new(900.0, 9_000, 3);
+        let r = exec
+            .run_action(&mut world, &mut meter, Action::Extract, cost, &mut ex)
+            .unwrap();
+        assert_eq!(r, Exec::Done);
+        assert_eq!(ex.sub_done, 3);
+        assert_eq!(exec.nvm.commits, 3);
+        assert_eq!(exec.nvm.aborts, 0);
+        assert_eq!(world.now_us(), 9_000);
+        assert!((meter.total_uj() - 900.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_failure_rolls_back_but_keeps_sub_action_progress() {
+        let mut exec = Executor::new();
+        let mut meter = EnergyMeter::new();
+        // barely above brown-out: only one 300 µJ sub-action fits
+        let mut world = world_at(2.03);
+        let mut ex = PendingEx::new(Action::Sense, 0);
+        let cost = ActionCost::new(900.0, 9_000, 3);
+        let r = exec
+            .run_action(&mut world, &mut meter, Action::Extract, cost, &mut ex)
+            .unwrap();
+        assert_eq!(r, Exec::PowerFailed);
+        assert!(ex.sub_done >= 1, "no sub-action survived: {}", ex.sub_done);
+        assert!(ex.sub_done < 3);
+        assert_eq!(exec.nvm.aborts, 1);
+        assert_eq!(exec.nvm.commits, u64::from(ex.sub_done));
+        assert!(!world.cap.alive());
+        // resuming on a recharged capacitor finishes the remaining splits
+        world.cap.set_voltage(3.3);
+        let r = exec
+            .run_action(&mut world, &mut meter, Action::Extract, cost, &mut ex)
+            .unwrap();
+        assert_eq!(r, Exec::Done);
+        assert_eq!(ex.sub_done, 3);
+    }
+
+    #[test]
+    fn oversized_sub_action_is_a_budget_error() {
+        let mut exec = Executor::new();
+        let mut meter = EnergyMeter::new();
+        let mut world = world_at(3.3);
+        let mut ex = PendingEx::new(Action::Sense, 0);
+        let budget = world.cap.full_budget_uj();
+        let cost = ActionCost::new(budget * 2.0, 1_000, 1);
+        let err = exec
+            .run_action(&mut world, &mut meter, Action::Learn, cost, &mut ex)
+            .unwrap_err();
+        assert!(matches!(err, Error::EnergyBudget { .. }), "{err:?}");
+    }
+}

@@ -1,14 +1,30 @@
-//! The intermittent execution engine (the L3 coordinator core).
+//! The intermittent execution engine (the L3 coordinator core), split into
+//! three layers (see `ARCHITECTURE.md`):
 //!
-//! [`engine::Engine`] owns the world: harvester, capacitor, NVM, sensor,
-//! learner, selector and a [`Scheduler`] (the dynamic action planner or a
-//! duty-cycled baseline). It advances simulated time through
-//! charge → wake → execute-actions → power-fail/sleep cycles, enforcing
-//! action atomicity (§3.5) and per-sub-action energy accounting (§3.4),
-//! and records everything the evaluation section needs.
+//! * [`world::World`] — the physical device: harvester + capacitor +
+//!   sensor + the simulated clock, including the charge kernels (the
+//!   event-driven analytic kernel and the stepped reference oracle).
+//! * [`executor::Executor`] — the sub-action transaction machinery: runs
+//!   one action against the NVM staging buffer, deducting energy per
+//!   sub-action and rolling back on power failure (§3.4/§3.5).
+//! * [`policy::Policy`] — the decision layer: scheduler (dynamic action
+//!   planner or a duty-cycled baseline) + example-selection heuristic +
+//!   the windowed completion bookkeeping the planner's goal logic reads.
+//!
+//! [`engine::Engine`] is the thin coordinator that owns one of each plus
+//! the learner/backend/meter, and advances simulated time through
+//! charge → wake → execute-actions → power-fail/sleep cycles, recording
+//! everything the evaluation section needs.
 
 pub mod engine;
+pub mod executor;
+pub mod policy;
 pub mod probe;
+pub mod world;
+
+pub use executor::{Exec, Executor};
+pub use policy::Policy;
+pub use world::World;
 
 use crate::actions::Action;
 use crate::energy::cost::{ActionCost, CostModel};
@@ -48,6 +64,14 @@ pub trait Scheduler: Send {
         true
     }
 
+    /// Completion-rate window length in harvesting cycles, if the
+    /// scheduler plans against one (the planner's goal window; `None` for
+    /// the fixed-schedule baselines). [`Policy`] mirrors its completion
+    /// counts over this window so [`PlanContext`] carries real rates.
+    fn window_cycles(&self) -> Option<u32> {
+        None
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -73,6 +97,10 @@ impl Scheduler for PlannerScheduler {
 
     fn overhead(&self, costs: &CostModel) -> ActionCost {
         costs.planner
+    }
+
+    fn window_cycles(&self) -> Option<u32> {
+        Some(self.0.goal.window)
     }
 
     fn name(&self) -> &'static str {
@@ -108,6 +136,48 @@ impl PendingEx {
     }
 }
 
+/// Which charging integrator advances the world while asleep.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChargeKernel {
+    /// Event-driven analytic kernel: jumps across harvester segments
+    /// (whole nights, idle motion gaps) using closed-form mean power and
+    /// solves the wake instant inside a segment (the default).
+    Event,
+    /// Fixed-step reference oracle: integrates in `charge_step_us` steps,
+    /// re-sampling instantaneous power each step (the pre-event-kernel
+    /// integrator, kept for equivalence testing and as a fallback).
+    Stepped,
+}
+
+impl ChargeKernel {
+    pub fn name(self) -> &'static str {
+        match self {
+            ChargeKernel::Event => "event",
+            ChargeKernel::Stepped => "stepped",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ChargeKernel> {
+        match s {
+            "event" => Some(ChargeKernel::Event),
+            "stepped" => Some(ChargeKernel::Stepped),
+            _ => None,
+        }
+    }
+}
+
+impl Default for ChargeKernel {
+    /// Event-driven, unless the crate is built with the `stepped-kernel`
+    /// cfg feature (the reference-oracle escape hatch).
+    fn default() -> Self {
+        if cfg!(feature = "stepped-kernel") {
+            ChargeKernel::Stepped
+        } else {
+            ChargeKernel::Event
+        }
+    }
+}
+
 /// Simulation parameters.
 #[derive(Debug, Clone, Copy)]
 pub struct SimConfig {
@@ -118,12 +188,15 @@ pub struct SimConfig {
     pub eval_period_us: u64,
     /// Probe-set size (balanced across classes where possible).
     pub probe_count: usize,
-    /// Max charging step while asleep, µs (power re-sampling interval).
+    /// Max charging step while asleep, µs (power re-sampling interval of
+    /// the stepped kernel).
     pub charge_step_us: u64,
     /// Probe lookback: checkpoint accuracy is measured on probes drawn
     /// from `[t - lookback, t]` — the *current* environment, as in the
     /// paper's hourly test-case protocol.
     pub probe_lookback_us: u64,
+    /// Charging integrator (event-driven by default).
+    pub charge_kernel: ChargeKernel,
 }
 
 impl Default for SimConfig {
@@ -135,8 +208,21 @@ impl Default for SimConfig {
             probe_count: 30,
             charge_step_us: 60_000_000,
             probe_lookback_us: 2 * 3_600_000_000,
+            charge_kernel: ChargeKernel::default(),
         }
     }
+}
+
+/// Drop pending examples whose *unprocessed* sensed data outlived
+/// `expiry_us` (Mayfly-style expiration: stale *sensor data* is discarded
+/// — examples already past `sense` carry processed state and are kept).
+/// Returns how many were dropped.
+pub fn expire_stale(pending: &mut Vec<PendingEx>, expiry_us: u64, now_us: u64) -> u64 {
+    let before = pending.len();
+    pending.retain(|p| {
+        p.last != Action::Sense || p.sensed_at_us.saturating_add(expiry_us) > now_us
+    });
+    (before - pending.len()) as u64
 }
 
 /// One accuracy checkpoint.
@@ -170,6 +256,10 @@ pub struct RunResult {
     pub cycles: u64,
     /// Mid-action power failures (rolled back).
     pub power_failures: u64,
+    /// Scheduler decisions that referenced a no-longer-existing pending
+    /// slot (stale plans; the engine breaks the burst after repeats so a
+    /// buggy scheduler cannot spin without consuming energy or time).
+    pub stale_plans: u64,
     /// Total energy spent, µJ.
     pub energy_uj: f64,
     /// Energy time series (t_us, cumulative µJ).
@@ -212,8 +302,8 @@ impl RunResult {
     }
 
     /// JSON rendering of the run (sweep-cell output format). Covers the
-    /// counters, accuracy summaries, checkpoints and per-action tallies;
-    /// the per-inference log is summarized, not dumped.
+    /// counters, accuracy summaries, checkpoints and per-action tallies
+    /// (the per-inference log is summarized, not dumped).
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("scheduler", Json::Str(self.scheduler.clone())),
@@ -224,6 +314,7 @@ impl RunResult {
             ("discarded_select", Json::Num(self.discarded_select as f64)),
             ("expired", Json::Num(self.expired as f64)),
             ("power_failures", Json::Num(self.power_failures as f64)),
+            ("stale_plans", Json::Num(self.stale_plans as f64)),
             ("energy_uj", Json::Num(self.energy_uj)),
             ("mean_accuracy", Json::Num(self.mean_accuracy(3))),
             ("final_accuracy", Json::Num(self.final_accuracy())),
@@ -263,5 +354,44 @@ impl RunResult {
                 ),
             ),
         ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pend(last: Action, sensed_at_us: u64) -> PendingEx {
+        PendingEx::new(last, sensed_at_us)
+    }
+
+    #[test]
+    fn expire_stale_drops_only_unprocessed_stale_data() {
+        let now = 10_000_000;
+        let exp = 5_000_000;
+        let mut pending = vec![
+            pend(Action::Sense, 1_000_000),   // sensed-stale: dropped
+            pend(Action::Sense, 9_000_000),   // sensed-fresh: kept
+            pend(Action::Extract, 1_000_000), // post-extract, stale age: kept
+            pend(Action::Select, 0),          // deep in the pipeline: kept
+        ];
+        let dropped = expire_stale(&mut pending, exp, now);
+        assert_eq!(dropped, 1);
+        assert_eq!(pending.len(), 3);
+        assert!(pending.iter().all(|p| p.last != Action::Sense || p.sensed_at_us == 9_000_000));
+        // boundary: age == expiry is stale (strict `>` survival)
+        let mut edge = vec![pend(Action::Sense, now - exp)];
+        assert_eq!(expire_stale(&mut edge, exp, now), 1);
+        // huge expiry never drops (saturating add)
+        let mut never = vec![pend(Action::Sense, 0)];
+        assert_eq!(expire_stale(&mut never, u64::MAX, now), 0);
+    }
+
+    #[test]
+    fn charge_kernel_names_round_trip() {
+        for k in [ChargeKernel::Event, ChargeKernel::Stepped] {
+            assert_eq!(ChargeKernel::parse(k.name()), Some(k));
+        }
+        assert_eq!(ChargeKernel::parse("nope"), None);
     }
 }

@@ -1,0 +1,177 @@
+//! The decision layer: scheduler + example-selection heuristic + the
+//! windowed completion bookkeeping that feeds [`PlanContext`].
+//!
+//! The planner's §4.2 goal logic compares learn/infer completions in the
+//! current window of harvesting cycles against the goal rates. Before this
+//! layer existed the engine hardcoded `window_learns: 0, window_infers: 0`
+//! into every [`PlanContext`], so schedulers that rely on the context
+//! (rather than private bookkeeping) never saw real rates. [`Policy`]
+//! mirrors completions over the scheduler's declared window
+//! ([`crate::sim::Scheduler::window_cycles`]) and stamps them into every
+//! context it builds.
+
+use crate::actions::Action;
+use crate::energy::cost::{ActionCost, CostModel};
+use crate::planner::{Pending, PlanContext, Planned};
+use crate::selection::Selector;
+use crate::sim::Scheduler;
+
+/// Scheduler + selector + window bookkeeping.
+pub struct Policy {
+    pub scheduler: Box<dyn Scheduler>,
+    pub selector: Box<dyn Selector>,
+    window_learns: u32,
+    window_infers: u32,
+    cycles_in_window: u32,
+}
+
+impl Policy {
+    pub fn new(scheduler: Box<dyn Scheduler>, selector: Box<dyn Selector>) -> Self {
+        Policy {
+            scheduler,
+            selector,
+            window_learns: 0,
+            window_infers: 0,
+            cycles_in_window: 0,
+        }
+    }
+
+    /// Build the planning context for the next decision, carrying the real
+    /// windowed completion counts.
+    pub fn context(&self, learned_total: u64, quality: f32) -> PlanContext {
+        PlanContext {
+            learned_total,
+            quality,
+            window_learns: self.window_learns,
+            window_infers: self.window_infers,
+        }
+    }
+
+    /// Completions observed in the current window (learns, infers).
+    pub fn window_counts(&self) -> (u32, u32) {
+        (self.window_learns, self.window_infers)
+    }
+
+    /// Ask the scheduler for the next transition.
+    pub fn decide(
+        &mut self,
+        pending: &Pending,
+        ctx: &PlanContext,
+        costs: &CostModel,
+    ) -> Planned {
+        self.scheduler.next(pending, ctx, costs)
+    }
+
+    /// Per-decision overhead of the scheduler.
+    pub fn overhead(&self, costs: &CostModel) -> ActionCost {
+        self.scheduler.overhead(costs)
+    }
+
+    /// Data-expiration interval, if the scheduler expires stale data.
+    pub fn expiry_us(&self) -> Option<u64> {
+        self.scheduler.expiry_us()
+    }
+
+    /// Does this policy run the select gate?
+    pub fn uses_selection(&self) -> bool {
+        self.scheduler.uses_selection()
+    }
+
+    /// A new harvesting cycle began: forward to the scheduler and roll the
+    /// completion window (mirrors the planner's own §4.2 bookkeeping).
+    /// Schedulers that declare no window ([`window_cycles`] `None`) get a
+    /// one-cycle window — counts reset every wake — so the context never
+    /// silently degrades into unbounded lifetime totals.
+    ///
+    /// [`window_cycles`]: crate::sim::Scheduler::window_cycles
+    pub fn on_cycle(&mut self) {
+        self.scheduler.on_cycle();
+        match self.scheduler.window_cycles() {
+            Some(window) => {
+                self.cycles_in_window += 1;
+                if self.cycles_in_window >= window {
+                    self.cycles_in_window = 0;
+                    self.window_learns = 0;
+                    self.window_infers = 0;
+                }
+            }
+            None => {
+                self.window_learns = 0;
+                self.window_infers = 0;
+            }
+        }
+    }
+
+    /// Outcome of a select gate.
+    pub fn observe_select(&mut self, accepted: bool) {
+        self.scheduler.observe_select(accepted);
+    }
+
+    /// A learn/infer completed: count it into the window and forward.
+    pub fn observe_completion(&mut self, a: Action) {
+        match a {
+            Action::Learn => self.window_learns += 1,
+            Action::Infer => self.window_infers += 1,
+            _ => {}
+        }
+        self.scheduler.observe_completion(a);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::DynamicActionPlanner;
+    use crate::selection::Heuristic;
+    use crate::sim::PlannerScheduler;
+
+    fn planner_policy() -> Policy {
+        Policy::new(
+            Box::new(PlannerScheduler(DynamicActionPlanner::default())),
+            Heuristic::RoundRobin.build(1),
+        )
+    }
+
+    #[test]
+    fn context_carries_real_window_counts() {
+        let mut p = planner_policy();
+        assert_eq!(p.context(5, 0.5).window_learns, 0);
+        p.observe_completion(Action::Learn);
+        p.observe_completion(Action::Learn);
+        p.observe_completion(Action::Infer);
+        p.observe_completion(Action::Extract); // not a completion
+        let ctx = p.context(5, 0.5);
+        assert_eq!(ctx.window_learns, 2);
+        assert_eq!(ctx.window_infers, 1);
+        assert_eq!(ctx.learned_total, 5);
+    }
+
+    #[test]
+    fn window_resets_after_goal_window_cycles() {
+        let mut p = planner_policy();
+        let window = p.scheduler.window_cycles().expect("planner has a window");
+        p.observe_completion(Action::Learn);
+        for _ in 0..window - 1 {
+            p.on_cycle();
+        }
+        assert_eq!(p.window_counts(), (1, 0), "window rolled early");
+        p.on_cycle();
+        assert_eq!(p.window_counts(), (0, 0), "window did not roll");
+    }
+
+    #[test]
+    fn baseline_schedulers_have_no_window() {
+        let p = Policy::new(
+            Box::new(crate::baselines::DutyCycleScheduler::new(0.5)),
+            Heuristic::None.build(1),
+        );
+        assert_eq!(p.scheduler.window_cycles(), None);
+        // no declared window -> one-cycle window: counts roll every wake
+        // instead of growing into lifetime totals
+        let mut p = p;
+        p.observe_completion(Action::Learn);
+        assert_eq!(p.window_counts(), (1, 0));
+        p.on_cycle();
+        assert_eq!(p.window_counts(), (0, 0));
+    }
+}

@@ -29,6 +29,7 @@ fn run_constant_power(seed: u64, power_mw: f64, minutes: u64) -> RunResult {
             probe_count: 10,
             charge_step_us: 5_000_000,
             probe_lookback_us: H,
+            ..Default::default()
         })
         .harvester(Box::new(Constant(power_mw / 1000.0)))
         .capacitor(Capacitor::vibration())

@@ -24,6 +24,7 @@ fn engine_with_trace(points: Vec<(u64, f64)>, horizon_s: u64) -> Engine {
             probe_count: 10,
             charge_step_us: 2_000_000,
             probe_lookback_us: 3_600_000_000,
+            ..Default::default()
         })
         .harvester(Box::new(Trace { points }))
         .capacitor(Capacitor::vibration())
@@ -145,6 +146,7 @@ fn energy_budget_error_when_action_cannot_ever_fit() {
             probe_count: 4,
             charge_step_us: 2_000_000,
             probe_lookback_us: 600_000_000,
+            ..Default::default()
         })
         .harvester(Box::new(Trace {
             points: vec![(0, 0.010)],

@@ -1,0 +1,101 @@
+//! Event-kernel equivalence: on all three paper presets, the analytic
+//! event-driven charge kernel must reproduce the stepped reference
+//! oracle's `RunResult` within tolerance.
+//!
+//! The kernels are *not* bit-identical by design — the oracle holds the
+//! instantaneous power sampled at each step start for up to
+//! `charge_step_us`, while the event kernel uses exact segment means — so
+//! wake instants drift by seconds over multi-hour runs and individual
+//! examples differ. What must match is everything aggregate: wake-cycle
+//! counts, sensed/learned/inferred tallies, and total energy.
+
+use ilearn::apps::AppKind;
+use ilearn::sim::{ChargeKernel, RunResult};
+
+const H: u64 = 3_600_000_000;
+
+fn run_with(kind: AppKind, hours: u64, kernel: ChargeKernel) -> RunResult {
+    let mut spec = kind.spec(42, hours * H);
+    spec.charge_kernel = kernel;
+    spec.build_engine().unwrap().run().unwrap()
+}
+
+/// |a - b| within `rel` of the larger, or within `abs` absolutely.
+fn close(a: f64, b: f64, rel: f64, abs: f64) -> bool {
+    (a - b).abs() <= (rel * a.abs().max(b.abs())).max(abs)
+}
+
+fn assert_equivalent(kind: AppKind, hours: u64, ev: &RunResult, st: &RunResult) {
+    let ctx = format!(
+        "{:?} {hours}h\n event : cycles {} sensed {} learned {} inferred {} energy {:.0}\n \
+         stepped: cycles {} sensed {} learned {} inferred {} energy {:.0}",
+        kind,
+        ev.cycles,
+        ev.sensed,
+        ev.learned,
+        ev.inferred,
+        ev.energy_uj,
+        st.cycles,
+        st.sensed,
+        st.learned,
+        st.inferred,
+        st.energy_uj
+    );
+    // The oracle itself under-harvests bursty sources (it holds the power
+    // sampled at each step start, losing the front of a gesture that
+    // begins mid-step), so the event kernel legitimately wakes a few
+    // percent *more* often on piezo worlds — the tolerances below bound
+    // that modelling gap, not numerical error.
+    assert!(st.cycles > 0 && st.sensed > 0, "dead oracle run: {ctx}");
+    assert!(
+        close(ev.cycles as f64, st.cycles as f64, 0.15, 5.0),
+        "wake count diverged: {ctx}"
+    );
+    assert!(
+        close(ev.sensed as f64, st.sensed as f64, 0.25, 15.0),
+        "sensed diverged: {ctx}"
+    );
+    assert!(
+        close(ev.learned as f64, st.learned as f64, 0.25, 15.0),
+        "learned diverged: {ctx}"
+    );
+    assert!(
+        close(ev.inferred as f64, st.inferred as f64, 0.25, 15.0),
+        "inferred diverged: {ctx}"
+    );
+    assert!(
+        close(ev.energy_uj, st.energy_uj, 0.15, 2_000.0),
+        "energy diverged: {ctx}"
+    );
+    // same checkpoint cadence (driven by the clock, not the kernel)
+    assert!(
+        close(ev.checkpoints.len() as f64, st.checkpoints.len() as f64, 0.1, 2.0),
+        "checkpoint count diverged: {ctx}"
+    );
+}
+
+#[test]
+fn vibration_event_kernel_matches_stepped_oracle() {
+    // piezo energy arrives in second-bucketed gesture bursts: the kernels
+    // integrate the same piecewise-constant texture, so this preset pins
+    // the tightest equivalence
+    let ev = run_with(AppKind::Vibration, 4, ChargeKernel::Event);
+    let st = run_with(AppKind::Vibration, 4, ChargeKernel::Stepped);
+    assert_equivalent(AppKind::Vibration, 4, &ev, &st);
+}
+
+#[test]
+fn presence_event_kernel_matches_stepped_oracle() {
+    let ev = run_with(AppKind::Presence, 8, ChargeKernel::Event);
+    let st = run_with(AppKind::Presence, 8, ChargeKernel::Stepped);
+    assert_equivalent(AppKind::Presence, 8, &ev, &st);
+}
+
+#[test]
+fn air_quality_event_kernel_matches_stepped_oracle_across_a_night() {
+    // 24 h of solar: covers a full night (the event kernel crosses it in
+    // one segment; the oracle crawls it in 60 s steps) plus a sunrise ramp
+    let ev = run_with(AppKind::AirQuality, 24, ChargeKernel::Event);
+    let st = run_with(AppKind::AirQuality, 24, ChargeKernel::Stepped);
+    assert_equivalent(AppKind::AirQuality, 24, &ev, &st);
+}

@@ -39,6 +39,7 @@ fn legacy_vibration_engine(seed: u64, horizon_us: u64) -> Engine {
             probe_count: 30,
             probe_lookback_us: 2 * H,
             charge_step_us: 1_000_000,
+            ..Default::default()
         })
         .harvester(Box::new(Piezo::new(profile.clone())))
         .capacitor(Capacitor::vibration())
@@ -70,6 +71,7 @@ fn legacy_presence_engine(seed: u64, horizon_us: u64) -> Engine {
             probe_count: 30,
             probe_lookback_us: 2 * H,
             charge_step_us: 60_000_000,
+            ..Default::default()
         })
         .harvester(Box::new(Rf {
             seed: seed ^ 0xB0,
