@@ -54,6 +54,7 @@ fn main() {
             quality: 0.5,
             window_learns: 1,
             window_infers: 1,
+            window_cycle: 2,
         };
         let m = bench("d", 60, || {
             black_box(planner.next_action(&pending, &ctx, &costs));

@@ -42,10 +42,11 @@ fn main() {
         })
         .row()
     );
+    let mut scores = vec![0.0f32; N_BUF];
     println!(
         "{}",
         bench("knn_learn (48/64 examples)", 300, || {
-            black_box(be.knn_learn(&ex, &mask).unwrap());
+            black_box(be.knn_learn(&ex, &mask, &mut scores).unwrap());
         })
         .row()
     );
@@ -56,10 +57,12 @@ fn main() {
         })
         .row()
     );
+    let mut w_hot = w.clone();
+    let mut acts = [0.0f32; N_CLUSTERS];
     println!(
         "{}",
         bench("kmeans_learn", 150, || {
-            black_box(be.kmeans_learn(&w, &x, 0.15).unwrap());
+            black_box(be.kmeans_learn(&mut w_hot, &x, 0.15, &mut acts).unwrap());
         })
         .row()
     );
@@ -82,6 +85,7 @@ fn main() {
             quality: 0.6,
             window_learns: 1,
             window_infers: 2,
+            window_cycle: 3,
         };
         println!(
             "{}",

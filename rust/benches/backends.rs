@@ -63,14 +63,20 @@ fn main() {
         ),
         (
             "knn_learn".into(),
-            bench("native", 300, || {
-                black_box(native.knn_learn(&ex, &mask).unwrap());
-            })
-            .p50_ns,
-            bench("pjrt", 500, || {
-                black_box(pjrt.knn_learn(&ex, &mask).unwrap());
-            })
-            .p50_ns,
+            {
+                let mut scores = vec![0.0f32; N_BUF];
+                bench("native", 300, || {
+                    black_box(native.knn_learn(&ex, &mask, &mut scores).unwrap());
+                })
+                .p50_ns
+            },
+            {
+                let mut scores = vec![0.0f32; N_BUF];
+                bench("pjrt", 500, || {
+                    black_box(pjrt.knn_learn(&ex, &mask, &mut scores).unwrap());
+                })
+                .p50_ns
+            },
         ),
         (
             "knn_infer".into(),
@@ -85,14 +91,22 @@ fn main() {
         ),
         (
             "kmeans_learn".into(),
-            bench("native", 150, || {
-                black_box(native.kmeans_learn(&w, &x, 0.15).unwrap());
-            })
-            .p50_ns,
-            bench("pjrt", 400, || {
-                black_box(pjrt.kmeans_learn(&w, &x, 0.15).unwrap());
-            })
-            .p50_ns,
+            {
+                let mut w_hot = w.clone();
+                let mut acts = [0.0f32; N_CLUSTERS];
+                bench("native", 150, || {
+                    black_box(native.kmeans_learn(&mut w_hot, &x, 0.15, &mut acts).unwrap());
+                })
+                .p50_ns
+            },
+            {
+                let mut w_hot = w.clone();
+                let mut acts = [0.0f32; N_CLUSTERS];
+                bench("pjrt", 400, || {
+                    black_box(pjrt.kmeans_learn(&mut w_hot, &x, 0.15, &mut acts).unwrap());
+                })
+                .p50_ns
+            },
         ),
     ];
     println!(

@@ -1,0 +1,232 @@
+//! NVM checkpoint bench: full-save vs dirty-slot delta-save learn cycles,
+//! tracked over time through `BENCH_nvm.json` (written at the repo root
+//! when run from `rust/`).
+//!
+//!     cargo bench --bench nvm_checkpoint            # full comparison + JSON
+//!     cargo bench --bench nvm_checkpoint -- --smoke # CI: short cells + asserts
+//!
+//! Each cell runs the steady-state learn cycle — `Learner::learn` followed
+//! by a checkpoint — on the native backend and reports wall time plus the
+//! NVM byte accounting per learn. `full` checkpoints with `Learner::save`
+//! (the pre-delta engine behaviour: the whole model re-serialized every
+//! learn); `delta` with `Learner::save_delta` (only the overwritten ring
+//! slot / winner row plus scalars). Because the engine charges energy per
+//! NVM byte, `bytes_written_per_learn` is the energy-model-visible win;
+//! the wall-time ratio is the sweep-throughput win. The capacity axis
+//! exercises the O(1) running-counter capacity check against the
+//! unlimited store (the old implementation rescanned every key per
+//! write).
+
+use ilearn::backend::native::NativeBackend;
+use ilearn::backend::shapes::{FEAT_DIM, N_BUF};
+use ilearn::learning::{ClusterLabelLearner, Example, KnnAnomalyLearner, Learner};
+use ilearn::nvm::Nvm;
+use ilearn::util::bench::fmt_ns;
+use ilearn::util::json::Json;
+use ilearn::util::Rng;
+use std::time::Instant;
+
+/// One measured cell.
+struct Cell {
+    name: String,
+    mode: &'static str,
+    capacity: usize,
+    learns: usize,
+    ns_per_learn: f64,
+    bytes_written_per_learn: f64,
+    bytes_read_per_learn: f64,
+}
+
+impl Cell {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("mode", Json::Str(self.mode.into())),
+            ("capacity", Json::Num(self.capacity as f64)),
+            ("learns", Json::Num(self.learns as f64)),
+            ("ns_per_learn", Json::Num(self.ns_per_learn)),
+            ("learns_per_sec", Json::Num(1e9 / self.ns_per_learn.max(1.0))),
+            (
+                "bytes_written_per_learn",
+                Json::Num(self.bytes_written_per_learn),
+            ),
+            ("bytes_read_per_learn", Json::Num(self.bytes_read_per_learn)),
+        ])
+    }
+
+    fn row(&self) -> String {
+        format!(
+            "{:<22} {:<6} cap {:>8} {:>10} {:>12}/learn {:>10.1} B written/learn {:>10.1} B read/learn",
+            self.name,
+            self.mode,
+            if self.capacity == 0 {
+                "inf".to_string()
+            } else {
+                self.capacity.to_string()
+            },
+            self.learns,
+            fmt_ns(self.ns_per_learn),
+            self.bytes_written_per_learn,
+            self.bytes_read_per_learn,
+        )
+    }
+}
+
+fn example(rng: &mut Rng, t: u64) -> Example {
+    Example::new(
+        (0..FEAT_DIM).map(|_| rng.normal(0.0, 1.0) as f32).collect(),
+        t,
+        false,
+    )
+}
+
+/// Steady-state learn cycle on a warmed learner: best-of-3 wall time plus
+/// exact byte accounting over `learns` learn+checkpoint cycles.
+fn measure_cell(
+    name: &str,
+    mode: &'static str,
+    capacity: usize,
+    learns: usize,
+    mut fresh: impl FnMut() -> Box<dyn Learner>,
+) -> Cell {
+    let mut best_ns = f64::INFINITY;
+    let mut bytes_w = 0.0;
+    let mut bytes_r = 0.0;
+    for _ in 0..3 {
+        let mut be = NativeBackend::new();
+        let mut nvm = if capacity > 0 {
+            Nvm::with_capacity(capacity)
+        } else {
+            Nvm::new()
+        };
+        let mut l = fresh();
+        let mut rng = Rng::new(42);
+        // warm-up: fill the ring / clusters and land the first (full) save
+        for t in 0..N_BUF as u64 {
+            l.learn(&example(&mut rng, t), &mut be).unwrap();
+        }
+        match mode {
+            "delta" => l.save_delta(&mut nvm).unwrap(),
+            _ => l.save(&mut nvm).unwrap(),
+        }
+        let (w0, r0) = (nvm.bytes_written, nvm.bytes_read);
+        let start = Instant::now();
+        for t in 0..learns as u64 {
+            l.learn(&example(&mut rng, N_BUF as u64 + t), &mut be).unwrap();
+            match mode {
+                "delta" => l.save_delta(&mut nvm).unwrap(),
+                _ => l.save(&mut nvm).unwrap(),
+            }
+        }
+        let ns = start.elapsed().as_nanos() as f64 / learns as f64;
+        best_ns = best_ns.min(ns);
+        bytes_w = (nvm.bytes_written - w0) as f64 / learns as f64;
+        bytes_r = (nvm.bytes_read - r0) as f64 / learns as f64;
+    }
+    Cell {
+        name: name.to_string(),
+        mode,
+        capacity,
+        learns,
+        ns_per_learn: best_ns,
+        bytes_written_per_learn: bytes_w,
+        bytes_read_per_learn: bytes_r,
+    }
+}
+
+fn knn() -> Box<dyn Learner> {
+    Box::new(KnnAnomalyLearner::new())
+}
+
+fn kmeans() -> Box<dyn Learner> {
+    Box::new(ClusterLabelLearner::new(7, 40))
+}
+
+/// MSP430FR5994-class FRAM budget (paper Table 4 platforms).
+const FRAM_CAP: usize = 256 * 1024;
+
+fn run_cells(learns: usize) -> Vec<Cell> {
+    vec![
+        measure_cell("knn-learn-cycle", "full", 0, learns, knn),
+        measure_cell("knn-learn-cycle", "delta", 0, learns, knn),
+        measure_cell("knn-learn-cycle", "full", FRAM_CAP, learns, knn),
+        measure_cell("knn-learn-cycle", "delta", FRAM_CAP, learns, knn),
+        measure_cell("kmeans-learn-cycle", "full", 0, learns, kmeans),
+        measure_cell("kmeans-learn-cycle", "delta", 0, learns, kmeans),
+    ]
+}
+
+fn ratio(cells: &[Cell], name: &str, f: impl Fn(&Cell) -> f64) -> f64 {
+    let get = |mode: &str| {
+        cells
+            .iter()
+            .find(|c| c.name == name && c.mode == mode && c.capacity == 0)
+            .map(&f)
+            .unwrap_or(f64::NAN)
+    };
+    get("full") / get("delta")
+}
+
+fn smoke() {
+    let cells = run_cells(200);
+    for c in &cells {
+        println!("{}", c.row());
+    }
+    let bytes_ratio = ratio(&cells, "knn-learn-cycle", |c| c.bytes_written_per_learn);
+    println!("smoke knn bytes-written ratio full/delta: {bytes_ratio:.1}x");
+    assert!(
+        bytes_ratio >= 5.0,
+        "delta checkpoint must write >=5x fewer bytes per learn, got {bytes_ratio:.1}x"
+    );
+    // capacity checks are O(1): the capped store must not be drastically
+    // slower than the unlimited one (generous bound — CI boxes are noisy)
+    let capped = cells
+        .iter()
+        .find(|c| c.mode == "delta" && c.capacity == FRAM_CAP)
+        .unwrap();
+    let free = cells
+        .iter()
+        .find(|c| c.name == "knn-learn-cycle" && c.mode == "delta" && c.capacity == 0)
+        .unwrap();
+    assert!(
+        capped.ns_per_learn < free.ns_per_learn * 10.0 + 10_000.0,
+        "capacity-checked writes look super-linear: {} vs {}",
+        fmt_ns(capped.ns_per_learn),
+        fmt_ns(free.ns_per_learn)
+    );
+    println!("smoke OK");
+}
+
+fn main() {
+    if std::env::args().any(|a| a == "--smoke") {
+        smoke();
+        return;
+    }
+    let learns = 20_000;
+    println!("== NVM checkpoint: full save vs dirty-slot delta save ==");
+    let cells = run_cells(learns);
+    for c in &cells {
+        println!("{}", c.row());
+    }
+    let bytes_ratio = ratio(&cells, "knn-learn-cycle", |c| c.bytes_written_per_learn);
+    let kmeans_ratio = ratio(&cells, "kmeans-learn-cycle", |c| c.bytes_written_per_learn);
+    let speedup = ratio(&cells, "knn-learn-cycle", |c| c.ns_per_learn);
+    println!("knn bytes-written ratio full/delta: {bytes_ratio:.1}x");
+    println!("knn learn-cycle speedup full/delta: {speedup:.2}x");
+
+    // same schema as python/tools/nvm_mirror.py --emit-json (which seeds
+    // the tracked file with exact byte rows and null wall-time fields)
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("nvm_checkpoint".into())),
+        ("source", Json::Str("cargo bench --bench nvm_checkpoint".into())),
+        ("learns", Json::Num(learns as f64)),
+        ("headline_bytes_ratio", Json::Num(bytes_ratio)),
+        ("headline_speedup", Json::Num(speedup)),
+        ("kmeans_bytes_ratio", Json::Num(kmeans_ratio)),
+        ("cells", Json::Arr(cells.iter().map(Cell::to_json).collect())),
+    ]);
+    // the tracked copy lives at the repo root, one level above the crate
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_nvm.json");
+    std::fs::write(path, doc.to_string()).expect("write BENCH_nvm.json");
+    println!("wrote {path}");
+}

@@ -59,7 +59,12 @@ impl Cell {
 }
 
 /// Best-of-3 wall time for `f`, which returns the run's cycle count.
-fn measure(name: &'static str, kernel: ChargeKernel, sim_hours: f64, mut f: impl FnMut() -> u64) -> Cell {
+fn measure(
+    name: &'static str,
+    kernel: ChargeKernel,
+    sim_hours: f64,
+    mut f: impl FnMut() -> u64,
+) -> Cell {
     let mut best = f64::INFINITY;
     let mut cycles = 0;
     for _ in 0..3 {

@@ -55,24 +55,28 @@ pub trait ComputeBackend {
     /// flattened feature matrix.
     fn extract(&mut self, window: &[f32]) -> Result<Vec<f32>>;
 
-    /// k-NN `learn`: (N_BUF, FEAT_DIM) examples + (N_BUF) validity mask ->
-    /// (per-example anomaly scores, 90th-percentile threshold).
-    fn knn_learn(&mut self, examples: &[f32], mask: &[f32]) -> Result<(Vec<f32>, f32)>;
+    /// k-NN `learn`: (N_BUF, FEAT_DIM) examples + (N_BUF) validity mask.
+    /// Writes the per-example anomaly scores into `scores` (len N_BUF,
+    /// caller-owned scratch — the learn hot path allocates nothing) and
+    /// returns the 90th-percentile threshold.
+    fn knn_learn(&mut self, examples: &[f32], mask: &[f32], scores: &mut [f32]) -> Result<f32>;
 
     /// k-NN `infer`: anomaly score of one example against the buffer.
     fn knn_infer(&mut self, examples: &[f32], mask: &[f32], x: &[f32]) -> Result<f32>;
 
     /// Batched k-NN `infer` ((BATCH, FEAT_DIM) queries).
-    fn knn_infer_batch(
-        &mut self,
-        examples: &[f32],
-        mask: &[f32],
-        xs: &[f32],
-    ) -> Result<Vec<f32>>;
+    fn knn_infer_batch(&mut self, examples: &[f32], mask: &[f32], xs: &[f32]) -> Result<Vec<f32>>;
 
-    /// k-means `learn`: one competitive step -> (new weights, activations).
-    fn kmeans_learn(&mut self, w: &[f32], x: &[f32], eta: f32)
-        -> Result<(Vec<f32>, Vec<f32>)>;
+    /// k-means `learn`: one competitive step, updating `w`
+    /// ((N_CLUSTERS, FEAT_DIM)) in place. Writes the cluster activations
+    /// into `acts` and returns the winner index. Allocation-free.
+    fn kmeans_learn(
+        &mut self,
+        w: &mut [f32],
+        x: &[f32],
+        eta: f32,
+        acts: &mut [f32; shapes::N_CLUSTERS],
+    ) -> Result<usize>;
 
     /// k-means `infer`: cluster activations.
     fn kmeans_infer(&mut self, w: &[f32], x: &[f32]) -> Result<Vec<f32>>;

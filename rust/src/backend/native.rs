@@ -34,6 +34,10 @@ pub struct NativeBackend {
     scratch: Vec<f32>,
     /// Scratch channel buffer reused across `extract` calls.
     ch_scratch: Vec<f32>,
+    /// Scratch list of changed rows reused across `knn_learn` calls.
+    changed_scratch: Vec<usize>,
+    /// Scratch of valid scores for the percentile pass of `knn_learn`.
+    valid_scratch: Vec<f32>,
     /// Incremental distance-matrix cache for `knn_learn`.
     knn_cache: Option<KnnMatrixCache>,
 }
@@ -41,6 +45,16 @@ pub struct NativeBackend {
 impl NativeBackend {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Cluster activations a_j = -||x - w_j||^2 into a fixed scratch (see
+    /// kernels/ref.py for why the distance form replaces the paper's raw
+    /// dot product).
+    fn kmeans_acts(w: &[f32], x: &[f32], acts: &mut [f32; N_CLUSTERS]) {
+        for k in 0..N_CLUSTERS {
+            let wk = &w[k * FEAT_DIM..(k + 1) * FEAT_DIM];
+            acts[k] = -stats::sq_euclidean(x, wk);
+        }
     }
 
     /// Sum of the k smallest values in `d` (ignores +inf entries).
@@ -119,14 +133,15 @@ impl ComputeBackend for NativeBackend {
         Ok(out)
     }
 
-    fn knn_learn(&mut self, examples: &[f32], mask: &[f32]) -> Result<(Vec<f32>, f32)> {
+    fn knn_learn(&mut self, examples: &[f32], mask: &[f32], scores: &mut [f32]) -> Result<f32> {
         debug_assert_eq!(examples.len(), N_BUF * FEAT_DIM);
         debug_assert_eq!(mask.len(), N_BUF);
+        debug_assert_eq!(scores.len(), N_BUF);
         let cnt = mask.iter().filter(|&&m| m > 0.5).count();
-        let mut scores = vec![0.0f32; N_BUF];
+        scores.fill(0.0);
         if cnt <= K_NEIGHBORS {
             // model undefined; drop any cache (cheap) and bail
-            return Ok((scores, 0.0));
+            return Ok(0.0);
         }
 
         // ---- incremental distance-matrix maintenance (§Perf) ----------
@@ -144,8 +159,10 @@ impl ComputeBackend for NativeBackend {
                 d: vec![0.0; N_BUF * N_BUF],
             }
         };
-        // rows whose features changed since the cached call
-        let mut changed: Vec<usize> = Vec::new();
+        // rows whose features changed since the cached call (scratch list
+        // reused across calls — the learn hot path allocates nothing)
+        let mut changed = std::mem::take(&mut self.changed_scratch);
+        changed.clear();
         for i in 0..N_BUF {
             if cache.examples[i * FEAT_DIM..(i + 1) * FEAT_DIM]
                 != examples[i * FEAT_DIM..(i + 1) * FEAT_DIM]
@@ -167,6 +184,7 @@ impl ComputeBackend for NativeBackend {
         }
         cache.examples.copy_from_slice(examples);
         cache.mask.copy_from_slice(mask);
+        self.changed_scratch = changed;
 
         // ---- O(N^2) score pass over the cached matrix ------------------
         // K_NEIGHBORS = 3 is baked into the unrolled min-insertion below;
@@ -207,9 +225,15 @@ impl ComputeBackend for NativeBackend {
         }
         self.knn_cache = Some(cache);
 
-        let valid: Vec<f32> = (0..N_BUF).filter(|&i| mask[i] > 0.5).map(|i| scores[i]).collect();
-        let thr = stats::percentile(&valid, PCTL);
-        Ok((scores, thr))
+        // percentile over the valid scores, sorted in a reused scratch
+        // (no per-call clone on the learn hot path)
+        let mut valid = std::mem::take(&mut self.valid_scratch);
+        valid.clear();
+        valid.extend((0..N_BUF).filter(|&i| mask[i] > 0.5).map(|i| scores[i]));
+        valid.sort_unstable_by(|a, b| a.total_cmp(b));
+        let thr = stats::percentile_sorted(&valid, PCTL);
+        self.valid_scratch = valid;
+        Ok(thr)
     }
 
     fn knn_infer(&mut self, examples: &[f32], mask: &[f32], x: &[f32]) -> Result<f32> {
@@ -245,36 +269,32 @@ impl ComputeBackend for NativeBackend {
 
     fn kmeans_learn(
         &mut self,
-        w: &[f32],
+        w: &mut [f32],
         x: &[f32],
         eta: f32,
-    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        acts: &mut [f32; N_CLUSTERS],
+    ) -> Result<usize> {
         debug_assert_eq!(w.len(), N_CLUSTERS * FEAT_DIM);
         debug_assert_eq!(x.len(), FEAT_DIM);
-        let acts = self.kmeans_infer(w, x)?;
+        Self::kmeans_acts(w, x, acts);
         let winner = acts
             .iter()
             .enumerate()
             .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(i, _)| i)
             .unwrap_or(0);
-        let mut new_w = w.to_vec();
-        let row = &mut new_w[winner * FEAT_DIM..(winner + 1) * FEAT_DIM];
+        // winner row updated in place: Δw = η(x − w), no reallocation
+        let row = &mut w[winner * FEAT_DIM..(winner + 1) * FEAT_DIM];
         for i in 0..FEAT_DIM {
             row[i] += eta * (x[i] - row[i]);
         }
-        Ok((new_w, acts))
+        Ok(winner)
     }
 
     fn kmeans_infer(&mut self, w: &[f32], x: &[f32]) -> Result<Vec<f32>> {
-        // Activation a_j = -||x - w_j||^2 (see kernels/ref.py for why the
-        // distance form replaces the paper's raw dot product).
-        let mut acts = vec![0.0f32; N_CLUSTERS];
-        for k in 0..N_CLUSTERS {
-            let wk = &w[k * FEAT_DIM..(k + 1) * FEAT_DIM];
-            acts[k] = -stats::sq_euclidean(x, wk);
-        }
-        Ok(acts)
+        let mut acts = [0.0f32; N_CLUSTERS];
+        Self::kmeans_acts(w, x, &mut acts);
+        Ok(acts.to_vec())
     }
 
     fn diversity_repr(&mut self, b: &[f32], bp: &[f32], x: &[f32]) -> Result<[f32; 4]> {
@@ -337,7 +357,8 @@ mod tests {
         let mut be = NativeBackend::new();
         let mut rng = Rng::new(1);
         let (ex, mask) = filled_buffer(&mut rng, 40);
-        let (scores, thr) = be.knn_learn(&ex, &mask).unwrap();
+        let mut scores = vec![0.0f32; N_BUF];
+        let thr = be.knn_learn(&ex, &mask, &mut scores).unwrap();
         let valid: Vec<f32> = scores[..40].to_vec();
         let above = valid.iter().filter(|&&s| s > thr).count();
         // 90th percentile: ~10% strictly above
@@ -362,9 +383,11 @@ mod tests {
             }
             mask[slot] = 1.0;
             slot = (slot + 1) % N_BUF;
-            let (s_inc, t_inc) = cached.knn_learn(&ex, &mask).unwrap();
+            let mut s_inc = vec![0.0f32; N_BUF];
+            let t_inc = cached.knn_learn(&ex, &mask, &mut s_inc).unwrap();
             let mut fresh = NativeBackend::new();
-            let (s_full, t_full) = fresh.knn_learn(&ex, &mask).unwrap();
+            let mut s_full = vec![0.0f32; N_BUF];
+            let t_full = fresh.knn_learn(&ex, &mask, &mut s_full).unwrap();
             assert_eq!(s_inc, s_full, "scores diverged at step {step}");
             assert_eq!(t_inc, t_full, "threshold diverged at step {step}");
         }
@@ -375,7 +398,8 @@ mod tests {
         let mut be = NativeBackend::new();
         let mut rng = Rng::new(2);
         let (ex, mask) = filled_buffer(&mut rng, K_NEIGHBORS);
-        let (scores, thr) = be.knn_learn(&ex, &mask).unwrap();
+        let mut scores = vec![9.0f32; N_BUF];
+        let thr = be.knn_learn(&ex, &mask, &mut scores).unwrap();
         assert!(scores.iter().all(|&s| s == 0.0));
         assert_eq!(thr, 0.0);
     }
@@ -417,12 +441,14 @@ mod tests {
         let mut x = vec![0.0f32; FEAT_DIM];
         x[0] = 2.0;
         x[1] = 2.0;
-        let (new_w, acts) = be.kmeans_learn(&w, &x, 0.5).unwrap();
+        let mut acts = [0.0f32; N_CLUSTERS];
+        let win = be.kmeans_learn(&mut w, &x, 0.5, &mut acts).unwrap();
+        assert_eq!(win, 0);
         assert!(acts[0] > acts[1]);
-        assert!((new_w[0] - 1.5).abs() < 1e-6);
-        assert!((new_w[1] - 1.0).abs() < 1e-6);
+        assert!((w[0] - 1.5).abs() < 1e-6);
+        assert!((w[1] - 1.0).abs() < 1e-6);
         // cluster 1 untouched
-        assert!(new_w[FEAT_DIM..].iter().all(|&v| v == 0.0));
+        assert!(w[FEAT_DIM..].iter().all(|&v| v == 0.0));
     }
 
     #[test]

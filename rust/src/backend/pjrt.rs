@@ -95,11 +95,11 @@ impl ComputeBackend for PjrtBackend {
         Ok(out.remove(0)) // (C, 8) row-major == flattened FEAT_DIM layout
     }
 
-    fn knn_learn(&mut self, examples: &[f32], mask: &[f32]) -> Result<(Vec<f32>, f32)> {
+    fn knn_learn(&mut self, examples: &[f32], mask: &[f32], scores: &mut [f32]) -> Result<f32> {
         self.ensure_knn_cache(examples, mask)?;
-        let mut out = self.run_knn("knn_learn", &[])?;
-        let thr = out[1][0];
-        Ok((out.remove(0), thr))
+        let out = self.run_knn("knn_learn", &[])?;
+        scores.copy_from_slice(&out[0]);
+        Ok(out[1][0])
     }
 
     fn knn_infer(&mut self, examples: &[f32], mask: &[f32], x: &[f32]) -> Result<f32> {
@@ -122,14 +122,32 @@ impl ComputeBackend for PjrtBackend {
 
     fn kmeans_learn(
         &mut self,
-        w: &[f32],
+        w: &mut [f32],
         x: &[f32],
         eta: f32,
-    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        acts: &mut [f32; N_CLUSTERS],
+    ) -> Result<usize> {
         let eta_buf = [eta];
-        let mut out = self.run("kmeans_learn", &[w, x, &eta_buf])?;
-        let acts = out.remove(1);
-        Ok((out.remove(0), acts))
+        let out = self.run("kmeans_learn", &[&w[..], x, &eta_buf])?;
+        acts.copy_from_slice(&out[1]);
+        // Recover the winner the kernel actually updated from the weight
+        // delta — re-deriving argmax host-side could disagree with the
+        // HLO argmax on activation ties and dirty-mark the wrong row.
+        let new_w = &out[0];
+        let moved = (0..N_CLUSTERS).find(|&c| {
+            new_w[c * FEAT_DIM..(c + 1) * FEAT_DIM] != w[c * FEAT_DIM..(c + 1) * FEAT_DIM]
+        });
+        w.copy_from_slice(new_w);
+        // no row moved (η = 0 or winner already at x): any maximal row is
+        // equivalent for delta purposes — fall back to host argmax
+        let winner = moved.unwrap_or_else(|| {
+            acts.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        });
+        Ok(winner)
     }
 
     fn kmeans_infer(&mut self, w: &[f32], x: &[f32]) -> Result<Vec<f32>> {

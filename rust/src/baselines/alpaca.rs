@@ -125,6 +125,7 @@ mod tests {
             quality: 0.0,
             window_learns: 0,
             window_infers: 0,
+            window_cycle: 1,
         }
     }
 

@@ -75,6 +75,7 @@ mod tests {
             quality: 0.0,
             window_learns: 0,
             window_infers: 0,
+            window_cycle: 1,
         };
         let mut m = MayflyScheduler::new(1.0, 1);
         let mut a = DutyCycleScheduler::new(1.0);

@@ -30,7 +30,13 @@ fn c(n: usize) -> f64 {
     2.0 * ((n - 1.0).ln() + 0.5772156649) - 2.0 * (n - 1.0) / n
 }
 
-fn build(data: &mut [usize], points: &[Vec<f32>], depth: usize, max_depth: usize, rng: &mut Rng) -> Node {
+fn build(
+    data: &mut [usize],
+    points: &[Vec<f32>],
+    depth: usize,
+    max_depth: usize,
+    rng: &mut Rng,
+) -> Node {
     if data.len() <= 1 || depth >= max_depth {
         return Node::Leaf { size: data.len() };
     }

@@ -84,7 +84,7 @@ impl Learner for RunningMeanThreshold {
         self.n
     }
 
-    fn save(&self, nvm: &mut Nvm) -> Result<()> {
+    fn save(&mut self, nvm: &mut Nvm) -> Result<()> {
         nvm.write_f32s("thr/state", &[self.mean, self.var])?;
         nvm.write_u64("thr/n", self.n)
     }

@@ -55,6 +55,13 @@ pub struct CostModel {
     pub sel_round_robin: ActionCost,
     pub sel_k_last: ActionCost,
     pub sel_randomized: ActionCost,
+    /// Energy charged per byte of checkpoint NVM traffic, µJ/B (FRAM
+    /// writes on the paper's MSP430FR5994 cost on the order of nJ/byte).
+    /// Default 0 keeps the calibrated per-action tables authoritative —
+    /// the paper's learn costs already include a full-model checkpoint;
+    /// set it non-zero to charge the *actual* (delta-sized) checkpoint
+    /// traffic instead, which the engine meters as `nvm_ckpt`.
+    pub nvm_uj_per_byte: f64,
 }
 
 impl CostModel {
@@ -99,6 +106,7 @@ impl CostModel {
             sel_round_robin: ActionCost::new(9.0, 700, 1),
             sel_k_last: ActionCost::new(270.0, 21_000, 1),
             sel_randomized: ActionCost::new(1.8, 140, 1),
+            nvm_uj_per_byte: 0.0,
         }
     }
 
@@ -125,6 +133,7 @@ impl CostModel {
             sel_round_robin: ActionCost::new(9.0, 700, 1),
             sel_k_last: ActionCost::new(270.0, 21_000, 1),
             sel_randomized: ActionCost::new(1.8, 140, 1),
+            nvm_uj_per_byte: 0.0,
         }
     }
 

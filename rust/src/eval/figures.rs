@@ -498,6 +498,7 @@ pub fn fig17(seed: u64) -> Result<FigData> {
         quality: 0.5,
         window_learns: 1,
         window_infers: 1,
+        window_cycle: 2,
     };
     let pending = vec![Action::Decide, Action::Sense];
     let meas = bench::bench("planner.next_action", 60, || {

@@ -11,12 +11,30 @@
 //! number of *labelled* examples (the semi-supervised budget) vote on the
 //! label of the cluster they fall into; unlabelled examples only move the
 //! cluster means.
+//!
+//! §Perf: `learn` updates the weights in place through the backend's
+//! in-place `kmeans_learn` (no per-step weight reallocation), and
+//! [`Learner::save_delta`] checkpoints only the updated cluster row plus
+//! the misc scalars (see `learning::knn` for the generation-guard
+//! contract).
 
 use crate::backend::shapes::*;
 use crate::backend::ComputeBackend;
 use crate::error::Result;
 use crate::learning::{Example, Learner, Verdict};
-use crate::nvm::Nvm;
+use crate::nvm::{KeyId, Nvm};
+
+/// Interned NVM handles for the learner's keys (resolved once per store).
+#[derive(Debug, Clone, Copy)]
+struct KmeansKeys {
+    w: KeyId,
+    misc: KeyId,
+    learned: KeyId,
+    gen: KeyId,
+}
+
+/// Misc scalar block: eta, quality, budgets + per-cluster votes/EMA.
+const MISC_LEN: usize = 4 + 3 * N_CLUSTERS;
 
 /// Competitive-learning k-means with cluster labelling.
 #[derive(Debug, Clone)]
@@ -36,7 +54,12 @@ pub struct ClusterLabelLearner {
     /// used by `evaluate`).
     act_ema: [f32; N_CLUSTERS],
     quality: f32,
-    key: &'static str,
+    /// Cached key handles for the store identified by the `u64`.
+    keys: Option<(u64, KmeansKeys)>,
+    /// Cluster rows updated since the last save (delta-checkpoint set).
+    dirty_rows: Vec<usize>,
+    /// Generation of this learner's last save (see `learning::knn`).
+    save_gen: u64,
 }
 
 impl ClusterLabelLearner {
@@ -58,7 +81,9 @@ impl ClusterLabelLearner {
             learned: 0,
             act_ema: [0.0; N_CLUSTERS],
             quality: 0.0,
-            key: "kmeans",
+            keys: None,
+            dirty_rows: Vec::with_capacity(N_CLUSTERS),
+            save_gen: 0,
         }
     }
 
@@ -102,6 +127,56 @@ impl ClusterLabelLearner {
             self.label_budget -= 1;
         }
     }
+
+    /// Record a cluster row as dirty for the next delta save.
+    fn mark_dirty(&mut self, row: usize) {
+        if !self.dirty_rows.contains(&row) {
+            self.dirty_rows.push(row);
+        }
+    }
+
+    /// Pack the misc scalar block (everything but the weight matrix).
+    fn misc_block(&self) -> [f32; MISC_LEN] {
+        let mut misc = [0.0f32; MISC_LEN];
+        misc[0] = self.eta;
+        misc[1] = self.quality;
+        misc[2] = self.label_budget as f32;
+        misc[3] = self.initial_budget as f32;
+        for c in 0..N_CLUSTERS {
+            misc[4 + 3 * c] = self.votes[c][0] as f32;
+            misc[5 + 3 * c] = self.votes[c][1] as f32;
+            misc[6 + 3 * c] = self.act_ema[c];
+        }
+        misc
+    }
+
+    /// Key handles for `nvm`, interned once and re-resolved only when the
+    /// learner meets a different store.
+    fn keys(&mut self, nvm: &mut Nvm) -> KmeansKeys {
+        match self.keys {
+            Some((sid, k)) if sid == nvm.store_id() => k,
+            _ => {
+                let k = KmeansKeys {
+                    w: nvm.intern("kmeans/w"),
+                    misc: nvm.intern("kmeans/misc"),
+                    learned: nvm.intern("kmeans/learned"),
+                    gen: nvm.intern("kmeans/gen"),
+                };
+                self.keys = Some((nvm.store_id(), k));
+                k
+            }
+        }
+    }
+
+    /// Write the non-weight state (shared by full and delta saves).
+    fn save_tail(&mut self, nvm: &mut Nvm, k: KmeansKeys) -> Result<()> {
+        nvm.write_f32s_id(k.misc, &self.misc_block())?;
+        nvm.write_u64_id(k.learned, self.learned)?;
+        self.save_gen = self.save_gen.wrapping_add(1);
+        nvm.write_u64_id(k.gen, self.save_gen)?;
+        self.dirty_rows.clear();
+        Ok(())
+    }
 }
 
 fn argmax(xs: &[f32]) -> usize {
@@ -122,14 +197,15 @@ impl Learner for ClusterLabelLearner {
         if self.learned < N_CLUSTERS as u64 {
             let c = self.learned as usize;
             self.w[c * FEAT_DIM..(c + 1) * FEAT_DIM].copy_from_slice(&ex.features);
+            self.mark_dirty(c);
             self.spend_label(c, ex.truth_abnormal);
             self.learned += 1;
             return Ok(());
         }
-        let (new_w, acts) = be.kmeans_learn(&self.w, &ex.features, self.eta)?;
-        self.w = new_w;
-        let win = argmax(&acts);
+        let mut acts = [0.0f32; N_CLUSTERS];
+        let win = be.kmeans_learn(&mut self.w, &ex.features, self.eta, &mut acts)?;
         self.act_ema[win] = 0.9 * self.act_ema[win] + 0.1 * acts[win];
+        self.mark_dirty(win);
         self.spend_label(win, ex.truth_abnormal);
         self.learned += 1;
         Ok(())
@@ -165,44 +241,45 @@ impl Learner for ClusterLabelLearner {
         self.learned
     }
 
-    fn save(&self, nvm: &mut Nvm) -> Result<()> {
-        nvm.write_f32s(&format!("{}/w", self.key), &self.w)?;
-        let mut misc = vec![
-            self.eta,
-            self.quality,
-            self.label_budget as f32,
-            self.initial_budget as f32,
-        ];
-        for c in 0..N_CLUSTERS {
-            misc.push(self.votes[c][0] as f32);
-            misc.push(self.votes[c][1] as f32);
-            misc.push(self.act_ema[c]);
+    fn save(&mut self, nvm: &mut Nvm) -> Result<()> {
+        let k = self.keys(nvm);
+        nvm.write_f32s_id(k.w, &self.w)?;
+        self.save_tail(nvm, k)
+    }
+
+    fn save_delta(&mut self, nvm: &mut Nvm) -> Result<()> {
+        let k = self.keys(nvm);
+        let fresh = self.save_gen != 0
+            && nvm.read_u64_id(k.gen) == self.save_gen
+            && nvm.value_len(k.w) == Some(N_CLUSTERS * FEAT_DIM * 4);
+        if !fresh {
+            return self.save(nvm);
         }
-        nvm.write_f32s(&format!("{}/misc", self.key), &misc)?;
-        nvm.write_u64(&format!("{}/learned", self.key), self.learned)?;
-        Ok(())
+        for &c in &self.dirty_rows {
+            let row = &self.w[c * FEAT_DIM..(c + 1) * FEAT_DIM];
+            nvm.write_f32s_at(k.w, c * FEAT_DIM, row)?;
+        }
+        self.save_tail(nvm, k)
     }
 
     fn restore(&mut self, nvm: &mut Nvm) -> Result<()> {
-        if let Some(w) = nvm.read_f32s(&format!("{}/w", self.key)) {
-            if w.len() == N_CLUSTERS * FEAT_DIM {
-                self.w = w;
+        let k = self.keys(nvm);
+        nvm.read_f32s_into(k.w, &mut self.w);
+        let mut m = [0.0f32; MISC_LEN];
+        if nvm.read_f32s_into(k.misc, &mut m) {
+            self.eta = m[0];
+            self.quality = m[1];
+            self.label_budget = m[2] as u32;
+            self.initial_budget = m[3] as u32;
+            for c in 0..N_CLUSTERS {
+                self.votes[c][0] = m[4 + 3 * c] as u32;
+                self.votes[c][1] = m[5 + 3 * c] as u32;
+                self.act_ema[c] = m[6 + 3 * c];
             }
         }
-        if let Some(m) = nvm.read_f32s(&format!("{}/misc", self.key)) {
-            if m.len() == 4 + 3 * N_CLUSTERS {
-                self.eta = m[0];
-                self.quality = m[1];
-                self.label_budget = m[2] as u32;
-                self.initial_budget = m[3] as u32;
-                for c in 0..N_CLUSTERS {
-                    self.votes[c][0] = m[4 + 3 * c] as u32;
-                    self.votes[c][1] = m[5 + 3 * c] as u32;
-                    self.act_ema[c] = m[6 + 3 * c];
-                }
-            }
-        }
-        self.learned = nvm.read_u64(&format!("{}/learned", self.key));
+        self.learned = nvm.read_u64_id(k.learned);
+        self.save_gen = nvm.read_u64_id(k.gen);
+        self.dirty_rows.clear();
         Ok(())
     }
 
@@ -295,6 +372,34 @@ mod tests {
             l.infer(&ex, &mut be).unwrap(),
             l2.infer(&ex, &mut be).unwrap()
         );
+    }
+
+    #[test]
+    fn delta_save_restores_bit_identically_and_writes_less() {
+        let mut be = NativeBackend::new();
+        let mut nvm = Nvm::new();
+        let mut l = ClusterLabelLearner::new(11, 20);
+        let mut rng = Rng::new(11);
+        let mut after_full = 0;
+        for i in 0..40 {
+            l.learn(&population(&mut rng, i % 2 == 0), &mut be).unwrap();
+            l.save_delta(&mut nvm).unwrap();
+            if i == 0 {
+                after_full = nvm.bytes_written;
+            }
+        }
+        // steady-state deltas: winner row + misc + learned + gen
+        let per_delta = (nvm.bytes_written - after_full) / 39;
+        assert_eq!(
+            per_delta as usize,
+            FEAT_DIM * 4 + MISC_LEN * 4 + 8 + 8,
+            "unexpected delta footprint"
+        );
+        let mut l2 = ClusterLabelLearner::new(999, 0);
+        l2.restore(&mut nvm).unwrap();
+        assert_eq!(l2.weights(), l.weights());
+        assert_eq!(l2.learned_count(), l.learned_count());
+        assert_eq!(l2.votes, l.votes);
     }
 
     #[test]

@@ -7,12 +7,29 @@
 //! new example and classifies it abnormal iff AS_new > AS_TH. The
 //! threshold evolves as new examples are learned — the paper's
 //! "anomaly threshold AS_TH evolves over time".
+//!
+//! §Perf: checkpointing is two-speed. [`Learner::save`] writes the whole
+//! model (boot / restore points); [`Learner::save_delta`] writes only the
+//! ring slots overwritten since the last save plus the scalars — O(dirty)
+//! NVM traffic per learn instead of O(model) — guarded by a generation
+//! counter so an aborted (power-failed) save degrades to a full save, not
+//! a corrupt delta.
 
 use crate::backend::shapes::*;
 use crate::backend::ComputeBackend;
 use crate::error::Result;
 use crate::learning::{Example, Learner, Verdict};
-use crate::nvm::Nvm;
+use crate::nvm::{KeyId, Nvm};
+
+/// Interned NVM handles for the learner's keys (resolved once per store).
+#[derive(Debug, Clone, Copy)]
+struct KnnKeys {
+    buf: KeyId,
+    mask: KeyId,
+    scalars: KeyId,
+    learned: KeyId,
+    gen: KeyId,
+}
 
 /// k-NN anomaly learner state (all state is NVM-checkpointable).
 #[derive(Debug, Clone)]
@@ -29,8 +46,15 @@ pub struct KnnAnomalyLearner {
     threshold: f32,
     /// Last `evaluate` quality indicator.
     quality: f32,
-    /// NVM key prefix (several learners may share one store).
-    key: &'static str,
+    /// Scratch for the backend's per-example scores (reused every learn).
+    scores: Vec<f32>,
+    /// Cached key handles for the store identified by the `u64`.
+    keys: Option<(u64, KnnKeys)>,
+    /// Ring slots overwritten since the last save (delta-checkpoint set).
+    dirty_slots: Vec<usize>,
+    /// Generation of this learner's last save (mirrors the NVM `knn/gen`
+    /// counter; a mismatch means NVM lost a save — full save required).
+    save_gen: u64,
 }
 
 impl Default for KnnAnomalyLearner {
@@ -48,7 +72,10 @@ impl KnnAnomalyLearner {
             learned: 0,
             threshold: 0.0,
             quality: 0.0,
-            key: "knn",
+            scores: vec![0.0; N_BUF],
+            keys: None,
+            dirty_slots: Vec::with_capacity(N_BUF),
+            save_gen: 0,
         }
     }
 
@@ -71,6 +98,37 @@ impl KnnAnomalyLearner {
     pub fn score(&self, ex: &Example, be: &mut dyn ComputeBackend) -> Result<f32> {
         be.knn_infer(&self.buf, &self.mask, &ex.features)
     }
+
+    /// Key handles for `nvm`, interned once and re-resolved only when the
+    /// learner meets a different store.
+    fn keys(&mut self, nvm: &mut Nvm) -> KnnKeys {
+        match self.keys {
+            Some((sid, k)) if sid == nvm.store_id() => k,
+            _ => {
+                let k = KnnKeys {
+                    buf: nvm.intern("knn/buf"),
+                    mask: nvm.intern("knn/mask"),
+                    scalars: nvm.intern("knn/scalars"),
+                    learned: nvm.intern("knn/learned"),
+                    gen: nvm.intern("knn/gen"),
+                };
+                self.keys = Some((nvm.store_id(), k));
+                k
+            }
+        }
+    }
+
+    /// Write the non-buffer state — scalars, learned counter, generation
+    /// guard — and clear the dirty set (shared by full and delta saves so
+    /// the two checkpoint paths cannot drift).
+    fn save_tail(&mut self, nvm: &mut Nvm, k: KnnKeys) -> Result<()> {
+        nvm.write_f32s_id(k.scalars, &[self.next as f32, self.threshold, self.quality])?;
+        nvm.write_u64_id(k.learned, self.learned)?;
+        self.save_gen = self.save_gen.wrapping_add(1);
+        nvm.write_u64_id(k.gen, self.save_gen)?;
+        self.dirty_slots.clear();
+        Ok(())
+    }
 }
 
 impl Learner for KnnAnomalyLearner {
@@ -81,8 +139,10 @@ impl Learner for KnnAnomalyLearner {
         self.mask[slot] = 1.0;
         self.next = (self.next + 1) % N_BUF;
         self.learned += 1;
-        let (_scores, thr) = be.knn_learn(&self.buf, &self.mask)?;
-        self.threshold = thr;
+        if !self.dirty_slots.contains(&slot) {
+            self.dirty_slots.push(slot);
+        }
+        self.threshold = be.knn_learn(&self.buf, &self.mask, &mut self.scores)?;
         Ok(())
     }
 
@@ -113,11 +173,11 @@ impl Learner for KnnAnomalyLearner {
             self.quality = 0.0;
             return Ok(0.0);
         }
-        let (scores, thr) = be.knn_learn(&self.buf, &self.mask)?;
-        self.threshold = thr;
+        self.threshold = be.knn_learn(&self.buf, &self.mask, &mut self.scores)?;
+        let thr = self.threshold;
         let n = self.buffered();
         let ok = (0..N_BUF)
-            .filter(|&i| self.mask[i] > 0.5 && scores[i] <= thr)
+            .filter(|&i| self.mask[i] > 0.5 && self.scores[i] <= thr)
             .count();
         self.quality = ok as f32 / n as f32;
         Ok(self.quality)
@@ -127,36 +187,45 @@ impl Learner for KnnAnomalyLearner {
         self.learned
     }
 
-    fn save(&self, nvm: &mut Nvm) -> Result<()> {
-        nvm.write_f32s(&format!("{}/buf", self.key), &self.buf)?;
-        nvm.write_f32s(&format!("{}/mask", self.key), &self.mask)?;
-        nvm.write_f32s(
-            &format!("{}/scalars", self.key),
-            &[self.next as f32, self.threshold, self.quality],
-        )?;
-        nvm.write_u64(&format!("{}/learned", self.key), self.learned)?;
-        Ok(())
+    fn save(&mut self, nvm: &mut Nvm) -> Result<()> {
+        let k = self.keys(nvm);
+        nvm.write_f32s_id(k.buf, &self.buf)?;
+        nvm.write_f32s_id(k.mask, &self.mask)?;
+        self.save_tail(nvm, k)
+    }
+
+    fn save_delta(&mut self, nvm: &mut Nvm) -> Result<()> {
+        let k = self.keys(nvm);
+        // Delta saves assume NVM holds this learner's previous save; if it
+        // does not (first boot, foreign store, or an aborted save left the
+        // generation behind), fall back to the full checkpoint.
+        let fresh = self.save_gen != 0
+            && nvm.read_u64_id(k.gen) == self.save_gen
+            && nvm.value_len(k.buf) == Some(N_BUF * FEAT_DIM * 4);
+        if !fresh {
+            return self.save(nvm);
+        }
+        for &s in &self.dirty_slots {
+            let row = &self.buf[s * FEAT_DIM..(s + 1) * FEAT_DIM];
+            nvm.write_f32s_at(k.buf, s * FEAT_DIM, row)?;
+            nvm.write_f32s_at(k.mask, s, &self.mask[s..s + 1])?;
+        }
+        self.save_tail(nvm, k)
     }
 
     fn restore(&mut self, nvm: &mut Nvm) -> Result<()> {
-        if let Some(buf) = nvm.read_f32s(&format!("{}/buf", self.key)) {
-            if buf.len() == N_BUF * FEAT_DIM {
-                self.buf = buf;
-            }
+        let k = self.keys(nvm);
+        nvm.read_f32s_into(k.buf, &mut self.buf);
+        nvm.read_f32s_into(k.mask, &mut self.mask);
+        let mut s = [0.0f32; 3];
+        if nvm.read_f32s_into(k.scalars, &mut s) {
+            self.next = (s[0] as usize) % N_BUF;
+            self.threshold = s[1];
+            self.quality = s[2];
         }
-        if let Some(mask) = nvm.read_f32s(&format!("{}/mask", self.key)) {
-            if mask.len() == N_BUF {
-                self.mask = mask;
-            }
-        }
-        if let Some(s) = nvm.read_f32s(&format!("{}/scalars", self.key)) {
-            if s.len() == 3 {
-                self.next = (s[0] as usize) % N_BUF;
-                self.threshold = s[1];
-                self.quality = s[2];
-            }
-        }
-        self.learned = nvm.read_u64(&format!("{}/learned", self.key));
+        self.learned = nvm.read_u64_id(k.learned);
+        self.save_gen = nvm.read_u64_id(k.gen);
+        self.dirty_slots.clear();
         Ok(())
     }
 
@@ -246,6 +315,44 @@ mod tests {
             l.infer(&ex, &mut be).unwrap(),
             l2.infer(&ex, &mut be).unwrap()
         );
+    }
+
+    #[test]
+    fn delta_save_restores_bit_identically() {
+        let mut be = NativeBackend::new();
+        let mut nvm = Nvm::new();
+        let mut l = KnnAnomalyLearner::new();
+        let mut rng = Rng::new(6);
+        for t in 0..(N_BUF as u64 + 20) {
+            l.learn(&normal_ex(&mut rng, t), &mut be).unwrap();
+            l.save_delta(&mut nvm).unwrap();
+        }
+        let mut l2 = KnnAnomalyLearner::new();
+        l2.restore(&mut nvm).unwrap();
+        assert_eq!(l2.buffer().0, l.buffer().0);
+        assert_eq!(l2.buffer().1, l.buffer().1);
+        assert_eq!(l2.threshold(), l.threshold());
+        assert_eq!(l2.learned_count(), l.learned_count());
+    }
+
+    #[test]
+    fn delta_save_writes_o_dirty_not_o_model() {
+        let mut be = NativeBackend::new();
+        let mut nvm = Nvm::new();
+        let mut l = KnnAnomalyLearner::new();
+        let mut rng = Rng::new(7);
+        l.learn(&normal_ex(&mut rng, 0), &mut be).unwrap();
+        l.save_delta(&mut nvm).unwrap(); // first save is a full save
+        let full = nvm.bytes_written;
+        l.learn(&normal_ex(&mut rng, 1), &mut be).unwrap();
+        l.save_delta(&mut nvm).unwrap(); // steady state: one dirty row
+        let delta = nvm.bytes_written - full;
+        assert!(
+            delta as usize * 5 <= full as usize,
+            "delta {delta} B vs full {full} B"
+        );
+        // one f32 row + one mask slot + scalars + learned + gen
+        assert_eq!(delta as usize, FEAT_DIM * 4 + 4 + 12 + 8 + 8);
     }
 
     #[test]

@@ -76,8 +76,21 @@ pub trait Learner: Send {
     /// Number of examples learned so far.
     fn learned_count(&self) -> u64;
 
-    /// Checkpoint model state to NVM.
-    fn save(&self, nvm: &mut Nvm) -> Result<()>;
+    /// Full checkpoint of the model state to NVM (boot, restore points).
+    /// `&mut self` so implementations can cache interned
+    /// [`crate::nvm::KeyId`] handles and clear their dirty tracking.
+    fn save(&mut self, nvm: &mut Nvm) -> Result<()>;
+
+    /// Cheap steady-state checkpoint after one `learn`: write only what
+    /// changed since the last save (O(dirty) NVM traffic instead of
+    /// O(model)). Implementations must fall back to a full [`Learner::save`]
+    /// whenever NVM does not hold their own last save — first boot, a
+    /// foreign store, or an aborted (power-failed) save detected via a
+    /// generation counter — so the committed NVM state is always a
+    /// consistent snapshot. Default: a full save.
+    fn save_delta(&mut self, nvm: &mut Nvm) -> Result<()> {
+        self.save(nvm)
+    }
 
     /// Restore model state from NVM (no-op if nothing saved).
     fn restore(&mut self, nvm: &mut Nvm) -> Result<()>;

@@ -236,7 +236,10 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         t0.elapsed().as_secs_f64()
     );
     if failed > 0 {
-        bail!("{failed} of {} sweep cell(s) failed (see FAILED rows above; per-cell errors are in the JSON files)", outcomes.len());
+        bail!(
+            "{failed} of {} sweep cell(s) failed (see FAILED rows above; per-cell errors are in the JSON files)",
+            outcomes.len()
+        );
     }
     Ok(())
 }

@@ -12,25 +12,137 @@
 //! buffer with read-your-writes semantics, `commit` on action completion,
 //! `abort` on power failure, and read/write accounting so the energy model
 //! can charge NVM traffic.
+//!
+//! §Perf — the store is built for the steady-state learn hot path:
+//!
+//! * Keys are interned once into [`KeyId`] handles ([`Nvm::intern`]); the
+//!   handle paths (`write_id`, `read_id`, `write_f32s_at`, ...) never
+//!   touch a string or allocate a key.
+//! * Values live in a slab indexed by handle; a running byte counter makes
+//!   the capacity check O(1) instead of an O(#keys) rescan per write.
+//! * Range writes ([`Nvm::write_at`] / [`Nvm::write_f32s_at`]) stage only
+//!   the dirty span — the staging buffer records per-slot dirty ranges —
+//!   so a delta checkpoint of one ring-buffer row costs that row's bytes,
+//!   not the model's.
+//! * Reads can borrow ([`Nvm::read_id`]) or decode into a caller buffer
+//!   ([`Nvm::read_f32s_into`]) instead of cloning.
+//!
+//! Every buffer (staging, dirty lists) keeps its capacity across
+//! transactions, so after warm-up the write/commit cycle performs no heap
+//! allocation.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::error::{Error, Result};
 
-/// Byte-granular non-volatile store with transactional action semantics.
+/// Interned key handle: resolve a string key once ([`Nvm::intern`]), then
+/// address the slot directly. Handles are only meaningful for the store
+/// that issued them; [`Nvm::store_id`] lets callers detect a foreign
+/// store and re-intern. Clones get a fresh identity — their slot layout
+/// is copied, so re-interning the same names yields the same slots, but
+/// handles interned on either side *after* the clone would silently
+/// alias otherwise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct KeyId(u32);
+
+/// Distinct identity per store (including clones).
+static NEXT_STORE_ID: AtomicU64 = AtomicU64::new(1);
+
+/// One slab slot: a committed value plus its reusable staging buffer.
 #[derive(Debug, Clone, Default)]
+struct Slot {
+    name: String,
+    committed: Vec<u8>,
+    /// Does a committed value exist? (`committed` keeps its capacity after
+    /// the value conceptually disappears, so emptiness is not absence.)
+    present: bool,
+    /// Staging buffer for the open transaction (capacity reused).
+    staged: Vec<u8>,
+    /// Is this slot staged in the open transaction?
+    staged_present: bool,
+    /// Byte ranges of `staged` dirtied by the open transaction
+    /// (start, end). A full overwrite records one whole-value range.
+    dirty: Vec<(usize, usize)>,
+}
+
+impl Slot {
+    /// Length the slot would have if the open transaction committed now.
+    fn pending_len(&self) -> usize {
+        if self.staged_present {
+            self.staged.len()
+        } else if self.present {
+            self.committed.len()
+        } else {
+            0
+        }
+    }
+}
+
+/// Byte-granular non-volatile store with transactional action semantics.
+#[derive(Debug)]
 pub struct Nvm {
-    committed: BTreeMap<String, Vec<u8>>,
-    /// Writes staged by the in-flight action (None = no action open).
-    staged: Option<BTreeMap<String, Vec<u8>>>,
+    slots: Vec<Slot>,
+    index: BTreeMap<String, KeyId>,
+    /// Is an action transaction open?
+    txn_open: bool,
+    /// Slots staged in the open transaction (commit/abort walk this).
+    txn_dirty: Vec<KeyId>,
+    /// Committed bytes (running counter; O(1) capacity checks).
+    used: usize,
+    /// Bytes the store would hold if the open transaction committed.
+    staged_used: usize,
     /// Capacity limit in bytes (0 = unlimited). The paper's platforms
     /// range from 512 B (PIC) to 256 KB (MSP430 FRAM).
     pub capacity: usize,
+    store_id: u64,
     // accounting
     pub bytes_written: u64,
     pub bytes_read: u64,
     pub commits: u64,
     pub aborts: u64,
+}
+
+impl Clone for Nvm {
+    /// Clones copy the contents but get a **fresh** [`Nvm::store_id`]:
+    /// cached [`KeyId`] handles from the original still point at the same
+    /// names in the copy, but holders re-intern (idempotent) instead of
+    /// risking aliasing with keys interned after the clone diverged.
+    fn clone(&self) -> Self {
+        Nvm {
+            slots: self.slots.clone(),
+            index: self.index.clone(),
+            txn_open: self.txn_open,
+            txn_dirty: self.txn_dirty.clone(),
+            used: self.used,
+            staged_used: self.staged_used,
+            capacity: self.capacity,
+            store_id: NEXT_STORE_ID.fetch_add(1, Ordering::Relaxed),
+            bytes_written: self.bytes_written,
+            bytes_read: self.bytes_read,
+            commits: self.commits,
+            aborts: self.aborts,
+        }
+    }
+}
+
+impl Default for Nvm {
+    fn default() -> Self {
+        Nvm {
+            slots: Vec::new(),
+            index: BTreeMap::new(),
+            txn_open: false,
+            txn_dirty: Vec::new(),
+            used: 0,
+            staged_used: 0,
+            capacity: 0,
+            store_id: NEXT_STORE_ID.fetch_add(1, Ordering::Relaxed),
+            bytes_written: 0,
+            bytes_read: 0,
+            commits: 0,
+            aborts: 0,
+        }
+    }
 }
 
 impl Nvm {
@@ -47,113 +159,351 @@ impl Nvm {
         }
     }
 
+    /// Identity of this store (distinct per store, including clones).
+    /// Callers caching [`KeyId`] handles compare this to detect a foreign
+    /// store and re-intern.
+    pub fn store_id(&self) -> u64 {
+        self.store_id
+    }
+
+    /// Resolve `key` to a handle, creating an (absent) slot on first use.
+    /// The only key path that allocates; do it once at construction.
+    pub fn intern(&mut self, key: &str) -> KeyId {
+        if let Some(&id) = self.index.get(key) {
+            return id;
+        }
+        let id = KeyId(self.slots.len() as u32);
+        self.slots.push(Slot {
+            name: key.to_string(),
+            ..Slot::default()
+        });
+        self.index.insert(key.to_string(), id);
+        id
+    }
+
+    /// Resolve without creating (reads of absent keys stay absent).
+    pub fn resolve(&self, key: &str) -> Option<KeyId> {
+        self.index.get(key).copied()
+    }
+
+    fn slot(&self, id: KeyId) -> Result<&Slot> {
+        self.slots
+            .get(id.0 as usize)
+            .ok_or_else(|| Error::Nvm(format!("stale key handle {}", id.0)))
+    }
+
     /// Open an action transaction. Nested transactions are an error (an
     /// intermittent MCU runs one action at a time).
     pub fn begin_action(&mut self) -> Result<()> {
-        if self.staged.is_some() {
+        if self.txn_open {
             return Err(Error::Nvm("action already in flight".into()));
         }
-        self.staged = Some(BTreeMap::new());
+        self.txn_open = true;
+        self.staged_used = self.used;
         Ok(())
     }
 
     /// Commit the in-flight action's writes.
     pub fn commit_action(&mut self) -> Result<()> {
-        let staged = self
-            .staged
-            .take()
-            .ok_or_else(|| Error::Nvm("commit without begin".into()))?;
-        for (k, v) in staged {
-            self.committed.insert(k, v);
+        if !self.txn_open {
+            return Err(Error::Nvm("commit without begin".into()));
         }
+        while let Some(id) = self.txn_dirty.pop() {
+            let slot = &mut self.slots[id.0 as usize];
+            if slot.staged_present {
+                // swap, not copy: the displaced committed buffer becomes
+                // the next transaction's staging capacity
+                std::mem::swap(&mut slot.committed, &mut slot.staged);
+                slot.present = true;
+                slot.staged_present = false;
+            }
+            slot.dirty.clear();
+        }
+        self.used = self.staged_used;
+        self.txn_open = false;
         self.commits += 1;
         Ok(())
     }
 
     /// Discard the in-flight action's writes (power failure mid-action).
     pub fn abort_action(&mut self) {
-        if self.staged.take().is_some() {
-            self.aborts += 1;
+        if !self.txn_open {
+            return;
         }
+        while let Some(id) = self.txn_dirty.pop() {
+            let slot = &mut self.slots[id.0 as usize];
+            slot.staged_present = false;
+            slot.dirty.clear();
+        }
+        self.staged_used = self.used;
+        self.txn_open = false;
+        self.aborts += 1;
     }
 
     /// Is an action transaction open?
     pub fn in_action(&self) -> bool {
-        self.staged.is_some()
+        self.txn_open
     }
 
-    fn used_bytes(&self) -> usize {
-        self.committed.values().map(|v| v.len()).sum()
+    /// Committed bytes (O(1) — a running counter, not a rescan).
+    pub fn used_bytes(&self) -> usize {
+        self.used
     }
 
-    /// Raw write. Inside an action the write is staged; outside (framework
-    /// bookkeeping, e.g. at boot) it commits immediately.
-    pub fn write(&mut self, key: &str, bytes: &[u8]) -> Result<()> {
-        if self.capacity > 0 {
-            let old = self
-                .staged
-                .as_ref()
-                .and_then(|s| s.get(key))
-                .or_else(|| self.committed.get(key))
-                .map(|v| v.len())
-                .unwrap_or(0);
-            if self.used_bytes() + bytes.len().saturating_sub(old) > self.capacity {
-                return Err(Error::Nvm(format!(
-                    "capacity exceeded writing `{key}` ({} B used of {} B)",
-                    self.used_bytes(),
-                    self.capacity
-                )));
-            }
+    /// Length of the value visible at `id` (staged, else committed).
+    pub fn value_len(&self, id: KeyId) -> Option<usize> {
+        let slot = self.slots.get(id.0 as usize)?;
+        if slot.staged_present {
+            Some(slot.staged.len())
+        } else if slot.present {
+            Some(slot.committed.len())
+        } else {
+            None
         }
-        self.bytes_written += bytes.len() as u64;
-        match &mut self.staged {
-            Some(s) => {
-                s.insert(key.to_string(), bytes.to_vec());
-            }
-            None => {
-                self.committed.insert(key.to_string(), bytes.to_vec());
-            }
+    }
+
+    /// Dirty byte ranges staged on `id` by the open transaction.
+    pub fn staged_dirty(&self, id: KeyId) -> &[(usize, usize)] {
+        self.slots
+            .get(id.0 as usize)
+            .map(|s| s.dirty.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// O(1) capacity check for a write that leaves `id` at `new_len`.
+    fn check_capacity(&self, id: KeyId, new_len: usize) -> Result<()> {
+        if self.capacity == 0 {
+            return Ok(());
+        }
+        let slot = &self.slots[id.0 as usize];
+        let base = if self.txn_open {
+            self.staged_used
+        } else {
+            self.used
+        };
+        let total = base - slot.pending_len() + new_len;
+        if total > self.capacity {
+            return Err(Error::Nvm(format!(
+                "capacity exceeded writing `{}` ({} B used of {} B)",
+                slot.name, base, self.capacity
+            )));
         }
         Ok(())
     }
 
-    /// Raw read with read-your-writes semantics.
-    pub fn read(&mut self, key: &str) -> Option<Vec<u8>> {
-        let v = self
-            .staged
-            .as_ref()
-            .and_then(|s| s.get(key))
-            .or_else(|| self.committed.get(key))
-            .cloned();
-        if let Some(ref v) = v {
-            self.bytes_read += v.len() as u64;
+    /// Bookkeep a write that left a slot at `new_len` (from `old_len`),
+    /// `dirtied` bytes of which were actually written (charged as NVM
+    /// traffic).
+    fn account_write(&mut self, old_len: usize, new_len: usize, dirtied: usize) {
+        self.bytes_written += dirtied as u64;
+        if self.txn_open {
+            self.staged_used = self.staged_used - old_len + new_len;
+        } else {
+            self.used = self.used - old_len + new_len;
         }
-        v
     }
 
-    /// Does a committed or staged value exist?
-    pub fn contains(&self, key: &str) -> bool {
-        self.staged
-            .as_ref()
-            .map(|s| s.contains_key(key))
+    /// Mark `id` staged in the open transaction (idempotent).
+    fn mark_staged(&mut self, id: KeyId) {
+        let slot = &mut self.slots[id.0 as usize];
+        if !slot.staged_present {
+            slot.staged_present = true;
+            self.txn_dirty.push(id);
+        }
+    }
+
+    /// Full-value write through a handle. Inside an action the write is
+    /// staged; outside (framework bookkeeping, e.g. at boot) it commits
+    /// immediately. Allocation-free once the slot's buffers have grown.
+    pub fn write_id(&mut self, id: KeyId, bytes: &[u8]) -> Result<()> {
+        self.slot(id)?;
+        self.check_capacity(id, bytes.len())?;
+        let old_len = self.slots[id.0 as usize].pending_len();
+        if self.txn_open {
+            {
+                let slot = &mut self.slots[id.0 as usize];
+                slot.staged.clear();
+                slot.staged.extend_from_slice(bytes);
+                // a full overwrite supersedes any earlier staged ranges
+                slot.dirty.clear();
+                slot.dirty.push((0, bytes.len()));
+            }
+            self.mark_staged(id);
+        } else {
+            let slot = &mut self.slots[id.0 as usize];
+            slot.committed.clear();
+            slot.committed.extend_from_slice(bytes);
+            slot.present = true;
+        }
+        self.account_write(old_len, bytes.len(), bytes.len());
+        Ok(())
+    }
+
+    /// Range write through a handle: overwrite `bytes` starting at byte
+    /// `offset`, extending the value (zero-filled) if needed. Only the
+    /// written span is charged as NVM traffic — the delta-checkpoint
+    /// primitive. Inside an action, the first touch of a slot seeds the
+    /// staging buffer from the committed value (read-your-writes), and the
+    /// dirty span is recorded per slot.
+    pub fn write_at(&mut self, id: KeyId, offset: usize, bytes: &[u8]) -> Result<()> {
+        self.slot(id)?;
+        let end = offset + bytes.len();
+        let old_len = self.slots[id.0 as usize].pending_len();
+        let new_len = old_len.max(end);
+        self.check_capacity(id, new_len)?;
+        if self.txn_open {
+            {
+                let slot = &mut self.slots[id.0 as usize];
+                if !slot.staged_present {
+                    slot.staged.clear();
+                    if slot.present {
+                        slot.staged.extend_from_slice(&slot.committed);
+                    }
+                }
+                if slot.staged.len() < end {
+                    slot.staged.resize(end, 0);
+                }
+                slot.staged[offset..end].copy_from_slice(bytes);
+                slot.dirty.push((offset, end));
+            }
+            self.mark_staged(id);
+        } else {
+            let slot = &mut self.slots[id.0 as usize];
+            if slot.committed.len() < end {
+                slot.committed.resize(end, 0);
+            }
+            slot.committed[offset..end].copy_from_slice(bytes);
+            slot.present = true;
+        }
+        self.account_write(old_len, new_len, bytes.len());
+        Ok(())
+    }
+
+    /// Borrowing read with read-your-writes semantics (no clone).
+    pub fn read_id(&mut self, id: KeyId) -> Option<&[u8]> {
+        let slot = self.slots.get(id.0 as usize)?;
+        let len = if slot.staged_present {
+            slot.staged.len()
+        } else if slot.present {
+            slot.committed.len()
+        } else {
+            return None;
+        };
+        self.bytes_read += len as u64;
+        let slot = &self.slots[id.0 as usize];
+        Some(if slot.staged_present {
+            &slot.staged
+        } else {
+            &slot.committed
+        })
+    }
+
+    /// Does a committed or staged value exist at `id`?
+    pub fn contains_id(&self, id: KeyId) -> bool {
+        self.slots
+            .get(id.0 as usize)
+            .map(|s| s.staged_present || s.present)
             .unwrap_or(false)
-            || self.committed.contains_key(key)
     }
 
-    // ---- typed helpers -------------------------------------------------
+    // ---- typed handle helpers ------------------------------------------
 
-    /// Write an f32 slice.
-    pub fn write_f32s(&mut self, key: &str, xs: &[f32]) -> Result<()> {
-        let mut bytes = Vec::with_capacity(xs.len() * 4);
-        for x in xs {
-            bytes.extend_from_slice(&x.to_le_bytes());
+    /// Write an f32 slice through a handle (full value).
+    pub fn write_f32s_id(&mut self, id: KeyId, xs: &[f32]) -> Result<()> {
+        self.slot(id)?;
+        let new_len = xs.len() * 4;
+        self.check_capacity(id, new_len)?;
+        let old_len = self.slots[id.0 as usize].pending_len();
+        if self.txn_open {
+            {
+                let slot = &mut self.slots[id.0 as usize];
+                slot.staged.clear();
+                for x in xs {
+                    slot.staged.extend_from_slice(&x.to_le_bytes());
+                }
+                // a full overwrite supersedes any earlier staged ranges
+                slot.dirty.clear();
+                slot.dirty.push((0, new_len));
+            }
+            self.mark_staged(id);
+        } else {
+            let slot = &mut self.slots[id.0 as usize];
+            slot.committed.clear();
+            for x in xs {
+                slot.committed.extend_from_slice(&x.to_le_bytes());
+            }
+            slot.present = true;
         }
-        self.write(key, &bytes)
+        self.account_write(old_len, new_len, new_len);
+        Ok(())
     }
 
-    /// Read an f32 slice.
-    pub fn read_f32s(&mut self, key: &str) -> Option<Vec<f32>> {
-        let bytes = self.read(key)?;
+    /// Range write of f32s at *element* offset `at` (the dirty-slot
+    /// delta-checkpoint primitive: one ring row, one cluster row).
+    pub fn write_f32s_at(&mut self, id: KeyId, at: usize, xs: &[f32]) -> Result<()> {
+        self.slot(id)?;
+        let offset = at * 4;
+        let end = offset + xs.len() * 4;
+        let old_len = self.slots[id.0 as usize].pending_len();
+        let new_len = old_len.max(end);
+        self.check_capacity(id, new_len)?;
+        if self.txn_open {
+            {
+                let slot = &mut self.slots[id.0 as usize];
+                if !slot.staged_present {
+                    slot.staged.clear();
+                    if slot.present {
+                        slot.staged.extend_from_slice(&slot.committed);
+                    }
+                }
+                if slot.staged.len() < end {
+                    slot.staged.resize(end, 0);
+                }
+                for (i, x) in xs.iter().enumerate() {
+                    slot.staged[offset + i * 4..offset + i * 4 + 4]
+                        .copy_from_slice(&x.to_le_bytes());
+                }
+                slot.dirty.push((offset, end));
+            }
+            self.mark_staged(id);
+        } else {
+            let slot = &mut self.slots[id.0 as usize];
+            if slot.committed.len() < end {
+                slot.committed.resize(end, 0);
+            }
+            for (i, x) in xs.iter().enumerate() {
+                slot.committed[offset + i * 4..offset + i * 4 + 4]
+                    .copy_from_slice(&x.to_le_bytes());
+            }
+            slot.present = true;
+        }
+        self.account_write(old_len, new_len, xs.len() * 4);
+        Ok(())
+    }
+
+    /// Decode the value at `id` into `out` without allocating. Returns
+    /// `false` (leaving `out` untouched, charging no read) unless a value
+    /// of exactly `out.len()` f32s exists.
+    pub fn read_f32s_into(&mut self, id: KeyId, out: &mut [f32]) -> bool {
+        if self.value_len(id) != Some(out.len() * 4) {
+            return false;
+        }
+        self.bytes_read += (out.len() * 4) as u64;
+        let slot = &self.slots[id.0 as usize];
+        let bytes: &[u8] = if slot.staged_present {
+            &slot.staged
+        } else {
+            &slot.committed
+        };
+        for (i, c) in bytes.chunks_exact(4).enumerate() {
+            out[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        true
+    }
+
+    /// Read an f32 slice through a handle (allocating convenience).
+    pub fn read_f32s_id(&mut self, id: KeyId) -> Option<Vec<f32>> {
+        let bytes = self.read_id(id)?;
         Some(
             bytes
                 .chunks_exact(4)
@@ -162,17 +512,64 @@ impl Nvm {
         )
     }
 
+    /// Write a u64 counter through a handle.
+    pub fn write_u64_id(&mut self, id: KeyId, v: u64) -> Result<()> {
+        self.write_id(id, &v.to_le_bytes())
+    }
+
+    /// Read a u64 counter through a handle (0 if absent).
+    pub fn read_u64_id(&mut self, id: KeyId) -> u64 {
+        match self.read_id(id) {
+            Some(b) if b.len() == 8 => u64::from_le_bytes(b.try_into().unwrap()),
+            _ => 0,
+        }
+    }
+
+    // ---- string-keyed compatibility API --------------------------------
+
+    /// Raw write by string key (interns; prefer [`Nvm::write_id`] on hot
+    /// paths).
+    pub fn write(&mut self, key: &str, bytes: &[u8]) -> Result<()> {
+        let id = self.intern(key);
+        self.write_id(id, bytes)
+    }
+
+    /// Raw read by string key with read-your-writes semantics (clones;
+    /// prefer [`Nvm::read_id`] / [`Nvm::read_f32s_into`] on hot paths).
+    pub fn read(&mut self, key: &str) -> Option<Vec<u8>> {
+        let id = self.resolve(key)?;
+        self.read_id(id).map(|b| b.to_vec())
+    }
+
+    /// Does a committed or staged value exist?
+    pub fn contains(&self, key: &str) -> bool {
+        self.resolve(key).map(|id| self.contains_id(id)).unwrap_or(false)
+    }
+
+    /// Write an f32 slice.
+    pub fn write_f32s(&mut self, key: &str, xs: &[f32]) -> Result<()> {
+        let id = self.intern(key);
+        self.write_f32s_id(id, xs)
+    }
+
+    /// Read an f32 slice.
+    pub fn read_f32s(&mut self, key: &str) -> Option<Vec<f32>> {
+        let id = self.resolve(key)?;
+        self.read_f32s_id(id)
+    }
+
     /// Write a u64 counter.
     pub fn write_u64(&mut self, key: &str, v: u64) -> Result<()> {
-        self.write(key, &v.to_le_bytes())
+        let id = self.intern(key);
+        self.write_u64_id(id, v)
     }
 
     /// Read a u64 counter (0 if absent).
     pub fn read_u64(&mut self, key: &str) -> u64 {
-        self.read(key)
-            .filter(|b| b.len() == 8)
-            .map(|b| u64::from_le_bytes(b.try_into().unwrap()))
-            .unwrap_or(0)
+        match self.resolve(key) {
+            Some(id) => self.read_u64_id(id),
+            None => 0,
+        }
     }
 }
 
@@ -230,6 +627,21 @@ mod tests {
         assert!(nvm.write_f32s("b", &[3.0]).is_err());
         // overwriting the same key with the same size is fine
         nvm.write_f32s("a", &[4.0, 5.0]).unwrap();
+        assert_eq!(nvm.used_bytes(), 8);
+    }
+
+    #[test]
+    fn capacity_counts_staged_shrinkage() {
+        // a staged shrink of one key frees budget for another in the same
+        // transaction (the running staged counter is exact, not the old
+        // committed-only rescan)
+        let mut nvm = Nvm::with_capacity(8);
+        nvm.write_f32s("a", &[1.0, 2.0]).unwrap();
+        nvm.begin_action().unwrap();
+        nvm.write_f32s("a", &[1.0]).unwrap();
+        nvm.write_f32s("b", &[2.0]).unwrap();
+        nvm.commit_action().unwrap();
+        assert_eq!(nvm.used_bytes(), 8);
     }
 
     #[test]
@@ -245,5 +657,103 @@ mod tests {
     fn missing_counter_defaults_zero() {
         let mut nvm = Nvm::new();
         assert_eq!(nvm.read_u64("nope"), 0);
+    }
+
+    #[test]
+    fn interned_handles_round_trip() {
+        let mut nvm = Nvm::new();
+        let id = nvm.intern("model/w");
+        assert_eq!(nvm.intern("model/w"), id); // stable
+        nvm.write_f32s_id(id, &[1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(nvm.read_f32s_id(id).unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(nvm.resolve("model/w"), Some(id));
+        assert_eq!(nvm.resolve("other"), None);
+        // the string API sees the same slot
+        assert_eq!(nvm.read_f32s("model/w").unwrap(), vec![1.0, 2.0, 3.0]);
+        let mut out = [0.0f32; 3];
+        assert!(nvm.read_f32s_into(id, &mut out));
+        assert_eq!(out, [1.0, 2.0, 3.0]);
+        // size mismatch leaves the output untouched
+        let mut wrong = [9.0f32; 2];
+        assert!(!nvm.read_f32s_into(id, &mut wrong));
+        assert_eq!(wrong, [9.0, 9.0]);
+    }
+
+    #[test]
+    fn range_writes_charge_only_the_dirty_span() {
+        let mut nvm = Nvm::new();
+        let id = nvm.intern("buf");
+        nvm.write_f32s_id(id, &[0.0; 16]).unwrap(); // 64 B
+        let before = nvm.bytes_written;
+        nvm.write_f32s_at(id, 4, &[1.0, 2.0]).unwrap(); // 8 B dirty
+        assert_eq!(nvm.bytes_written - before, 8);
+        let got = nvm.read_f32s_id(id).unwrap();
+        assert_eq!(got.len(), 16);
+        assert_eq!(&got[4..6], &[1.0, 2.0]);
+        assert!(got[..4].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn staged_range_write_rolls_back_and_records_dirty_ranges() {
+        let mut nvm = Nvm::new();
+        let id = nvm.intern("buf");
+        nvm.write_f32s_id(id, &[0.0; 8]).unwrap();
+        nvm.begin_action().unwrap();
+        nvm.write_f32s_at(id, 2, &[5.0]).unwrap();
+        nvm.write_f32s_at(id, 6, &[7.0]).unwrap();
+        assert_eq!(nvm.staged_dirty(id), &[(8, 12), (24, 28)][..]);
+        // read-your-writes sees the merged view
+        let merged = nvm.read_f32s_id(id).unwrap();
+        assert_eq!(merged[2], 5.0);
+        assert_eq!(merged[6], 7.0);
+        assert_eq!(merged[0], 0.0);
+        nvm.abort_action();
+        assert!(nvm.staged_dirty(id).is_empty());
+        assert!(nvm.read_f32s_id(id).unwrap().iter().all(|&v| v == 0.0));
+        // and a committed range write lands
+        nvm.begin_action().unwrap();
+        nvm.write_f32s_at(id, 3, &[9.0]).unwrap();
+        nvm.commit_action().unwrap();
+        assert_eq!(nvm.read_f32s_id(id).unwrap()[3], 9.0);
+    }
+
+    #[test]
+    fn range_write_extends_with_zero_fill() {
+        let mut nvm = Nvm::new();
+        let id = nvm.intern("grow");
+        nvm.write_f32s_at(id, 2, &[1.0]).unwrap();
+        assert_eq!(nvm.read_f32s_id(id).unwrap(), vec![0.0, 0.0, 1.0]);
+        assert_eq!(nvm.used_bytes(), 12);
+    }
+
+    #[test]
+    fn used_bytes_tracks_commit_and_abort() {
+        let mut nvm = Nvm::new();
+        nvm.write("a", &[0; 10]).unwrap();
+        assert_eq!(nvm.used_bytes(), 10);
+        nvm.begin_action().unwrap();
+        nvm.write("a", &[0; 4]).unwrap();
+        nvm.write("b", &[0; 6]).unwrap();
+        assert_eq!(nvm.used_bytes(), 10, "committed view until commit");
+        nvm.commit_action().unwrap();
+        assert_eq!(nvm.used_bytes(), 10); // 4 + 6
+        nvm.begin_action().unwrap();
+        nvm.write("c", &[0; 100]).unwrap();
+        nvm.abort_action();
+        assert_eq!(nvm.used_bytes(), 10);
+        assert!(!nvm.contains("c"));
+    }
+
+    #[test]
+    fn store_ids_distinguish_stores_and_clones() {
+        let mut a = Nvm::new();
+        let b = Nvm::new();
+        assert_ne!(a.store_id(), b.store_id());
+        // clones copy contents but get a fresh identity, so handle caches
+        // re-intern instead of aliasing keys interned after the clone
+        let id = a.intern("x");
+        let mut c = a.clone();
+        assert_ne!(c.store_id(), a.store_id());
+        assert_eq!(c.intern("x"), id); // same layout, same slots
     }
 }

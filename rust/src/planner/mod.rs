@@ -78,7 +78,9 @@ impl Default for PlannerConfig {
     }
 }
 
-/// Run-time context the engine passes at each decision point.
+/// Run-time context the engine passes at each decision point. The
+/// windowed completion counts are the engine's ([`crate::sim::Policy`]'s)
+/// bookkeeping — the planner holds no private mirror of them.
 #[derive(Debug, Clone, Copy)]
 pub struct PlanContext {
     /// Total examples learned so far.
@@ -89,6 +91,9 @@ pub struct PlanContext {
     pub window_learns: u32,
     /// Infers completed in the current window.
     pub window_infers: u32,
+    /// Harvesting cycles elapsed in the current window (1-based during a
+    /// wake burst; the §4.2 rate targets scale with it).
+    pub window_cycle: u32,
 }
 
 /// What the planner tells the engine to do next.
@@ -113,10 +118,6 @@ pub struct DynamicActionPlanner {
     pub cfg: PlannerConfig,
     /// EMA of the select gate's acceptance rate.
     p_select_ema: f64,
-    /// Learn/infer completions inside the current window.
-    window_learns: u32,
-    window_infers: u32,
-    cycles_in_window: u32,
     memo: HashMap<u64, f64>,
 }
 
@@ -133,9 +134,6 @@ impl DynamicActionPlanner {
             goal,
             cfg,
             p_select_ema: cfg.p_select,
-            window_learns: 0,
-            window_infers: 0,
-            cycles_in_window: 0,
             memo: HashMap::new(),
         }
     }
@@ -147,30 +145,6 @@ impl DynamicActionPlanner {
         self.p_select_ema = 0.9 * self.p_select_ema + 0.1 * x;
     }
 
-    /// Observe a completed learn/infer (window-rate bookkeeping).
-    pub fn observe_completion(&mut self, a: Action) {
-        match a {
-            Action::Learn => self.window_learns += 1,
-            Action::Infer => self.window_infers += 1,
-            _ => {}
-        }
-    }
-
-    /// Called once per harvesting cycle (wake-up).
-    pub fn on_cycle(&mut self) {
-        self.cycles_in_window += 1;
-        if self.cycles_in_window >= self.goal.window {
-            self.cycles_in_window = 0;
-            self.window_learns = 0;
-            self.window_infers = 0;
-        }
-    }
-
-    /// Current window context for `next_action`.
-    pub fn window_counts(&self) -> (u32, u32) {
-        (self.window_learns, self.window_infers)
-    }
-
     /// Goal phase: still learning, or maintaining inference?
     pub fn in_learning_phase(&self, learned_total: u64) -> bool {
         learned_total < self.goal.n_learn
@@ -178,15 +152,15 @@ impl DynamicActionPlanner {
 
     fn weights(&self, ctx: &PlanContext) -> Weights {
         let learning_phase = self.in_learning_phase(ctx.learned_total);
-        // Rate maintenance uses the planner's own window bookkeeping (the
-        // engine's ctx mirrors totals/quality; completions are observed
-        // through `observe_completion`).
+        // Rate maintenance reads the windowed completion counts straight
+        // from the context ([`crate::sim::Policy`]'s bookkeeping) — the
+        // planner used to keep a duplicate mirror of them.
         let per_cycle_l = self.goal.rho_learn / self.goal.window as f64;
         let per_cycle_c = self.goal.rho_infer / self.goal.window as f64;
-        let expected_l = per_cycle_l * self.cycles_in_window.max(1) as f64;
-        let expected_c = per_cycle_c * self.cycles_in_window.max(1) as f64;
-        let behind_l = (self.window_learns.max(ctx.window_learns) as f64) < expected_l;
-        let behind_c = (self.window_infers.max(ctx.window_infers) as f64) < expected_c;
+        let expected_l = per_cycle_l * ctx.window_cycle.max(1) as f64;
+        let expected_c = per_cycle_c * ctx.window_cycle.max(1) as f64;
+        let behind_l = (ctx.window_learns as f64) < expected_l;
+        let behind_c = (ctx.window_infers as f64) < expected_c;
         if learning_phase {
             // Learning phase (§4.2): the goal is the learn rate ρ_l.
             // Inference is opportunistic only — once the window's learn
@@ -360,6 +334,7 @@ mod tests {
             quality,
             window_learns: 0,
             window_infers: 0,
+            window_cycle: 1,
         }
     }
 
@@ -483,15 +458,23 @@ mod tests {
     }
 
     #[test]
-    fn window_bookkeeping_resets() {
-        let mut p = DynamicActionPlanner::default();
-        p.observe_completion(Action::Learn);
-        p.observe_completion(Action::Infer);
-        assert_eq!(p.window_counts(), (1, 1));
-        for _ in 0..p.goal.window {
-            p.on_cycle();
-        }
-        assert_eq!(p.window_counts(), (0, 0));
+    fn windowed_rates_come_from_the_context() {
+        // a planner behind on its learn rate boosts the learn weight; the
+        // same counts delivered through the context must flip the boost
+        // off (no private mirror left to disagree with)
+        let p = DynamicActionPlanner::default();
+        let behind = PlanContext {
+            learned_total: 0,
+            quality: 0.0,
+            window_learns: 0,
+            window_infers: 0,
+            window_cycle: p.goal.window,
+        };
+        let caught_up = PlanContext {
+            window_learns: p.goal.rho_learn.ceil() as u32 + 1,
+            ..behind
+        };
+        assert!(p.weights(&behind).learn > p.weights(&caught_up).learn);
     }
 
     #[test]

@@ -33,30 +33,44 @@ pub fn resolve_workers(threads: usize, n: usize) -> usize {
 /// siblings' finished work. `threads == 0` uses the available
 /// parallelism. Results come back in input order regardless of
 /// scheduling.
+///
+/// Work distribution is a lock-free claim counter and every finished cell
+/// lands in its own result slot through a per-index channel send — there
+/// is no shared `Mutex` for big grids to contend on (the old
+/// `Mutex<&mut Vec>` serialized every completion).
 pub fn run_parallel_each(specs: &[ScenarioSpec], threads: usize) -> Vec<Result<RunResult>> {
     let n = specs.len();
     if n == 0 {
         return Vec::new();
     }
     let workers = resolve_workers(threads, n);
-    let mut results: Vec<Option<Result<RunResult>>> = (0..n).map(|_| None).collect();
     let next = std::sync::atomic::AtomicUsize::new(0);
-    let results_mx = std::sync::Mutex::new(&mut results);
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, Result<RunResult>)>();
     std::thread::scope(|scope| {
         for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            let tx = tx.clone();
+            let next = &next;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
                 let r = specs[i].build_engine().and_then(|e| e.run());
-                results_mx.lock().unwrap()[i] = Some(r);
+                if tx.send((i, r)).is_err() {
+                    break; // receiver gone: nothing left to report to
+                }
             });
         }
+        drop(tx); // workers hold the remaining senders
     });
+    // every worker has exited, so the channel is closed and fully drained
+    let mut results: Vec<Option<Result<RunResult>>> = (0..n).map(|_| None).collect();
+    for (i, r) in rx {
+        results[i] = Some(r);
+    }
     results
         .into_iter()
-        .map(|r| r.expect("worker finished"))
+        .map(|r| r.expect("every claimed cell reports exactly once"))
         .collect()
 }
 

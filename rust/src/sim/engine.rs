@@ -58,6 +58,9 @@ pub struct Engine {
     pub meter: EnergyMeter,
 
     pending: Vec<PendingEx>,
+    /// Scratch mirror of `pending`'s last actions handed to the scheduler
+    /// (reused every decision — no per-decision allocation).
+    plan_scratch: Vec<Action>,
     result: RunResult,
     next_eval_us: u64,
     quality: f32,
@@ -195,6 +198,7 @@ impl EngineBuilder {
             costs: self.costs.expect("checked"),
             meter: EnergyMeter::new(),
             pending: Vec::new(),
+            plan_scratch: Vec::new(),
             result: RunResult::default(),
             next_eval_us: 0,
             quality: 0.0,
@@ -290,7 +294,8 @@ impl Engine {
 
             // scheduler decision (+ overhead)
             let ctx = self.policy.context(self.result.learned, self.quality);
-            let pending_actions: Vec<Action> = self.pending.iter().map(|p| p.last).collect();
+            self.plan_scratch.clear();
+            self.plan_scratch.extend(self.pending.iter().map(|p| p.last));
             let oh = self.policy.overhead(&self.costs);
             if oh.energy_uj > 0.0 {
                 if !self.world.cap.deduct_uj(oh.energy_uj) {
@@ -300,7 +305,7 @@ impl Engine {
                 self.world.advance_us(oh.time_us);
                 self.meter.record("planner", oh.energy_uj, oh.time_us);
             }
-            let planned = self.policy.decide(&pending_actions, &ctx, &self.costs);
+            let planned = self.policy.decide(&self.plan_scratch, &ctx, &self.costs);
 
             match planned {
                 Planned::Idle => {
@@ -430,7 +435,28 @@ impl Engine {
                     .as_ref()
                     .ok_or_else(|| Error::Nvm("learn without example".into()))?;
                 self.learner.learn(e, self.backend.as_mut())?;
-                self.learner.save(&mut self.exec.nvm)?;
+                // O(dirty) delta checkpoint: only the slots this learn
+                // touched hit NVM (the first call degrades to a full save)
+                let w0 = self.exec.nvm.bytes_written;
+                self.learner.save_delta(&mut self.exec.nvm)?;
+                // Optionally charge the actual checkpoint traffic (the
+                // calibrated learn cost already includes a full-model
+                // save, so the default rate is 0 — see `CostModel`).
+                let ckpt_uj =
+                    self.costs.nvm_uj_per_byte * (self.exec.nvm.bytes_written - w0) as f64;
+                if ckpt_uj > 0.0 {
+                    let avail = self.world.cap.usable_uj().max(0.0);
+                    if self.world.cap.deduct_uj(ckpt_uj) {
+                        self.meter.record("nvm_ckpt", ckpt_uj, 0);
+                    } else {
+                        // brown-out paying for the checkpoint: the learn
+                        // and its committed save stand (the FRAM write
+                        // landed before the debt was discovered); meter
+                        // what actually drained, not the full price
+                        self.result.power_failures += 1;
+                        self.meter.record("nvm_ckpt", avail.min(ckpt_uj), 0);
+                    }
+                }
                 self.result.learned += 1;
                 self.policy.observe_completion(Action::Learn);
                 Ok(false)
@@ -604,6 +630,29 @@ mod tests {
         let r = small_engine(0.0012, 3600).run().unwrap();
         assert!(r.power_failures > 0, "{r:?}");
         assert!(r.sensed > 0);
+    }
+
+    #[test]
+    fn nvm_byte_rate_charges_checkpoint_traffic() {
+        // default rate 0: no nvm_ckpt tally; non-zero rate: the metered
+        // checkpoint energy equals rate x delta-save bytes (tiny, because
+        // steady-state saves are O(dirty))
+        let free = small_engine(0.010, 1800).run().unwrap();
+        assert!(!free.action_tallies.iter().any(|(n, ..)| n == "nvm_ckpt"));
+        let mut e = small_engine(0.010, 1800);
+        e.costs.nvm_uj_per_byte = 0.001; // ~1 nJ/B FRAM write
+        let charged = e.run().unwrap();
+        let tally = charged
+            .action_tallies
+            .iter()
+            .find(|(n, ..)| n == "nvm_ckpt")
+            .expect("nvm_ckpt metered");
+        assert_eq!(tally.1, charged.learned, "one checkpoint per learn");
+        assert!(tally.2 > 0.0);
+        // delta checkpoints keep the charge marginal: well under one
+        // planner decision's worth of energy per learn on average
+        let per_learn = tally.2 / tally.1 as f64;
+        assert!(per_learn < 57.0, "{per_learn} uJ/learn");
     }
 
     #[test]

@@ -87,13 +87,9 @@ impl Scheduler for PlannerScheduler {
         self.0.observe_select(accepted);
     }
 
-    fn observe_completion(&mut self, a: Action) {
-        self.0.observe_completion(a);
-    }
-
-    fn on_cycle(&mut self) {
-        self.0.on_cycle();
-    }
+    // observe_completion / on_cycle: default no-ops — the windowed
+    // completion bookkeeping lives in [`Policy`] and reaches the planner
+    // through [`PlanContext`]; the planner keeps no mirror of it.
 
     fn overhead(&self, costs: &CostModel) -> ActionCost {
         costs.planner

@@ -44,6 +44,7 @@ impl Policy {
             quality,
             window_learns: self.window_learns,
             window_infers: self.window_infers,
+            window_cycle: self.cycles_in_window,
         }
     }
 

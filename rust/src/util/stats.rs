@@ -92,13 +92,19 @@ pub fn mav(xs: &[f32]) -> f32 {
 /// q-th percentile (0..=1) using the paper's rule: the value at index
 /// ceil(q·n) − 1 of the ascending sort (matches the L2 `knn_learn` HLO).
 pub fn percentile(xs: &[f32], q: f64) -> f32 {
-    if xs.is_empty() {
-        return 0.0;
-    }
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.total_cmp(b));
-    let idx = ((q * v.len() as f64).ceil() as usize).max(1) - 1;
-    v[idx.min(v.len() - 1)]
+    percentile_sorted(&v, q)
+}
+
+/// Same rule over an already-ascending-sorted slice (no clone — the
+/// learn hot path sorts a reused scratch and calls this).
+pub fn percentile_sorted(sorted: &[f32], q: f64) -> f32 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((q * sorted.len() as f64).ceil() as usize).max(1) - 1;
+    sorted[idx.min(sorted.len() - 1)]
 }
 
 /// Euclidean distance between two feature vectors (paper §6.1).
@@ -166,6 +172,9 @@ mod tests {
         assert_eq!(percentile(&xs, 0.9), 36.0);
         assert_eq!(percentile(&xs, 1.0), 40.0);
         assert_eq!(percentile(&[7.0], 0.9), 7.0);
+        // the sorted variant is the same rule (xs is already ascending)
+        assert_eq!(percentile_sorted(&xs, 0.9), percentile(&xs, 0.9));
+        assert_eq!(percentile_sorted(&[], 0.9), 0.0);
     }
 
     #[test]

@@ -65,8 +65,10 @@ fn knn_learn_parity() {
     let mut rng = Rng::new(2);
     for count in [4, 17, 40, 64] {
         let (ex, mask) = buf(&mut rng, count);
-        let (sp, tp) = p.knn_learn(&ex, &mask).unwrap();
-        let (sn, tn) = n.knn_learn(&ex, &mask).unwrap();
+        let mut sp = vec![0.0f32; N_BUF];
+        let mut sn = vec![0.0f32; N_BUF];
+        let tp = p.knn_learn(&ex, &mask, &mut sp).unwrap();
+        let tn = n.knn_learn(&ex, &mask, &mut sn).unwrap();
         assert!(close(tp, tn, 1e-4), "threshold: pjrt {tp} native {tn} (count {count})");
         for i in 0..N_BUF {
             assert!(close(sp[i], sn[i], 1e-3), "score {i}: {} vs {}", sp[i], sn[i]);
@@ -103,8 +105,13 @@ fn kmeans_parity() {
         let w = vecn(&mut rng, N_CLUSTERS * FEAT_DIM, 1.0);
         let x = vecn(&mut rng, FEAT_DIM, 1.0);
         let eta = rng.f32() * 0.8;
-        let (wp, ap) = p.kmeans_learn(&w, &x, eta).unwrap();
-        let (wn, an) = n.kmeans_learn(&w, &x, eta).unwrap();
+        let mut wp = w.clone();
+        let mut wn = w.clone();
+        let mut ap = [0.0f32; N_CLUSTERS];
+        let mut an = [0.0f32; N_CLUSTERS];
+        let winp = p.kmeans_learn(&mut wp, &x, eta, &mut ap).unwrap();
+        let winn = n.kmeans_learn(&mut wn, &x, eta, &mut an).unwrap();
+        assert_eq!(winp, winn, "winner diverged");
         for i in 0..N_CLUSTERS {
             assert!(close(ap[i], an[i], 1e-4), "act {i}: {} vs {}", ap[i], an[i]);
         }

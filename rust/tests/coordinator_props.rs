@@ -157,6 +157,7 @@ fn prop_planner_transitions_always_legal() {
                 quality: rng.f32(),
                 window_learns: rng.below(5),
                 window_infers: rng.below(5),
+                window_cycle: 1 + rng.below(10),
             };
             match planner.next_action(&pending, &ctx, &costs) {
                 Planned::SenseNew => {

@@ -116,6 +116,131 @@ fn learner_state_survives_via_nvm_restore() {
     }
 }
 
+/// Property: interleaving delta saves, injected mid-action power failures
+/// (aborted save transactions) and reboots (restore from NVM) leaves the
+/// k-NN learner bit-identical to a twin that always full-saves under the
+/// same schedule — the delta checkpoint's §3.5 equivalence contract.
+#[test]
+fn prop_delta_saves_with_aborts_match_full_save_baseline() {
+    use ilearn::util::prop;
+    prop::check_cases("delta-vs-full-knn", 0xD17A, 16, |rng| {
+        let mut be_d = NativeBackend::new();
+        let mut be_f = NativeBackend::new();
+        let mut nvm_d = Nvm::new();
+        let mut nvm_f = Nvm::new();
+        let mut ld = KnnAnomalyLearner::new();
+        let mut lf = KnnAnomalyLearner::new();
+        for t in 0..80u64 {
+            let f: Vec<f32> = (0..FEAT_DIM).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+            let ex = Example::new(f, t, false);
+            ld.learn(&ex, &mut be_d).unwrap();
+            lf.learn(&ex, &mut be_f).unwrap();
+            // the checkpoint runs inside an action transaction; a power
+            // failure mid-action aborts it on both stores
+            let abort = rng.f32() < 0.3;
+            nvm_d.begin_action().unwrap();
+            ld.save_delta(&mut nvm_d).unwrap();
+            if abort {
+                nvm_d.abort_action();
+            } else {
+                nvm_d.commit_action().unwrap();
+            }
+            nvm_f.begin_action().unwrap();
+            lf.save(&mut nvm_f).unwrap();
+            if abort {
+                nvm_f.abort_action();
+            } else {
+                nvm_f.commit_action().unwrap();
+            }
+            // a power failure reboots the device: volatile learner state
+            // is lost and restored from NVM (an occasional clean reboot
+            // exercises the same path without a failure)
+            if abort || rng.f32() < 0.1 {
+                ld = KnnAnomalyLearner::new();
+                ld.restore(&mut nvm_d).unwrap();
+                lf = KnnAnomalyLearner::new();
+                lf.restore(&mut nvm_f).unwrap();
+            }
+            assert_eq!(ld.buffer().0, lf.buffer().0, "ring buffers diverged at t={t}");
+            assert_eq!(ld.buffer().1, lf.buffer().1, "masks diverged at t={t}");
+            assert_eq!(ld.threshold(), lf.threshold(), "thresholds diverged at t={t}");
+            assert_eq!(ld.learned_count(), lf.learned_count());
+        }
+        // subsequent verdicts agree bit-for-bit
+        for t in 0..10u64 {
+            let scale = if t % 3 == 0 { 8.0 } else { 1.0 };
+            let f: Vec<f32> = (0..FEAT_DIM)
+                .map(|_| rng.normal(0.0, scale) as f32)
+                .collect();
+            let ex = Example::new(f, 1000 + t, false);
+            assert_eq!(
+                ld.infer(&ex, &mut be_d).unwrap(),
+                lf.infer(&ex, &mut be_f).unwrap()
+            );
+        }
+        // and the delta path pays far less NVM traffic for it
+        assert!(
+            nvm_d.bytes_written * 5 <= nvm_f.bytes_written,
+            "delta wrote {} B vs full {} B",
+            nvm_d.bytes_written,
+            nvm_f.bytes_written
+        );
+    });
+}
+
+/// Same property for the k-means learner (winner-row deltas).
+#[test]
+fn prop_kmeans_delta_saves_match_full_save_baseline() {
+    use ilearn::learning::ClusterLabelLearner;
+    use ilearn::util::prop;
+    prop::check_cases("delta-vs-full-kmeans", 0x5EED5, 16, |rng| {
+        let mut be_d = NativeBackend::new();
+        let mut be_f = NativeBackend::new();
+        let mut nvm_d = Nvm::new();
+        let mut nvm_f = Nvm::new();
+        let mut ld = ClusterLabelLearner::new(9, 20);
+        let mut lf = ClusterLabelLearner::new(9, 20);
+        for t in 0..60u64 {
+            let abnormal = rng.f32() < 0.5;
+            let mut f = vec![0.0f32; FEAT_DIM];
+            let base = if abnormal { 8 } else { 0 };
+            for v in f[base..base + 8].iter_mut() {
+                *v = 2.0 + rng.normal(0.0, 0.2) as f32;
+            }
+            let ex = Example::new(f, t, abnormal);
+            ld.learn(&ex, &mut be_d).unwrap();
+            lf.learn(&ex, &mut be_f).unwrap();
+            let abort = rng.f32() < 0.3;
+            nvm_d.begin_action().unwrap();
+            ld.save_delta(&mut nvm_d).unwrap();
+            if abort {
+                nvm_d.abort_action();
+            } else {
+                nvm_d.commit_action().unwrap();
+            }
+            nvm_f.begin_action().unwrap();
+            lf.save(&mut nvm_f).unwrap();
+            if abort {
+                nvm_f.abort_action();
+            } else {
+                nvm_f.commit_action().unwrap();
+            }
+            if abort || rng.f32() < 0.1 {
+                // reboot constructs the same firmware-determined initial
+                // learner (seed 9) before restoring, as a device would
+                ld = ClusterLabelLearner::new(9, 20);
+                ld.restore(&mut nvm_d).unwrap();
+                lf = ClusterLabelLearner::new(9, 20);
+                lf.restore(&mut nvm_f).unwrap();
+            }
+            assert_eq!(ld.weights(), lf.weights(), "weights diverged at t={t}");
+            assert_eq!(ld.learned_count(), lf.learned_count());
+            assert_eq!(ld.labels_remaining(), lf.labels_remaining());
+        }
+        assert!(nvm_d.bytes_written < nvm_f.bytes_written);
+    });
+}
+
 #[test]
 fn aborted_action_rolls_back_nvm_writes() {
     let mut nvm = Nvm::new();
