@@ -1,0 +1,113 @@
+//! Fleet-layer benchmark: shard-parallel fleet runs vs the serial
+//! baseline, tracked over time through `BENCH_fleet.json` (written at the
+//! repo root when run from `rust/`).
+//!
+//!     cargo bench --bench fleet            # full comparison + JSON
+//!     cargo bench --bench fleet -- --smoke # CI: one short fleet cell + asserts
+//!
+//! The full mode runs an 8-shard vibration fleet serially and on the
+//! worker pool and reports the wall-clock scaling (the fleet's shards are
+//! independent engines, so the speedup should track the core count until
+//! shard wall times dominate). `--smoke` runs a 4-shard cell and asserts
+//! the fan-in contract: rollup totals equal the per-shard sums, and the
+//! `FleetResult` is bit-identical across thread counts.
+
+use ilearn::scenario::{preset, FleetSpec};
+use ilearn::sim::FleetResult;
+use ilearn::util::bench::{fmt_ns, time_once};
+use ilearn::util::json::Json;
+use std::time::Instant;
+
+const H: u64 = 3_600_000_000;
+
+fn fleet_spec(shards: u32, hours: u64) -> ilearn::scenario::ScenarioSpec {
+    let mut spec = preset("vibration", 42, hours * H).expect("preset");
+    spec.fleet = Some(FleetSpec {
+        shards,
+        phase_jitter_us: 30_000_000,
+        seed_stride: 1,
+        overrides: vec![],
+    });
+    spec
+}
+
+fn fingerprint(f: &FleetResult) -> String {
+    f.to_json().to_string()
+}
+
+fn assert_fan_in(f: &FleetResult, shards: u32) {
+    assert_eq!(f.shards.len(), shards as usize);
+    assert_eq!(f.rollup.shards, shards as usize);
+    let learned: u64 = f.shards.iter().map(|r| r.learned).sum();
+    assert_eq!(f.rollup.learned.total, learned as f64, "rollup != shard sum");
+    let energy: f64 = f.shards.iter().map(|r| r.energy_uj).sum();
+    assert!((f.rollup.energy_uj.total - energy).abs() < 1e-6);
+    assert!(f.shards.iter().any(|r| r.sensed > 0), "dead fleet cell");
+}
+
+fn smoke() {
+    let spec = fleet_spec(4, 1);
+    let t0 = Instant::now();
+    let serial = spec.run_fleet(1).expect("serial fleet");
+    let threaded = spec.run_fleet(0).expect("threaded fleet");
+    assert_fan_in(&serial, 4);
+    assert_eq!(
+        fingerprint(&serial),
+        fingerprint(&threaded),
+        "fleet diverged across thread counts"
+    );
+    println!(
+        "fleet --smoke: 4-shard vibration cell ok ({} learned total, {:.1}s)",
+        serial.rollup.learned.total as u64,
+        t0.elapsed().as_secs_f64()
+    );
+}
+
+fn full() {
+    const SHARDS: u32 = 8;
+    let spec = fleet_spec(SHARDS, 2);
+    let (serial, sm) = time_once("fleet-8x2h-serial", || {
+        spec.run_fleet(1).expect("serial fleet")
+    });
+    let (pooled, pm) = time_once("fleet-8x2h-pooled", || {
+        spec.run_fleet(0).expect("pooled fleet")
+    });
+    assert_fan_in(&serial, SHARDS);
+    assert_eq!(fingerprint(&serial), fingerprint(&pooled));
+    let (serial_ns, pool_ns) = (sm.mean_ns, pm.mean_ns);
+    let speedup = serial_ns / pool_ns.max(1.0);
+    println!("{}", sm.row());
+    println!("{}", pm.row());
+    println!(
+        "fleet {SHARDS} shards x 2h vibration: serial {} pooled {} speedup {speedup:.2}x",
+        fmt_ns(serial_ns),
+        fmt_ns(pool_ns)
+    );
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("fleet".into())),
+        ("shards", Json::Num(SHARDS as f64)),
+        ("sim_hours_per_shard", Json::Num(2.0)),
+        ("serial_ms", Json::Num(serial_ns / 1e6)),
+        ("pooled_ms", Json::Num(pool_ns / 1e6)),
+        ("speedup", Json::Num(speedup)),
+        (
+            "workers",
+            Json::Num(ilearn::util::pool::resolve_workers(0, SHARDS as usize) as f64),
+        ),
+        ("learned_total", Json::Num(serial.rollup.learned.total)),
+    ]);
+    let path = "../BENCH_fleet.json";
+    match std::fs::write(path, doc.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let smoke_mode = std::env::args().any(|a| a == "--smoke");
+    if smoke_mode {
+        smoke();
+    } else {
+        full();
+    }
+}

@@ -479,6 +479,56 @@ impl Harvester for Combined {
     }
 }
 
+/// Phase-offset wrapper: evaluates the wrapped harvester `offset_us`
+/// ahead of the shard's local clock. Fleet shards use this to de-correlate
+/// a shared energy model — 16 solar nodes see the same diurnal curve but
+/// each a little deeper into the day — and to hand each shard a distinct
+/// slice of one recorded [`Trace`]. An offset of zero is exactly the
+/// wrapped harvester.
+pub struct PhaseShift {
+    pub inner: Box<dyn Harvester>,
+    pub offset_us: u64,
+}
+
+impl PhaseShift {
+    pub fn new(inner: Box<dyn Harvester>, offset_us: u64) -> Self {
+        PhaseShift { inner, offset_us }
+    }
+}
+
+impl Harvester for PhaseShift {
+    fn power_w(&self, t_us: u64) -> f64 {
+        self.inner.power_w(t_us.saturating_add(self.offset_us))
+    }
+
+    /// The inner segment end, translated back into local time.
+    fn segment_end_us(&self, t_us: u64) -> u64 {
+        let shifted = t_us.saturating_add(self.offset_us);
+        let end = self
+            .inner
+            .segment_end_us(shifted)
+            .max(shifted.saturating_add(1));
+        // u64::MAX means "one segment forever" — keep it untranslated so
+        // the event kernel still sees an unbounded span
+        if end == u64::MAX {
+            u64::MAX
+        } else {
+            end - self.offset_us
+        }
+    }
+
+    fn mean_power_w(&self, from_us: u64, to_us: u64) -> f64 {
+        self.inner.mean_power_w(
+            from_us.saturating_add(self.offset_us),
+            to_us.saturating_add(self.offset_us),
+        )
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
 /// Constant power source (unit tests, pre-inspection rig).
 #[derive(Debug, Clone)]
 pub struct Constant(pub f64);
@@ -499,6 +549,58 @@ impl Harvester for Constant {
 #[derive(Debug, Clone)]
 pub struct Trace {
     pub points: Vec<(u64, f64)>,
+}
+
+impl Trace {
+    /// Load a trace from a CSV file of `t_us,power_w` rows (the preset
+    /// corpus under `examples/traces/`). Blank lines and `#` comments are
+    /// skipped; times must be strictly increasing and powers non-negative.
+    pub fn from_csv(path: &str) -> crate::error::Result<Trace> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            crate::error::Error::Config(format!("cannot read trace `{path}`: {e}"))
+        })?;
+        let points = Self::parse_csv(&text)
+            .map_err(|e| crate::error::Error::Config(format!("trace `{path}`: {e}")))?;
+        Ok(Trace { points })
+    }
+
+    /// Parse CSV text into trace points (see [`Trace::from_csv`]).
+    pub fn parse_csv(text: &str) -> std::result::Result<Vec<(u64, f64)>, String> {
+        let mut points = Vec::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut cols = line.split(',').map(str::trim);
+            let (t, p) = match (cols.next(), cols.next(), cols.next()) {
+                (Some(t), Some(p), None) => (t, p),
+                _ => return Err(format!("line {}: expected `t_us,power_w`", ln + 1)),
+            };
+            let t: u64 = t
+                .parse()
+                .map_err(|_| format!("line {}: bad time `{t}`", ln + 1))?;
+            let p: f64 = p
+                .parse()
+                .map_err(|_| format!("line {}: bad power `{p}`", ln + 1))?;
+            if p < 0.0 || !p.is_finite() {
+                return Err(format!("line {}: power {p} must be finite and >= 0", ln + 1));
+            }
+            if let Some(&(prev, _)) = points.last() {
+                if t <= prev {
+                    return Err(format!(
+                        "line {}: time {t} not after previous point {prev}",
+                        ln + 1
+                    ));
+                }
+            }
+            points.push((t, p));
+        }
+        if points.is_empty() {
+            return Err("no data rows (a permanently 0 W world)".into());
+        }
+        Ok(points)
+    }
 }
 
 impl Harvester for Trace {
@@ -787,6 +889,48 @@ mod tests {
         let c = Custom;
         assert_eq!(c.segment_end_us(1_000), 1_000 + 1_000_000);
         assert_eq!(c.mean_power_w(0, 5_000_000), 0.002);
+    }
+
+    #[test]
+    fn phase_shift_translates_the_whole_piecewise_view() {
+        let trace = || Trace {
+            points: vec![(0, 0.0), (100, 0.5), (250, 0.25)],
+        };
+        let p = PhaseShift::new(Box::new(trace()), 100);
+        // local t=0 sees the trace at t=100
+        assert_eq!(p.power_w(0), 0.5);
+        assert_eq!(p.power_w(150), 0.25);
+        // segment ends come back in local time
+        assert_eq!(p.segment_end_us(0), 150);
+        assert_eq!(p.segment_end_us(200), u64::MAX);
+        assert_eq!(p.mean_power_w(0, 150), 0.5);
+        // zero offset is exactly the inner harvester
+        let id = PhaseShift::new(Box::new(trace()), 0);
+        for t in [0u64, 99, 100, 249, 250, 1_000] {
+            assert_eq!(id.power_w(t), trace().power_w(t));
+            assert_eq!(id.segment_end_us(t), trace().segment_end_us(t));
+        }
+        // solar: a 6 h offset turns midnight into dawn
+        let s = Solar::default();
+        let shifted = PhaseShift::new(Box::new(s.clone()), us(6.5));
+        assert_eq!(shifted.power_w(us(6.0)), s.power_w(us(12.5)));
+        assert_eq!(shifted.name(), "solar");
+    }
+
+    #[test]
+    fn trace_csv_parses_and_rejects_bad_rows() {
+        let pts = Trace::parse_csv(
+            "# irradiance trace\n\n0, 0.0\n100, 0.5\n  250 , 0.25 \n",
+        )
+        .unwrap();
+        assert_eq!(pts, vec![(0, 0.0), (100, 0.5), (250, 0.25)]);
+        // non-increasing times, negative power, malformed rows, empty file
+        assert!(Trace::parse_csv("0,0.1\n0,0.2").unwrap_err().contains("line 2"));
+        assert!(Trace::parse_csv("0,-0.1").unwrap_err().contains(">= 0"));
+        assert!(Trace::parse_csv("0;0.1").unwrap_err().contains("t_us,power_w"));
+        assert!(Trace::parse_csv("0,0.1,9").unwrap_err().contains("t_us,power_w"));
+        assert!(Trace::parse_csv("# only comments\n").is_err());
+        assert!(Trace::from_csv("/nonexistent/trace.csv").is_err());
     }
 
     #[test]

@@ -19,9 +19,13 @@ pub struct ActionTally {
 }
 
 /// Energy meter: per-action tallies plus framework-overhead tallies.
+///
+/// Keys are owned strings so a meter can be restored from persisted run
+/// state ([`crate::sim::state`]); the hot [`EnergyMeter::record`] path
+/// only allocates the first time a key appears.
 #[derive(Debug, Clone, Default)]
 pub struct EnergyMeter {
-    per_action: BTreeMap<&'static str, ActionTally>,
+    per_action: BTreeMap<String, ActionTally>,
     /// (t_us, cumulative µJ) samples, appended on every completed charge.
     pub series: Vec<(u64, f64)>,
     total_uj: f64,
@@ -32,12 +36,33 @@ impl EnergyMeter {
         Self::default()
     }
 
-    fn entry(&mut self, key: &'static str) -> &mut ActionTally {
-        self.per_action.entry(key).or_default()
+    /// Rebuild a meter from persisted parts (the run-state restore path).
+    pub fn from_parts(
+        tallies: Vec<(String, ActionTally)>,
+        series: Vec<(u64, f64)>,
+        total_uj: f64,
+    ) -> EnergyMeter {
+        EnergyMeter {
+            per_action: tallies.into_iter().collect(),
+            series,
+            total_uj,
+        }
+    }
+
+    fn entry(&mut self, key: &str) -> &mut ActionTally {
+        // the Entry API would force an owned key per call; checking first
+        // keeps the hot path allocation-free (the clone happens only on a
+        // key's first appearance)
+        #[allow(clippy::map_entry)]
+        if !self.per_action.contains_key(key) {
+            self.per_action
+                .insert(key.to_string(), ActionTally::default());
+        }
+        self.per_action.get_mut(key).expect("just inserted")
     }
 
     /// Record a completed action (or overhead component like "planner").
-    pub fn record(&mut self, key: &'static str, energy_uj: f64, time_us: u64) {
+    pub fn record(&mut self, key: &str, energy_uj: f64, time_us: u64) {
         let t = self.entry(key);
         t.count += 1;
         t.energy_uj += energy_uj;
@@ -75,8 +100,8 @@ impl EnergyMeter {
     }
 
     /// All tallies in key order.
-    pub fn tallies(&self) -> impl Iterator<Item = (&'static str, &ActionTally)> {
-        self.per_action.iter().map(|(k, v)| (*k, v))
+    pub fn tallies(&self) -> impl Iterator<Item = (&str, &ActionTally)> {
+        self.per_action.iter().map(|(k, v)| (k.as_str(), v))
     }
 
     /// Overhead fraction of one key relative to total energy.
@@ -122,6 +147,23 @@ mod tests {
         }
         for w in m.series.windows(2) {
             assert!(w[1].1 >= w[0].1 && w[1].0 >= w[0].0);
+        }
+    }
+
+    #[test]
+    fn from_parts_round_trips_every_tally() {
+        let mut m = EnergyMeter::new();
+        m.record_action(Action::Learn, 9_309.0, 1_551_000);
+        m.record_abort(Action::Sense, 40.0);
+        m.record("planner", 57.0, 4_300);
+        m.sample(100);
+        let tallies: Vec<(String, ActionTally)> =
+            m.tallies().map(|(k, t)| (k.to_string(), *t)).collect();
+        let back = EnergyMeter::from_parts(tallies, m.series.clone(), m.total_uj());
+        assert_eq!(back.total_uj(), m.total_uj());
+        assert_eq!(back.series, m.series);
+        for (k, t) in m.tallies() {
+            assert_eq!(back.tally(k), *t, "{k}");
         }
     }
 

@@ -43,10 +43,11 @@ fn accuracy_series(name: &str, r: &RunResult) -> Series {
     s
 }
 
-/// All figure ids the harness can regenerate.
-pub const FIGURE_IDS: [&str; 15] = [
+/// All figure ids the harness can regenerate (`fleet16` is ours, not the
+/// paper's: the population-scale extension of Fig. 6(c)).
+pub const FIGURE_IDS: [&str; 16] = [
     "fig6c", "fig7c", "fig8c", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
-    "fig16", "fig17", "table3", "table4", "table5",
+    "fig16", "fig17", "fleet16", "table3", "table4", "table5",
 ];
 
 /// Dispatch by figure id.
@@ -64,6 +65,7 @@ pub fn generate(id: &str, seed: u64) -> Result<FigData> {
         "fig15" => fig15(seed),
         "fig16" => fig16(),
         "fig17" => fig17(seed),
+        "fleet16" => fleet16(seed),
         "table3" => table34(seed, false),
         "table4" => table34(seed, true),
         "table5" => table5(seed),
@@ -95,6 +97,50 @@ pub fn fig6c(seed: u64) -> Result<FigData> {
         r.inferred
     ));
     fig.series.push(s);
+    Ok(fig)
+}
+
+/// `fleet16` (ours): a 16-shard solar air-quality fleet — the §6.1 node
+/// deployed as a phase-jittered population. Per-shard accuracy spread plus
+/// the fan-in rollups; shards parallelize on the worker pool.
+pub fn fleet16(seed: u64) -> Result<FigData> {
+    use crate::scenario::FleetSpec;
+    let mut fig = FigData::new(
+        "fleet16",
+        "16-shard solar fleet: per-shard accuracy and fan-in rollups",
+        "shard",
+        "accuracy",
+    );
+    let mut spec = AppKind::AirQuality.spec(seed, 12 * H);
+    spec.fleet = Some(FleetSpec {
+        shards: 16,
+        // half an hour of solar phase per shard: the fleet spans 8 h of
+        // the diurnal curve
+        phase_jitter_us: 1_800_000_000,
+        seed_stride: 1,
+        overrides: vec![],
+    });
+    let fr = spec.run_fleet(0)?;
+    let mut final_acc = Series::new("final_accuracy_by_shard");
+    let mut learned = Series::new("learned_by_shard");
+    for (i, r) in fr.shards.iter().enumerate() {
+        final_acc.push(i as f64, r.final_accuracy());
+        learned.push(i as f64, r.learned as f64);
+    }
+    let roll = &fr.rollup;
+    fig.row(format!(
+        "final accuracy: mean {:.2} [{:.2}, {:.2}] across {} shards",
+        roll.final_accuracy.mean, roll.final_accuracy.min, roll.final_accuracy.max, roll.shards
+    ));
+    fig.row(format!(
+        "learned {} total (mean {:.1}/shard), energy {:.1} mJ total, {} stale plans",
+        roll.learned.total as u64,
+        roll.learned.mean,
+        roll.energy_uj.total / 1000.0,
+        roll.stale_plans.total as u64
+    ));
+    fig.series.push(final_acc);
+    fig.series.push(learned);
     Ok(fig)
 }
 

@@ -33,9 +33,13 @@
 //! and [`scenario::SweepSpec`] expands (scenarios × schedulers ×
 //! heuristics × backends × seeds) grids that a [`scenario::SweepRunner`]
 //! executes across worker threads — one engine per thread, since compute
-//! backends are deliberately not `Send` — emitting one JSON
-//! [`sim::RunResult`] per cell. The `ilearn` CLI exposes this as
-//! `run [--spec file.json]` and `sweep grid.json`.
+//! backends are deliberately not `Send` — emitting one JSON document per
+//! cell. A scenario's `"fleet"` block ([`scenario::FleetSpec`]) deploys
+//! it across N shards ([`sim::fleet`]): per-shard worlds with jittered
+//! harvester phases and strided seeds, shard-level work items on the
+//! sweep pool, and fan-in rollups ([`sim::fleet::FleetResult`]). The
+//! `ilearn` CLI exposes this as `run [--spec file.json]`,
+//! `fleet <scenario> --shards N` and `sweep grid.json`.
 //!
 //! ## Backends
 //!

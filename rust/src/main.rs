@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run     — run one scenario (paper preset or JSON spec) end-to-end
+//!   fleet   — run one scenario sharded across N devices, with fan-in rollups
 //!   sweep   — expand a JSON grid spec and run every cell on worker threads
 //!   figure  — regenerate a paper figure/table (fig6c..fig17, table3..5)
 //!   inspect — energy pre-inspection of an app's action set (§3.5 tool)
@@ -10,6 +11,8 @@
 //! Examples:
 //!   ilearn run vibration --hours 4 --scheduler alpaca:50
 //!   ilearn run --spec my_scenario.json
+//!   ilearn fleet air_quality --shards 16 --jitter-us 60000000
+//!   ilearn fleet --spec my_scenario.json --shards 8 --threads 4
 //!   ilearn sweep examples/paper_matrix.json --out out/sweep --threads 8
 //!   ilearn figure fig9 --out out/
 
@@ -18,7 +21,7 @@ use ilearn::apps::AppKind;
 use ilearn::energy::inspect;
 use ilearn::eval::figures;
 use ilearn::scenario::{
-    BackendKind, ScenarioSpec, SchedulerKind, SweepRunner, SweepSpec, PRESETS,
+    BackendKind, FleetSpec, ScenarioSpec, SchedulerKind, SweepRunner, SweepSpec, PRESETS,
 };
 use ilearn::selection::Heuristic;
 use ilearn::sim::RunResult;
@@ -29,6 +32,7 @@ fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("run") => cmd_run(&args[1..]),
+        Some("fleet") => cmd_fleet(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("figure") => cmd_figure(&args[1..]),
         Some("inspect") => cmd_inspect(&args[1..]),
@@ -57,6 +61,14 @@ fn print_help() {
            run --spec FILE  run a declarative scenario spec (JSON)\n\
                --seed/--backend/--scheduler/--heuristic override the spec\n\
                (--hours is preset-only: spec worlds are horizon-derived)\n\
+           fleet <scenario> | fleet --spec FILE\n\
+                            run one scenario sharded across N devices and\n\
+                            fan the per-shard results into rollups\n\
+               --shards N       shard count                [default: spec fleet, else 1]\n\
+               --jitter-us J    per-shard harvester phase offset (shard i: i x J)\n\
+               --stride S       per-shard seed stride      [default 1]\n\
+               --threads N      worker threads             [default: all cores]\n\
+               (run's --seed/--backend/--scheduler/--heuristic apply too)\n\
            sweep <FILE>     expand a JSON grid spec (scenarios x schedulers x\n\
                             heuristics x backends x seeds) and run every cell\n\
                             on worker threads, one JSON result per cell\n\
@@ -184,6 +196,76 @@ fn cmd_run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fleet(args: &[String]) -> Result<()> {
+    let mut spec = run_spec(args)?;
+    // CLI flags layer onto the spec's own fleet block (created on demand)
+    if let Some(n) = flag(args, "--shards") {
+        spec.fleet.get_or_insert_with(FleetSpec::default).shards = n.parse()?;
+    }
+    if let Some(j) = flag(args, "--jitter-us") {
+        spec.fleet.get_or_insert_with(FleetSpec::default).phase_jitter_us = j.parse()?;
+    }
+    if let Some(s) = flag(args, "--stride") {
+        spec.fleet.get_or_insert_with(FleetSpec::default).seed_stride = s.parse()?;
+    }
+    let threads: usize = flag(args, "--threads").map_or(Ok(0), |s| s.parse())?;
+    let fleet = spec.fleet.clone().unwrap_or_default();
+    eprintln!(
+        "running fleet `{}`: {} shard(s) for {:.1} h each (seed {} stride {}, jitter {} us, \
+         scheduler {}) ...",
+        spec.name,
+        fleet.shards,
+        spec.horizon_us as f64 / H as f64,
+        spec.seed,
+        fleet.seed_stride,
+        fleet.phase_jitter_us,
+        spec.scheduler.label()
+    );
+    let t0 = std::time::Instant::now();
+    let fr = spec.run_fleet(threads)?;
+    println!("== fleet summary: {} x {} shard(s) ==", spec.name, fr.shards.len());
+    println!(
+        "{:>6} {:>6} {:>8} {:>8} {:>10} {:>9} {:>9}",
+        "shard", "seed", "learned", "infer", "energy_mJ", "mean_acc", "final_acc"
+    );
+    for (i, r) in fr.shards.iter().enumerate() {
+        let sh = spec.shard(i as u32)?;
+        println!(
+            "{i:>6} {:>6} {:>8} {:>8} {:>10.1} {:>9.3} {:>9.3}",
+            sh.seed,
+            r.learned,
+            r.inferred,
+            r.energy_uj / 1000.0,
+            r.mean_accuracy(3),
+            r.final_accuracy()
+        );
+    }
+    let roll = &fr.rollup;
+    println!("  rollups (mean / min / max / total):");
+    for (name, r) in [
+        ("final_accuracy", roll.final_accuracy),
+        ("mean_accuracy", roll.mean_accuracy),
+        ("energy_uj", roll.energy_uj),
+        ("learned", roll.learned),
+        ("inferred", roll.inferred),
+        ("power_failures", roll.power_failures),
+        ("stale_plans", roll.stale_plans),
+    ] {
+        println!(
+            "    {name:<15} {:>12.3} {:>12.3} {:>12.3} {:>14.3}",
+            r.mean, r.min, r.max, r.total
+        );
+    }
+    println!("  wallclock          {:.2}s", t0.elapsed().as_secs_f64());
+    if let Some(out) = flag(args, "--out") {
+        std::fs::create_dir_all(&out)?;
+        let path = format!("{out}/{}-fleet.json", spec.label());
+        std::fs::write(&path, fr.to_json().to_string())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_sweep(args: &[String]) -> Result<()> {
     let path = args
         .first()
@@ -196,11 +278,13 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     let out_dir = flag(args, "--out").unwrap_or_else(|| "out/sweep".into());
 
     let cells = sweep.expand()?;
+    let jobs: usize = cells.iter().map(|c| c.spec.shard_count() as usize).sum();
     eprintln!(
-        "sweep `{}`: {} cell(s) on {} worker thread(s), writing {out_dir}/<cell>.json ...",
+        "sweep `{}`: {} cell(s) / {jobs} shard job(s) on {} worker thread(s), \
+         writing {out_dir}/<cell>.json ...",
         sweep.name,
         cells.len(),
-        ilearn::scenario::sweep::resolve_workers(threads, cells.len())
+        ilearn::scenario::sweep::resolve_workers(threads, jobs)
     );
     let t0 = std::time::Instant::now();
     let outcomes = SweepRunner::new(threads).run_cells(cells);
@@ -215,15 +299,29 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         let path = format!("{out_dir}/{}.json", o.id);
         std::fs::write(&path, o.to_json().to_string())?;
         match &o.result {
-            Ok(r) => println!(
-                "{:<58} {:>7} {:>7} {:>9.3} {:>9.3} {:>9.1}",
+            // fleet cells print their rollup means; plain cells their run
+            Ok(f) if f.shards.len() > 1 => println!(
+                "{:<58} {:>7} {:>7} {:>9.3} {:>9.3} {:>9.1}  (x{} shards)",
                 o.id,
-                r.learned,
-                r.inferred,
-                r.mean_accuracy(3),
-                r.final_accuracy(),
-                r.energy_uj / 1000.0
+                f.rollup.learned.total as u64,
+                f.rollup.inferred.total as u64,
+                f.rollup.mean_accuracy.mean,
+                f.rollup.final_accuracy.mean,
+                f.rollup.energy_uj.total / 1000.0,
+                f.shards.len()
             ),
+            Ok(f) => {
+                let r = f.primary();
+                println!(
+                    "{:<58} {:>7} {:>7} {:>9.3} {:>9.3} {:>9.1}",
+                    o.id,
+                    r.learned,
+                    r.inferred,
+                    r.mean_accuracy(3),
+                    r.final_accuracy(),
+                    r.energy_uj / 1000.0
+                )
+            }
             Err(e) => {
                 failed += 1;
                 println!("{:<58} FAILED: {e}", o.id);
@@ -353,7 +451,20 @@ fn cmd_list() -> Result<()> {
    "scenarios": ["vibration", "presence"],
    "seeds": [1, 2],
    "schedulers": ["planner", "alpaca:50"],
-   "heuristics": ["round_robin"]}"#
+   "heuristics": ["round_robin"],
+   "fleet": {"shards": 16, "phase_jitter_us": 60000000}}"#
     );
+    println!();
+    println!("scenario fleet block (also a spec-level field):");
+    println!(
+        "{}",
+        r#"  "fleet": {"shards": 16, "phase_jitter_us": 60000000, "seed_stride": 1,
+            "overrides": [{"shard": 3, "harvester": {"kind": "constant", "power_w": 0.01}}]}"#
+    );
+    println!();
+    println!(
+        "trace harvesters: {{\"kind\": \"trace\", \"path\": \"examples/traces/solar_day.csv\"}}"
+    );
+    println!("trace corpus:    examples/traces/*.csv (see examples/traces/README.md)");
     Ok(())
 }

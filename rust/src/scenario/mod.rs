@@ -15,15 +15,20 @@
 //! * [`SweepSpec`] / [`SweepRunner`] ([`sweep`]) — grid expansion of
 //!   (scenarios × schedulers × heuristics × backends × seeds) and threaded
 //!   execution, one engine per worker thread (the compute backends are
-//!   deliberately not `Send`), emitting one JSON [`crate::sim::RunResult`]
-//!   per cell in deterministic cell order.
+//!   deliberately not `Send`), emitting one JSON document per cell in
+//!   deterministic cell order.
+//! * [`FleetSpec`] — the `"fleet"` block: deploy one scenario across N
+//!   shards (phase-jittered harvesters, strided seeds, optional per-shard
+//!   harvester overrides). The sweep runner schedules shard-level work
+//!   items and fans each cell's shards into a
+//!   [`crate::sim::fleet::FleetResult`].
 
 pub mod spec;
 pub mod sweep;
 
 pub use spec::{
-    BackendKind, CapacitorSpec, CostKind, HarvesterSpec, LearnerSpec, MotionSpec, ScenarioSpec,
-    SchedulerKind, SensorSpec,
+    BackendKind, CapacitorSpec, CostKind, FleetSpec, HarvesterSpec, LearnerSpec, MotionSpec,
+    ScenarioSpec, SchedulerKind, SensorSpec,
 };
 pub use sweep::{SweepCell, SweepOutcome, SweepRunner, SweepSpec};
 
@@ -90,6 +95,7 @@ pub fn air_quality(seed: u64, horizon_us: u64) -> ScenarioSpec {
         probe_lookback_us: 6 * 3_600_000_000,
         charge_step_us: 60_000_000,
         charge_kernel: ChargeKernel::default(),
+        fleet: None,
     }
 }
 
@@ -125,6 +131,7 @@ pub fn presence(seed: u64, horizon_us: u64) -> ScenarioSpec {
         probe_lookback_us: 2 * 3_600_000_000,
         charge_step_us: 60_000_000,
         charge_kernel: ChargeKernel::default(),
+        fleet: None,
     }
 }
 
@@ -166,6 +173,7 @@ pub fn vibration(seed: u64, horizon_us: u64) -> ScenarioSpec {
         // sample right past them
         charge_step_us: 1_000_000,
         charge_kernel: ChargeKernel::default(),
+        fleet: None,
     }
 }
 

@@ -10,7 +10,7 @@ use crate::backend::native::NativeBackend;
 use crate::backend::pjrt::PjrtBackend;
 use crate::backend::ComputeBackend;
 use crate::baselines::{DutyCycleScheduler, MayflyScheduler};
-use crate::energy::harvester::{Constant, Harvester, Piezo, Rf, Solar, Trace, DAY_S};
+use crate::energy::harvester::{Constant, Harvester, PhaseShift, Piezo, Rf, Solar, Trace, DAY_S};
 use crate::energy::{Capacitor, CostModel};
 use crate::error::{Error, Result};
 use crate::learning::{ClusterLabelLearner, KnnAnomalyLearner, Learner};
@@ -20,6 +20,7 @@ use crate::sensors::accel::{Accel, MotionProfile};
 use crate::sensors::rssi::Area;
 use crate::sensors::{AirQuality, Rssi, Sensor};
 use crate::sim::engine::Engine;
+use crate::sim::fleet::{Fleet, FleetResult, Shard, ShardFactory};
 use crate::sim::{ChargeKernel, PlannerScheduler, Scheduler, SimConfig};
 use crate::util::json::Json;
 
@@ -166,6 +167,10 @@ pub enum HarvesterSpec {
     },
     Trace {
         points: Vec<(u64, f64)>,
+        /// CSV file the points were loaded from ([`Trace::from_csv`]);
+        /// `Some` serializes as the path (re-loaded on parse), `None` as
+        /// the inline point list.
+        path: Option<String>,
     },
 }
 
@@ -221,7 +226,7 @@ impl HarvesterSpec {
                 Box::new(p)
             }
             HarvesterSpec::Constant { power_w } => Box::new(Constant(*power_w)),
-            HarvesterSpec::Trace { points } => Box::new(Trace {
+            HarvesterSpec::Trace { points, .. } => Box::new(Trace {
                 points: points.clone(),
             }),
         }
@@ -289,7 +294,7 @@ impl HarvesterSpec {
                     return bad(format!("constant power_w {power_w} must be >= 0"));
                 }
             }
-            HarvesterSpec::Trace { points } => {
+            HarvesterSpec::Trace { points, .. } => {
                 if points.is_empty() {
                     return bad("trace must not be empty (a permanently 0 W world)".into());
                 }
@@ -353,16 +358,29 @@ impl HarvesterSpec {
                 ("kind", "constant".into()),
                 ("power_w", Json::Num(*power_w)),
             ]),
-            HarvesterSpec::Trace { points } => Json::obj(vec![
-                ("kind", "trace".into()),
-                ("points", pairs_to_json(points)),
-            ]),
+            HarvesterSpec::Trace { points, path } => match path {
+                Some(p) => Json::obj(vec![
+                    ("kind", "trace".into()),
+                    ("path", Json::Str(p.clone())),
+                ]),
+                None => Json::obj(vec![
+                    ("kind", "trace".into()),
+                    ("points", pairs_to_json(points)),
+                ]),
+            },
         }
     }
 
     fn from_json(j: &Json) -> Result<HarvesterSpec> {
         let what = "harvester";
-        match req_str(j, "kind", what)? {
+        // `type` is accepted as a synonym for `kind` (trace-corpus specs)
+        let kind = match j.get("kind").or_else(|| j.get("type")) {
+            Some(v) => v.as_str().ok_or_else(|| {
+                Error::Config(format!("{what}: field `kind` must be a string"))
+            })?,
+            None => return Err(Error::Config(format!("{what}: missing field `kind`"))),
+        };
+        match kind {
             "solar" => Ok(HarvesterSpec::Solar {
                 peak_w: req_f64(j, "peak_w", what)?,
                 sunrise_s: req_f64(j, "sunrise_s", what)?,
@@ -384,9 +402,21 @@ impl HarvesterSpec {
             "constant" => Ok(HarvesterSpec::Constant {
                 power_w: req_f64(j, "power_w", what)?,
             }),
-            "trace" => Ok(HarvesterSpec::Trace {
-                points: pairs_from_json(req(j, "points", what)?, "harvester trace")?,
-            }),
+            "trace" => match j.get("path").filter(|v| !v.is_null()) {
+                Some(v) => {
+                    let path = v.as_str().ok_or_else(|| {
+                        Error::Config(format!("{what}: trace `path` must be a string"))
+                    })?;
+                    Ok(HarvesterSpec::Trace {
+                        points: Trace::from_csv(path)?.points,
+                        path: Some(path.to_string()),
+                    })
+                }
+                None => Ok(HarvesterSpec::Trace {
+                    points: pairs_from_json(req(j, "points", what)?, "harvester trace")?,
+                    path: None,
+                }),
+            },
             other => Err(Error::Config(format!(
                 "unknown harvester kind `{other}` (solar|rf|piezo|constant|trace)"
             ))),
@@ -902,6 +932,117 @@ impl BackendKind {
     }
 }
 
+// ------------------------------------------------------------- fleet spec
+
+/// A fleet block: one scenario deployed across `shards` devices. Shard
+/// `i` derives its world from the per-shard seed/offset rule —
+/// `seed + i × seed_stride` re-seeds the sensor, learner, selection
+/// heuristic and (by derivation) the harvester's stochastic texture, and
+/// `i × phase_jitter_us` phase-shifts the harvester (so 16 solar nodes
+/// see the same diurnal curve each a little deeper into the day, and
+/// trace shards replay distinct slices of one recording). `overrides`
+/// optionally replaces the harvester of named shards (heterogeneous
+/// fleets: a few RF nodes in a solar deployment).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    pub shards: u32,
+    /// Per-shard harvester phase offset (shard i starts i × this deeper
+    /// into the energy world).
+    pub phase_jitter_us: u64,
+    /// Per-shard seed stride (shard i runs at seed + i × this).
+    pub seed_stride: u64,
+    /// (shard index, harvester) overrides, sorted by shard index.
+    pub overrides: Vec<(u32, HarvesterSpec)>,
+}
+
+impl Default for FleetSpec {
+    fn default() -> Self {
+        FleetSpec {
+            shards: 1,
+            phase_jitter_us: 0,
+            seed_stride: 1,
+            overrides: Vec::new(),
+        }
+    }
+}
+
+impl FleetSpec {
+    /// Harvester override for `shard`, if one is declared.
+    pub fn override_for(&self, shard: u32) -> Option<&HarvesterSpec> {
+        self.overrides
+            .iter()
+            .find(|&&(i, _)| i == shard)
+            .map(|(_, h)| h)
+    }
+
+    fn validate(&self, what: &str) -> Result<()> {
+        if self.shards == 0 {
+            return Err(Error::Config(format!("{what}: fleet shards must be >= 1")));
+        }
+        for w in self.overrides.windows(2) {
+            if w[0].0 >= w[1].0 {
+                return Err(Error::Config(format!(
+                    "{what}: fleet override shard indices must be strictly increasing"
+                )));
+            }
+        }
+        for (i, h) in &self.overrides {
+            if *i >= self.shards {
+                return Err(Error::Config(format!(
+                    "{what}: fleet override names shard {i} but the fleet has {} shard(s)",
+                    self.shards
+                )));
+            }
+            h.validate(&format!("{what} (shard {i} override)"))?;
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shards", Json::Num(self.shards as f64)),
+            ("phase_jitter_us", Json::Num(self.phase_jitter_us as f64)),
+            ("seed_stride", Json::Num(self.seed_stride as f64)),
+            (
+                "overrides",
+                Json::Arr(
+                    self.overrides
+                        .iter()
+                        .map(|(i, h)| {
+                            Json::obj(vec![
+                                ("shard", Json::Num(*i as f64)),
+                                ("harvester", h.to_json()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<FleetSpec> {
+        let what = "fleet";
+        let mut overrides = Vec::new();
+        if let Some(v) = j.get("overrides").filter(|v| !v.is_null()) {
+            let arr = v.as_arr().ok_or_else(|| {
+                Error::Config(format!("{what}: `overrides` must be an array"))
+            })?;
+            for o in arr {
+                overrides.push((
+                    req_u32(o, "shard", "fleet override")?,
+                    HarvesterSpec::from_json(req(o, "harvester", "fleet override")?)?,
+                ));
+            }
+        }
+        Ok(FleetSpec {
+            shards: req_u32(j, "shards", what)?,
+            phase_jitter_us: opt_u64(j, "phase_jitter_us", what)?.unwrap_or(0),
+            seed_stride: opt_u64(j, "seed_stride", what)?.unwrap_or(1),
+            overrides,
+        })
+    }
+}
+
 // ---------------------------------------------------------- scenario spec
 
 /// A complete, declarative experiment scenario. Everything an engine needs
@@ -936,6 +1077,9 @@ pub struct ScenarioSpec {
     /// Charging integrator: the event-driven analytic kernel (default) or
     /// the stepped reference oracle.
     pub charge_kernel: ChargeKernel,
+    /// Fleet block: deploy this scenario across N shards (`None` = the
+    /// plain single device, which equals a 1-shard fleet bit-for-bit).
+    pub fleet: Option<FleetSpec>,
 }
 
 impl ScenarioSpec {
@@ -1038,6 +1182,31 @@ impl ScenarioSpec {
         self.capacitor.validate(&what)?;
         self.sensor.validate(&what)?;
         self.scheduler.validate(&what)?;
+        if let Some(fleet) = &self.fleet {
+            fleet.validate(&what)?;
+            // the last shard's derived seed must itself survive the JSON
+            // round trip (and not overflow)
+            let last = u64::from(fleet.shards - 1);
+            let max_seed = last
+                .checked_mul(fleet.seed_stride)
+                .and_then(|d| self.seed.checked_add(d));
+            match max_seed {
+                Some(s) if s <= Self::MAX_SEED => {}
+                _ => {
+                    return Err(Error::Config(format!(
+                        "{what}: shard {last}'s derived seed (seed {} + {last} x stride {}) \
+                         exceeds 2^53",
+                        self.seed, fleet.seed_stride
+                    )))
+                }
+            }
+            if last.checked_mul(fleet.phase_jitter_us).is_none() {
+                return Err(Error::Config(format!(
+                    "{what}: shard {last}'s phase offset overflows ({last} x jitter {})",
+                    fleet.phase_jitter_us
+                )));
+            }
+        }
         // A motion profile shorter than the horizon means zero gestures and
         // (for piezo) zero harvest past its last episode — a mostly-dead
         // world that would "succeed" with empty results. A fractional
@@ -1091,6 +1260,32 @@ impl ScenarioSpec {
         self.learner.build(self.seed)
     }
 
+    /// Number of fleet shards (1 for a fleet-less scenario).
+    pub fn shard_count(&self) -> u32 {
+        self.fleet.as_ref().map(|f| f.shards).unwrap_or(1)
+    }
+
+    /// Shard `index`'s identity under the seed/offset derivation rule.
+    pub fn shard(&self, index: u32) -> Result<Shard> {
+        if index >= self.shard_count() {
+            return Err(Error::Config(format!(
+                "scenario `{}`: shard {index} out of range (fleet has {} shard(s))",
+                self.name,
+                self.shard_count()
+            )));
+        }
+        let (stride, jitter) = self
+            .fleet
+            .as_ref()
+            .map(|f| (f.seed_stride, f.phase_jitter_us))
+            .unwrap_or((1, 0));
+        Ok(Shard {
+            index,
+            seed: self.seed + u64::from(index) * stride,
+            phase_us: u64::from(index) * jitter,
+        })
+    }
+
     /// Point both the RF harvester and the RSSI sensor at a
     /// (start_us, distance_m) schedule — the Fig. 15(b) protocol. Errors
     /// if the scenario has neither an RF harvester nor an RSSI sensor.
@@ -1114,20 +1309,47 @@ impl ScenarioSpec {
         }
     }
 
-    /// Validate and compile into a ready-to-run engine.
+    /// Validate and compile into a ready-to-run engine (the 1-shard
+    /// special case: exactly shard 0 of this scenario's fleet).
     pub fn build_engine(&self) -> Result<Engine> {
+        self.build_shard_engine(0)
+    }
+
+    /// Validate and compile shard `index`'s engine. Shard 0 of a
+    /// fleet-less scenario is the plain [`ScenarioSpec::build_engine`]
+    /// construction bit-for-bit: the base seed, no phase offset.
+    pub fn build_shard_engine(&self, index: u32) -> Result<Engine> {
         self.validate()?;
+        let sh = self.shard(index)?;
+        let hs = self
+            .fleet
+            .as_ref()
+            .and_then(|f| f.override_for(index))
+            .unwrap_or(&self.harvester);
+        let mut harvester = hs.build(sh.seed);
+        if sh.phase_us > 0 {
+            harvester = Box::new(PhaseShift::new(harvester, sh.phase_us));
+        }
+        let mut cfg = self.sim_config();
+        cfg.seed = sh.seed;
         Engine::builder()
-            .sim(self.sim_config())
-            .harvester(self.build_harvester())
+            .sim(cfg)
+            .harvester(harvester)
             .capacitor(self.build_capacitor())
-            .sensor(self.build_sensor())
-            .learner(self.build_learner())
-            .selector(self.heuristic.build(self.seed ^ 0x5E1))
+            .sensor(self.sensor.build(sh.seed, self.horizon_us))
+            .learner(self.learner.build(sh.seed))
+            .selector(self.heuristic.build(sh.seed ^ 0x5E1))
             .scheduler(self.scheduler.build(self.goal))
             .backend(self.backend.build()?)
             .costs(self.cost.build())
             .build()
+    }
+
+    /// Run the whole fleet (`threads` = 0 uses the available parallelism)
+    /// and fan the per-shard results into a [`FleetResult`].
+    pub fn run_fleet(&self, threads: usize) -> Result<FleetResult> {
+        self.validate()?;
+        Fleet::new(self)?.run(threads)
     }
 
     pub fn to_json(&self) -> Json {
@@ -1162,6 +1384,13 @@ impl ScenarioSpec {
             ("probe_lookback_us", Json::Num(self.probe_lookback_us as f64)),
             ("charge_step_us", Json::Num(self.charge_step_us as f64)),
             ("charge_kernel", Json::Str(self.charge_kernel.name().into())),
+            (
+                "fleet",
+                match &self.fleet {
+                    Some(f) => f.to_json(),
+                    None => Json::Null,
+                },
+            ),
         ])
     }
 
@@ -1223,6 +1452,11 @@ impl ScenarioSpec {
             probe_lookback_us: req_u64(j, "probe_lookback_us", what)?,
             charge_step_us: req_u64(j, "charge_step_us", what)?,
             charge_kernel,
+            fleet: match j.get("fleet") {
+                None => None,
+                Some(v) if v.is_null() => None,
+                Some(v) => Some(FleetSpec::from_json(v)?),
+            },
         };
         spec.validate()?;
         Ok(spec)
@@ -1231,6 +1465,24 @@ impl ScenarioSpec {
     /// Parse a spec from JSON text.
     pub fn parse(text: &str) -> Result<ScenarioSpec> {
         Self::from_json(&Json::parse(text)?)
+    }
+}
+
+/// A scenario is a shard factory: it owns the seed/phase derivation rule
+/// and the per-shard overrides, so [`Fleet`] (and the sweep runner's
+/// shard-level work items) can build any shard's engine on any worker
+/// thread.
+impl ShardFactory for ScenarioSpec {
+    fn shard_count(&self) -> u32 {
+        ScenarioSpec::shard_count(self)
+    }
+
+    fn shard(&self, index: u32) -> Result<Shard> {
+        ScenarioSpec::shard(self, index)
+    }
+
+    fn build_shard_engine(&self, index: u32) -> Result<Engine> {
+        ScenarioSpec::build_shard_engine(self, index)
     }
 }
 
@@ -1350,7 +1602,10 @@ mod tests {
 
         // an empty trace is a permanently dark world
         let mut s = preset("vibration", 1, 2 * H).unwrap();
-        s.harvester = HarvesterSpec::Trace { points: vec![] };
+        s.harvester = HarvesterSpec::Trace {
+            points: vec![],
+            path: None,
+        };
         assert!(s.validate().is_err());
     }
 
@@ -1402,6 +1657,108 @@ mod tests {
         // and a vibration scenario refuses the patch
         let mut v = preset("vibration", 3, 2 * H).unwrap();
         assert!(v.set_rf_distances(vec![(0, 3.0)]).is_err());
+    }
+
+    #[test]
+    fn fleet_block_round_trips_and_validates() {
+        let mut s = preset("air_quality", 1, 2 * H).unwrap();
+        assert_eq!(s.shard_count(), 1);
+        s.fleet = Some(FleetSpec {
+            shards: 4,
+            phase_jitter_us: 250_000,
+            seed_stride: 7,
+            overrides: vec![(2, HarvesterSpec::Constant { power_w: 0.02 })],
+        });
+        s.validate().unwrap();
+        let back = ScenarioSpec::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(back, s, "fleet block changed across JSON round trip");
+        // derivation rule
+        assert_eq!(back.shard_count(), 4);
+        let sh = back.shard(3).unwrap();
+        assert_eq!(sh.seed, 1 + 3 * 7);
+        assert_eq!(sh.phase_us, 750_000);
+        assert!(back.shard(4).is_err());
+        // bad blocks rejected: zero shards, out-of-range override,
+        // non-increasing override indices, overflowing derived seed
+        let mut bad = s.clone();
+        bad.fleet.as_mut().unwrap().shards = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = s.clone();
+        bad.fleet.as_mut().unwrap().overrides = vec![(9, HarvesterSpec::Constant { power_w: 0.1 })];
+        assert!(bad.validate().is_err());
+        let mut bad = s.clone();
+        bad.fleet.as_mut().unwrap().overrides = vec![
+            (2, HarvesterSpec::Constant { power_w: 0.1 }),
+            (2, HarvesterSpec::Constant { power_w: 0.2 }),
+        ];
+        assert!(bad.validate().is_err());
+        let mut bad = s.clone();
+        bad.fleet.as_mut().unwrap().seed_stride = ScenarioSpec::MAX_SEED;
+        assert!(bad.validate().is_err());
+        // an invalid override harvester is caught too
+        let mut bad = s;
+        bad.fleet.as_mut().unwrap().overrides =
+            vec![(1, HarvesterSpec::Constant { power_w: -1.0 })];
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn shard_zero_is_the_plain_engine_construction() {
+        // fleet-less build_engine == build_shard_engine(0), and adding a
+        // fleet block does not perturb shard 0 (base seed, zero phase)
+        let mut s = preset("vibration", 5, 2 * H).unwrap();
+        let a = s.build_engine().unwrap().run().unwrap();
+        s.fleet = Some(FleetSpec {
+            shards: 3,
+            phase_jitter_us: 1_000_000,
+            seed_stride: 11,
+            overrides: vec![],
+        });
+        let b = s.build_shard_engine(0).unwrap().run().unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn shard_overrides_and_phase_change_the_world() {
+        let mut s = preset("vibration", 5, 2 * H).unwrap();
+        s.fleet = Some(FleetSpec {
+            shards: 3,
+            phase_jitter_us: 0,
+            seed_stride: 0, // identical seeds: only the override differs
+            overrides: vec![(1, HarvesterSpec::Constant { power_w: 0.0 })],
+        });
+        let base = s.build_shard_engine(0).unwrap().run().unwrap();
+        let dark = s.build_shard_engine(1).unwrap().run().unwrap();
+        let twin = s.build_shard_engine(2).unwrap().run().unwrap();
+        assert_eq!(dark.sensed, 0, "0 W override still sensed");
+        assert!(base.sensed > 0);
+        // stride 0 + no override: shard 2 is shard 0's exact twin
+        assert_eq!(base.to_json().to_string(), twin.to_json().to_string());
+    }
+
+    #[test]
+    fn trace_path_specs_load_the_csv() {
+        let dir = std::env::temp_dir().join("ilearn_trace_spec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        std::fs::write(&path, "# test\n0,0.0\n1000000,0.01\n").unwrap();
+        let mut s = preset("vibration", 1, 2 * H).unwrap();
+        s.harvester = HarvesterSpec::Trace {
+            points: Trace::from_csv(path.to_str().unwrap()).unwrap().points,
+            path: Some(path.to_str().unwrap().to_string()),
+        };
+        s.validate().unwrap();
+        // serializes as the path, re-loads to the same points
+        let text = s.to_json().to_string();
+        assert!(text.contains("t.csv") && !text.contains("\"points\""));
+        let back = ScenarioSpec::parse(&text).unwrap();
+        assert_eq!(back, s);
+        // `type` is accepted as a synonym for `kind`
+        let alt = text.replace("\"kind\":\"trace\"", "\"type\":\"trace\"");
+        assert_eq!(ScenarioSpec::parse(&alt).unwrap(), s);
+        // a missing file fails at parse time, naming the path
+        let gone = text.replace("t.csv", "gone.csv");
+        assert!(ScenarioSpec::parse(&gone).unwrap_err().to_string().contains("gone.csv"));
     }
 
     #[test]

@@ -2,76 +2,35 @@
 //!
 //! A [`SweepSpec`] is a declarative grid: base scenarios (named presets or
 //! inline [`ScenarioSpec`] objects) crossed with optional scheduler /
-//! heuristic / backend / seed axes. [`SweepSpec::expand`] materializes one
-//! [`SweepCell`] per grid point; [`SweepRunner`] executes the cells on a
-//! pool of worker threads — one engine per thread, because the compute
-//! backends are deliberately not `Send` — and returns results in cell
-//! order, so the output is identical for any thread count.
+//! heuristic / backend / seed axes, optionally fleet-deployed via a
+//! sweep-level `"fleet"` block. [`SweepSpec::expand`] materializes one
+//! [`SweepCell`] per grid point; [`SweepRunner`] schedules **shard-level**
+//! work items — every cell contributes one item per fleet shard — on the
+//! shared claim-counter pool ([`crate::util::pool`]), one engine per
+//! worker thread (the compute backends are deliberately not `Send`), and
+//! fans shard results back into per-cell [`FleetResult`]s in cell order,
+//! so the output is identical for any thread count.
 
 use crate::error::{Error, Result};
-use crate::scenario::spec::{BackendKind, ScenarioSpec, SchedulerKind};
+use crate::scenario::spec::{BackendKind, FleetSpec, ScenarioSpec, SchedulerKind};
 use crate::scenario::{preset, PRESETS};
 use crate::selection::Heuristic;
+use crate::sim::fleet::{FleetResult, ShardFactory};
 use crate::sim::RunResult;
 use crate::util::json::Json;
+use crate::util::pool;
 
-/// Worker-thread count `threads` resolves to for `n` jobs
-/// (`0` = available parallelism, always clamped to the job count).
-pub fn resolve_workers(threads: usize, n: usize) -> usize {
-    if threads == 0 {
-        std::thread::available_parallelism()
-            .map(|p| p.get())
-            .unwrap_or(4)
-    } else {
-        threads
-    }
-    .min(n.max(1))
-}
+pub use crate::util::pool::resolve_workers;
 
 /// Run many scenarios concurrently (one engine per worker thread),
 /// keeping one `Result` per scenario: a failing cell never discards its
 /// siblings' finished work. `threads == 0` uses the available
 /// parallelism. Results come back in input order regardless of
-/// scheduling.
-///
-/// Work distribution is a lock-free claim counter and every finished cell
-/// lands in its own result slot through a per-index channel send — there
-/// is no shared `Mutex` for big grids to contend on (the old
-/// `Mutex<&mut Vec>` serialized every completion).
+/// scheduling (the shared claim-counter pool, [`crate::util::pool`]).
 pub fn run_parallel_each(specs: &[ScenarioSpec], threads: usize) -> Vec<Result<RunResult>> {
-    let n = specs.len();
-    if n == 0 {
-        return Vec::new();
-    }
-    let workers = resolve_workers(threads, n);
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let (tx, rx) = std::sync::mpsc::channel::<(usize, Result<RunResult>)>();
-    std::thread::scope(|scope| {
-        for _ in 0..workers {
-            let tx = tx.clone();
-            let next = &next;
-            scope.spawn(move || loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = specs[i].build_engine().and_then(|e| e.run());
-                if tx.send((i, r)).is_err() {
-                    break; // receiver gone: nothing left to report to
-                }
-            });
-        }
-        drop(tx); // workers hold the remaining senders
-    });
-    // every worker has exited, so the channel is closed and fully drained
-    let mut results: Vec<Option<Result<RunResult>>> = (0..n).map(|_| None).collect();
-    for (i, r) in rx {
-        results[i] = Some(r);
-    }
-    results
-        .into_iter()
-        .map(|r| r.expect("every claimed cell reports exactly once"))
-        .collect()
+    pool::run_indexed(specs.len(), threads, |i| {
+        specs[i].build_engine().and_then(|e| e.run())
+    })
 }
 
 /// All-or-nothing variant of [`run_parallel_each`] (the figure harness's
@@ -88,21 +47,26 @@ pub struct SweepCell {
     pub spec: ScenarioSpec,
 }
 
-/// A finished cell. Failed cells carry the error text instead of a
-/// result, so one bad cell never discards a sweep's completed work.
+/// A finished cell: the fan-in over its fleet shards (a fleet-less cell
+/// is a 1-shard fleet whose [`FleetResult::primary`] is the plain run).
+/// Failed cells carry the error text instead of a result, so one bad cell
+/// never discards a sweep's completed work.
 #[derive(Debug, Clone)]
 pub struct SweepOutcome {
     pub id: String,
     pub spec: ScenarioSpec,
-    pub result: std::result::Result<RunResult, String>,
+    pub result: std::result::Result<FleetResult, String>,
 }
 
 impl SweepOutcome {
     /// The per-cell JSON document the CLI writes: spec + result (or the
-    /// cell's error).
+    /// cell's error). Fleet-less cells keep the pre-fleet document shape
+    /// (`"result"`: the single run); fleet cells emit `"fleet"` with the
+    /// rollups and every shard's run.
     pub fn to_json(&self) -> Json {
         let payload = match &self.result {
-            Ok(r) => ("result", r.to_json()),
+            Ok(f) if self.spec.fleet.is_none() => ("result", f.primary().to_json()),
+            Ok(f) => ("fleet", f.to_json()),
             Err(e) => ("error", Json::Str(e.clone())),
         };
         Json::obj(vec![
@@ -127,6 +91,9 @@ pub struct SweepSpec {
     pub heuristics: Vec<Heuristic>,
     /// Backend axis (empty: keep each scenario's own backend).
     pub backends: Vec<BackendKind>,
+    /// Sweep-level fleet block, applied to every scenario that does not
+    /// declare its own (`None`: keep each scenario's own fleet, if any).
+    pub fleet: Option<FleetSpec>,
 }
 
 impl SweepSpec {
@@ -157,7 +124,7 @@ impl SweepSpec {
         // axes are optional, so a typo'd key ("scheduler" for
         // "schedulers") would silently drop a whole axis — reject unknown
         // keys instead of running a different experiment
-        const KNOWN: [&str; 7] = [
+        const KNOWN: [&str; 8] = [
             "name",
             "hours",
             "scenarios",
@@ -165,6 +132,7 @@ impl SweepSpec {
             "schedulers",
             "heuristics",
             "backends",
+            "fleet",
         ];
         let Json::Obj(kvs) = j else {
             return Err(Error::Config(format!("{what}: expected a JSON object")));
@@ -274,6 +242,12 @@ impl SweepSpec {
             }
         }
 
+        let fleet = match j.get("fleet") {
+            None => None,
+            Some(v) if v.is_null() => None,
+            Some(v) => Some(FleetSpec::from_json(v)?),
+        };
+
         Ok(SweepSpec {
             name,
             scenarios,
@@ -281,6 +255,7 @@ impl SweepSpec {
             schedulers,
             heuristics,
             backends,
+            fleet,
         })
     }
 
@@ -319,6 +294,9 @@ impl SweepSpec {
                             spec.heuristic = heuristic;
                             spec.backend = backend;
                             spec.seed = seed;
+                            if spec.fleet.is_none() {
+                                spec.fleet = self.fleet.clone();
+                            }
                             spec.validate()?;
                             cells.push(SweepCell {
                                 id: spec.label(),
@@ -361,17 +339,46 @@ impl SweepRunner {
         Ok(self.run_cells(sweep.expand()?))
     }
 
-    /// Run pre-expanded cells.
+    /// Run pre-expanded cells, scheduling **shard-level** work items: a
+    /// single grid cell parallelizes across its fleet shards on the same
+    /// claim-counter pool the cells share, so one 16-shard cell saturates
+    /// 16 workers instead of one. Shard results fan back into per-cell
+    /// [`FleetResult`]s in cell order (deterministic for any thread
+    /// count); a cell fails with its first failing shard's error.
     pub fn run_cells(&self, cells: Vec<SweepCell>) -> Vec<SweepOutcome> {
-        let specs: Vec<ScenarioSpec> = cells.iter().map(|c| c.spec.clone()).collect();
-        let results = run_parallel_each(&specs, self.threads);
+        let jobs: Vec<(usize, u32)> = cells
+            .iter()
+            .enumerate()
+            .flat_map(|(ci, c)| (0..c.spec.shard_count()).map(move |s| (ci, s)))
+            .collect();
+        let mut results = pool::run_indexed(jobs.len(), self.threads, |k| {
+            let (ci, shard) = jobs[k];
+            cells[ci].spec.run_shard(shard)
+        })
+        .into_iter();
+        // jobs were emitted cell-major, so each cell's shard results are
+        // a contiguous run of the result stream
         cells
             .into_iter()
-            .zip(results)
-            .map(|(cell, result)| SweepOutcome {
-                id: cell.id,
-                spec: cell.spec,
-                result: result.map_err(|e| e.to_string()),
+            .map(|cell| {
+                let n = cell.spec.shard_count();
+                let mut shards = Vec::with_capacity(n as usize);
+                let mut err = None;
+                for s in 0..n {
+                    match results.next().expect("one result per shard job") {
+                        Ok(r) => shards.push(r),
+                        Err(e) if err.is_none() => err = Some(format!("shard {s}: {e}")),
+                        Err(_) => {}
+                    }
+                }
+                SweepOutcome {
+                    id: cell.id,
+                    spec: cell.spec,
+                    result: match err {
+                        None => Ok(FleetResult::aggregate(shards)),
+                        Some(e) => Err(e),
+                    },
+                }
             })
             .collect()
     }
@@ -460,5 +467,73 @@ mod tests {
     #[test]
     fn run_parallel_handles_empty_input() {
         assert!(run_parallel(&[], 4).unwrap().is_empty());
+    }
+
+    #[test]
+    fn sweep_level_fleet_deploys_every_cell() {
+        let sweep = SweepSpec::parse(
+            r#"{"hours": 2, "scenarios": ["vibration", "presence"], "seeds": [1, 2],
+                "fleet": {"shards": 3, "phase_jitter_us": 60000000}}"#,
+        )
+        .unwrap();
+        let cells = sweep.expand().unwrap();
+        assert_eq!(cells.len(), 4);
+        for c in &cells {
+            assert_eq!(c.spec.shard_count(), 3);
+            let sh = c.spec.shard(2).unwrap();
+            assert_eq!(sh.seed, c.spec.seed + 2); // default stride 1
+            assert_eq!(sh.phase_us, 120_000_000);
+        }
+        // a scenario's own fleet block wins over the sweep-level one
+        let mut own = crate::scenario::preset("vibration", 9, 7_200_000_000).unwrap();
+        own.fleet = Some(FleetSpec {
+            shards: 5,
+            ..FleetSpec::default()
+        });
+        let sweep = SweepSpec {
+            name: "t".into(),
+            scenarios: vec![own],
+            seeds: vec![],
+            schedulers: vec![],
+            heuristics: vec![],
+            backends: vec![],
+            fleet: Some(FleetSpec {
+                shards: 2,
+                ..FleetSpec::default()
+            }),
+        };
+        assert_eq!(sweep.expand().unwrap()[0].spec.shard_count(), 5);
+    }
+
+    #[test]
+    fn fleet_cells_fan_in_on_the_shard_pool() {
+        // one 2-shard cell next to a plain cell: the runner schedules 3
+        // shard jobs and fans them back into 2 outcomes in cell order
+        let sweep = SweepSpec::parse(
+            r#"{"hours": 1, "scenarios": ["vibration"], "seeds": [1, 2]}"#,
+        )
+        .unwrap();
+        let mut cells = sweep.expand().unwrap();
+        cells[0].spec.fleet = Some(FleetSpec {
+            shards: 2,
+            seed_stride: 100,
+            ..FleetSpec::default()
+        });
+        let outcomes = SweepRunner::new(2).run_cells(cells.clone());
+        assert_eq!(outcomes.len(), 2);
+        let fleet = outcomes[0].result.as_ref().unwrap();
+        assert_eq!(fleet.shards.len(), 2);
+        assert_eq!(fleet.rollup.shards, 2);
+        assert_eq!(outcomes[1].result.as_ref().unwrap().shards.len(), 1);
+        // the fleet cell's document carries rollups; the plain cell keeps
+        // the pre-fleet shape
+        assert!(outcomes[0].to_json().to_string().contains("\"fleet\""));
+        assert!(outcomes[1].to_json().to_string().contains("\"result\""));
+        // shard 0 of the fleet cell equals the same spec run solo
+        let solo = cells[0].spec.build_shard_engine(0).unwrap().run().unwrap();
+        assert_eq!(
+            fleet.primary().to_json().to_string(),
+            solo.to_json().to_string()
+        );
     }
 }

@@ -32,6 +32,7 @@ use crate::sensors::Sensor;
 use crate::sim::executor::{Exec, Executor};
 use crate::sim::policy::Policy;
 use crate::sim::probe::{probe_accuracy, ProbeCache};
+use crate::sim::state::RunState;
 use crate::sim::world::World;
 use crate::sim::{
     expire_stale, Checkpoint, PendingEx, PlannerScheduler, RunResult, Scheduler, SimConfig,
@@ -65,6 +66,7 @@ pub struct Engine {
     next_eval_us: u64,
     quality: f32,
     probe_cache: ProbeCache,
+    run_state: RunState,
 }
 
 /// Step-by-step construction of an [`Engine`].
@@ -203,6 +205,7 @@ impl EngineBuilder {
             next_eval_us: 0,
             quality: 0.0,
             probe_cache: ProbeCache::new(),
+            run_state: RunState::new(),
         })
     }
 }
@@ -218,8 +221,23 @@ impl Engine {
         self.world.now_us()
     }
 
+    /// The run's aggregates so far (live during a run; repopulated by
+    /// [`Engine::restore_run_state`] after a simulated host restart).
+    pub fn aggregates(&self) -> &RunResult {
+        &self.result
+    }
+
     /// Run to the horizon and return the results.
     pub fn run(mut self) -> Result<RunResult> {
+        self.run_to_end()
+    }
+
+    /// Run to the horizon by reference — the seam for callers that need
+    /// the engine's parts afterwards (e.g. carrying `exec.nvm`, which now
+    /// holds the persisted run state, across a simulated host restart).
+    /// Single-shot: the result is moved out, so a second call would start
+    /// from empty aggregates.
+    pub fn run_to_end(&mut self) -> Result<RunResult> {
         self.result.scheduler = self.policy.scheduler.name().to_string();
         while self.world.now_us() < self.cfg.horizon_us {
             if !self.charge_phase() {
@@ -239,7 +257,23 @@ impl Engine {
             .tallies()
             .map(|(k, t)| (k.to_string(), t.count, t.energy_uj, t.time_us))
             .collect();
-        Ok(self.result)
+        Ok(std::mem::take(&mut self.result))
+    }
+
+    /// Restore persisted run aggregates (counters, checkpoints, meter)
+    /// from this engine's NVM — the resume path after a host restart where
+    /// `exec.nvm` was carried over. Returns `false` when the store holds
+    /// no run state. The learner restores separately through its own NVM
+    /// checkpoint ([`crate::learning::Learner::restore`]).
+    pub fn restore_run_state(&mut self) -> Result<bool> {
+        match self.run_state.restore(&mut self.exec.nvm)? {
+            Some((result, meter)) => {
+                self.result = result;
+                self.meter = meter;
+                Ok(true)
+            }
+            None => Ok(false),
+        }
     }
 
     /// Sleep/charge until the wake threshold; false if the horizon passed.
@@ -517,6 +551,10 @@ impl Engine {
             energy_uj: self.meter.total_uj(),
             voltage: self.world.cap.voltage(),
         });
+        // persist the aggregates (O(new records) — append-only deltas) so
+        // an interrupted run restores them from NVM after a host restart
+        self.run_state
+            .save(&mut self.exec.nvm, &self.result, &self.meter)?;
         Ok(())
     }
 }

@@ -1,0 +1,341 @@
+//! The fleet layer: one scenario generalized from a single device to `N`
+//! shards — the paper's deployed *population* of energy-harvesting nodes
+//! (solar air-quality stations, RF presence sensors, kinetic tags), each
+//! an independent intermittent device over a de-correlated energy world.
+//!
+//! A [`Fleet`] owns a vector of shard states: every shard gets its own
+//! [`crate::sim::World`] (harvester phase-jittered or handed a distinct
+//! trace slice via the per-shard seed/offset rule), its own
+//! [`crate::sim::Executor`] (an independent NVM slab) and its own
+//! [`crate::sim::Policy`] — concretely, one [`Engine`] per shard, built on
+//! the worker thread that runs it (compute backends are deliberately not
+//! `Send`). The plain single-device `Engine` run is exactly the 1-shard
+//! special case: shard 0 derives the base seed and a zero phase offset,
+//! so `shards = 1` reproduces `Engine::run` bit-for-bit.
+//!
+//! Shard recipes come from a [`ShardFactory`] (implemented by
+//! [`crate::scenario::ScenarioSpec`], which owns the seed/phase derivation
+//! rule); execution fans out on the shared claim-counter pool
+//! ([`crate::util::pool`]) and fans back in — in shard order, so a
+//! [`FleetResult`] is deterministic for any thread count.
+
+use crate::error::{Error, Result};
+use crate::sim::engine::Engine;
+use crate::sim::RunResult;
+use crate::util::json::Json;
+use crate::util::pool;
+
+/// One shard's identity: its index plus the derived world parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    pub index: u32,
+    /// Derived scenario seed (base seed + index × seed stride).
+    pub seed: u64,
+    /// Harvester phase offset (index × phase jitter).
+    pub phase_us: u64,
+}
+
+/// A recipe for building the shards of one fleet. The factory owns the
+/// derivation rule (seeds, phase offsets, per-shard overrides); the
+/// [`Fleet`] owns scheduling and fan-in.
+pub trait ShardFactory: Sync {
+    /// Number of shards (>= 1).
+    fn shard_count(&self) -> u32;
+
+    /// Identity of shard `index`.
+    fn shard(&self, index: u32) -> Result<Shard>;
+
+    /// Build shard `index`'s engine (called on the worker thread that
+    /// runs it).
+    fn build_shard_engine(&self, index: u32) -> Result<Engine>;
+
+    /// Run shard `index` to its horizon.
+    fn run_shard(&self, index: u32) -> Result<RunResult> {
+        self.build_shard_engine(index)?.run()
+    }
+}
+
+/// Mean/min/max/total of one metric across a fleet's shards.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rollup {
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub total: f64,
+}
+
+impl Rollup {
+    /// Roll up a metric over shard values (zeros for an empty fleet).
+    pub fn of(xs: impl IntoIterator<Item = f64>) -> Rollup {
+        let mut n = 0usize;
+        let (mut min, mut max, mut total) = (f64::INFINITY, f64::NEG_INFINITY, 0.0);
+        for x in xs {
+            n += 1;
+            min = min.min(x);
+            max = max.max(x);
+            total += x;
+        }
+        if n == 0 {
+            return Rollup {
+                mean: 0.0,
+                min: 0.0,
+                max: 0.0,
+                total: 0.0,
+            };
+        }
+        Rollup {
+            mean: total / n as f64,
+            min,
+            max,
+            total,
+        }
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("mean", Json::Num(self.mean)),
+            ("min", Json::Num(self.min)),
+            ("max", Json::Num(self.max)),
+            ("total", Json::Num(self.total)),
+        ])
+    }
+}
+
+/// The fan-in aggregate over a fleet's shards.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetRollup {
+    pub shards: usize,
+    /// Final probe accuracy per shard.
+    pub final_accuracy: Rollup,
+    /// Mean probe accuracy per shard (3 warmup checkpoints skipped).
+    pub mean_accuracy: Rollup,
+    /// Total energy spent per shard, µJ.
+    pub energy_uj: Rollup,
+    pub learned: Rollup,
+    pub inferred: Rollup,
+    pub power_failures: Rollup,
+    pub stale_plans: Rollup,
+}
+
+impl FleetRollup {
+    pub fn of(shards: &[RunResult]) -> FleetRollup {
+        let roll = |f: &dyn Fn(&RunResult) -> f64| Rollup::of(shards.iter().map(f));
+        FleetRollup {
+            shards: shards.len(),
+            final_accuracy: roll(&|r| r.final_accuracy()),
+            mean_accuracy: roll(&|r| r.mean_accuracy(3)),
+            energy_uj: roll(&|r| r.energy_uj),
+            learned: roll(&|r| r.learned as f64),
+            inferred: roll(&|r| r.inferred as f64),
+            power_failures: roll(&|r| r.power_failures as f64),
+            stale_plans: roll(&|r| r.stale_plans as f64),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shards", Json::Num(self.shards as f64)),
+            ("final_accuracy", self.final_accuracy.to_json()),
+            ("mean_accuracy", self.mean_accuracy.to_json()),
+            ("energy_uj", self.energy_uj.to_json()),
+            ("learned", self.learned.to_json()),
+            ("inferred", self.inferred.to_json()),
+            ("power_failures", self.power_failures.to_json()),
+            ("stale_plans", self.stale_plans.to_json()),
+        ])
+    }
+}
+
+/// Everything a fleet run produces: the per-shard results (in shard
+/// order) plus the fan-in rollups.
+#[derive(Debug, Clone)]
+pub struct FleetResult {
+    pub shards: Vec<RunResult>,
+    pub rollup: FleetRollup,
+}
+
+impl FleetResult {
+    /// Fan shard results (in shard order) into the aggregate.
+    pub fn aggregate(shards: Vec<RunResult>) -> FleetResult {
+        let rollup = FleetRollup::of(&shards);
+        FleetResult { shards, rollup }
+    }
+
+    /// Shard 0's result — for a 1-shard fleet, exactly the single-device
+    /// [`RunResult`].
+    pub fn primary(&self) -> &RunResult {
+        &self.shards[0]
+    }
+
+    /// Full JSON rendering: rollups plus every shard's run document.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shards", Json::Num(self.shards.len() as f64)),
+            ("rollup", self.rollup.to_json()),
+            (
+                "per_shard",
+                Json::Arr(self.shards.iter().map(RunResult::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+/// The fleet coordinator: shard identities up front, engines built and
+/// run on the worker pool, results fanned in deterministically.
+pub struct Fleet<'a, F: ShardFactory + ?Sized> {
+    factory: &'a F,
+    shards: Vec<Shard>,
+}
+
+impl<'a, F: ShardFactory + ?Sized> Fleet<'a, F> {
+    /// Derive every shard's identity from the factory.
+    pub fn new(factory: &'a F) -> Result<Self> {
+        let n = factory.shard_count();
+        if n == 0 {
+            return Err(Error::Config("fleet: shard count must be >= 1".into()));
+        }
+        let shards = (0..n).map(|i| factory.shard(i)).collect::<Result<_>>()?;
+        Ok(Fleet { factory, shards })
+    }
+
+    /// The shard identities, in shard order.
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    /// Run every shard (`threads` = 0 uses the available parallelism) and
+    /// fan the results in. Deterministic in shard order for any thread
+    /// count; the first failing shard fails the fleet.
+    pub fn run(&self, threads: usize) -> Result<FleetResult> {
+        let results = pool::run_indexed(self.shards.len(), threads, |i| {
+            self.factory.run_shard(self.shards[i].index)
+        });
+        let shards: Result<Vec<RunResult>> = results.into_iter().collect();
+        Ok(FleetResult::aggregate(shards?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::energy::cost::CostModel;
+    use crate::energy::harvester::{Constant, Harvester, PhaseShift};
+    use crate::energy::Capacitor;
+    use crate::learning::KnnAnomalyLearner;
+    use crate::sensors::accel::{Accel, MotionProfile};
+    use crate::sim::SimConfig;
+
+    /// Minimal factory: constant-power worlds, seeds striding by 10.
+    struct ConstFleet {
+        n: u32,
+    }
+
+    impl ShardFactory for ConstFleet {
+        fn shard_count(&self) -> u32 {
+            self.n
+        }
+        fn shard(&self, index: u32) -> Result<Shard> {
+            Ok(Shard {
+                index,
+                seed: 1 + u64::from(index) * 10,
+                phase_us: u64::from(index) * 1_000_000,
+            })
+        }
+        fn build_shard_engine(&self, index: u32) -> Result<Engine> {
+            let sh = self.shard(index)?;
+            let profile = MotionProfile::alternating_hours(1.0, 3.0, 2);
+            let h: Box<dyn Harvester> = if sh.phase_us > 0 {
+                Box::new(PhaseShift::new(Box::new(Constant(0.010)), sh.phase_us))
+            } else {
+                Box::new(Constant(0.010))
+            };
+            Engine::builder()
+                .sim(SimConfig {
+                    seed: sh.seed,
+                    horizon_us: 900_000_000,
+                    eval_period_us: 300_000_000,
+                    probe_count: 10,
+                    charge_step_us: 10_000_000,
+                    probe_lookback_us: 3_600_000_000,
+                    ..Default::default()
+                })
+                .harvester(h)
+                .capacitor(Capacitor::vibration())
+                .sensor(Box::new(Accel::new(profile, sh.seed)))
+                .learner(Box::new(KnnAnomalyLearner::new()))
+                .backend(Box::new(NativeBackend::new()))
+                .costs(CostModel::kmeans())
+                .build()
+        }
+    }
+
+    fn fingerprint(f: &FleetResult) -> String {
+        f.to_json().to_string()
+    }
+
+    #[test]
+    fn rollup_math_is_exact() {
+        let r = Rollup::of([1.0, 2.0, 3.0]);
+        assert_eq!(
+            r,
+            Rollup {
+                mean: 2.0,
+                min: 1.0,
+                max: 3.0,
+                total: 6.0
+            }
+        );
+        let z = Rollup::of(std::iter::empty::<f64>());
+        assert_eq!(z.mean, 0.0);
+        assert_eq!(z.total, 0.0);
+    }
+
+    #[test]
+    fn fleet_results_are_deterministic_across_thread_counts() {
+        let factory = ConstFleet { n: 4 };
+        let fleet = Fleet::new(&factory).unwrap();
+        assert_eq!(fleet.shards().len(), 4);
+        assert_eq!(fleet.shards()[2].seed, 21);
+        let serial = fleet.run(1).unwrap();
+        let two = fleet.run(2).unwrap();
+        let all = fleet.run(0).unwrap();
+        assert_eq!(fingerprint(&serial), fingerprint(&two));
+        assert_eq!(fingerprint(&serial), fingerprint(&all));
+        assert!(serial.shards.iter().any(|r| r.sensed > 0), "dead fleet");
+    }
+
+    #[test]
+    fn rollups_fan_in_every_shard() {
+        let factory = ConstFleet { n: 3 };
+        let fr = Fleet::new(&factory).unwrap().run(0).unwrap();
+        assert_eq!(fr.rollup.shards, 3);
+        let total: u64 = fr.shards.iter().map(|r| r.learned).sum();
+        assert_eq!(fr.rollup.learned.total, total as f64);
+        assert!(fr.rollup.energy_uj.min <= fr.rollup.energy_uj.mean);
+        assert!(fr.rollup.energy_uj.mean <= fr.rollup.energy_uj.max);
+        // distinct seeds actually diversified the shards
+        let fp: Vec<String> = fr.shards.iter().map(|r| r.to_json().to_string()).collect();
+        assert!(fp.iter().any(|f| f != &fp[0]), "shards identical");
+        // JSON rendering carries rollup + per-shard docs
+        let doc = fr.to_json().to_string();
+        assert!(doc.contains("\"rollup\"") && doc.contains("\"per_shard\""));
+    }
+
+    #[test]
+    fn one_shard_fleet_is_the_plain_engine_run() {
+        let factory = ConstFleet { n: 1 };
+        let fr = Fleet::new(&factory).unwrap().run(0).unwrap();
+        let solo = factory.build_shard_engine(0).unwrap().run().unwrap();
+        assert_eq!(
+            fr.primary().to_json().to_string(),
+            solo.to_json().to_string()
+        );
+    }
+
+    #[test]
+    fn zero_shards_is_a_config_error() {
+        let factory = ConstFleet { n: 0 };
+        assert!(Fleet::new(&factory).is_err());
+    }
+}

@@ -15,15 +15,25 @@
 //! the learner/backend/meter, and advances simulated time through
 //! charge → wake → execute-actions → power-fail/sleep cycles, recording
 //! everything the evaluation section needs.
+//!
+//! [`fleet::Fleet`] generalizes one scenario from a single device to `N`
+//! shards — one World/Executor/Policy stack per shard with fan-in
+//! aggregation ([`fleet::FleetResult`]); the plain `Engine` run is its
+//! 1-shard special case. [`state::RunState`] persists a run's aggregates
+//! through NVM so interrupted runs restore bit-identically.
 
 pub mod engine;
 pub mod executor;
+pub mod fleet;
 pub mod policy;
 pub mod probe;
+pub mod state;
 pub mod world;
 
 pub use executor::{Exec, Executor};
+pub use fleet::{Fleet, FleetResult, FleetRollup, Rollup, Shard, ShardFactory};
 pub use policy::Policy;
+pub use state::RunState;
 pub use world::World;
 
 use crate::actions::Action;

@@ -18,6 +18,16 @@ pub struct Probe {
     pub example: Example,
 }
 
+/// First scan-grid instant (multiple of `step`) at or after `from_us`.
+fn grid_start(from_us: u64, step: u64) -> u64 {
+    let rem = from_us % step;
+    if rem == 0 {
+        from_us
+    } else {
+        (from_us - rem).saturating_add(step)
+    }
+}
+
 /// Build a balanced probe set of up to `count` probes by scanning
 /// `[0, horizon)` at `scan_step_us` and extracting windows through the
 /// same backend the learner uses.
@@ -45,7 +55,16 @@ pub fn build_probes_range(
 ) -> Result<Vec<Probe>> {
     let mut normal_times = Vec::new();
     let mut abnormal_times = Vec::new();
-    let mut t = from_us;
+    // The scan grid is anchored to *absolute* time (multiples of the scan
+    // step), not to the window start: two lookback windows that differ by
+    // less than one step then scan identical instants, which is what lets
+    // the ProbeCache treat them as the same probe set. Degenerate windows
+    // narrower than one step keep their single window-start sample.
+    let step = scan_step_us.max(1);
+    let mut t = grid_start(from_us, step);
+    if t >= to_us {
+        t = from_us;
+    }
     while t < to_us {
         // classify by mid-window truth to avoid boundary ambiguity
         let mid = t + (WINDOW as u64 / 2) * sensor.sample_period_us();
@@ -54,7 +73,7 @@ pub fn build_probes_range(
         } else {
             normal_times.push(t);
         }
-        t += scan_step_us;
+        t += step;
     }
     let half = count / 2;
     let pick = |times: &[u64], n: usize| -> Vec<u64> {
@@ -82,18 +101,30 @@ pub fn build_probes_range(
     Ok(probes)
 }
 
-/// Cache of the last-built probe set, keyed by the exact lookback window.
+/// Cache of the last-built probe set, keyed by the lookback window's
+/// position on the absolute scan grid.
 ///
 /// Checkpoints re-scan the sensor's ground truth and re-extract up to
-/// `count` windows every time; when the lookback window has not advanced
-/// between two checkpoints (the back-to-back final checkpoint at the
-/// horizon, repeated same-instant probes), the previous set is — by
-/// construction deterministically — identical, so it is reused instead of
-/// rebuilt.
+/// `count` windows every time. The probe grid is anchored to absolute
+/// time (see [`build_probes_range`]), so a window that advanced by less
+/// than one scan step shares all interior grid instants with the previous
+/// one and the cached set is reused — not just the exact-window repeats
+/// (the back-to-back final checkpoint at the horizon) the pre-anchored
+/// cache caught. The reuse is deliberately approximate at the *edges*:
+/// the served set may keep the grid instant just before the advanced
+/// window's start and lack one newly entered instant — at most one
+/// boundary probe out of `count`, bounded by one scan step in time.
+/// Degenerate windows narrower than one scan step fall back to their
+/// window-start sample, so those are cached by exact window instead of
+/// grid bucket (two distinct sub-step windows never alias).
 #[derive(Debug, Default)]
 pub struct ProbeCache {
-    key: Option<(u64, u64, usize, u64)>,
+    key: Option<(u64, u64, usize, u64, bool)>,
     probes: Vec<Probe>,
+    /// Served from cache (window unchanged on the scan grid).
+    pub hits: u64,
+    /// Rebuilt from the sensor.
+    pub builds: u64,
 }
 
 impl ProbeCache {
@@ -111,14 +142,26 @@ impl ProbeCache {
         count: usize,
         scan_step_us: u64,
     ) -> Result<&[Probe]> {
-        let key = (from_us, to_us, count, scan_step_us);
+        let step = scan_step_us.max(1);
+        // grid-holding windows key by scan-step bucket; degenerate ones
+        // (no grid instant inside) key by the exact window, with a
+        // discriminant so the two key spaces cannot collide
+        let key = if grid_start(from_us, step) < to_us {
+            (from_us / step, to_us / step, count, step, true)
+        } else {
+            (from_us, to_us, count, step, false)
+        };
         if self.key != Some(key) {
             self.probes = build_probes_range(sensor, be, from_us, to_us, count, scan_step_us)?;
             self.key = Some(key);
+            self.builds += 1;
+        } else {
+            self.hits += 1;
         }
         Ok(&self.probes)
     }
 }
+
 
 /// Probe accuracy of a learner: fraction of probes classified correctly
 /// (Unknown counts as wrong — an undecided learner is not yet useful).
@@ -207,6 +250,46 @@ mod tests {
             .collect();
         assert_eq!(c, moved.iter().map(|p| p.example.t_us).collect::<Vec<_>>());
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn sub_step_window_advances_hit_the_cache() {
+        // regression: the probe grid is anchored to absolute time, so a
+        // window that advanced by less than one scan step reuses the
+        // cached set instead of rebuilding (the pre-anchor cache only
+        // caught exact-window repeats)
+        let sensor = Accel::new(MotionProfile::alternating_hours(1.0, 3.0, 4), 2);
+        let mut be = NativeBackend::new();
+        let mut cache = ProbeCache::new();
+        let step = 60_000_000u64;
+        let mut times = |c: &mut ProbeCache, f: u64, t: u64| -> Vec<u64> {
+            c.probes_for(&sensor, &mut be, f, t, 10, step)
+                .unwrap()
+                .iter()
+                .map(|p| p.example.t_us)
+                .collect()
+        };
+        let a = times(&mut cache, 0, 7_200_000_000);
+        assert_eq!((cache.builds, cache.hits), (1, 0));
+        // advanced by half a step: same grid bucket, served from cache
+        let b = times(&mut cache, 30_000_000, 7_230_000_000);
+        assert_eq!((cache.builds, cache.hits), (1, 1), "sub-step advance missed");
+        assert_eq!(a, b);
+        // advanced by a whole step: new grid bucket, rebuilt
+        let c = times(&mut cache, 60_000_000, 7_260_000_000);
+        assert_eq!((cache.builds, cache.hits), (2, 1));
+        assert_ne!(a, c);
+        // probe times sit on the absolute grid regardless of window start
+        let d = times(&mut cache, 90_000_000, 7_280_000_000);
+        assert!(d.iter().all(|t| t % step == 0), "{d:?}");
+        // degenerate windows (narrower than a step, no grid instant
+        // inside) key by exact window: two distinct ones never alias even
+        // though they share grid buckets
+        let e = times(&mut cache, 70_000_000, 80_000_000);
+        let f = times(&mut cache, 90_000_000, 100_000_000);
+        assert_eq!(e, vec![70_000_000]);
+        assert_eq!(f, vec![90_000_000]);
+        assert_ne!(e, f);
     }
 
     #[test]

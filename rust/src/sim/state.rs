@@ -1,0 +1,477 @@
+//! Persistent run state: the engine's [`RunResult`] aggregates and
+//! [`EnergyMeter`] accounting, checkpointed to NVM so an interrupted run
+//! (host restart mid-sweep) restores its aggregates bit-identically.
+//!
+//! The store rides the same interned-[`KeyId`] + delta machinery as the
+//! learner checkpoints: the append-only vectors (accuracy checkpoints,
+//! inference log, energy series) are extended in place with
+//! [`Nvm::write_at`] — O(new records) NVM traffic per save, not O(run) —
+//! while the small parts (scalar counters, per-action tallies, scheduler
+//! name) are rewritten wholesale. The committed watermarks live in the
+//! head blob itself and the head is written **last**, so a save whose
+//! transaction aborts (power failure) or that is torn by a crash between
+//! writes leaves a previous consistent snapshot: the next save simply
+//! re-appends from the committed lengths, and a restore never sees a
+//! half-written record.
+
+use crate::energy::meter::{ActionTally, EnergyMeter};
+use crate::error::{Error, Result};
+use crate::nvm::{KeyId, Nvm};
+use crate::sim::{Checkpoint, RunResult};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Layout version tag (first u64 of the head blob).
+const MAGIC: u64 = 0x494C_5253_5631; // "ILRSV1"
+
+/// Head blob: magic + run nonce + 8 scalar counters + 3 vector lengths +
+/// total µJ.
+const HEAD_LEN: usize = 14 * 8;
+const CKPT_LEN: usize = 6 * 8;
+const INFER_LEN: usize = 16;
+const SERIES_LEN: usize = 16;
+
+#[derive(Debug, Clone, Copy)]
+struct StateKeys {
+    head: KeyId,
+    sched: KeyId,
+    ckpts: KeyId,
+    infers: KeyId,
+    series: KeyId,
+    tallies: KeyId,
+}
+
+/// Parsed head blob.
+struct Head {
+    nonce: u64,
+    scalars: [u64; 8],
+    ckpts: u64,
+    infers: u64,
+    series: u64,
+    total_uj: f64,
+}
+
+/// Distinct identity per run (prevents a fresh run over adopted NVM from
+/// appending onto a foreign run's snapshot).
+static NEXT_RUN_NONCE: AtomicU64 = AtomicU64::new(1);
+
+/// The run-state store: cached key handles plus a reusable encode buffer.
+/// Keeps **no** volatile watermarks — committed lengths are read back
+/// from the head blob on every save, which is what makes an aborted or
+/// torn save self-healing. The head also carries this run's `nonce`: a
+/// save only appends over a head *it* wrote (or one adopted via
+/// [`RunState::restore`]); any foreign snapshot — a carried-over NVM from
+/// a different run whose record counts happen to fit — is rewritten from
+/// scratch instead of merged into a chimera.
+#[derive(Debug)]
+pub struct RunState {
+    nonce: u64,
+    keys: Option<(u64, StateKeys)>,
+    scratch: Vec<u8>,
+}
+
+impl Default for RunState {
+    fn default() -> Self {
+        RunState::new()
+    }
+}
+
+impl RunState {
+    pub fn new() -> Self {
+        RunState {
+            nonce: NEXT_RUN_NONCE.fetch_add(1, Ordering::Relaxed),
+            keys: None,
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Key handles for `nvm`, interned once and re-resolved only when the
+    /// store changes identity (the learners' caching pattern).
+    fn keys(&mut self, nvm: &mut Nvm) -> StateKeys {
+        match self.keys {
+            Some((sid, k)) if sid == nvm.store_id() => k,
+            _ => {
+                let k = StateKeys {
+                    head: nvm.intern("run/head"),
+                    sched: nvm.intern("run/sched"),
+                    ckpts: nvm.intern("run/ckpts"),
+                    infers: nvm.intern("run/infers"),
+                    series: nvm.intern("run/series"),
+                    tallies: nvm.intern("run/tallies"),
+                };
+                self.keys = Some((nvm.store_id(), k));
+                k
+            }
+        }
+    }
+
+    fn read_head(nvm: &mut Nvm, key: KeyId) -> Option<Head> {
+        let bytes = nvm.read_id(key)?;
+        if bytes.len() != HEAD_LEN {
+            return None;
+        }
+        let u = |i: usize| u64::from_le_bytes(bytes[i * 8..i * 8 + 8].try_into().unwrap());
+        if u(0) != MAGIC {
+            return None;
+        }
+        let mut scalars = [0u64; 8];
+        for (j, s) in scalars.iter_mut().enumerate() {
+            *s = u(2 + j);
+        }
+        Some(Head {
+            nonce: u(1),
+            scalars,
+            ckpts: u(10),
+            infers: u(11),
+            series: u(12),
+            total_uj: f64::from_bits(u(13)),
+        })
+    }
+
+    /// Checkpoint `result` + `meter` into `nvm`. Appends only the records
+    /// added since the last committed save; the first save (or a save over
+    /// a foreign/stale blob) degrades to a full rewrite.
+    pub fn save(&mut self, nvm: &mut Nvm, result: &RunResult, meter: &EnergyMeter) -> Result<()> {
+        let k = self.keys(nvm);
+        // committed watermarks from the head blob — but only a head this
+        // run wrote (or adopted via restore): a foreign snapshot, or one
+        // claiming more records than the run holds, is rewritten from 0
+        let head = Self::read_head(nvm, k.head);
+        let (c0, i0, s0) = match &head {
+            Some(h)
+                if h.nonce == self.nonce
+                    && h.ckpts <= result.checkpoints.len() as u64
+                    && h.infers <= result.infer_log.len() as u64
+                    && h.series <= meter.series.len() as u64 =>
+            {
+                (h.ckpts as usize, h.infers as usize, h.series as usize)
+            }
+            _ => (0, 0, 0),
+        };
+
+        // append-only vectors: one range write per vector per save
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.clear();
+        for c in &result.checkpoints[c0..] {
+            scratch.extend_from_slice(&c.t_us.to_le_bytes());
+            scratch.extend_from_slice(&c.accuracy.to_le_bytes());
+            scratch.extend_from_slice(&c.learned.to_le_bytes());
+            scratch.extend_from_slice(&c.inferred.to_le_bytes());
+            scratch.extend_from_slice(&c.energy_uj.to_le_bytes());
+            scratch.extend_from_slice(&c.voltage.to_le_bytes());
+        }
+        if !scratch.is_empty() {
+            nvm.write_at(k.ckpts, c0 * CKPT_LEN, &scratch)?;
+        }
+        scratch.clear();
+        for &(t, pred, truth) in &result.infer_log[i0..] {
+            scratch.extend_from_slice(&t.to_le_bytes());
+            scratch.push(pred as u8);
+            scratch.push(truth as u8);
+            scratch.extend_from_slice(&[0u8; 6]);
+        }
+        if !scratch.is_empty() {
+            nvm.write_at(k.infers, i0 * INFER_LEN, &scratch)?;
+        }
+        scratch.clear();
+        for &(t, uj) in &meter.series[s0..] {
+            scratch.extend_from_slice(&t.to_le_bytes());
+            scratch.extend_from_slice(&uj.to_le_bytes());
+        }
+        if !scratch.is_empty() {
+            nvm.write_at(k.series, s0 * SERIES_LEN, &scratch)?;
+        }
+
+        // small wholesale parts: scheduler name + per-action tallies
+        nvm.write_id(k.sched, result.scheduler.as_bytes())?;
+        scratch.clear();
+        for (name, t) in meter.tallies() {
+            scratch.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            scratch.extend_from_slice(name.as_bytes());
+            scratch.extend_from_slice(&t.count.to_le_bytes());
+            scratch.extend_from_slice(&t.energy_uj.to_le_bytes());
+            scratch.extend_from_slice(&t.time_us.to_le_bytes());
+            scratch.extend_from_slice(&t.aborted.to_le_bytes());
+            scratch.extend_from_slice(&t.wasted_uj.to_le_bytes());
+        }
+        nvm.write_id(k.tallies, &scratch)?;
+
+        // the head commits the snapshot (written last)
+        scratch.clear();
+        scratch.extend_from_slice(&MAGIC.to_le_bytes());
+        scratch.extend_from_slice(&self.nonce.to_le_bytes());
+        for v in [
+            result.learned,
+            result.inferred,
+            result.discarded_select,
+            result.expired,
+            result.cycles,
+            result.power_failures,
+            result.stale_plans,
+            result.sensed,
+        ] {
+            scratch.extend_from_slice(&v.to_le_bytes());
+        }
+        scratch.extend_from_slice(&(result.checkpoints.len() as u64).to_le_bytes());
+        scratch.extend_from_slice(&(result.infer_log.len() as u64).to_le_bytes());
+        scratch.extend_from_slice(&(meter.series.len() as u64).to_le_bytes());
+        scratch.extend_from_slice(&meter.total_uj().to_le_bytes());
+        nvm.write_id(k.head, &scratch)?;
+        self.scratch = scratch;
+        Ok(())
+    }
+
+    /// Restore the last committed snapshot from `nvm`, or `None` if the
+    /// store holds no run state. The returned [`RunResult`] carries the
+    /// finalized aggregates (`energy_uj`, `energy_series`,
+    /// `action_tallies`) derived from the restored meter, exactly as
+    /// [`crate::sim::engine::Engine`] derives them at the end of a run.
+    pub fn restore(&mut self, nvm: &mut Nvm) -> Result<Option<(RunResult, EnergyMeter)>> {
+        let k = self.keys(nvm);
+        let Some(head) = Self::read_head(nvm, k.head) else {
+            return Ok(None);
+        };
+        // adopt the snapshot's identity: a run resumed from this state
+        // appends over it instead of rewriting
+        self.nonce = head.nonce;
+        let torn = || Error::Nvm("run state torn: head ahead of its records".into());
+
+        let sched = nvm
+            .read_id(k.sched)
+            .map(|b| String::from_utf8_lossy(b).into_owned())
+            .unwrap_or_default();
+
+        let need = head.ckpts as usize * CKPT_LEN;
+        let bytes = nvm.read_id(k.ckpts).unwrap_or(&[]);
+        if bytes.len() < need {
+            return Err(torn());
+        }
+        let u = |b: &[u8], at: usize| u64::from_le_bytes(b[at..at + 8].try_into().unwrap());
+        let f = |b: &[u8], at: usize| f64::from_bits(u(b, at));
+        let mut checkpoints = Vec::with_capacity(head.ckpts as usize);
+        for i in 0..head.ckpts as usize {
+            let at = i * CKPT_LEN;
+            checkpoints.push(Checkpoint {
+                t_us: u(bytes, at),
+                accuracy: f(bytes, at + 8),
+                learned: u(bytes, at + 16),
+                inferred: u(bytes, at + 24),
+                energy_uj: f(bytes, at + 32),
+                voltage: f(bytes, at + 40),
+            });
+        }
+
+        let need = head.infers as usize * INFER_LEN;
+        let bytes = nvm.read_id(k.infers).unwrap_or(&[]);
+        if bytes.len() < need {
+            return Err(torn());
+        }
+        let mut infer_log = Vec::with_capacity(head.infers as usize);
+        for i in 0..head.infers as usize {
+            let at = i * INFER_LEN;
+            infer_log.push((u(bytes, at), bytes[at + 8] != 0, bytes[at + 9] != 0));
+        }
+
+        let need = head.series as usize * SERIES_LEN;
+        let bytes = nvm.read_id(k.series).unwrap_or(&[]);
+        if bytes.len() < need {
+            return Err(torn());
+        }
+        let mut series = Vec::with_capacity(head.series as usize);
+        for i in 0..head.series as usize {
+            let at = i * SERIES_LEN;
+            series.push((u(bytes, at), f(bytes, at + 8)));
+        }
+
+        let mut tallies = Vec::new();
+        if let Some(bytes) = nvm.read_id(k.tallies) {
+            let mut at = 0usize;
+            while at + 4 <= bytes.len() {
+                let nl = u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()) as usize;
+                at += 4;
+                if at + nl + 40 > bytes.len() {
+                    return Err(torn());
+                }
+                let name = String::from_utf8_lossy(&bytes[at..at + nl]).into_owned();
+                at += nl;
+                tallies.push((
+                    name,
+                    ActionTally {
+                        count: u(bytes, at),
+                        energy_uj: f(bytes, at + 8),
+                        time_us: u(bytes, at + 16),
+                        aborted: u(bytes, at + 24),
+                        wasted_uj: f(bytes, at + 32),
+                    },
+                ));
+                at += 40;
+            }
+        }
+
+        let [learned, inferred, discarded_select, expired, cycles, power_failures, stale_plans, sensed] =
+            head.scalars;
+        let meter = EnergyMeter::from_parts(tallies, series, head.total_uj);
+        let result = RunResult {
+            scheduler: sched,
+            checkpoints,
+            learned,
+            inferred,
+            discarded_select,
+            expired,
+            cycles,
+            power_failures,
+            stale_plans,
+            energy_uj: meter.total_uj(),
+            energy_series: meter.series.clone(),
+            action_tallies: meter
+                .tallies()
+                .map(|(k, t)| (k.to_string(), t.count, t.energy_uj, t.time_us))
+                .collect(),
+            infer_log,
+            sensed,
+        };
+        Ok(Some((result, meter)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::actions::Action;
+
+    fn sample_run(n_ckpts: usize) -> (RunResult, EnergyMeter) {
+        let mut meter = EnergyMeter::new();
+        let mut r = RunResult {
+            scheduler: "intermittent_learning".into(),
+            ..Default::default()
+        };
+        for i in 0..n_ckpts as u64 {
+            meter.record_action(Action::Learn, 9_309.0, 1_551_000);
+            meter.record("planner", 57.0, 4_300);
+            meter.sample(i * 1_000_000);
+            r.learned += 1;
+            r.sensed += 2;
+            r.cycles += 3;
+            r.infer_log.push((i * 500_000, i % 2 == 0, i % 3 == 0));
+            r.checkpoints.push(Checkpoint {
+                t_us: i * 1_000_000,
+                accuracy: 0.5 + 0.01 * i as f64,
+                learned: r.learned,
+                inferred: r.inferred,
+                energy_uj: meter.total_uj(),
+                voltage: 3.0,
+            });
+        }
+        r.energy_uj = meter.total_uj();
+        r.energy_series = meter.series.clone();
+        r.action_tallies = meter
+            .tallies()
+            .map(|(k, t)| (k.to_string(), t.count, t.energy_uj, t.time_us))
+            .collect();
+        (r, meter)
+    }
+
+    #[test]
+    fn save_restore_is_bit_identical() {
+        let (r, m) = sample_run(7);
+        let mut nvm = Nvm::new();
+        let mut st = RunState::new();
+        st.save(&mut nvm, &r, &m).unwrap();
+        // host restart: fresh handles, fresh store view
+        let (back_r, back_m) = RunState::new().restore(&mut nvm).unwrap().unwrap();
+        assert_eq!(back_r.to_json().to_string(), r.to_json().to_string());
+        assert_eq!(back_m.total_uj(), m.total_uj());
+        assert_eq!(back_m.series, m.series);
+        assert_eq!(back_r.infer_log, r.infer_log);
+        for (k, t) in m.tallies() {
+            assert_eq!(back_m.tally(k), *t, "{k}");
+        }
+    }
+
+    #[test]
+    fn steady_state_saves_append_o_new_records() {
+        let (r, m) = sample_run(20);
+        let mut nvm = Nvm::new();
+        let mut st = RunState::new();
+        // a run that checkpoints incrementally: save after every added
+        // checkpoint, like the engine does
+        let (mut partial, mut pmeter) = sample_run(1);
+        st.save(&mut nvm, &partial, &pmeter).unwrap();
+        let full_bytes = nvm.bytes_written;
+        (partial, pmeter) = sample_run(2);
+        st.save(&mut nvm, &partial, &pmeter).unwrap();
+        let delta = nvm.bytes_written - full_bytes;
+        // the second save appends one checkpoint/infer/series record plus
+        // the small wholesale parts — far less than rewriting the run
+        let one_shot = {
+            let mut nvm2 = Nvm::new();
+            RunState::new().save(&mut nvm2, &r, &m).unwrap();
+            nvm2.bytes_written
+        };
+        assert!(
+            delta * 3 < one_shot,
+            "incremental save wrote {delta} B vs {one_shot} B full"
+        );
+    }
+
+    #[test]
+    fn aborted_save_leaves_the_previous_snapshot_and_self_heals() {
+        let mut nvm = Nvm::new();
+        let mut st = RunState::new();
+        let (r1, m1) = sample_run(3);
+        st.save(&mut nvm, &r1, &m1).unwrap();
+        // a power-failed save inside an action transaction rolls back
+        let (r2, m2) = sample_run(5);
+        nvm.begin_action().unwrap();
+        st.save(&mut nvm, &r2, &m2).unwrap();
+        nvm.abort_action();
+        let (back, _) = RunState::new().restore(&mut nvm).unwrap().unwrap();
+        assert_eq!(back.to_json().to_string(), r1.to_json().to_string());
+        // the next save re-appends from the committed watermarks
+        st.save(&mut nvm, &r2, &m2).unwrap();
+        let (back, _) = RunState::new().restore(&mut nvm).unwrap().unwrap();
+        assert_eq!(back.to_json().to_string(), r2.to_json().to_string());
+    }
+
+    #[test]
+    fn empty_store_restores_none() {
+        let mut nvm = Nvm::new();
+        assert!(RunState::new().restore(&mut nvm).unwrap().is_none());
+    }
+
+    #[test]
+    fn fresh_run_over_adopted_nvm_replaces_the_foreign_snapshot() {
+        // regression: a new run saving into NVM that carries another run's
+        // snapshot (e.g. adopted only to restore the learner) must rewrite
+        // it, not append onto the foreign records just because its lengths
+        // fit — that would persist a chimera of two runs
+        let mut nvm = Nvm::new();
+        let (r_old, m_old) = sample_run(3);
+        RunState::new().save(&mut nvm, &r_old, &m_old).unwrap();
+        // the new run's first save happens once it already has MORE
+        // records than the foreign snapshot declares
+        let (mut r_new, m_new) = sample_run(5);
+        for c in &mut r_new.checkpoints {
+            c.accuracy += 0.25; // distinguishable from the old run's
+        }
+        let mut st = RunState::new();
+        st.save(&mut nvm, &r_new, &m_new).unwrap();
+        let (back, _) = RunState::new().restore(&mut nvm).unwrap().unwrap();
+        assert_eq!(back.to_json().to_string(), r_new.to_json().to_string());
+        // and a resumed run (restore, then save more) appends, not rewrites
+        let mut resumed = RunState::new();
+        resumed.restore(&mut nvm).unwrap().unwrap();
+        let before = nvm.bytes_written;
+        let (mut r_more, m_more) = sample_run(6);
+        for c in &mut r_more.checkpoints {
+            c.accuracy += 0.25;
+        }
+        resumed.save(&mut nvm, &r_more, &m_more).unwrap();
+        let delta = nvm.bytes_written - before;
+        let full = {
+            let mut nvm2 = Nvm::new();
+            RunState::new().save(&mut nvm2, &r_more, &m_more).unwrap();
+            nvm2.bytes_written
+        };
+        assert!(delta * 2 < full, "resume rewrote instead of appending: {delta} vs {full}");
+    }
+}

@@ -1,0 +1,97 @@
+//! The shared claim-counter worker pool.
+//!
+//! One lock-free work-distribution primitive serves every fan-out in the
+//! crate: sweep cells ([`crate::scenario::sweep`]), fleet shards
+//! ([`crate::sim::fleet`]) and the shard-level work items a sweep cell
+//! expands into. Work is claimed through an atomic counter (no queue, no
+//! mutex) and every finished item lands in its own result slot through a
+//! per-index channel send, so big grids never contend on a shared
+//! collection and results come back in input order for any worker count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Worker-thread count `threads` resolves to for `n` jobs
+/// (`0` = available parallelism, always clamped to the job count).
+pub fn resolve_workers(threads: usize, n: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4)
+    } else {
+        threads
+    }
+    .min(n.max(1))
+}
+
+/// Run `job(0..n)` across `threads` workers (0 = available parallelism)
+/// and return the results in index order, identical for any thread count.
+///
+/// The job closure builds whatever per-item state it needs on the worker
+/// thread — engines are constructed there because compute backends are
+/// deliberately not `Send` — and only the (Send) results travel back.
+pub fn run_indexed<T, F>(n: usize, threads: usize, job: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = resolve_workers(threads, n);
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let job = &job;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                if tx.send((i, job(i))).is_err() {
+                    break; // receiver gone: nothing left to report to
+                }
+            });
+        }
+        drop(tx); // workers hold the remaining senders
+    });
+    // every worker has exited, so the channel is closed and fully drained
+    let mut results: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (i, r) in rx {
+        results[i] = Some(r);
+    }
+    results
+        .into_iter()
+        .map(|r| r.expect("every claimed item reports exactly once"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_index_order_for_any_thread_count() {
+        for threads in [1, 2, 0] {
+            let out = run_indexed(17, threads, |i| i * i);
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn empty_input_spawns_nothing() {
+        let out: Vec<u32> = run_indexed(0, 4, |_| unreachable!());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn workers_clamp_to_job_count() {
+        assert_eq!(resolve_workers(8, 3), 3);
+        assert_eq!(resolve_workers(2, 100), 2);
+        assert!(resolve_workers(0, 100) >= 1);
+        assert_eq!(resolve_workers(0, 0), 1);
+    }
+}

@@ -242,6 +242,61 @@ fn prop_kmeans_delta_saves_match_full_save_baseline() {
 }
 
 #[test]
+fn run_state_survives_a_simulated_host_restart_bit_identically() {
+    // ROADMAP item: RunResult/meter aggregates persist through the KeyId +
+    // delta-checkpoint path. Run an engine, carry its NVM across a
+    // "host restart" (fresh engine, adopted store), and the restored
+    // aggregates must match the finished run bit for bit.
+    let points = vec![(0, 0.010), (600_000_000, 0.0), (1_200_000_000, 0.010)];
+    let mut e = engine_with_trace(points.clone(), 2_400);
+    let r = e.run_to_end().unwrap();
+    assert!(r.learned > 0 && !r.checkpoints.is_empty(), "empty run proves nothing");
+    let nvm = std::mem::take(&mut e.exec.nvm);
+
+    // host restart: a fresh engine of the same firmware adopts the NVM
+    let mut rebooted = engine_with_trace(points, 2_400);
+    assert!(!rebooted.restore_run_state().unwrap(), "fresh NVM restored state");
+    rebooted.exec.nvm = nvm;
+    assert!(rebooted.restore_run_state().unwrap(), "carried NVM had no state");
+    let back = rebooted.aggregates();
+    assert_eq!(
+        back.to_json().to_string(),
+        r.to_json().to_string(),
+        "restored aggregates diverged"
+    );
+    // parts the JSON summary does not cover
+    assert_eq!(back.energy_series, r.energy_series);
+    assert_eq!(back.infer_log, r.infer_log);
+    assert_eq!(back.checkpoints.len(), r.checkpoints.len());
+}
+
+#[test]
+fn run_state_restores_the_interruption_point_not_the_future() {
+    // an "interrupted" run is one that stopped at an earlier horizon: its
+    // NVM must restore the aggregates as of its own last checkpoint, and
+    // those match a prefix of the longer run's checkpoint trajectory
+    let points = vec![(0, 0.010)];
+    let full = engine_with_trace(points.clone(), 2_400).run().unwrap();
+    let mut interrupted = engine_with_trace(points.clone(), 1_200);
+    let partial = interrupted.run_to_end().unwrap();
+    let mut nvm = std::mem::take(&mut interrupted.exec.nvm);
+    let (restored, meter) = ilearn::sim::RunState::new()
+        .restore(&mut nvm)
+        .unwrap()
+        .expect("interrupted run persisted no state");
+    assert_eq!(restored.to_json().to_string(), partial.to_json().to_string());
+    assert_eq!(meter.total_uj(), partial.energy_uj);
+    assert!(restored.checkpoints.len() < full.checkpoints.len());
+    // all but the interrupted run's final (horizon) checkpoint line up
+    // with the longer run's trajectory
+    let prefix = restored.checkpoints.len() - 1;
+    for (a, b) in restored.checkpoints[..prefix].iter().zip(&full.checkpoints) {
+        assert_eq!(a.t_us, b.t_us, "checkpoint cadence diverged");
+        assert_eq!(a.learned, b.learned, "prefix diverged at t={}", a.t_us);
+    }
+}
+
+#[test]
 fn aborted_action_rolls_back_nvm_writes() {
     let mut nvm = Nvm::new();
     nvm.write_u64("model_version", 1).unwrap();

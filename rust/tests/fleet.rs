@@ -1,0 +1,146 @@
+//! Fleet-layer integration: determinism across thread counts, the
+//! 1-shard == plain-engine equivalence on all three paper presets, and
+//! the 16-shard solar fleet acceptance run through the sweep runner.
+
+use ilearn::energy::harvester::Trace;
+use ilearn::scenario::{preset, FleetSpec, HarvesterSpec, ScenarioSpec, SweepRunner, SweepSpec};
+use ilearn::sim::{FleetResult, RunResult};
+
+const H: u64 = 3_600_000_000;
+
+fn fp(r: &RunResult) -> String {
+    r.to_json().to_string()
+}
+
+fn fleet_fp(f: &FleetResult) -> String {
+    f.to_json().to_string()
+}
+
+fn with_fleet(mut spec: ScenarioSpec, shards: u32, jitter_us: u64) -> ScenarioSpec {
+    spec.fleet = Some(FleetSpec {
+        shards,
+        phase_jitter_us: jitter_us,
+        seed_stride: 1,
+        overrides: vec![],
+    });
+    spec
+}
+
+#[test]
+fn fleet_is_bit_identical_for_threads_1_2_and_all() {
+    // the acceptance determinism contract: an N-shard fleet cell returns
+    // bit-identical FleetResults for threads in {1, 2, 0}
+    let spec = with_fleet(preset("vibration", 3, 2 * H).unwrap(), 4, 60_000_000);
+    let one = spec.run_fleet(1).unwrap();
+    let two = spec.run_fleet(2).unwrap();
+    let all = spec.run_fleet(0).unwrap();
+    assert_eq!(fleet_fp(&one), fleet_fp(&two), "threads 1 vs 2 diverged");
+    assert_eq!(fleet_fp(&one), fleet_fp(&all), "threads 1 vs all diverged");
+    assert!(one.shards.iter().all(|r| r.sensed > 0), "dead shard");
+    // phase jitter + seed stride actually de-correlated the shards
+    let fps: Vec<String> = one.shards.iter().map(fp).collect();
+    assert!(fps.iter().any(|f| f != &fps[0]), "shards identical");
+}
+
+#[test]
+fn one_shard_fleet_equals_the_plain_engine_on_all_presets() {
+    for name in ["air_quality", "presence", "vibration"] {
+        let plain = preset(name, 7, 2 * H).unwrap();
+        let solo = plain.build_engine().unwrap().run().unwrap();
+        let fleet = with_fleet(plain, 1, 123_456_789) // jitter moot at 1 shard
+            .run_fleet(0)
+            .unwrap();
+        assert_eq!(fleet.shards.len(), 1);
+        assert_eq!(
+            fp(fleet.primary()),
+            fp(&solo),
+            "{name}: 1-shard fleet diverged from the plain engine run"
+        );
+    }
+}
+
+#[test]
+fn sixteen_shard_solar_fleet_through_the_sweep_runner() {
+    // the acceptance cell: a 16-shard solar-preset fleet through
+    // SweepRunner with per-shard parallelism, deterministic rollups
+    // across thread counts
+    // 8 h from midnight with 30 min of solar phase per shard: shard 0 gets
+    // 2 h of post-sunrise daylight, shard 15 starts at 07:30 and sees 8 h
+    let grid = r#"{
+        "name": "fleet-acceptance",
+        "hours": 8,
+        "scenarios": ["air_quality"],
+        "fleet": {"shards": 16, "phase_jitter_us": 1800000000, "seed_stride": 1}
+    }"#;
+    let sweep = SweepSpec::parse(grid).unwrap();
+    let cells = sweep.expand().unwrap();
+    assert_eq!(cells.len(), 1);
+    assert_eq!(cells[0].spec.shard_count(), 16);
+
+    let serial = SweepRunner::new(1).run(&sweep).unwrap();
+    let pooled = SweepRunner::new(4).run(&sweep).unwrap();
+    let (a, b) = (
+        serial[0].result.as_ref().unwrap(),
+        pooled[0].result.as_ref().unwrap(),
+    );
+    assert_eq!(fleet_fp(a), fleet_fp(b), "rollups diverged across thread counts");
+    assert_eq!(a.shards.len(), 16);
+    assert_eq!(a.rollup.shards, 16);
+    // fan-in totals equal the per-shard sums
+    let learned: u64 = a.shards.iter().map(|r| r.learned).sum();
+    assert_eq!(a.rollup.learned.total, learned as f64);
+    assert!(a.rollup.energy_uj.min <= a.rollup.energy_uj.max);
+    // staggered solar phases: later shards sit deeper into daylight, so
+    // the fleet is genuinely diverse
+    let cycles: Vec<u64> = a.shards.iter().map(|r| r.cycles).collect();
+    assert!(cycles.iter().any(|&c| c != cycles[0]), "{cycles:?}");
+    // the cell document carries the fleet aggregate
+    let doc = serial[0].to_json().to_string();
+    assert!(doc.contains("\"fleet\"") && doc.contains("\"rollup\""));
+}
+
+#[test]
+fn heterogeneous_fleet_mixes_harvesters_per_shard() {
+    // per-shard energy diversity: one shard of a piezo fleet runs on a
+    // recorded trace slice instead
+    let trace = Trace::parse_csv("0,0.0\n300000000,0.012\n").unwrap();
+    let mut spec = with_fleet(preset("vibration", 5, 2 * H).unwrap(), 3, 0);
+    spec.fleet.as_mut().unwrap().overrides = vec![(
+        1,
+        HarvesterSpec::Trace {
+            points: trace,
+            path: None,
+        },
+    )];
+    let fr = spec.run_fleet(0).unwrap();
+    assert_eq!(fr.shards.len(), 3);
+    // shard 1 charges through the trace's dark 5 min, then constant 12 mW:
+    // its energy profile must differ from the piezo shards'
+    assert_ne!(fp(&fr.shards[1]), fp(&fr.shards[0]));
+    assert!(fr.shards[1].cycles > 0, "trace shard never woke");
+}
+
+#[test]
+fn trace_corpus_files_load_and_power_a_fleet() {
+    // the preset corpus is real spec surface: load a corpus file by path
+    // and slice it across shards via phase jitter
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../examples/traces/solar_day.csv");
+    let trace = Trace::from_csv(path).unwrap();
+    assert!(trace.points.len() > 90, "corpus file unexpectedly short");
+    assert!(trace.points.iter().any(|&(_, p)| p > 0.01));
+
+    let mut spec = preset("air_quality", 1, 6 * H).unwrap();
+    spec.harvester = HarvesterSpec::Trace {
+        points: trace.points,
+        path: Some(path.to_string()),
+    };
+    // 4 shards staggered by 2 h: each replays a different slice of the day
+    let spec = with_fleet(spec, 4, 2 * 3_600_000_000);
+    let fr = spec.run_fleet(0).unwrap();
+    assert_eq!(fr.shards.len(), 4);
+    let cycles: Vec<u64> = fr.shards.iter().map(|r| r.cycles).collect();
+    assert!(cycles.iter().any(|&c| c != cycles[0]), "slices identical: {cycles:?}");
+    // the spec (with its corpus path) round-trips through JSON
+    let back = ScenarioSpec::parse(&spec.to_json().to_string()).unwrap();
+    assert_eq!(back, spec);
+}

@@ -162,7 +162,10 @@ fn sweep_grid_is_deterministic_across_thread_counts() {
     assert_eq!(serial.len(), threaded.len());
     for (a, b) in serial.iter().zip(&threaded) {
         assert_eq!(a.id, b.id, "cell order changed with thread count");
-        let (ra, rb) = (a.result.as_ref().unwrap(), b.result.as_ref().unwrap());
+        let (ra, rb) = (
+            a.result.as_ref().unwrap().primary(),
+            b.result.as_ref().unwrap().primary(),
+        );
         assert_eq!(
             fingerprint(ra),
             fingerprint(rb),
@@ -171,7 +174,9 @@ fn sweep_grid_is_deterministic_across_thread_counts() {
         );
     }
     // the grid actually exercised both axes
-    let sched = |o: &ilearn::scenario::SweepOutcome| o.result.as_ref().unwrap().scheduler.clone();
+    let sched = |o: &ilearn::scenario::SweepOutcome| {
+        o.result.as_ref().unwrap().primary().scheduler.clone()
+    };
     assert!(serial.iter().any(|o| sched(o) == "intermittent_learning"));
     assert!(serial.iter().any(|o| sched(o).starts_with("alpaca")));
     // per-cell JSON documents carry spec + result
