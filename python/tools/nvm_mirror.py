@@ -39,10 +39,15 @@ U64 = 8
 
 
 def knn_full():
-    """knn.rs save(): buf + mask + scalars(3 f32) + learned + gen."""
+    """knn.rs save(): buf + mask + times + scalars(3 f32) + learned + gen.
+
+    PR 5 added the per-slot acquisition times (N_BUF u64) for the fleet
+    ring merge's recency ordering + Mayfly expiry of adopted peer data.
+    """
     return {
         "written": N_BUF * FEAT_DIM * F32  # knn/buf      8192
         + N_BUF * F32  # knn/mask      256
+        + N_BUF * U64  # knn/times     512
         + 3 * F32  # knn/scalars    12
         + U64  # knn/learned     8
         + U64,  # knn/gen         8
@@ -51,20 +56,25 @@ def knn_full():
 
 
 def knn_delta(dirty_slots=1):
-    """knn.rs save_delta(): dirty rows + dirty mask slots + tail.
+    """knn.rs save_delta(): dirty rows + mask slots + time slots + tail.
 
     Steady state dirties exactly one ring slot per learn. The generation
     guard costs one 8-byte read.
     """
     return {
-        "written": dirty_slots * (FEAT_DIM * F32 + F32) + 3 * F32 + U64 + U64,
+        "written": dirty_slots * (FEAT_DIM * F32 + F32 + U64) + 3 * F32 + U64 + U64,
         "read": U64,
     }
 
 
 def kmeans_full():
-    """kmeans_nn.rs save(): w + misc(4 + 3K f32) + learned + gen."""
-    misc = 4 + 3 * N_CLUSTERS
+    """kmeans_nn.rs save(): w + misc(4 + 6K f32) + learned + gen.
+
+    PR 5 widened the misc block from 4 + 3K to 4 + 6K: per-cluster
+    since-merge update counts and since-merge vote deltas (the FedAvg
+    weights / vote payload of the fleet merge).
+    """
+    misc = 4 + 6 * N_CLUSTERS
     return {
         "written": N_CLUSTERS * FEAT_DIM * F32 + misc * F32 + U64 + U64,
         "read": 0,
@@ -73,7 +83,7 @@ def kmeans_full():
 
 def kmeans_delta(dirty_rows=1):
     """kmeans_nn.rs save_delta(): winner row(s) + misc tail."""
-    misc = 4 + 3 * N_CLUSTERS
+    misc = 4 + 6 * N_CLUSTERS
     return {
         "written": dirty_rows * FEAT_DIM * F32 + misc * F32 + U64 + U64,
         "read": U64,

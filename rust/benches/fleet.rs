@@ -27,6 +27,7 @@ fn fleet_spec(shards: u32, hours: u64) -> ilearn::scenario::ScenarioSpec {
         phase_jitter_us: 30_000_000,
         seed_stride: 1,
         overrides: vec![],
+        sync: None,
     });
     spec
 }

@@ -1,0 +1,234 @@
+//! Federated-sync benchmark: learner merge overhead (the compute a shard
+//! pays at every sync boundary on top of the radio bill), snapshot wire
+//! sizes, and a synced-vs-isolated fleet cell. Tracked over time through
+//! `BENCH_sync.json` (written at the repo root when run from `rust/`).
+//!
+//!     cargo bench --bench sync            # full comparison + JSON
+//!     cargo bench --bench sync -- --smoke # CI: merge invariants + one short cell
+//!
+//! The full mode times the worst-case all-reduce merges — a k-NN ring
+//! merge of 15 peer rings (16-shard fleet) and the k-means count-weighted
+//! centroid average — and runs a small gossip fleet against its isolated
+//! twin. `--smoke` asserts the cheap invariants: merge determinism,
+//! snapshot wire sizes, thread-count-identical synced fleet results, and
+//! that exchanges actually happen and are metered.
+
+use ilearn::backend::native::NativeBackend;
+use ilearn::backend::shapes::{FEAT_DIM, N_BUF, N_CLUSTERS};
+use ilearn::learning::{
+    ClusterLabelLearner, Example, KnnAnomalyLearner, Learner, ModelSnapshot,
+};
+use ilearn::scenario::{preset, FleetSpec, SyncSpec};
+use ilearn::sim::SyncStrategy;
+use ilearn::util::bench::{bench, time_once};
+use ilearn::util::json::Json;
+use ilearn::util::Rng;
+use std::time::Instant;
+
+const H: u64 = 3_600_000_000;
+
+fn trained_knn(seed: u64, n: usize, t0: u64) -> KnnAnomalyLearner {
+    let mut be = NativeBackend::new();
+    let mut l = KnnAnomalyLearner::new();
+    let mut rng = Rng::new(seed);
+    for t in 0..n as u64 {
+        let f: Vec<f32> = (0..FEAT_DIM).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        l.learn(&Example::new(f, t0 + t, false), &mut be).unwrap();
+    }
+    l
+}
+
+fn trained_kmeans(seed: u64, n: usize) -> ClusterLabelLearner {
+    let mut be = NativeBackend::new();
+    let mut l = ClusterLabelLearner::new(seed, 20);
+    let mut rng = Rng::new(seed);
+    for i in 0..n {
+        let abnormal = i % 2 == 0;
+        let mut f = vec![0.0f32; FEAT_DIM];
+        let base = if abnormal { 8 } else { 0 };
+        for v in f[base..base + 8].iter_mut() {
+            *v = 2.0 + rng.normal(0.0, 0.2) as f32;
+        }
+        l.learn(&Example::new(f, i as u64, abnormal), &mut be).unwrap();
+    }
+    l
+}
+
+fn knn_peers(count: usize) -> Vec<ModelSnapshot> {
+    (0..count)
+        .map(|i| {
+            trained_knn(100 + i as u64, N_BUF, 1_000 * i as u64)
+                .snapshot()
+                .expect("knn snapshots")
+        })
+        .collect()
+}
+
+fn kmeans_peers(count: usize) -> Vec<ModelSnapshot> {
+    (0..count)
+        .map(|i| {
+            trained_kmeans(100 + i as u64, 40)
+                .snapshot()
+                .expect("kmeans snapshots")
+        })
+        .collect()
+}
+
+fn synced_fleet_spec(shards: u32, hours: u64, period_us: u64) -> ilearn::scenario::ScenarioSpec {
+    let mut spec = preset("vibration", 42, hours * H).expect("preset");
+    spec.fleet = Some(FleetSpec {
+        shards,
+        phase_jitter_us: 30_000_000,
+        seed_stride: 1,
+        overrides: vec![],
+        sync: Some(SyncSpec {
+            period_us,
+            strategy: SyncStrategy::Gossip,
+            radio: None,
+        }),
+    });
+    spec
+}
+
+fn smoke() {
+    let t0 = Instant::now();
+    // snapshot wire sizes match the model shapes (what the radio bills)
+    let knn_snap = trained_knn(1, N_BUF, 0).snapshot().unwrap();
+    assert_eq!(
+        knn_snap.bytes(),
+        N_BUF * FEAT_DIM * 4 + N_BUF * 4 + N_BUF * 8 + 8 + 8 + 4,
+        "knn snapshot wire size drifted"
+    );
+    let km_snap = trained_kmeans(1, 40).snapshot().unwrap();
+    assert_eq!(
+        km_snap.bytes(),
+        N_CLUSTERS * FEAT_DIM * 4 + N_CLUSTERS * 4 + N_CLUSTERS * 2 * 4 + N_CLUSTERS * 4 + 8,
+        "kmeans snapshot wire size drifted"
+    );
+    // merge determinism: the same inputs merge to the same model
+    let peers = knn_peers(3);
+    let mut be = NativeBackend::new();
+    let mut a = trained_knn(7, 40, 50_000);
+    let mut b = trained_knn(7, 40, 50_000);
+    assert!(a.merge(&peers, &mut be, 100_000, None).unwrap());
+    assert!(b.merge(&peers, &mut be, 100_000, None).unwrap());
+    assert_eq!(a.buffer().0, b.buffer().0, "knn merge nondeterministic");
+    assert_eq!(a.threshold(), b.threshold());
+    // a short synced fleet: bit-identical across thread counts, exchanges
+    // happen and are metered
+    let spec = synced_fleet_spec(3, 1, 20 * 60 * 1_000_000);
+    let serial = spec.run_fleet(1).expect("serial synced fleet");
+    let pooled = spec.run_fleet(0).expect("pooled synced fleet");
+    assert_eq!(
+        serial.to_json().to_string(),
+        pooled.to_json().to_string(),
+        "synced fleet diverged across thread counts"
+    );
+    let done = serial.rollup.syncs_done.total as u64;
+    assert!(done > 0, "no sync exchange completed in the smoke cell");
+    let tx: u64 = serial
+        .shards
+        .iter()
+        .flat_map(|r| &r.action_tallies)
+        .filter(|(n, ..)| n == "tx")
+        .map(|&(_, c, ..)| c)
+        .sum();
+    assert_eq!(tx, done, "radio tallies disagree with sync counters");
+    println!(
+        "sync --smoke: merge invariants + 3-shard synced cell ok ({done} exchanges, {:.1}s)",
+        t0.elapsed().as_secs_f64()
+    );
+}
+
+fn full() {
+    // worst-case all-reduce merge compute: 15 peers (a 16-shard fleet)
+    let knn15 = knn_peers(15);
+    let base_knn = trained_knn(7, N_BUF, 50_000);
+    let mut be = NativeBackend::new();
+    let m_knn = bench("knn-ring-merge-15-peers", 1_500, || {
+        let mut l = base_knn.clone();
+        ilearn::util::bench::black_box(l.merge(&knn15, &mut be, 100_000, None).unwrap());
+    });
+    let km15 = kmeans_peers(15);
+    let base_km = trained_kmeans(7, 40);
+    let m_km = bench("kmeans-centroid-merge-15-peers", 1_500, || {
+        let mut l = base_km.clone();
+        ilearn::util::bench::black_box(l.merge(&km15, &mut be, 100_000, None).unwrap());
+    });
+    println!("{}", m_knn.row());
+    println!("{}", m_km.row());
+    // merge overhead vs the learn payload it rides next to
+    let m_learn = bench("knn-learn-payload", 1_500, || {
+        let mut l = base_knn.clone();
+        let mut rng = Rng::new(1);
+        let f: Vec<f32> = (0..FEAT_DIM).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+        l.learn(&Example::new(f, 123, false), &mut be).unwrap();
+    });
+    println!("{}", m_learn.row());
+
+    // synced vs isolated fleet cell
+    let synced_spec = synced_fleet_spec(8, 2, 30 * 60 * 1_000_000);
+    let mut isolated_spec = synced_spec.clone();
+    isolated_spec.fleet.as_mut().unwrap().sync = None;
+    let (synced, sm) = time_once("fleet-8x2h-synced", || {
+        synced_spec.run_fleet(0).expect("synced fleet")
+    });
+    let (isolated, im) = time_once("fleet-8x2h-isolated", || {
+        isolated_spec.run_fleet(0).expect("isolated fleet")
+    });
+    println!("{}", sm.row());
+    println!("{}", im.row());
+    println!(
+        "sync overhead: {:.1}% wall, {} exchanges / {} skips, accuracy {:.3} -> {:.3}",
+        100.0 * (sm.mean_ns - im.mean_ns) / im.mean_ns.max(1.0),
+        synced.rollup.syncs_done.total as u64,
+        synced.rollup.syncs_skipped.total as u64,
+        isolated.rollup.mean_accuracy.mean,
+        synced.rollup.mean_accuracy.mean
+    );
+
+    let knn_snap = base_knn.snapshot().unwrap();
+    let km_snap = base_km.snapshot().unwrap();
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("sync".into())),
+        ("knn_merge_15_peers_ns", Json::Num(m_knn.mean_ns)),
+        ("kmeans_merge_15_peers_ns", Json::Num(m_km.mean_ns)),
+        ("knn_learn_payload_ns", Json::Num(m_learn.mean_ns)),
+        (
+            "knn_merge_over_learn",
+            Json::Num(m_knn.mean_ns / m_learn.mean_ns.max(1.0)),
+        ),
+        ("knn_snapshot_bytes", Json::Num(knn_snap.bytes() as f64)),
+        ("kmeans_snapshot_bytes", Json::Num(km_snap.bytes() as f64)),
+        ("fleet_shards", Json::Num(8.0)),
+        ("fleet_sim_hours_per_shard", Json::Num(2.0)),
+        ("fleet_synced_ms", Json::Num(sm.mean_ns / 1e6)),
+        ("fleet_isolated_ms", Json::Num(im.mean_ns / 1e6)),
+        ("fleet_syncs_done", Json::Num(synced.rollup.syncs_done.total)),
+        (
+            "fleet_syncs_skipped",
+            Json::Num(synced.rollup.syncs_skipped.total),
+        ),
+        (
+            "fleet_mean_accuracy_isolated",
+            Json::Num(isolated.rollup.mean_accuracy.mean),
+        ),
+        (
+            "fleet_mean_accuracy_synced",
+            Json::Num(synced.rollup.mean_accuracy.mean),
+        ),
+    ]);
+    let path = "../BENCH_sync.json";
+    match std::fs::write(path, doc.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    if std::env::args().any(|a| a == "--smoke") {
+        smoke();
+    } else {
+        full();
+    }
+}

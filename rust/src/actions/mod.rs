@@ -27,11 +27,18 @@ pub enum Action {
     Evaluate,
     /// Make an inference using the current model.
     Infer,
+    /// Transmit the local model snapshot to fleet peers (federated sync).
+    /// Not part of the per-example state diagram: the fleet round
+    /// scheduler charges a Tx/Rx pair at each sync boundary.
+    Tx,
+    /// Receive peer model snapshot(s) at a fleet sync boundary.
+    Rx,
 }
 
 impl Action {
-    /// All actions, in state-diagram order.
-    pub const ALL: [Action; 8] = [
+    /// All actions: the eight Table-1 primitives in state-diagram order,
+    /// then the fleet-sync radio pair (not reachable from `sense`).
+    pub const ALL: [Action; 10] = [
         Action::Sense,
         Action::Extract,
         Action::Decide,
@@ -40,6 +47,8 @@ impl Action {
         Action::Learn,
         Action::Evaluate,
         Action::Infer,
+        Action::Tx,
+        Action::Rx,
     ];
 
     /// Successor actions per the action state diagram (Fig. 3).
@@ -59,6 +68,9 @@ impl Action {
             Action::Learn => &[Action::Evaluate],
             Action::Evaluate => &[],
             Action::Infer => &[],
+            // radio actions live outside the per-example diagram
+            Action::Tx => &[],
+            Action::Rx => &[],
         }
     }
 
@@ -93,6 +105,8 @@ impl Action {
             Action::Learn => "learn",
             Action::Evaluate => "evaluate",
             Action::Infer => "infer",
+            Action::Tx => "tx",
+            Action::Rx => "rx",
         }
     }
 
@@ -108,12 +122,14 @@ impl fmt::Display for Action {
     }
 }
 
-/// Phase groups of Fig. 3 (acquiring / learning / evaluating).
+/// Phase groups of Fig. 3 (acquiring / learning / evaluating), plus the
+/// fleet-sync phase the radio pair belongs to (ours, not the paper's).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
     Acquiring,
     Learning,
     Evaluating,
+    Syncing,
 }
 
 impl Action {
@@ -125,6 +141,7 @@ impl Action {
                 Phase::Learning
             }
             Action::Evaluate | Action::Infer => Phase::Evaluating,
+            Action::Tx | Action::Rx => Phase::Syncing,
         }
     }
 }
@@ -177,5 +194,21 @@ mod tests {
         assert_eq!(Action::Sense.phase(), Phase::Acquiring);
         assert_eq!(Action::Learn.phase(), Phase::Learning);
         assert_eq!(Action::Infer.phase(), Phase::Evaluating);
+        assert_eq!(Action::Tx.phase(), Phase::Syncing);
+        assert_eq!(Action::Rx.phase(), Phase::Syncing);
+    }
+
+    #[test]
+    fn radio_actions_stay_outside_the_example_diagram() {
+        // Tx/Rx are fleet-tier actions: no example transitions into or out
+        // of them, so the planner's per-example search never sees them
+        assert!(Action::Tx.next().is_empty());
+        assert!(Action::Rx.next().is_empty());
+        for a in Action::ALL {
+            assert!(!a.can_precede(Action::Tx), "{a} precedes tx");
+            assert!(!a.can_precede(Action::Rx), "{a} precedes rx");
+        }
+        assert_eq!(Action::parse("tx"), Some(Action::Tx));
+        assert_eq!(Action::parse("rx"), Some(Action::Rx));
     }
 }

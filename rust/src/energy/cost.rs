@@ -48,7 +48,7 @@ impl ActionCost {
 #[derive(Debug, Clone)]
 pub struct CostModel {
     pub name: &'static str,
-    costs: [ActionCost; 8],
+    costs: [ActionCost; 10],
     /// Dynamic action planner overhead per invocation (Fig. 17).
     pub planner: ActionCost,
     /// Example-selection heuristic overheads (Fig. 17).
@@ -98,6 +98,13 @@ impl CostModel {
             ActionCost::new(60.0, 4_500, 1),
             // infer: 64.98 ms (paper); energy interpolated
             ActionCost::new(400.0, 64_980, 1),
+            // tx: radio a ~8.5 KB k-NN ring snapshot over a BLE-class link
+            // (~1 Mb/s payload rate at ~25 mW tx draw) — interpolated; the
+            // paper prices no radio, but Intelligence-Beyond-the-Edge-style
+            // deployments must budget it like any other action
+            ActionCost::new(2_200.0, 85_000, 1),
+            // rx: same airtime, lower rx draw // interpolated
+            ActionCost::new(1_700.0, 85_000, 1),
         ];
         CostModel {
             name: "knn",
@@ -125,6 +132,10 @@ impl CostModel {
             ActionCost::new(60.0, 4_500, 1),
             // infer: 63.2 µJ / 9.47 ms (paper)
             ActionCost::new(63.2, 9_470, 1),
+            // tx/rx: the NN-k-means snapshot is ~0.4 KB (two centroid rows
+            // + votes) — one short radio burst // interpolated
+            ActionCost::new(160.0, 9_000, 1),
+            ActionCost::new(120.0, 9_000, 1),
         ];
         CostModel {
             name: "kmeans",
@@ -174,6 +185,21 @@ impl CostModel {
             .map(|&a| self.cost(a).energy_uj)
             .sum()
     }
+
+    /// Energy (µJ) and time (µs) of one fleet sync exchange: one `tx` of
+    /// the local model snapshot plus `rx_peers` received snapshots
+    /// (1 for gossip, fleet size − 1 for all-reduce). The fleet round
+    /// scheduler gates participation on this price — a shard whose
+    /// capacitor cannot cover it skips the round, the paper's
+    /// learn-or-discard energy gating lifted to the fleet tier.
+    pub fn sync_price(&self, rx_peers: u32) -> (f64, u64) {
+        let tx = self.cost(Action::Tx);
+        let rx = self.cost(Action::Rx);
+        (
+            tx.energy_uj + rx.energy_uj * f64::from(rx_peers),
+            tx.time_us + rx.time_us * u64::from(rx_peers),
+        )
+    }
 }
 
 #[cfg(test)]
@@ -217,6 +243,25 @@ mod tests {
     fn learn_path_dominates_infer_path() {
         for m in [CostModel::knn(), CostModel::kmeans(), CostModel::knn_rssi()] {
             assert!(m.learn_path_uj() > m.infer_path_uj(), "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn radio_entries_are_priced_and_scale_with_peers() {
+        for m in [CostModel::knn(), CostModel::kmeans(), CostModel::knn_rssi()] {
+            let tx = m.cost(Action::Tx);
+            let rx = m.cost(Action::Rx);
+            assert!(tx.energy_uj > 0.0 && rx.energy_uj > 0.0, "{}", m.name);
+            // a sync exchange costs less than a learn (otherwise syncing
+            // would never be worth scheduling) but is never free
+            let (gossip_uj, gossip_us) = m.sync_price(1);
+            assert_eq!(gossip_uj, tx.energy_uj + rx.energy_uj);
+            assert_eq!(gossip_us, tx.time_us + rx.time_us);
+            assert!(gossip_uj < m.cost(Action::Learn).energy_uj, "{}", m.name);
+            // all-reduce in a 16-shard fleet receives 15 snapshots
+            let (ar_uj, ar_us) = m.sync_price(15);
+            assert_eq!(ar_uj, tx.energy_uj + 15.0 * rx.energy_uj);
+            assert!(ar_us > gossip_us);
         }
     }
 }

@@ -934,6 +934,39 @@ mod tests {
     }
 
     #[test]
+    fn trace_csv_rejects_every_malformed_row_with_its_line_number() {
+        // each rejection class, one by one, with the offending line named
+        // (comments/blank lines still count toward the line numbers)
+        let case = |text: &str| Trace::parse_csv(text).unwrap_err();
+        // NaN power: Rust's f64 parser happily accepts "NaN" — the
+        // validator must not
+        let e = case("0,0.1\n# mid comment\n100,NaN");
+        assert!(e.contains("line 3") && e.contains("finite"), "{e}");
+        // infinities are equally non-physical
+        let e = case("0,inf");
+        assert!(e.contains("line 1") && e.contains("finite"), "{e}");
+        let e = case("0,0.1\n100,-inf");
+        assert!(e.contains("line 2"), "{e}");
+        // negative power mid-file
+        let e = case("0,0.1\n100,0.2\n200,-0.3");
+        assert!(e.contains("line 3") && e.contains(">= 0"), "{e}");
+        // time going backwards (not just repeating)
+        let e = case("0,0.1\n500,0.2\n400,0.3");
+        assert!(e.contains("line 3") && e.contains("not after"), "{e}");
+        // unparseable time: fractional, negative, empty
+        for bad_t in ["1.5,0.1", "-10,0.1", ",0.1"] {
+            let e = case(bad_t);
+            assert!(e.contains("line 1") && e.contains("bad time"), "{bad_t}: {e}");
+        }
+        // unparseable power
+        let e = case("0,watts");
+        assert!(e.contains("line 1") && e.contains("bad power"), "{e}");
+        // and the path-level wrapper names the file for spec errors
+        let e = Trace::from_csv("/nonexistent/dir/t.csv").unwrap_err().to_string();
+        assert!(e.contains("/nonexistent/dir/t.csv"), "{e}");
+    }
+
+    #[test]
     fn trace_replay() {
         let t = Trace {
             points: vec![(0, 0.0), (50, 0.5), (100, 0.25)],

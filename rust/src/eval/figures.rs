@@ -45,9 +45,9 @@ fn accuracy_series(name: &str, r: &RunResult) -> Series {
 
 /// All figure ids the harness can regenerate (`fleet16` is ours, not the
 /// paper's: the population-scale extension of Fig. 6(c)).
-pub const FIGURE_IDS: [&str; 16] = [
+pub const FIGURE_IDS: [&str; 17] = [
     "fig6c", "fig7c", "fig8c", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14", "fig15",
-    "fig16", "fig17", "fleet16", "table3", "table4", "table5",
+    "fig16", "fig17", "fleet16", "sync16", "table3", "table4", "table5",
 ];
 
 /// Dispatch by figure id.
@@ -66,6 +66,7 @@ pub fn generate(id: &str, seed: u64) -> Result<FigData> {
         "fig16" => fig16(),
         "fig17" => fig17(seed),
         "fleet16" => fleet16(seed),
+        "sync16" => sync16(seed),
         "table3" => table34(seed, false),
         "table4" => table34(seed, true),
         "table5" => table5(seed),
@@ -119,6 +120,7 @@ pub fn fleet16(seed: u64) -> Result<FigData> {
         phase_jitter_us: 1_800_000_000,
         seed_stride: 1,
         overrides: vec![],
+        sync: None,
     });
     let fr = spec.run_fleet(0)?;
     let mut final_acc = Series::new("final_accuracy_by_shard");
@@ -141,6 +143,58 @@ pub fn fleet16(seed: u64) -> Result<FigData> {
     ));
     fig.series.push(final_acc);
     fig.series.push(learned);
+    Ok(fig)
+}
+
+/// `sync16` (ours): the `fleet16` population with and without round-based
+/// federated sync — per-shard mean accuracy under periodic gossip vs
+/// total isolation, plus the radio bill and the energy-gated skip count.
+pub fn sync16(seed: u64) -> Result<FigData> {
+    use crate::scenario::{FleetSpec, SyncSpec};
+    use crate::sim::SyncStrategy;
+    let mut fig = FigData::new(
+        "sync16",
+        "16-shard solar fleet: federated sync vs isolated accuracy",
+        "shard",
+        "mean accuracy",
+    );
+    let base = |sync: Option<SyncSpec>| {
+        let mut spec = AppKind::AirQuality.spec(seed, 12 * H);
+        spec.fleet = Some(FleetSpec {
+            shards: 16,
+            phase_jitter_us: 1_800_000_000,
+            seed_stride: 1,
+            overrides: vec![],
+            sync,
+        });
+        spec
+    };
+    let isolated = base(None).run_fleet(0)?;
+    let synced_spec = base(Some(SyncSpec {
+        // hourly model gossip across the population
+        period_us: 3_600_000_000,
+        strategy: SyncStrategy::Gossip,
+        radio: None,
+    }));
+    let synced = synced_spec.run_fleet(0)?;
+    let mut iso_s = Series::new("isolated_mean_accuracy_by_shard");
+    let mut syn_s = Series::new("synced_mean_accuracy_by_shard");
+    for (i, (a, b)) in isolated.shards.iter().zip(&synced.shards).enumerate() {
+        iso_s.push(i as f64, a.mean_accuracy(3));
+        syn_s.push(i as f64, b.mean_accuracy(3));
+    }
+    fig.row(format!(
+        "mean accuracy rollup: isolated {:.3} -> synced {:.3} ({} shards)",
+        isolated.rollup.mean_accuracy.mean, synced.rollup.mean_accuracy.mean, synced.rollup.shards
+    ));
+    fig.row(format!(
+        "syncs: {} done / {} skipped (energy-gated); radio+merge energy delta {:.1} mJ total",
+        synced.rollup.syncs_done.total as u64,
+        synced.rollup.syncs_skipped.total as u64,
+        (synced.rollup.energy_uj.total - isolated.rollup.energy_uj.total) / 1000.0
+    ));
+    fig.series.push(iso_s);
+    fig.series.push(syn_s);
     Ok(fig)
 }
 
@@ -498,7 +552,10 @@ pub fn fig16() -> Result<FigData> {
     );
     for m in [CostModel::knn(), CostModel::kmeans()] {
         fig.row(format!("-- {} --", m.name));
-        for a in Action::ALL {
+        // only the paper's eight Table-1 primitives: the trailing radio
+        // pair (tx/rx) is ours and belongs to sync16, not a reproduction
+        // of the paper's figure
+        for &a in &Action::ALL[..8] {
             let c = m.cost(a);
             fig.row(format!(
                 "{:<10} {:>12.1} uJ {:>12.2} ms  (splits {})",

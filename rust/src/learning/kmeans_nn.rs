@@ -21,7 +21,7 @@
 use crate::backend::shapes::*;
 use crate::backend::ComputeBackend;
 use crate::error::Result;
-use crate::learning::{Example, Learner, Verdict};
+use crate::learning::{Example, Learner, ModelSnapshot, Verdict};
 use crate::nvm::{KeyId, Nvm};
 
 /// Interned NVM handles for the learner's keys (resolved once per store).
@@ -33,8 +33,9 @@ struct KmeansKeys {
     gen: KeyId,
 }
 
-/// Misc scalar block: eta, quality, budgets + per-cluster votes/EMA.
-const MISC_LEN: usize = 4 + 3 * N_CLUSTERS;
+/// Misc scalar block: eta, quality, budgets + per-cluster votes / EMA /
+/// since-merge update counts / since-merge vote deltas.
+const MISC_LEN: usize = 4 + 6 * N_CLUSTERS;
 
 /// Competitive-learning k-means with cluster labelling.
 #[derive(Debug, Clone)]
@@ -45,6 +46,14 @@ pub struct ClusterLabelLearner {
     pub eta: f32,
     /// Per-cluster (normal votes, abnormal votes) from labelled examples.
     votes: [[u32; 2]; N_CLUSTERS],
+    /// Votes gained since the last fleet merge (the delta a sync
+    /// broadcasts — re-sending cumulative votes would double-count them
+    /// every round under all-reduce).
+    fresh_votes: [[u32; 2]; N_CLUSTERS],
+    /// Competitive updates per cluster since the last fleet merge — the
+    /// FedAvg-style count weights of the centroid average. Reset after
+    /// every merge so a round contributes each example exactly once.
+    counts: [u32; N_CLUSTERS],
     /// Labelled examples still allowed to vote (semi-supervised budget).
     label_budget: u32,
     /// The budget the learner started with (per-cluster cap base).
@@ -76,6 +85,8 @@ impl ClusterLabelLearner {
             w,
             eta: 0.15,
             votes: [[0; 2]; N_CLUSTERS],
+            fresh_votes: [[0; 2]; N_CLUSTERS],
+            counts: [0; N_CLUSTERS],
             label_budget,
             initial_budget: label_budget,
             learned: 0,
@@ -124,6 +135,7 @@ impl ClusterLabelLearner {
         let used: u32 = self.votes[cluster].iter().sum();
         if self.label_budget > 0 && used < cap {
             self.votes[cluster][abnormal as usize] += 1;
+            self.fresh_votes[cluster][abnormal as usize] += 1;
             self.label_budget -= 1;
         }
     }
@@ -143,9 +155,12 @@ impl ClusterLabelLearner {
         misc[2] = self.label_budget as f32;
         misc[3] = self.initial_budget as f32;
         for c in 0..N_CLUSTERS {
-            misc[4 + 3 * c] = self.votes[c][0] as f32;
-            misc[5 + 3 * c] = self.votes[c][1] as f32;
-            misc[6 + 3 * c] = self.act_ema[c];
+            misc[4 + 6 * c] = self.votes[c][0] as f32;
+            misc[5 + 6 * c] = self.votes[c][1] as f32;
+            misc[6 + 6 * c] = self.act_ema[c];
+            misc[7 + 6 * c] = self.counts[c] as f32;
+            misc[8 + 6 * c] = self.fresh_votes[c][0] as f32;
+            misc[9 + 6 * c] = self.fresh_votes[c][1] as f32;
         }
         misc
     }
@@ -198,6 +213,7 @@ impl Learner for ClusterLabelLearner {
             let c = self.learned as usize;
             self.w[c * FEAT_DIM..(c + 1) * FEAT_DIM].copy_from_slice(&ex.features);
             self.mark_dirty(c);
+            self.counts[c] = self.counts[c].saturating_add(1);
             self.spend_label(c, ex.truth_abnormal);
             self.learned += 1;
             return Ok(());
@@ -206,6 +222,7 @@ impl Learner for ClusterLabelLearner {
         let win = be.kmeans_learn(&mut self.w, &ex.features, self.eta, &mut acts)?;
         self.act_ema[win] = 0.9 * self.act_ema[win] + 0.1 * acts[win];
         self.mark_dirty(win);
+        self.counts[win] = self.counts[win].saturating_add(1);
         self.spend_label(win, ex.truth_abnormal);
         self.learned += 1;
         Ok(())
@@ -272,15 +289,108 @@ impl Learner for ClusterLabelLearner {
             self.label_budget = m[2] as u32;
             self.initial_budget = m[3] as u32;
             for c in 0..N_CLUSTERS {
-                self.votes[c][0] = m[4 + 3 * c] as u32;
-                self.votes[c][1] = m[5 + 3 * c] as u32;
-                self.act_ema[c] = m[6 + 3 * c];
+                self.votes[c][0] = m[4 + 6 * c] as u32;
+                self.votes[c][1] = m[5 + 6 * c] as u32;
+                self.act_ema[c] = m[6 + 6 * c];
+                self.counts[c] = m[7 + 6 * c] as u32;
+                self.fresh_votes[c][0] = m[8 + 6 * c] as u32;
+                self.fresh_votes[c][1] = m[9 + 6 * c] as u32;
             }
         }
         self.learned = nvm.read_u64_id(k.learned);
         self.save_gen = nvm.read_u64_id(k.gen);
         self.dirty_rows.clear();
         Ok(())
+    }
+
+    fn snapshot(&self) -> Option<ModelSnapshot> {
+        Some(ModelSnapshot::Kmeans {
+            w: self.w.clone(),
+            counts: self.counts,
+            // broadcast only the since-merge vote deltas: cumulative votes
+            // would double-count under repeated all-reduce rounds
+            votes: self.fresh_votes,
+            act_ema: self.act_ema,
+            learned: self.learned,
+        })
+    }
+
+    /// Count-weighted centroid averaging with label-vote fusion: each
+    /// cluster's merged weights are the mean of every participant's row
+    /// weighted by its competitive updates *since the last merge* (FedAvg
+    /// over the round's contributions — a shard that learned nothing this
+    /// round pulls no weight), peer vote deltas are added into the local
+    /// tallies, and activation EMAs average under the same weights. Local
+    /// since-merge counters reset: the round's contribution is consumed.
+    fn merge(
+        &mut self,
+        peers: &[ModelSnapshot],
+        _be: &mut dyn ComputeBackend,
+        _now_us: u64,
+        _expiry_us: Option<u64>,
+    ) -> Result<bool> {
+        let mut any_peer = false;
+        let mut merged_learned = self.learned;
+        let mut w_new = self.w.clone();
+        let mut ema_new = self.act_ema;
+        for c in 0..N_CLUSTERS {
+            let mut total = f64::from(self.counts[c]);
+            let mut acc: Vec<f64> = self.w[c * FEAT_DIM..(c + 1) * FEAT_DIM]
+                .iter()
+                .map(|&v| f64::from(v) * f64::from(self.counts[c]))
+                .collect();
+            let mut ema_acc = f64::from(self.act_ema[c]) * f64::from(self.counts[c]);
+            for p in peers {
+                if let ModelSnapshot::Kmeans {
+                    w,
+                    counts,
+                    act_ema,
+                    ..
+                } = p
+                {
+                    let n = f64::from(counts[c]);
+                    total += n;
+                    for (a, &v) in acc.iter_mut().zip(&w[c * FEAT_DIM..(c + 1) * FEAT_DIM]) {
+                        *a += f64::from(v) * n;
+                    }
+                    ema_acc += f64::from(act_ema[c]) * n;
+                }
+            }
+            if total > 0.0 {
+                for (dst, a) in w_new[c * FEAT_DIM..(c + 1) * FEAT_DIM]
+                    .iter_mut()
+                    .zip(&acc)
+                {
+                    *dst = (a / total) as f32;
+                }
+                ema_new[c] = (ema_acc / total) as f32;
+            }
+            // total == 0: nobody updated this cluster since the last
+            // merge — keep the local row
+        }
+        for p in peers {
+            if let ModelSnapshot::Kmeans { votes, learned, .. } = p {
+                any_peer = true;
+                merged_learned = merged_learned.max(*learned);
+                for c in 0..N_CLUSTERS {
+                    for j in 0..2 {
+                        self.votes[c][j] = self.votes[c][j].saturating_add(votes[c][j]);
+                    }
+                }
+            }
+        }
+        if !any_peer {
+            return Ok(false);
+        }
+        self.w = w_new;
+        self.act_ema = ema_new;
+        self.learned = merged_learned;
+        self.counts = [0; N_CLUSTERS];
+        self.fresh_votes = [[0; 2]; N_CLUSTERS];
+        // the whole weight matrix changed: force the next delta save full
+        self.dirty_rows.clear();
+        self.save_gen = 0;
+        Ok(true)
     }
 
     fn name(&self) -> &'static str {
@@ -400,6 +510,110 @@ mod tests {
         assert_eq!(l2.weights(), l.weights());
         assert_eq!(l2.learned_count(), l.learned_count());
         assert_eq!(l2.votes, l.votes);
+    }
+
+    #[test]
+    fn merge_is_count_weighted_centroid_averaging() {
+        let mut be = NativeBackend::new();
+        // two learners over opposite populations with known update counts
+        let mut a = ClusterLabelLearner::new(21, 10);
+        let mut b = ClusterLabelLearner::new(21, 10);
+        let mut rng = Rng::new(21);
+        for i in 0..12 {
+            a.learn(&population(&mut rng, i % 2 == 0), &mut be).unwrap();
+        }
+        for i in 0..36 {
+            b.learn(&population(&mut rng, i % 2 == 0), &mut be).unwrap();
+        }
+        let (wa, wb) = (a.weights().to_vec(), b.weights().to_vec());
+        let (ca, cb) = (a.counts, b.counts);
+        let snap_b = b.snapshot().unwrap();
+        assert!(a.merge(&[snap_b], &mut be, 0, None).unwrap());
+        for c in 0..N_CLUSTERS {
+            let (na, nb) = (ca[c] as f64, cb[c] as f64);
+            assert!(na > 0.0 && nb > 0.0, "populations must hit both clusters");
+            for j in 0..FEAT_DIM {
+                let want = (wa[c * FEAT_DIM + j] as f64 * na
+                    + wb[c * FEAT_DIM + j] as f64 * nb)
+                    / (na + nb);
+                let got = a.weights()[c * FEAT_DIM + j] as f64;
+                assert!((got - want).abs() < 1e-6, "c{c} j{j}: {got} vs {want}");
+            }
+        }
+        // the heavier learner (3x the updates) pulled the mean toward it
+        let d = |x: &[f32], y: &[f32]| -> f32 {
+            x.iter().zip(y).map(|(p, q)| (p - q).abs()).sum()
+        };
+        assert!(d(a.weights(), &wb) < d(a.weights(), &wa));
+        // since-merge counters consumed
+        assert_eq!(a.counts, [0; N_CLUSTERS]);
+        assert_eq!(a.learned_count(), 36);
+    }
+
+    #[test]
+    fn merge_fuses_label_votes_and_enables_cold_inference() {
+        let mut be = NativeBackend::new();
+        let mut donor = ClusterLabelLearner::new(31, 40);
+        let mut rng = Rng::new(31);
+        for i in 0..60 {
+            donor.learn(&population(&mut rng, i % 2 == 0), &mut be).unwrap();
+        }
+        assert_eq!(donor.evaluate(&mut be).unwrap(), 1.0);
+        // a cold shard (zero labels of its own) adopts weights AND votes
+        let mut cold = ClusterLabelLearner::new(999, 0);
+        assert!(cold
+            .merge(&[donor.snapshot().unwrap()], &mut be, 0, None)
+            .unwrap());
+        assert_eq!(cold.evaluate(&mut be).unwrap(), 1.0, "votes did not fuse");
+        let mut correct = 0;
+        for i in 0..20 {
+            let ex = population(&mut rng, i % 2 == 0);
+            if cold.infer(&ex, &mut be).unwrap().abnormal() == ex.truth_abnormal {
+                correct += 1;
+            }
+        }
+        assert!(correct >= 17, "cold shard classifies {correct}/20 after merge");
+        // vote deltas are consumed on the donor side only when IT merges;
+        // here the cold side snapshot now carries no fresh votes
+        match cold.snapshot().unwrap() {
+            ModelSnapshot::Kmeans { votes, counts, .. } => {
+                assert_eq!(votes, [[0; 2]; N_CLUSTERS], "adopted votes re-broadcast");
+                assert_eq!(counts, [0; N_CLUSTERS]);
+            }
+            other => panic!("unexpected snapshot {other:?}"),
+        }
+        // merging a contribution-free snapshot moves nothing
+        let w = cold.weights().to_vec();
+        let idle = cold.snapshot().unwrap();
+        assert!(cold.merge(&[idle], &mut be, 0, None).unwrap());
+        assert_eq!(cold.weights(), &w[..], "zero-count merge moved the weights");
+    }
+
+    #[test]
+    fn merge_forces_the_next_delta_save_to_be_full() {
+        let mut be = NativeBackend::new();
+        let mut nvm = Nvm::new();
+        let mut rng = Rng::new(41);
+        let mut l = ClusterLabelLearner::new(41, 10);
+        for i in 0..10 {
+            l.learn(&population(&mut rng, i % 2 == 0), &mut be).unwrap();
+            l.save_delta(&mut nvm).unwrap();
+        }
+        let mut donor = ClusterLabelLearner::new(42, 10);
+        for i in 0..10 {
+            donor.learn(&population(&mut rng, i % 2 == 0), &mut be).unwrap();
+        }
+        l.merge(&[donor.snapshot().unwrap()], &mut be, 0, None)
+            .unwrap();
+        let before = nvm.bytes_written;
+        l.save_delta(&mut nvm).unwrap();
+        let wrote = (nvm.bytes_written - before) as usize;
+        assert_eq!(wrote, N_CLUSTERS * FEAT_DIM * 4 + MISC_LEN * 4 + 8 + 8);
+        let mut back = ClusterLabelLearner::new(999, 0);
+        back.restore(&mut nvm).unwrap();
+        assert_eq!(back.weights(), l.weights());
+        assert_eq!(back.votes, l.votes);
+        assert_eq!(back.learned_count(), l.learned_count());
     }
 
     #[test]

@@ -18,7 +18,7 @@
 use crate::backend::shapes::*;
 use crate::backend::ComputeBackend;
 use crate::error::Result;
-use crate::learning::{Example, Learner, Verdict};
+use crate::learning::{Example, Learner, ModelSnapshot, Verdict};
 use crate::nvm::{KeyId, Nvm};
 
 /// Interned NVM handles for the learner's keys (resolved once per store).
@@ -26,6 +26,7 @@ use crate::nvm::{KeyId, Nvm};
 struct KnnKeys {
     buf: KeyId,
     mask: KeyId,
+    times: KeyId,
     scalars: KeyId,
     learned: KeyId,
     gen: KeyId,
@@ -38,6 +39,9 @@ pub struct KnnAnomalyLearner {
     buf: Vec<f32>,
     /// Validity mask (1.0 = row holds a learned example).
     mask: Vec<f32>,
+    /// Per-slot acquisition time, µs (recency for the fleet ring merge +
+    /// Mayfly expiry of adopted peer examples).
+    times: Vec<u64>,
     /// Next ring slot to overwrite.
     next: usize,
     /// Learned-example counter (monotonic).
@@ -68,6 +72,7 @@ impl KnnAnomalyLearner {
         KnnAnomalyLearner {
             buf: vec![0.0; N_BUF * FEAT_DIM],
             mask: vec![0.0; N_BUF],
+            times: vec![0; N_BUF],
             next: 0,
             learned: 0,
             threshold: 0.0,
@@ -108,6 +113,7 @@ impl KnnAnomalyLearner {
                 let k = KnnKeys {
                     buf: nvm.intern("knn/buf"),
                     mask: nvm.intern("knn/mask"),
+                    times: nvm.intern("knn/times"),
                     scalars: nvm.intern("knn/scalars"),
                     learned: nvm.intern("knn/learned"),
                     gen: nvm.intern("knn/gen"),
@@ -137,6 +143,7 @@ impl Learner for KnnAnomalyLearner {
         let slot = self.next;
         self.buf[slot * FEAT_DIM..(slot + 1) * FEAT_DIM].copy_from_slice(&ex.features);
         self.mask[slot] = 1.0;
+        self.times[slot] = ex.t_us;
         self.next = (self.next + 1) % N_BUF;
         self.learned += 1;
         if !self.dirty_slots.contains(&slot) {
@@ -191,6 +198,11 @@ impl Learner for KnnAnomalyLearner {
         let k = self.keys(nvm);
         nvm.write_f32s_id(k.buf, &self.buf)?;
         nvm.write_f32s_id(k.mask, &self.mask)?;
+        let mut tb = Vec::with_capacity(N_BUF * 8);
+        for &t in &self.times {
+            tb.extend_from_slice(&t.to_le_bytes());
+        }
+        nvm.write_id(k.times, &tb)?;
         self.save_tail(nvm, k)
     }
 
@@ -201,7 +213,8 @@ impl Learner for KnnAnomalyLearner {
         // generation behind), fall back to the full checkpoint.
         let fresh = self.save_gen != 0
             && nvm.read_u64_id(k.gen) == self.save_gen
-            && nvm.value_len(k.buf) == Some(N_BUF * FEAT_DIM * 4);
+            && nvm.value_len(k.buf) == Some(N_BUF * FEAT_DIM * 4)
+            && nvm.value_len(k.times) == Some(N_BUF * 8);
         if !fresh {
             return self.save(nvm);
         }
@@ -209,6 +222,7 @@ impl Learner for KnnAnomalyLearner {
             let row = &self.buf[s * FEAT_DIM..(s + 1) * FEAT_DIM];
             nvm.write_f32s_at(k.buf, s * FEAT_DIM, row)?;
             nvm.write_f32s_at(k.mask, s, &self.mask[s..s + 1])?;
+            nvm.write_at(k.times, s * 8, &self.times[s].to_le_bytes())?;
         }
         self.save_tail(nvm, k)
     }
@@ -217,6 +231,13 @@ impl Learner for KnnAnomalyLearner {
         let k = self.keys(nvm);
         nvm.read_f32s_into(k.buf, &mut self.buf);
         nvm.read_f32s_into(k.mask, &mut self.mask);
+        if let Some(tb) = nvm.read_id(k.times) {
+            if tb.len() == N_BUF * 8 {
+                for (i, c) in tb.chunks_exact(8).enumerate() {
+                    self.times[i] = u64::from_le_bytes(c.try_into().expect("8-byte chunk"));
+                }
+            }
+        }
         let mut s = [0.0f32; 3];
         if nvm.read_f32s_into(k.scalars, &mut s) {
             self.next = (s[0] as usize) % N_BUF;
@@ -227,6 +248,145 @@ impl Learner for KnnAnomalyLearner {
         self.save_gen = nvm.read_u64_id(k.gen);
         self.dirty_slots.clear();
         Ok(())
+    }
+
+    fn snapshot(&self) -> Option<ModelSnapshot> {
+        Some(ModelSnapshot::Knn {
+            buf: self.buf.clone(),
+            mask: self.mask.clone(),
+            times: self.times.clone(),
+            next: self.next,
+            learned: self.learned,
+            threshold: self.threshold,
+        })
+    }
+
+    /// Recency-weighted ring merge: pool the local ring with every peer
+    /// ring, drop peer examples that Mayfly expiry would have discarded
+    /// (`t + expiry <= now`, mirroring [`crate::sim::expire_stale`]) and
+    /// exact duplicates (gossip re-circulates examples), keep the N_BUF
+    /// most recent, and rebuild the ring oldest→newest so subsequent
+    /// learns overwrite the oldest adopted state first. The threshold is
+    /// recomputed over the merged buffer (it "evolves over time", §6.1 —
+    /// now also over the fleet).
+    fn merge(
+        &mut self,
+        peers: &[ModelSnapshot],
+        be: &mut dyn ComputeBackend,
+        now_us: u64,
+        expiry_us: Option<u64>,
+    ) -> Result<bool> {
+        // candidate = (t, source rank, age rank within source, borrowed
+        // feature row); self is source 0, peers follow in caller order —
+        // fully deterministic
+        struct Cand<'a> {
+            t: u64,
+            src: usize,
+            age: usize,
+            row: &'a [f32],
+        }
+        /// Push one ring's valid entries, walking backwards from the
+        /// cursor so age 0 is the most recently written slot. `expiry`
+        /// (`Some` only for adopted peer data — Mayfly discards stale
+        /// *sensor data*, not local models) drops entries with
+        /// `t + expiry <= now`.
+        #[allow(clippy::too_many_arguments)]
+        fn push_ring<'a>(
+            cands: &mut Vec<Cand<'a>>,
+            src: usize,
+            buf: &'a [f32],
+            mask: &'a [f32],
+            times: &'a [u64],
+            next: usize,
+            now_us: u64,
+            expiry: Option<u64>,
+        ) {
+            for age in 0..N_BUF {
+                let slot = (next + N_BUF - 1 - age) % N_BUF;
+                if mask[slot] <= 0.5 {
+                    continue;
+                }
+                let t = times[slot];
+                if let Some(e) = expiry {
+                    if t.saturating_add(e) <= now_us {
+                        continue;
+                    }
+                }
+                cands.push(Cand {
+                    t,
+                    src,
+                    age,
+                    row: &buf[slot * FEAT_DIM..(slot + 1) * FEAT_DIM],
+                });
+            }
+        }
+        let mut cands: Vec<Cand> = Vec::new();
+        push_ring(
+            &mut cands, 0, &self.buf, &self.mask, &self.times, self.next, now_us, None,
+        );
+        let mut merged_learned = self.learned;
+        let mut any_peer = false;
+        for (i, p) in peers.iter().enumerate() {
+            if let ModelSnapshot::Knn {
+                buf,
+                mask,
+                times,
+                next,
+                learned,
+                ..
+            } = p
+            {
+                any_peer = true;
+                merged_learned = merged_learned.max(*learned);
+                push_ring(&mut cands, i + 1, buf, mask, times, *next, now_us, expiry_us);
+            }
+        }
+        if !any_peer {
+            return Ok(false);
+        }
+        // recency-weighted: newest first; ties broken by source order then
+        // in-source age so the result is identical on every shard
+        cands.sort_by(|a, b| {
+            b.t.cmp(&a.t)
+                .then(a.src.cmp(&b.src))
+                .then(a.age.cmp(&b.age))
+        });
+        // capacity + dedup: gossip re-circulates adopted examples, so an
+        // entry equal (time and feature bits) to an already-kept one is
+        // the same example coming back around
+        let mut kept: Vec<&Cand> = Vec::with_capacity(N_BUF);
+        for c in &cands {
+            if kept.len() >= N_BUF {
+                break;
+            }
+            if kept.iter().any(|k| k.t == c.t && k.row == c.row) {
+                continue;
+            }
+            kept.push(c);
+        }
+        // rebuild oldest→newest so the ring cursor overwrites oldest first
+        let mut buf = vec![0.0f32; N_BUF * FEAT_DIM];
+        let mut mask = vec![0.0f32; N_BUF];
+        let mut times = vec![0u64; N_BUF];
+        for (slot, c) in kept.iter().rev().enumerate() {
+            buf[slot * FEAT_DIM..(slot + 1) * FEAT_DIM].copy_from_slice(c.row);
+            mask[slot] = 1.0;
+            times[slot] = c.t;
+        }
+        let kept_len = kept.len();
+        drop(kept);
+        drop(cands);
+        self.next = kept_len % N_BUF;
+        self.buf = buf;
+        self.mask = mask;
+        self.times = times;
+        self.learned = merged_learned;
+        self.threshold = be.knn_learn(&self.buf, &self.mask, &mut self.scores)?;
+        // the whole model changed: dirty tracking is void, the next
+        // save_delta must degrade to a full save
+        self.dirty_slots.clear();
+        self.save_gen = 0;
+        Ok(true)
     }
 
     fn name(&self) -> &'static str {
@@ -351,8 +511,106 @@ mod tests {
             delta as usize * 5 <= full as usize,
             "delta {delta} B vs full {full} B"
         );
-        // one f32 row + one mask slot + scalars + learned + gen
-        assert_eq!(delta as usize, FEAT_DIM * 4 + 4 + 12 + 8 + 8);
+        // one f32 row + one mask slot + one time slot + scalars + learned + gen
+        assert_eq!(delta as usize, FEAT_DIM * 4 + 4 + 8 + 12 + 8 + 8);
+    }
+
+    #[test]
+    fn merge_adopts_peer_ring_by_recency() {
+        let mut be = NativeBackend::new();
+        let mut rng = Rng::new(8);
+        // a trained donor with timestamps 100..130
+        let mut donor = KnnAnomalyLearner::new();
+        for t in 0..30 {
+            donor.learn(&normal_ex(&mut rng, 100 + t), &mut be).unwrap();
+        }
+        let snap = donor.snapshot().expect("knn snapshots");
+        // a cold shard adopts the whole donor ring
+        let mut cold = KnnAnomalyLearner::new();
+        assert!(cold.merge(&[snap.clone()], &mut be, 1_000, None).unwrap());
+        assert_eq!(cold.buffered(), 30);
+        assert_eq!(cold.learned_count(), 30);
+        assert!(cold.threshold() > 0.0);
+        // merged verdicts match the donor's (same buffered set)
+        let probe = normal_ex(&mut rng, 999);
+        assert_eq!(
+            cold.infer(&probe, &mut be).unwrap(),
+            donor.infer(&probe, &mut be).unwrap()
+        );
+        // re-merging the same snapshot is a no-growth fixpoint (dedup)
+        let again = cold.snapshot().unwrap();
+        assert!(cold.merge(&[snap, again], &mut be, 1_000, None).unwrap());
+        assert_eq!(cold.buffered(), 30, "duplicates inflated the ring");
+        // an empty peer list is a no-op
+        assert!(!cold.merge(&[], &mut be, 1_000, None).unwrap());
+    }
+
+    #[test]
+    fn merge_respects_capacity_and_prefers_recent_examples() {
+        let mut be = NativeBackend::new();
+        let mut rng = Rng::new(9);
+        let mut old = KnnAnomalyLearner::new();
+        let mut new = KnnAnomalyLearner::new();
+        for i in 0..N_BUF as u64 {
+            old.learn(&normal_ex(&mut rng, 1_000 + i), &mut be).unwrap();
+            new.learn(&normal_ex(&mut rng, 9_000 + i), &mut be).unwrap();
+        }
+        let newer = new.snapshot().unwrap();
+        assert!(old.merge(&[newer], &mut be, 20_000, None).unwrap());
+        // two full rings compete for N_BUF slots: only the newest survive,
+        // which is exactly the peer's ring here
+        assert_eq!(old.buffered(), N_BUF);
+        assert_eq!(old.buffer().0, new.buffer().0);
+    }
+
+    #[test]
+    fn merge_expires_stale_peer_examples_mayfly_style() {
+        let mut be = NativeBackend::new();
+        let mut rng = Rng::new(10);
+        let mut donor = KnnAnomalyLearner::new();
+        for t in 0..20 {
+            donor.learn(&normal_ex(&mut rng, t), &mut be).unwrap(); // t = 0..20 µs
+        }
+        let snap = donor.snapshot().unwrap();
+        let mut cold = KnnAnomalyLearner::new();
+        // expiry 50 µs at now = 1000 µs: every donor example is stale
+        assert!(cold.merge(&[snap.clone()], &mut be, 1_000, Some(50)).unwrap());
+        assert_eq!(cold.buffered(), 0, "stale peer examples were adopted");
+        // same merge with a lenient expiry adopts them all (boundary is
+        // strict, matching sim::expire_stale)
+        assert!(cold.merge(&[snap], &mut be, 1_000, Some(2_000)).unwrap());
+        assert_eq!(cold.buffered(), 20);
+    }
+
+    #[test]
+    fn merge_forces_the_next_delta_save_to_be_full() {
+        let mut be = NativeBackend::new();
+        let mut nvm = Nvm::new();
+        let mut rng = Rng::new(12);
+        let mut l = KnnAnomalyLearner::new();
+        for t in 0..10 {
+            l.learn(&normal_ex(&mut rng, t), &mut be).unwrap();
+            l.save_delta(&mut nvm).unwrap();
+        }
+        let mut donor = KnnAnomalyLearner::new();
+        for t in 0..5 {
+            donor.learn(&normal_ex(&mut rng, 100 + t), &mut be).unwrap();
+        }
+        l.merge(&[donor.snapshot().unwrap()], &mut be, 1_000, None)
+            .unwrap();
+        // the next delta save must rewrite the whole model, not the (now
+        // void) dirty set
+        let before = nvm.bytes_written;
+        l.save_delta(&mut nvm).unwrap();
+        let wrote = (nvm.bytes_written - before) as usize;
+        assert_eq!(wrote, N_BUF * FEAT_DIM * 4 + N_BUF * 4 + N_BUF * 8 + 12 + 8 + 8);
+        // and a restore after it reproduces the merged model bit for bit
+        let mut back = KnnAnomalyLearner::new();
+        back.restore(&mut nvm).unwrap();
+        assert_eq!(back.buffer().0, l.buffer().0);
+        assert_eq!(back.buffer().1, l.buffer().1);
+        assert_eq!(back.threshold(), l.threshold());
+        assert_eq!(back.learned_count(), l.learned_count());
     }
 
     #[test]

@@ -14,9 +14,65 @@ pub mod knn;
 pub use kmeans_nn::ClusterLabelLearner;
 pub use knn::KnnAnomalyLearner;
 
+use crate::backend::shapes::N_CLUSTERS;
 use crate::backend::ComputeBackend;
 use crate::error::Result;
 use crate::nvm::Nvm;
+
+/// A serializable snapshot of one learner's model state — the payload a
+/// fleet shard radios at a federated sync boundary. Plain owned data:
+/// `Send + Clone`, so snapshots cross worker threads while the learners
+/// (and their non-`Send` backends) stay pinned.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelSnapshot {
+    /// k-NN ring state: the buffered examples with their validity mask and
+    /// per-slot acquisition times (recency for the ring merge + Mayfly
+    /// expiry), plus the ring cursor and counters.
+    Knn {
+        /// (N_BUF, FEAT_DIM) ring buffer, row-major.
+        buf: Vec<f32>,
+        /// (N_BUF) validity mask.
+        mask: Vec<f32>,
+        /// (N_BUF) per-slot acquisition time, µs.
+        times: Vec<u64>,
+        /// Next ring slot to overwrite.
+        next: usize,
+        /// Monotonic learned-example counter.
+        learned: u64,
+        /// Current anomaly threshold AS_TH.
+        threshold: f32,
+    },
+    /// NN-k-means state: centroid weights plus the per-cluster update
+    /// counts accumulated since the last merge (FedAvg-style count
+    /// weighting), label votes and activation EMAs.
+    Kmeans {
+        /// (N_CLUSTERS, FEAT_DIM) weights, row-major.
+        w: Vec<f32>,
+        /// Per-cluster competitive updates since the last merge.
+        counts: [u32; N_CLUSTERS],
+        /// Per-cluster (normal, abnormal) label votes.
+        votes: [[u32; 2]; N_CLUSTERS],
+        /// Per-cluster winning-activation EMA.
+        act_ema: [f32; N_CLUSTERS],
+        /// Monotonic learned-example counter.
+        learned: u64,
+    },
+}
+
+impl ModelSnapshot {
+    /// Wire size of the snapshot in bytes (what a radio would carry) —
+    /// f32/u32 payloads at 4 B, u64 at 8 B, enum tag excluded.
+    pub fn bytes(&self) -> usize {
+        match self {
+            ModelSnapshot::Knn {
+                buf, mask, times, ..
+            } => buf.len() * 4 + mask.len() * 4 + times.len() * 8 + 8 + 8 + 4,
+            ModelSnapshot::Kmeans { w, .. } => {
+                w.len() * 4 + N_CLUSTERS * 4 + N_CLUSTERS * 2 * 4 + N_CLUSTERS * 4 + 8
+            }
+        }
+    }
+}
 
 /// One example: a feature vector plus bookkeeping. The ground-truth label
 /// is carried for *evaluation only* — the unsupervised learners never read
@@ -94,6 +150,33 @@ pub trait Learner: Send {
 
     /// Restore model state from NVM (no-op if nothing saved).
     fn restore(&mut self, nvm: &mut Nvm) -> Result<()>;
+
+    /// Snapshot the model for a fleet sync exchange, or `None` if this
+    /// learner does not participate in federated merging (baselines).
+    /// Taking a snapshot must not mutate observable model state.
+    fn snapshot(&self) -> Option<ModelSnapshot> {
+        None
+    }
+
+    /// Fold peer snapshots into the local model at a sync boundary.
+    /// `now_us` is the boundary instant and `expiry_us` the deployment's
+    /// Mayfly data-expiration interval (peer examples older than it are
+    /// discarded rather than adopted). Mismatched snapshot kinds are
+    /// skipped, not errors — a heterogeneous fleet simply has nothing to
+    /// merge across learner families. Implementations MUST leave their
+    /// next [`Learner::save_delta`] equivalent to a full [`Learner::save`]
+    /// (a merge rewrites state outside the dirty tracking). Returns `true`
+    /// if any peer state was folded in. Default: merging unsupported.
+    fn merge(
+        &mut self,
+        peers: &[ModelSnapshot],
+        be: &mut dyn ComputeBackend,
+        now_us: u64,
+        expiry_us: Option<u64>,
+    ) -> Result<bool> {
+        let _ = (peers, be, now_us, expiry_us);
+        Ok(false)
+    }
 
     fn name(&self) -> &'static str;
 }

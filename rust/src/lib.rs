@@ -38,8 +38,15 @@
 //! it across N shards ([`sim::fleet`]): per-shard worlds with jittered
 //! harvester phases and strided seeds, shard-level work items on the
 //! sweep pool, and fan-in rollups ([`sim::fleet::FleetResult`]). The
+//! fleet's optional `"sync"` block ([`scenario::SyncSpec`]) turns the
+//! fan-out into a round-based **federated** simulation: shards pause at
+//! periodic boundaries, exchange learner snapshots under a radio energy
+//! gate (`Action::{Tx, Rx}` priced per cost model; a shard that cannot
+//! afford the exchange skips the round) and merge
+//! ([`learning::ModelSnapshot`], [`learning::Learner::merge`]). The
 //! `ilearn` CLI exposes this as `run [--spec file.json]`,
-//! `fleet <scenario> --shards N` and `sweep grid.json`.
+//! `fleet <scenario> --shards N [--sync-period-us P]` and
+//! `sweep grid.json`.
 //!
 //! ## Backends
 //!

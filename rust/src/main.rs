@@ -21,7 +21,8 @@ use ilearn::apps::AppKind;
 use ilearn::energy::inspect;
 use ilearn::eval::figures;
 use ilearn::scenario::{
-    BackendKind, FleetSpec, ScenarioSpec, SchedulerKind, SweepRunner, SweepSpec, PRESETS,
+    BackendKind, FleetSpec, ScenarioSpec, SchedulerKind, SweepRunner, SweepSpec, SyncSpec,
+    PRESETS,
 };
 use ilearn::selection::Heuristic;
 use ilearn::sim::RunResult;
@@ -67,6 +68,8 @@ fn print_help() {
                --shards N       shard count                [default: spec fleet, else 1]\n\
                --jitter-us J    per-shard harvester phase offset (shard i: i x J)\n\
                --stride S       per-shard seed stride      [default 1]\n\
+               --sync-period-us P   federated sync boundary period (0 = isolated)\n\
+               --sync-strategy S    gossip|all_reduce      [default gossip]\n\
                --threads N      worker threads             [default: all cores]\n\
                (run's --seed/--backend/--scheduler/--heuristic apply too)\n\
            sweep <FILE>     expand a JSON grid spec (scenarios x schedulers x\n\
@@ -208,30 +211,73 @@ fn cmd_fleet(args: &[String]) -> Result<()> {
     if let Some(s) = flag(args, "--stride") {
         spec.fleet.get_or_insert_with(FleetSpec::default).seed_stride = s.parse()?;
     }
+    if let Some(p) = flag(args, "--sync-period-us") {
+        let period_us: u64 = p.parse()?;
+        let fleet = spec.fleet.get_or_insert_with(FleetSpec::default);
+        if period_us == 0 {
+            fleet.sync = None; // explicit isolation override
+        } else {
+            fleet
+                .sync
+                .get_or_insert(SyncSpec {
+                    period_us,
+                    strategy: ilearn::sim::SyncStrategy::Gossip,
+                    radio: None,
+                })
+                .period_us = period_us;
+        }
+    }
+    if let Some(s) = flag(args, "--sync-strategy") {
+        let strategy = ilearn::sim::SyncStrategy::parse(&s)
+            .with_context(|| format!("unknown sync strategy `{s}` (gossip|all_reduce)"))?;
+        let fleet = spec.fleet.get_or_insert_with(FleetSpec::default);
+        match &mut fleet.sync {
+            Some(sync) => sync.strategy = strategy,
+            None => bail!("--sync-strategy needs --sync-period-us (or a spec sync block)"),
+        }
+    }
     let threads: usize = flag(args, "--threads").map_or(Ok(0), |s| s.parse())?;
     let fleet = spec.fleet.clone().unwrap_or_default();
+    let sync_desc = match &fleet.sync {
+        Some(s) => format!("sync {} every {:.1} s", s.strategy.name(), s.period_us as f64 / 1e6),
+        None => "isolated".into(),
+    };
     eprintln!(
         "running fleet `{}`: {} shard(s) for {:.1} h each (seed {} stride {}, jitter {} us, \
-         scheduler {}) ...",
+         {}, scheduler {}) ...",
         spec.name,
         fleet.shards,
         spec.horizon_us as f64 / H as f64,
         spec.seed,
         fleet.seed_stride,
         fleet.phase_jitter_us,
+        sync_desc,
         spec.scheduler.label()
     );
     let t0 = std::time::Instant::now();
     let fr = spec.run_fleet(threads)?;
     println!("== fleet summary: {} x {} shard(s) ==", spec.name, fr.shards.len());
+    let synced = fr.rollup.syncs_done.total + fr.rollup.syncs_skipped.total > 0.0;
     println!(
-        "{:>6} {:>6} {:>8} {:>8} {:>10} {:>9} {:>9}",
-        "shard", "seed", "learned", "infer", "energy_mJ", "mean_acc", "final_acc"
+        "{:>6} {:>6} {:>8} {:>8} {:>10} {:>9} {:>9}{}",
+        "shard",
+        "seed",
+        "learned",
+        "infer",
+        "energy_mJ",
+        "mean_acc",
+        "final_acc",
+        if synced { "     syncs" } else { "" }
     );
     for (i, r) in fr.shards.iter().enumerate() {
         let sh = spec.shard(i as u32)?;
+        let syncs = if synced {
+            format!("  {}/{}", r.syncs_done, r.syncs_done + r.syncs_skipped)
+        } else {
+            String::new()
+        };
         println!(
-            "{i:>6} {:>6} {:>8} {:>8} {:>10.1} {:>9.3} {:>9.3}",
+            "{i:>6} {:>6} {:>8} {:>8} {:>10.1} {:>9.3} {:>9.3}{syncs}",
             sh.seed,
             r.learned,
             r.inferred,
@@ -242,7 +288,7 @@ fn cmd_fleet(args: &[String]) -> Result<()> {
     }
     let roll = &fr.rollup;
     println!("  rollups (mean / min / max / total):");
-    for (name, r) in [
+    let mut rows = vec![
         ("final_accuracy", roll.final_accuracy),
         ("mean_accuracy", roll.mean_accuracy),
         ("energy_uj", roll.energy_uj),
@@ -250,7 +296,12 @@ fn cmd_fleet(args: &[String]) -> Result<()> {
         ("inferred", roll.inferred),
         ("power_failures", roll.power_failures),
         ("stale_plans", roll.stale_plans),
-    ] {
+    ];
+    if synced {
+        rows.push(("syncs_done", roll.syncs_done));
+        rows.push(("syncs_skipped", roll.syncs_skipped));
+    }
+    for (name, r) in rows {
         println!(
             "    {name:<15} {:>12.3} {:>12.3} {:>12.3} {:>14.3}",
             r.mean, r.min, r.max, r.total
@@ -459,7 +510,9 @@ fn cmd_list() -> Result<()> {
     println!(
         "{}",
         r#"  "fleet": {"shards": 16, "phase_jitter_us": 60000000, "seed_stride": 1,
-            "overrides": [{"shard": 3, "harvester": {"kind": "constant", "power_w": 0.01}}]}"#
+            "overrides": [{"shard": 3, "harvester": {"kind": "constant", "power_w": 0.01}}],
+            "sync": {"period_us": 3600000000, "strategy": "gossip",
+                     "radio": {"tx_uj": 2200, "tx_us": 85000, "rx_uj": 1700, "rx_us": 85000}}}"#
     );
     println!();
     println!(

@@ -306,7 +306,7 @@ impl DynamicActionPlanner {
 
     /// Order-independent state hash: pending multiset + depth.
     fn encode(state: &[Action], depth: usize) -> u64 {
-        let mut counts = [0u64; 8];
+        let mut counts = [0u64; Action::ALL.len()];
         for &a in state {
             counts[Action::ALL.iter().position(|&x| x == a).unwrap()] += 1;
         }

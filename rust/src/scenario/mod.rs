@@ -28,7 +28,7 @@ pub mod sweep;
 
 pub use spec::{
     BackendKind, CapacitorSpec, CostKind, FleetSpec, HarvesterSpec, LearnerSpec, MotionSpec,
-    ScenarioSpec, SchedulerKind, SensorSpec,
+    RadioSpec, ScenarioSpec, SchedulerKind, SensorSpec, SyncSpec,
 };
 pub use sweep::{SweepCell, SweepOutcome, SweepRunner, SweepSpec};
 

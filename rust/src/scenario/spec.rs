@@ -5,11 +5,13 @@
 //! (`util::json`), and compiled into a ready-to-run engine via the
 //! [`crate::sim::engine::EngineBuilder`].
 
+use crate::actions::Action;
 use crate::backend::native::NativeBackend;
 #[cfg(feature = "pjrt")]
 use crate::backend::pjrt::PjrtBackend;
 use crate::backend::ComputeBackend;
 use crate::baselines::{DutyCycleScheduler, MayflyScheduler};
+use crate::energy::cost::ActionCost;
 use crate::energy::harvester::{Constant, Harvester, PhaseShift, Piezo, Rf, Solar, Trace, DAY_S};
 use crate::energy::{Capacitor, CostModel};
 use crate::error::{Error, Result};
@@ -20,7 +22,7 @@ use crate::sensors::accel::{Accel, MotionProfile};
 use crate::sensors::rssi::Area;
 use crate::sensors::{AirQuality, Rssi, Sensor};
 use crate::sim::engine::Engine;
-use crate::sim::fleet::{Fleet, FleetResult, Shard, ShardFactory};
+use crate::sim::fleet::{Fleet, FleetResult, Shard, ShardFactory, SyncPlan, SyncStrategy};
 use crate::sim::{ChargeKernel, PlannerScheduler, Scheduler, SimConfig};
 use crate::util::json::Json;
 
@@ -932,6 +934,117 @@ impl BackendKind {
     }
 }
 
+// -------------------------------------------------------------- sync spec
+
+/// Radio cost overrides for the sync exchange, replacing the cost table's
+/// calibrated `tx`/`rx` entries (deployments radio different payloads
+/// over different links than the defaults assume).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RadioSpec {
+    pub tx_uj: f64,
+    pub tx_us: u64,
+    pub rx_uj: f64,
+    pub rx_us: u64,
+}
+
+impl RadioSpec {
+    fn validate(&self, what: &str) -> Result<()> {
+        if self.tx_uj < 0.0 || self.rx_uj < 0.0 {
+            return Err(Error::Config(format!(
+                "{what}: radio energies must be >= 0 (tx {} / rx {})",
+                self.tx_uj, self.rx_uj
+            )));
+        }
+        Ok(())
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("tx_uj", Json::Num(self.tx_uj)),
+            ("tx_us", Json::Num(self.tx_us as f64)),
+            ("rx_uj", Json::Num(self.rx_uj)),
+            ("rx_us", Json::Num(self.rx_us as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<RadioSpec> {
+        let what = "sync radio";
+        Ok(RadioSpec {
+            tx_uj: req_f64(j, "tx_uj", what)?,
+            tx_us: req_u64(j, "tx_us", what)?,
+            rx_uj: req_f64(j, "rx_uj", what)?,
+            rx_us: req_u64(j, "rx_us", what)?,
+        })
+    }
+}
+
+/// The fleet `"sync"` block: round-based federated aggregation. Every
+/// `period_us` of simulated time the fleet pauses at a sync boundary,
+/// shards that can cover the radio price exchange learner snapshots under
+/// `strategy`, merge, and continue. Absent (`None` on [`FleetSpec`]):
+/// shards learn in total isolation — the pre-sync behavior bit for bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SyncSpec {
+    /// Sync boundary period, µs (> 0).
+    pub period_us: u64,
+    /// `gossip` (1 rotating partner/round) or `all_reduce` (everyone).
+    pub strategy: SyncStrategy,
+    /// Optional radio cost overrides (default: the cost table's entries).
+    pub radio: Option<RadioSpec>,
+}
+
+impl SyncSpec {
+    fn validate(&self, what: &str) -> Result<()> {
+        if self.period_us == 0 {
+            return Err(Error::Config(format!(
+                "{what}: sync period_us must be > 0"
+            )));
+        }
+        if let Some(r) = &self.radio {
+            r.validate(what)?;
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        let mut kvs = vec![
+            ("period_us", Json::Num(self.period_us as f64)),
+            ("strategy", Json::Str(self.strategy.name().into())),
+        ];
+        if let Some(r) = self.radio {
+            kvs.push(("radio", r.to_json()));
+        }
+        Json::obj(kvs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<SyncSpec> {
+        let what = "fleet sync";
+        let strategy = match j.get("strategy") {
+            None => SyncStrategy::Gossip,
+            Some(v) if v.is_null() => SyncStrategy::Gossip,
+            Some(v) => {
+                let name = v.as_str().ok_or_else(|| {
+                    Error::Config(format!("{what}: `strategy` must be a string"))
+                })?;
+                SyncStrategy::parse(name).ok_or_else(|| {
+                    Error::Config(format!(
+                        "unknown sync strategy `{name}` (gossip|all_reduce)"
+                    ))
+                })?
+            }
+        };
+        Ok(SyncSpec {
+            period_us: req_u64(j, "period_us", what)?,
+            strategy,
+            radio: match j.get("radio") {
+                None => None,
+                Some(v) if v.is_null() => None,
+                Some(v) => Some(RadioSpec::from_json(v)?),
+            },
+        })
+    }
+}
+
 // ------------------------------------------------------------- fleet spec
 
 /// A fleet block: one scenario deployed across `shards` devices. Shard
@@ -953,6 +1066,9 @@ pub struct FleetSpec {
     pub seed_stride: u64,
     /// (shard index, harvester) overrides, sorted by shard index.
     pub overrides: Vec<(u32, HarvesterSpec)>,
+    /// Round-based federated sync (`None`: isolated shards, the pre-sync
+    /// fleet behavior bit for bit).
+    pub sync: Option<SyncSpec>,
 }
 
 impl Default for FleetSpec {
@@ -962,6 +1078,7 @@ impl Default for FleetSpec {
             phase_jitter_us: 0,
             seed_stride: 1,
             overrides: Vec::new(),
+            sync: None,
         }
     }
 }
@@ -995,11 +1112,14 @@ impl FleetSpec {
             }
             h.validate(&format!("{what} (shard {i} override)"))?;
         }
+        if let Some(sync) = &self.sync {
+            sync.validate(what)?;
+        }
         Ok(())
     }
 
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut kvs = vec![
             ("shards", Json::Num(self.shards as f64)),
             ("phase_jitter_us", Json::Num(self.phase_jitter_us as f64)),
             ("seed_stride", Json::Num(self.seed_stride as f64)),
@@ -1017,7 +1137,13 @@ impl FleetSpec {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        // emitted only when present: sync-less fleet documents keep the
+        // pre-sync JSON shape byte for byte
+        if let Some(sync) = &self.sync {
+            kvs.push(("sync", sync.to_json()));
+        }
+        Json::obj(kvs)
     }
 
     pub fn from_json(j: &Json) -> Result<FleetSpec> {
@@ -1039,6 +1165,11 @@ impl FleetSpec {
             phase_jitter_us: opt_u64(j, "phase_jitter_us", what)?.unwrap_or(0),
             seed_stride: opt_u64(j, "seed_stride", what)?.unwrap_or(1),
             overrides,
+            sync: match j.get("sync") {
+                None => None,
+                Some(v) if v.is_null() => None,
+                Some(v) => Some(SyncSpec::from_json(v)?),
+            },
         })
     }
 }
@@ -1206,6 +1337,15 @@ impl ScenarioSpec {
                     fleet.phase_jitter_us
                 )));
             }
+            if let Some(sync) = &fleet.sync {
+                if sync.period_us > Self::MAX_SEED {
+                    return Err(Error::Config(format!(
+                        "{what}: sync period_us {} exceeds 2^53 and would not survive the \
+                         JSON round trip",
+                        sync.period_us
+                    )));
+                }
+            }
         }
         // A motion profile shorter than the horizon means zero gestures and
         // (for piezo) zero harvest past its last episode — a mostly-dead
@@ -1263,6 +1403,33 @@ impl ScenarioSpec {
     /// Number of fleet shards (1 for a fleet-less scenario).
     pub fn shard_count(&self) -> u32 {
         self.fleet.as_ref().map(|f| f.shards).unwrap_or(1)
+    }
+
+    /// The fleet's runtime sync plan (`None` when the fleet block has no
+    /// `"sync"` — isolated shards).
+    pub fn sync_plan(&self) -> Option<SyncPlan> {
+        let sync = self.fleet.as_ref()?.sync.as_ref()?;
+        Some(SyncPlan {
+            period_us: sync.period_us,
+            strategy: sync.strategy,
+            horizon_us: self.horizon_us,
+        })
+    }
+
+    /// The per-action cost model this scenario pays, with the sync
+    /// block's radio overrides (if any) applied to the `tx`/`rx` entries.
+    pub fn build_costs(&self) -> CostModel {
+        let mut costs = self.cost.build();
+        if let Some(r) = self
+            .fleet
+            .as_ref()
+            .and_then(|f| f.sync.as_ref())
+            .and_then(|s| s.radio)
+        {
+            costs.set_cost(Action::Tx, ActionCost::new(r.tx_uj, r.tx_us, 1));
+            costs.set_cost(Action::Rx, ActionCost::new(r.rx_uj, r.rx_us, 1));
+        }
+        costs
     }
 
     /// Shard `index`'s identity under the seed/offset derivation rule.
@@ -1341,7 +1508,7 @@ impl ScenarioSpec {
             .selector(self.heuristic.build(sh.seed ^ 0x5E1))
             .scheduler(self.scheduler.build(self.goal))
             .backend(self.backend.build()?)
-            .costs(self.cost.build())
+            .costs(self.build_costs())
             .build()
     }
 
@@ -1483,6 +1650,10 @@ impl ShardFactory for ScenarioSpec {
 
     fn build_shard_engine(&self, index: u32) -> Result<Engine> {
         ScenarioSpec::build_shard_engine(self, index)
+    }
+
+    fn sync_plan(&self) -> Option<SyncPlan> {
+        ScenarioSpec::sync_plan(self)
     }
 }
 
@@ -1668,6 +1839,7 @@ mod tests {
             phase_jitter_us: 250_000,
             seed_stride: 7,
             overrides: vec![(2, HarvesterSpec::Constant { power_w: 0.02 })],
+            sync: None,
         });
         s.validate().unwrap();
         let back = ScenarioSpec::parse(&s.to_json().to_string()).unwrap();
@@ -1703,6 +1875,78 @@ mod tests {
     }
 
     #[test]
+    fn sync_block_round_trips_validates_and_overrides_radio_costs() {
+        let mut s = preset("air_quality", 1, 2 * H).unwrap();
+        s.fleet = Some(FleetSpec {
+            shards: 4,
+            sync: Some(SyncSpec {
+                period_us: 1_800_000_000,
+                strategy: SyncStrategy::AllReduce,
+                radio: Some(RadioSpec {
+                    tx_uj: 500.0,
+                    tx_us: 20_000,
+                    rx_uj: 300.0,
+                    rx_us: 20_000,
+                }),
+            }),
+            ..FleetSpec::default()
+        });
+        s.validate().unwrap();
+        let back = ScenarioSpec::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(back, s, "sync block changed across JSON round trip");
+        // the runtime plan derives from the block + horizon
+        let plan = back.sync_plan().unwrap();
+        assert_eq!(plan.period_us, 1_800_000_000);
+        assert_eq!(plan.strategy, SyncStrategy::AllReduce);
+        assert_eq!(plan.horizon_us, 2 * H);
+        assert_eq!(plan.boundaries(), vec![1_800_000_000, 3_600_000_000, 5_400_000_000]);
+        // radio overrides reach the cost model
+        let costs = back.build_costs();
+        assert_eq!(costs.cost(Action::Tx).energy_uj, 500.0);
+        assert_eq!(costs.cost(Action::Rx).energy_uj, 300.0);
+        assert_eq!(costs.sync_price(3), (500.0 + 3.0 * 300.0, 80_000));
+        // a sync-less spec keeps the calibrated table
+        let plain = preset("air_quality", 1, 2 * H).unwrap();
+        assert!(plain.sync_plan().is_none());
+        assert_eq!(plain.build_costs().cost(Action::Tx).energy_uj, 2_200.0);
+        // strategy defaults to gossip; bad blocks rejected
+        let j = Json::parse(r#"{"period_us": 1000}"#).unwrap();
+        assert_eq!(SyncSpec::from_json(&j).unwrap().strategy, SyncStrategy::Gossip);
+        let mut bad = s.clone();
+        bad.fleet.as_mut().unwrap().sync.as_mut().unwrap().period_us = 0;
+        assert!(bad.validate().is_err());
+        let mut bad = s.clone();
+        bad.fleet.as_mut().unwrap().sync.as_mut().unwrap().radio.as_mut().unwrap().tx_uj =
+            -1.0;
+        assert!(bad.validate().is_err());
+        let mut bad = s;
+        bad.fleet.as_mut().unwrap().sync.as_mut().unwrap().period_us =
+            ScenarioSpec::MAX_SEED + 1;
+        assert!(bad.validate().is_err());
+        assert!(SyncSpec::from_json(
+            &Json::parse(r#"{"period_us": 1, "strategy": "warp"}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn sync_less_fleet_json_keeps_the_pre_sync_shape() {
+        // back-compat: a fleet block without sync must serialize without
+        // any `"sync"` key at all (golden documents from PR 4 still match)
+        let mut s = preset("vibration", 1, 2 * H).unwrap();
+        s.fleet = Some(FleetSpec {
+            shards: 3,
+            ..FleetSpec::default()
+        });
+        let text = s.to_json().to_string();
+        assert!(!text.contains("\"sync\""), "{text}");
+        assert_eq!(
+            ScenarioSpec::parse(&text).unwrap().fleet.unwrap().sync,
+            None
+        );
+    }
+
+    #[test]
     fn shard_zero_is_the_plain_engine_construction() {
         // fleet-less build_engine == build_shard_engine(0), and adding a
         // fleet block does not perturb shard 0 (base seed, zero phase)
@@ -1713,6 +1957,7 @@ mod tests {
             phase_jitter_us: 1_000_000,
             seed_stride: 11,
             overrides: vec![],
+            sync: None,
         });
         let b = s.build_shard_engine(0).unwrap().run().unwrap();
         assert_eq!(a.to_json().to_string(), b.to_json().to_string());
@@ -1726,6 +1971,7 @@ mod tests {
             phase_jitter_us: 0,
             seed_stride: 0, // identical seeds: only the override differs
             overrides: vec![(1, HarvesterSpec::Constant { power_w: 0.0 })],
+            sync: None,
         });
         let base = s.build_shard_engine(0).unwrap().run().unwrap();
         let dark = s.build_shard_engine(1).unwrap().run().unwrap();

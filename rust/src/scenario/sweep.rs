@@ -339,45 +339,71 @@ impl SweepRunner {
         Ok(self.run_cells(sweep.expand()?))
     }
 
-    /// Run pre-expanded cells, scheduling **shard-level** work items: a
-    /// single grid cell parallelizes across its fleet shards on the same
-    /// claim-counter pool the cells share, so one 16-shard cell saturates
-    /// 16 workers instead of one. Shard results fan back into per-cell
-    /// [`FleetResult`]s in cell order (deterministic for any thread
-    /// count); a cell fails with its first failing shard's error.
+    /// Run pre-expanded cells. Isolated (sync-less) cells expand into
+    /// **shard-level** work items on the shared claim-counter pool, so
+    /// one 16-shard cell saturates 16 workers instead of one. A cell
+    /// with a fleet `"sync"` block is **round-segmented**: its shards
+    /// rendezvous at every sync boundary, so they cannot be split into
+    /// independent claim-pool jobs (queued siblings would deadlock the
+    /// barrier) — and nesting its round scheduler inside a pool worker
+    /// would *multiply* the thread budget, so synced cells run one at a
+    /// time on the calling thread after the pooled jobs, each getting the
+    /// runner's full budget for its internal shard workers. Results fan
+    /// back into per-cell [`FleetResult`]s in cell order (deterministic
+    /// for any thread count); a cell fails with its first failing shard's
+    /// error.
     pub fn run_cells(&self, cells: Vec<SweepCell>) -> Vec<SweepOutcome> {
+        let synced =
+            |c: &SweepCell| c.spec.sync_plan().is_some() && c.spec.shard_count() > 1;
+        // shard-level jobs for the isolated cells, cell-major
         let jobs: Vec<(usize, u32)> = cells
             .iter()
             .enumerate()
+            .filter(|(_, c)| !synced(c))
             .flat_map(|(ci, c)| (0..c.spec.shard_count()).map(move |s| (ci, s)))
             .collect();
-        let mut results = pool::run_indexed(jobs.len(), self.threads, |k| {
+        let mut shard_results = pool::run_indexed(jobs.len(), self.threads, |k| {
             let (ci, shard) = jobs[k];
             cells[ci].spec.run_shard(shard)
         })
         .into_iter();
-        // jobs were emitted cell-major, so each cell's shard results are
-        // a contiguous run of the result stream
+        // synced cells: sequential at this level, parallel inside
+        let mut fleet_results = cells
+            .iter()
+            .filter(|c| synced(c))
+            .map(|c| c.spec.run_fleet(self.threads))
+            .collect::<Vec<_>>()
+            .into_iter();
+        // both streams are in cell order, so each cell consumes the next
+        // contiguous run of its own stream
         cells
             .into_iter()
             .map(|cell| {
-                let n = cell.spec.shard_count();
-                let mut shards = Vec::with_capacity(n as usize);
-                let mut err = None;
-                for s in 0..n {
-                    match results.next().expect("one result per shard job") {
-                        Ok(r) => shards.push(r),
-                        Err(e) if err.is_none() => err = Some(format!("shard {s}: {e}")),
-                        Err(_) => {}
+                let result = if synced(&cell) {
+                    fleet_results
+                        .next()
+                        .expect("one result per synced cell")
+                        .map_err(|e| e.to_string())
+                } else {
+                    let n = cell.spec.shard_count();
+                    let mut shards = Vec::with_capacity(n as usize);
+                    let mut err = None;
+                    for s in 0..n {
+                        match shard_results.next().expect("one result per shard job") {
+                            Ok(r) => shards.push(r),
+                            Err(e) if err.is_none() => err = Some(format!("shard {s}: {e}")),
+                            Err(_) => {}
+                        }
                     }
-                }
+                    match err {
+                        None => Ok(FleetResult::aggregate(shards)),
+                        Some(e) => Err(e),
+                    }
+                };
                 SweepOutcome {
                     id: cell.id,
                     spec: cell.spec,
-                    result: match err {
-                        None => Ok(FleetResult::aggregate(shards)),
-                        Some(e) => Err(e),
-                    },
+                    result,
                 }
             })
             .collect()

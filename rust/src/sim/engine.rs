@@ -238,16 +238,38 @@ impl Engine {
     /// Single-shot: the result is moved out, so a second call would start
     /// from empty aggregates.
     pub fn run_to_end(&mut self) -> Result<RunResult> {
+        self.run_until(self.cfg.horizon_us)?;
+        self.finish()
+    }
+
+    /// Segmented execution: advance the simulation until the clock reaches
+    /// `t_us` (clamped to the horizon), then pause. Pausing happens only
+    /// *between* the same charge-chunk and wake-burst steps an
+    /// unsegmented run performs — the charge targets and burst logic never
+    /// read the boundary — so running to the horizon in one segment or in
+    /// many produces bit-identical results; the clock may land past the
+    /// boundary (a burst or charge chunk finishes first), never short of
+    /// it unless the horizon intervenes. This is the seam the fleet's
+    /// round scheduler drives: run every shard to the sync boundary,
+    /// exchange models, continue.
+    pub fn run_until(&mut self, t_us: u64) -> Result<()> {
         self.result.scheduler = self.policy.scheduler.name().to_string();
-        while self.world.now_us() < self.cfg.horizon_us {
-            if !self.charge_phase() {
-                break; // horizon reached while asleep
+        let bound = t_us.min(self.cfg.horizon_us);
+        while self.world.now_us() < bound {
+            if !self.charge_phase(bound) {
+                break; // boundary (or horizon) reached while asleep
             }
             self.result.cycles += 1;
             self.policy.on_cycle();
             self.awake_burst()?;
             self.maybe_checkpoint()?;
         }
+        Ok(())
+    }
+
+    /// Final checkpoint + aggregate finalization after the last segment.
+    /// Call once, after [`Engine::run_until`] reached the horizon.
+    pub fn finish(&mut self) -> Result<RunResult> {
         // final checkpoint at the horizon
         self.checkpoint()?;
         self.result.energy_uj = self.meter.total_uj();
@@ -258,6 +280,109 @@ impl Engine {
             .map(|(k, t)| (k.to_string(), t.count, t.energy_uj, t.time_us))
             .collect();
         Ok(std::mem::take(&mut self.result))
+    }
+
+    /// Attempt the radio exchange of one fleet sync round: charge the
+    /// `tx` + `rx_peers`·`rx` price against the capacitor and, if the
+    /// shard can afford it, advance the clock by the airtime and return
+    /// the learner's model snapshot. Wake bursts routinely end at
+    /// brown-out, so the shard first *charges toward the price* (the
+    /// rendezvous window runs to `deadline_us`, normally the next sync
+    /// boundary); a shard whose harvester cannot get it there in a whole
+    /// round skips (`syncs_skipped`) — sync is an energy-gated action,
+    /// not a free barrier. Learners that do not support snapshots opt the
+    /// shard out silently (no charge, no counters).
+    pub fn prepare_sync(
+        &mut self,
+        rx_peers: u32,
+        deadline_us: u64,
+    ) -> Option<crate::learning::ModelSnapshot> {
+        // the snapshot is taken before the energy gate on purpose: it is
+        // also the participation probe, and a non-snapshotting learner
+        // must opt out without the gate moving the clock. The copy a
+        // skipped round wastes (one ring, ~9 KB) is noise next to the
+        // round of simulation around it.
+        let snap = self.learner.snapshot()?;
+        let (price_uj, price_us) = self.costs.sync_price(rx_peers);
+        // wake for the exchange: charge (inside the rendezvous window)
+        // until the radio price fits — keeping the eval-cadence
+        // checkpoints alive exactly like charge_phase does during
+        // darkness, so a synced shard's probe series stays comparable to
+        // its isolated twin's
+        while self.world.cap.usable_uj() < price_uj {
+            let now = self.world.now_us();
+            if now >= deadline_us {
+                break;
+            }
+            if now >= self.next_eval_us {
+                let _ = self.checkpoint();
+            }
+            let target = deadline_us
+                .min(self.next_eval_us.max(now + 1_000))
+                .min(now + self.cfg.charge_step_us.max(1_000));
+            if self
+                .world
+                .charge_until(target, self.cfg.charge_kernel, self.cfg.charge_step_us)
+            {
+                // awake (V >= v_on) but the price still does not fit: the
+                // kernels stop at the wake threshold, so top up directly
+                if self.world.cap.usable_uj() >= price_uj {
+                    break;
+                }
+                let p = self.world.harvester.power_w(self.world.now_us());
+                let dt = target
+                    .saturating_sub(self.world.now_us())
+                    .clamp(1_000, self.cfg.charge_step_us.max(1_000));
+                self.world.cap.charge(p, dt);
+                self.world.advance_us(dt);
+            }
+        }
+        if self.world.cap.usable_uj() < price_uj {
+            self.result.syncs_skipped += 1;
+            return None;
+        }
+        let ok = self.world.cap.deduct_uj(price_uj);
+        debug_assert!(ok, "usable_uj covered the sync price");
+        self.world.advance_us(price_us);
+        let tx = self.costs.cost(Action::Tx);
+        let rx = self.costs.cost(Action::Rx);
+        self.meter.record_action(Action::Tx, tx.energy_uj, tx.time_us);
+        for _ in 0..rx_peers {
+            self.meter.record_action(Action::Rx, rx.energy_uj, rx.time_us);
+        }
+        self.result.syncs_done += 1;
+        Some(snap)
+    }
+
+    /// Fold the peer snapshots of one sync round into the local learner
+    /// and persist the merged model (the delta path degrades to a full
+    /// save after a merge), charging the checkpoint traffic at the
+    /// model's NVM byte rate exactly like the learn path does.
+    pub fn apply_sync(&mut self, peers: &[crate::learning::ModelSnapshot]) -> Result<()> {
+        if peers.is_empty() {
+            return Ok(());
+        }
+        let expiry = self.policy.expiry_us();
+        let now = self.world.now_us();
+        let merged = self
+            .learner
+            .merge(peers, self.backend.as_mut(), now, expiry)?;
+        if !merged {
+            return Ok(());
+        }
+        let w0 = self.exec.nvm.bytes_written;
+        self.learner.save_delta(&mut self.exec.nvm)?;
+        let ckpt_uj = self.costs.nvm_uj_per_byte * (self.exec.nvm.bytes_written - w0) as f64;
+        if ckpt_uj > 0.0 {
+            let avail = self.world.cap.usable_uj().max(0.0);
+            if self.world.cap.deduct_uj(ckpt_uj) {
+                self.meter.record("nvm_ckpt", ckpt_uj, 0);
+            } else {
+                self.result.power_failures += 1;
+                self.meter.record("nvm_ckpt", avail.min(ckpt_uj), 0);
+            }
+        }
+        Ok(())
     }
 
     /// Restore persisted run aggregates (counters, checkpoints, meter)
@@ -276,16 +401,19 @@ impl Engine {
         }
     }
 
-    /// Sleep/charge until the wake threshold; false if the horizon passed.
-    /// Checkpoints continue on cadence during darkness (the charge target
-    /// is clipped at the next eval instant, so the kernel can jump freely
-    /// in between).
-    fn charge_phase(&mut self) -> bool {
+    /// Sleep/charge until the wake threshold; false if `bound` (the
+    /// current segment boundary — the horizon for unsegmented runs)
+    /// passed. Checkpoints continue on cadence during darkness (the
+    /// charge target is clipped at the next eval instant, so the kernel
+    /// can jump freely in between). The charge targets derive from the
+    /// horizon and eval cadence only — never from `bound` — which is what
+    /// keeps segmented runs bit-identical to unsegmented ones.
+    fn charge_phase(&mut self, bound: u64) -> bool {
         loop {
             if self.world.cap.awake_ready() {
-                return self.world.now_us() < self.cfg.horizon_us;
+                return self.world.now_us() < bound;
             }
-            if self.world.now_us() >= self.cfg.horizon_us {
+            if self.world.now_us() >= bound {
                 return false;
             }
             if self.world.now_us() >= self.next_eval_us {
@@ -304,8 +432,8 @@ impl Engine {
                 .world
                 .charge_until(until, self.cfg.charge_kernel, self.cfg.charge_step_us)
             {
-                // awake — unless the clock landed on the horizon doing it
-                return self.world.now_us() < self.cfg.horizon_us;
+                // awake — unless the clock landed on the boundary doing it
+                return self.world.now_us() < bound;
             }
         }
     }
@@ -514,6 +642,13 @@ impl Engine {
                 self.policy.observe_completion(Action::Infer);
                 Ok(true) // terminal
             }
+            // fleet-tier radio actions never enter the per-example
+            // pipeline (they have no inbound edges in the state diagram);
+            // reaching here means a scheduler invented an illegal plan
+            Action::Tx | Action::Rx => Err(Error::Config(format!(
+                "radio action `{action}` scheduled on an example (fleet sync \
+                 runs at round boundaries, not in the action pipeline)"
+            ))),
         }
     }
 
@@ -691,6 +826,109 @@ mod tests {
         // planner decision's worth of energy per learn on average
         let per_learn = tally.2 / tally.1 as f64;
         assert!(per_learn < 57.0, "{per_learn} uJ/learn");
+    }
+
+    #[test]
+    fn segmented_run_is_bit_identical_to_single_shot() {
+        // the round scheduler's seam: run_until in many unequal segments
+        // (boundaries mid-charge, mid-hour, repeated, past the horizon)
+        // must reproduce the one-shot run bit for bit
+        for power in [0.010, 0.0012] {
+            let once = small_engine(power, 1800).run().unwrap();
+            let mut e = small_engine(power, 1800);
+            for b_s in [60u64, 300, 301, 301, 900, 1333, 1800, 9999] {
+                e.run_until(b_s * 1_000_000).unwrap();
+                assert!(
+                    e.now_us() >= (b_s * 1_000_000).min(e.cfg.horizon_us),
+                    "paused short of the boundary"
+                );
+            }
+            let seg = e.finish().unwrap();
+            assert_eq!(
+                seg.to_json().to_string(),
+                once.to_json().to_string(),
+                "segmented run diverged at {power} W"
+            );
+            assert_eq!(seg.energy_series, once.energy_series);
+            assert_eq!(seg.infer_log, once.infer_log);
+        }
+    }
+
+    #[test]
+    fn sync_exchange_is_energy_gated_and_metered() {
+        let mut e = small_engine(0.010, 1800);
+        e.run_until(300_000_000).unwrap();
+        // a full capacitor affords the exchange immediately (deadline =
+        // now: no rendezvous charging allowed): tx + rx charged
+        e.world.cap.set_voltage(3.3);
+        let before = e.world.cap.usable_uj();
+        let t0 = e.now_us();
+        let snap = e.prepare_sync(1, t0);
+        assert!(snap.is_some(), "full capacitor could not afford a sync");
+        let (price_uj, price_us) = e.costs.sync_price(1);
+        assert!((before - e.world.cap.usable_uj() - price_uj).abs() < 1e-6);
+        assert_eq!(e.now_us() - t0, price_us, "airtime not charged");
+        assert_eq!(e.meter.tally("tx").count, 1);
+        assert_eq!(e.meter.tally("rx").count, 1);
+        // a drained capacitor with no rendezvous window skips: no charge,
+        // no time
+        e.world.cap.set_voltage(e.world.cap.v_off);
+        let t1 = e.now_us();
+        assert!(e.prepare_sync(1, t1).is_none());
+        assert_eq!(e.now_us(), t1);
+        assert_eq!(e.meter.tally("tx").count, 1, "skipped round paid tx");
+        // counters reach the run result
+        e.run_until(e.cfg.horizon_us).unwrap();
+        let r = e.finish().unwrap();
+        assert_eq!(r.syncs_done, 1);
+        assert_eq!(r.syncs_skipped, 1);
+        let doc = r.to_json().to_string();
+        assert!(doc.contains("\"syncs_done\":1"), "{doc}");
+        // an all-reduce exchange in a 4-fleet meters 3 rx
+        let mut e = small_engine(0.010, 600);
+        e.world.cap.set_voltage(3.3);
+        assert!(e.prepare_sync(3, 0).is_some());
+        assert_eq!(e.meter.tally("rx").count, 3);
+    }
+
+    #[test]
+    fn sync_rendezvous_charges_toward_the_price_within_the_window() {
+        // drained at the boundary, 10 mW of harvest and a whole round to
+        // find the energy: the shard charges up and pays
+        let mut e = small_engine(0.010, 1800);
+        e.world.cap.set_voltage(e.world.cap.v_off);
+        let t0 = e.now_us();
+        assert!(e.prepare_sync(1, t0 + 600_000_000).is_some());
+        assert!(e.now_us() > t0, "no charging time passed");
+        assert_eq!(e.result.syncs_done, 1);
+        // a dead harvester never gets there: the window runs out at the
+        // deadline and the round is skipped
+        let mut dark = small_engine(0.0, 1800);
+        dark.world.cap.set_voltage(dark.world.cap.v_off);
+        let t0 = dark.now_us();
+        assert!(dark.prepare_sync(1, t0 + 600_000_000).is_none());
+        assert!(dark.now_us() >= t0 + 600_000_000, "skip before the deadline");
+        assert_eq!(dark.result.syncs_skipped, 1);
+    }
+
+    #[test]
+    fn apply_sync_persists_the_merged_model() {
+        let mut donor = small_engine(0.010, 1800);
+        donor.run_until(900_000_000).unwrap();
+        let donor_learned = donor.learner.learned_count();
+        assert!(donor_learned > 0, "donor learned nothing");
+        let snap = donor.learner.snapshot().unwrap();
+        let mut e = small_engine(0.010, 600);
+        e.apply_sync(&[snap]).unwrap();
+        assert_eq!(e.learner.learned_count(), donor_learned);
+        // the merged model hit NVM: a cold learner restores it
+        let mut back = KnnAnomalyLearner::new();
+        back.restore(&mut e.exec.nvm).unwrap();
+        assert_eq!(back.learned_count(), donor_learned);
+        // empty peer set is a no-op
+        let w = e.exec.nvm.bytes_written;
+        e.apply_sync(&[]).unwrap();
+        assert_eq!(e.exec.nvm.bytes_written, w);
     }
 
     #[test]

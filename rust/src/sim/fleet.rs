@@ -20,10 +20,13 @@
 //! [`FleetResult`] is deterministic for any thread count.
 
 use crate::error::{Error, Result};
+use crate::learning::ModelSnapshot;
 use crate::sim::engine::Engine;
 use crate::sim::RunResult;
 use crate::util::json::Json;
 use crate::util::pool;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
 
 /// One shard's identity: its index plus the derived world parameters.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -33,6 +36,74 @@ pub struct Shard {
     pub seed: u64,
     /// Harvester phase offset (index × phase jitter).
     pub phase_us: u64,
+}
+
+/// How merged learner state moves across the fleet at a sync boundary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncStrategy {
+    /// Pairwise exchange: each participant merges one rotating ring
+    /// partner's snapshot per round (1 Tx + 1 Rx — the radio-cheap
+    /// option; state diffuses over rounds).
+    Gossip,
+    /// Full exchange: each participant merges every other participant's
+    /// snapshot (1 Tx + (fleet−1) Rx — converges in one round, priced
+    /// accordingly).
+    AllReduce,
+}
+
+impl SyncStrategy {
+    pub fn name(self) -> &'static str {
+        match self {
+            SyncStrategy::Gossip => "gossip",
+            SyncStrategy::AllReduce => "all_reduce",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SyncStrategy> {
+        match s {
+            "gossip" => Some(SyncStrategy::Gossip),
+            "all_reduce" => Some(SyncStrategy::AllReduce),
+            _ => None,
+        }
+    }
+}
+
+/// Runtime form of the spec's `"sync"` block: when to pause the shards
+/// and how to exchange state. Radio prices live in the shards' own
+/// [`crate::energy::cost::CostModel`]s (spec-level overrides are applied
+/// at engine build time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SyncPlan {
+    /// Sync boundary period, µs (> 0).
+    pub period_us: u64,
+    pub strategy: SyncStrategy,
+    /// The scenario horizon — boundaries lie strictly inside
+    /// `(0, horizon)`; the final segment runs boundary → horizon.
+    pub horizon_us: u64,
+}
+
+impl SyncPlan {
+    /// The sync boundaries, in order: `period, 2·period, … < horizon`.
+    pub fn boundaries(&self) -> Vec<u64> {
+        if self.period_us == 0 {
+            return Vec::new();
+        }
+        (1..)
+            .map(|k| k * self.period_us)
+            .take_while(|&b| b < self.horizon_us)
+            .collect()
+    }
+
+    /// Snapshots a participant receives per round under `strategy` in a
+    /// fleet of `shards` devices. The price is quoted against the fleet
+    /// size, not the (unknowable in advance) participant count: the radio
+    /// budgets a full listen window regardless of who transmits.
+    pub fn rx_peers(&self, shards: u32) -> u32 {
+        match self.strategy {
+            SyncStrategy::Gossip => 1,
+            SyncStrategy::AllReduce => shards.saturating_sub(1),
+        }
+    }
 }
 
 /// A recipe for building the shards of one fleet. The factory owns the
@@ -52,6 +123,13 @@ pub trait ShardFactory: Sync {
     /// Run shard `index` to its horizon.
     fn run_shard(&self, index: u32) -> Result<RunResult> {
         self.build_shard_engine(index)?.run()
+    }
+
+    /// The fleet's sync plan, if cross-device aggregation is enabled.
+    /// `None` (the default) runs every shard in isolation — the PR-4
+    /// behavior, bit for bit.
+    fn sync_plan(&self) -> Option<SyncPlan> {
+        None
     }
 }
 
@@ -115,6 +193,11 @@ pub struct FleetRollup {
     pub inferred: Rollup,
     pub power_failures: Rollup,
     pub stale_plans: Rollup,
+    /// Completed / energy-skipped sync exchanges per shard (all zero for
+    /// an isolated fleet; omitted from the JSON then, so sync-less
+    /// documents keep the PR-4 shape byte for byte).
+    pub syncs_done: Rollup,
+    pub syncs_skipped: Rollup,
 }
 
 impl FleetRollup {
@@ -129,11 +212,13 @@ impl FleetRollup {
             inferred: roll(&|r| r.inferred as f64),
             power_failures: roll(&|r| r.power_failures as f64),
             stale_plans: roll(&|r| r.stale_plans as f64),
+            syncs_done: roll(&|r| r.syncs_done as f64),
+            syncs_skipped: roll(&|r| r.syncs_skipped as f64),
         }
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut kvs = vec![
             ("shards", Json::Num(self.shards as f64)),
             ("final_accuracy", self.final_accuracy.to_json()),
             ("mean_accuracy", self.mean_accuracy.to_json()),
@@ -142,7 +227,12 @@ impl FleetRollup {
             ("inferred", self.inferred.to_json()),
             ("power_failures", self.power_failures.to_json()),
             ("stale_plans", self.stale_plans.to_json()),
-        ])
+        ];
+        if self.syncs_done.total + self.syncs_skipped.total > 0.0 {
+            kvs.push(("syncs_done", self.syncs_done.to_json()));
+            kvs.push(("syncs_skipped", self.syncs_skipped.to_json()));
+        }
+        Json::obj(kvs)
     }
 }
 
@@ -206,11 +296,227 @@ impl<'a, F: ShardFactory + ?Sized> Fleet<'a, F> {
     /// Run every shard (`threads` = 0 uses the available parallelism) and
     /// fan the results in. Deterministic in shard order for any thread
     /// count; the first failing shard fails the fleet.
+    ///
+    /// Without a sync plan (or with a degenerate one — a single shard, or
+    /// no boundary inside the horizon) every shard runs in isolation on
+    /// the claim-counter pool, exactly the PR-4 path. With one, the fleet
+    /// becomes a round scheduler: all shards run to each sync boundary,
+    /// exchange learner snapshots under the radio energy gate, merge, and
+    /// continue ([`Fleet::run_rounds`]).
     pub fn run(&self, threads: usize) -> Result<FleetResult> {
-        let results = pool::run_indexed(self.shards.len(), threads, |i| {
-            self.factory.run_shard(self.shards[i].index)
+        let plan = self
+            .factory
+            .sync_plan()
+            .filter(|p| self.shards.len() > 1 && !p.boundaries().is_empty());
+        match plan {
+            Some(plan) => self.run_rounds(threads, plan),
+            None => {
+                let results = pool::run_indexed(self.shards.len(), threads, |i| {
+                    self.factory.run_shard(self.shards[i].index)
+                });
+                let shards: Result<Vec<RunResult>> = results.into_iter().collect();
+                Ok(FleetResult::aggregate(shards?))
+            }
+        }
+    }
+
+    /// The round scheduler. Engines are not `Send` (their compute
+    /// backends are thread-pinned), so shards are claimed once through an
+    /// atomic counter and stay pinned to the worker that built them; the
+    /// claim order cannot affect results because every shard's execution
+    /// and every round's merge set are deterministic functions of shard
+    /// state and shard index alone — which is what makes the
+    /// [`FleetResult`] bit-identical for any thread count.
+    ///
+    /// Per round: every worker runs its shards to the boundary
+    /// ([`Engine::run_until`]) and reports one of {snapshot, out} per
+    /// shard — out covering energy-skipped exchanges, shards past the
+    /// horizon, failed shards and non-snapshotting learners. The
+    /// coordinator (the calling thread) sorts the participants by shard
+    /// index, broadcasts the round plan, and each worker merges its
+    /// participating shards' peer sets ([`Engine::apply_sync`]).
+    fn run_rounds(&self, threads: usize, plan: SyncPlan) -> Result<FleetResult> {
+        enum Report {
+            Snapshot(ModelSnapshot),
+            Out,
+            /// A worker panicked: the coordinator must stop waiting on the
+            /// round barrier (sent outside the panic path, so the hang a
+            /// lost worker would otherwise cause becomes a clean error).
+            Poison,
+        }
+        /// One round's participants, sorted by shard index.
+        struct RoundPlan {
+            round: usize,
+            participants: Vec<(usize, ModelSnapshot)>,
+        }
+        impl RoundPlan {
+            /// The snapshots shard `i` merges this round (empty if it sat
+            /// the round out or is the only participant).
+            fn peers_for(&self, shard: usize, strategy: SyncStrategy) -> Vec<ModelSnapshot> {
+                let m = self.participants.len();
+                let Some(pos) = self.participants.iter().position(|&(i, _)| i == shard) else {
+                    return Vec::new();
+                };
+                if m < 2 {
+                    return Vec::new();
+                }
+                match strategy {
+                    SyncStrategy::AllReduce => self
+                        .participants
+                        .iter()
+                        .filter(|&&(i, _)| i != shard)
+                        .map(|(_, s)| s.clone())
+                        .collect(),
+                    SyncStrategy::Gossip => {
+                        // rotating ring partner: the offset walks 1..m-1
+                        // across rounds, so the gossip graph reaches every
+                        // pair without ever pairing a shard with itself
+                        let offset = 1 + self.round % (m - 1);
+                        vec![self.participants[(pos + offset) % m].1.clone()]
+                    }
+                }
+            }
+        }
+
+        let n = self.shards.len();
+        let workers = pool::resolve_workers(threads, n);
+        let rx_peers = plan.rx_peers(n as u32);
+        let boundaries = plan.boundaries();
+        let claim = AtomicUsize::new(0);
+        let (rep_tx, rep_rx) = mpsc::channel::<(usize, Report)>();
+        let (res_tx, res_rx) = mpsc::channel::<(usize, Result<RunResult>)>();
+        let mut results: Vec<Option<Result<RunResult>>> = (0..n).map(|_| None).collect();
+        std::thread::scope(|scope| {
+            let mut plan_txs = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                let (plan_tx, plan_rx) = mpsc::channel::<Arc<RoundPlan>>();
+                plan_txs.push(plan_tx);
+                let rep_tx = rep_tx.clone();
+                let poison_tx = rep_tx.clone();
+                let res_tx = res_tx.clone();
+                let (claim, boundaries, factory, shards) =
+                    (&claim, &boundaries, self.factory, &self.shards);
+                scope.spawn(move || {
+                    let body = std::panic::AssertUnwindSafe(|| {
+                    // claim shards and build their engines on this thread
+                    let mut mine: Vec<(usize, Result<Engine>)> = Vec::new();
+                    loop {
+                        let i = claim.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        mine.push((i, factory.build_shard_engine(shards[i].index)));
+                    }
+                    if mine.is_empty() {
+                        return;
+                    }
+                    'rounds: for (round, &boundary) in boundaries.iter().enumerate() {
+                        // the rendezvous window for charging toward the
+                        // radio price runs to the next boundary
+                        let deadline = boundaries
+                            .get(round + 1)
+                            .copied()
+                            .unwrap_or(plan.horizon_us);
+                        for (i, eng) in &mut mine {
+                            let report = match eng {
+                                Ok(e) => match e.run_until(boundary) {
+                                    // the horizon ends a shard's rounds
+                                    Ok(()) if e.now_us() < e.cfg.horizon_us => {
+                                        match e.prepare_sync(rx_peers, deadline) {
+                                            Some(s) => Report::Snapshot(s),
+                                            None => Report::Out,
+                                        }
+                                    }
+                                    Ok(()) => Report::Out,
+                                    Err(err) => {
+                                        *eng = Err(err);
+                                        Report::Out
+                                    }
+                                },
+                                Err(_) => Report::Out,
+                            };
+                            if rep_tx.send((*i, report)).is_err() {
+                                return;
+                            }
+                        }
+                        let Ok(round_plan) = plan_rx.recv() else {
+                            // coordination collapsed (a sibling worker
+                            // panicked and the coordinator poisoned the
+                            // rounds): stop syncing and run this worker's
+                            // shards out, so healthy results still report
+                            break 'rounds;
+                        };
+                        for (i, eng) in &mut mine {
+                            if let Ok(e) = eng {
+                                let peers = round_plan.peers_for(*i, plan.strategy);
+                                if let Err(err) = e.apply_sync(&peers) {
+                                    *eng = Err(err);
+                                }
+                            }
+                        }
+                    }
+                    for (i, eng) in mine {
+                        let out = eng.and_then(|mut e| {
+                            let horizon = e.cfg.horizon_us;
+                            e.run_until(horizon)?;
+                            e.finish()
+                        });
+                        if res_tx.send((i, out)).is_err() {
+                            return;
+                        }
+                    }
+                    });
+                    if std::panic::catch_unwind(body).is_err() {
+                        // a worker bug must not hang the round barrier:
+                        // poison the coordinator so it stops waiting (the
+                        // panic message already went to stderr via the
+                        // default hook); the lost worker's shards surface
+                        // as worker-exited errors at collection
+                        let _ = poison_tx.send((usize::MAX, Report::Poison));
+                    }
+                });
+            }
+            drop(rep_tx);
+            drop(res_tx);
+            // coordinate the rounds: n reports in, one sorted plan out
+            'rounds: for round in 0..boundaries.len() {
+                let mut participants = Vec::new();
+                for _ in 0..n {
+                    match rep_rx.recv() {
+                        Ok((i, Report::Snapshot(s))) => participants.push((i, s)),
+                        Ok((_, Report::Out)) => {}
+                        // a worker panicked (poison) or every worker
+                        // exited: stop coordinating — dropping the plan
+                        // channels unblocks the survivors, which then
+                        // report whatever they can on the results channel
+                        Ok((_, Report::Poison)) | Err(_) => break 'rounds,
+                    }
+                }
+                participants.sort_by_key(|&(i, _)| i);
+                let round_plan = Arc::new(RoundPlan {
+                    round,
+                    participants,
+                });
+                for plan_tx in &plan_txs {
+                    let _ = plan_tx.send(round_plan.clone());
+                }
+            }
+            drop(plan_txs);
+            for (i, r) in res_rx {
+                results[i] = Some(r);
+            }
         });
-        let shards: Result<Vec<RunResult>> = results.into_iter().collect();
+        let shards: Result<Vec<RunResult>> = results
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                r.unwrap_or_else(|| {
+                    Err(Error::Config(format!(
+                        "fleet shard {i}: worker exited without reporting a result"
+                    )))
+                })
+            })
+            .collect();
         Ok(FleetResult::aggregate(shards?))
     }
 }
@@ -337,5 +643,125 @@ mod tests {
     fn zero_shards_is_a_config_error() {
         let factory = ConstFleet { n: 0 };
         assert!(Fleet::new(&factory).is_err());
+    }
+
+    /// ConstFleet plus a sync plan: the round-scheduler test rig.
+    struct SyncedFleet {
+        inner: ConstFleet,
+        plan: SyncPlan,
+    }
+
+    impl ShardFactory for SyncedFleet {
+        fn shard_count(&self) -> u32 {
+            self.inner.shard_count()
+        }
+        fn shard(&self, index: u32) -> Result<Shard> {
+            self.inner.shard(index)
+        }
+        fn build_shard_engine(&self, index: u32) -> Result<Engine> {
+            self.inner.build_shard_engine(index)
+        }
+        fn sync_plan(&self) -> Option<SyncPlan> {
+            Some(self.plan)
+        }
+    }
+
+    fn synced(n: u32, period_us: u64, strategy: SyncStrategy) -> SyncedFleet {
+        SyncedFleet {
+            inner: ConstFleet { n },
+            plan: SyncPlan {
+                period_us,
+                strategy,
+                horizon_us: 900_000_000, // ConstFleet's horizon
+            },
+        }
+    }
+
+    #[test]
+    fn sync_plan_boundaries_lie_strictly_inside_the_horizon() {
+        let p = SyncPlan {
+            period_us: 300,
+            strategy: SyncStrategy::Gossip,
+            horizon_us: 900,
+        };
+        assert_eq!(p.boundaries(), vec![300, 600]);
+        let exact = SyncPlan { period_us: 450, ..p };
+        assert_eq!(exact.boundaries(), vec![450]);
+        let none = SyncPlan { period_us: 900, ..p };
+        assert!(none.boundaries().is_empty());
+        let zero = SyncPlan { period_us: 0, ..p };
+        assert!(zero.boundaries().is_empty());
+        assert_eq!(p.rx_peers(16), 1);
+        let ar = SyncPlan {
+            strategy: SyncStrategy::AllReduce,
+            ..p
+        };
+        assert_eq!(ar.rx_peers(16), 15);
+    }
+
+    #[test]
+    fn synced_fleet_is_bit_identical_across_thread_counts() {
+        for strategy in [SyncStrategy::Gossip, SyncStrategy::AllReduce] {
+            let factory = synced(4, 300_000_000, strategy);
+            let fleet = Fleet::new(&factory).unwrap();
+            let one = fleet.run(1).unwrap();
+            let two = fleet.run(2).unwrap();
+            let all = fleet.run(0).unwrap();
+            assert_eq!(fingerprint(&one), fingerprint(&two), "{strategy:?}");
+            assert_eq!(fingerprint(&one), fingerprint(&all), "{strategy:?}");
+            // the rounds actually happened and were paid for
+            let done: u64 = one.shards.iter().map(|r| r.syncs_done).sum();
+            assert!(done > 0, "{strategy:?}: no sync exchange completed");
+            assert_eq!(one.rollup.syncs_done.total, done as f64);
+            let radio: u64 = one
+                .shards
+                .iter()
+                .flat_map(|r| &r.action_tallies)
+                .filter(|(n, ..)| n == "tx")
+                .map(|&(_, c, ..)| c)
+                .sum();
+            assert_eq!(radio, done, "one tx per completed exchange");
+            // sync counters reach the JSON document
+            assert!(fingerprint(&one).contains("\"syncs_done\""));
+        }
+    }
+
+    #[test]
+    fn degenerate_sync_plans_reproduce_the_isolated_fleet() {
+        // no boundary inside the horizon, or a single shard: the round
+        // scheduler must not engage at all (bit-identical to PR-4 runs)
+        let isolated = Fleet::new(&ConstFleet { n: 3 }).unwrap().run(0).unwrap();
+        let late = synced(3, 900_000_000, SyncStrategy::Gossip); // period == horizon
+        let fr = Fleet::new(&late).unwrap().run(0).unwrap();
+        assert_eq!(fingerprint(&fr), fingerprint(&isolated));
+        let solo_sync = synced(1, 300_000_000, SyncStrategy::AllReduce);
+        let solo = Fleet::new(&solo_sync).unwrap().run(0).unwrap();
+        let solo_plain = Fleet::new(&ConstFleet { n: 1 }).unwrap().run(0).unwrap();
+        assert_eq!(fingerprint(&solo), fingerprint(&solo_plain));
+        assert!(!fingerprint(&solo).contains("syncs_done"));
+    }
+
+    #[test]
+    fn sync_changes_the_runs_but_only_after_the_first_boundary() {
+        // a synced shard's trajectory is identical to its isolated twin
+        // up to the first sync boundary (run_until pauses, nothing else),
+        // then diverges once merged state and radio time arrive
+        let isolated = Fleet::new(&ConstFleet { n: 3 }).unwrap().run(0).unwrap();
+        let fr = Fleet::new(&synced(3, 300_000_000, SyncStrategy::AllReduce))
+            .unwrap()
+            .run(0)
+            .unwrap();
+        assert!(fr.shards.iter().any(|r| r.syncs_done > 0));
+        for (a, b) in fr.shards.iter().zip(&isolated.shards) {
+            // checkpoints strictly before the first boundary agree
+            for (ca, cb) in a.checkpoints.iter().zip(&b.checkpoints) {
+                if ca.t_us >= 300_000_000 {
+                    break;
+                }
+                assert_eq!(ca.t_us, cb.t_us);
+                assert_eq!(ca.learned, cb.learned);
+                assert_eq!(ca.energy_uj, cb.energy_uj);
+            }
+        }
     }
 }

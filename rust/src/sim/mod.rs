@@ -31,7 +31,9 @@ pub mod state;
 pub mod world;
 
 pub use executor::{Exec, Executor};
-pub use fleet::{Fleet, FleetResult, FleetRollup, Rollup, Shard, ShardFactory};
+pub use fleet::{
+    Fleet, FleetResult, FleetRollup, Rollup, Shard, ShardFactory, SyncPlan, SyncStrategy,
+};
 pub use policy::Policy;
 pub use state::RunState;
 pub use world::World;
@@ -266,6 +268,16 @@ pub struct RunResult {
     /// slot (stale plans; the engine breaks the burst after repeats so a
     /// buggy scheduler cannot spin without consuming energy or time).
     pub stale_plans: u64,
+    /// Fleet sync exchanges this shard paid for and performed: radio
+    /// Tx + listen window charged, snapshot broadcast. Counted whether or
+    /// not a peer transmitted the same round (a lone participant still
+    /// burns the airtime — radios cannot know in advance who will talk).
+    /// 0 for sync-less runs.
+    pub syncs_done: u64,
+    /// Fleet sync rounds this shard skipped because its capacitor could
+    /// not cover the radio price — the paper's learn-or-discard energy
+    /// gating lifted to the fleet tier.
+    pub syncs_skipped: u64,
     /// Total energy spent, µJ.
     pub energy_uj: f64,
     /// Energy time series (t_us, cumulative µJ).
@@ -309,9 +321,11 @@ impl RunResult {
 
     /// JSON rendering of the run (sweep-cell output format). Covers the
     /// counters, accuracy summaries, checkpoints and per-action tallies
-    /// (the per-inference log is summarized, not dumped).
+    /// (the per-inference log is summarized, not dumped). The sync
+    /// counters appear only when the run actually hit sync boundaries, so
+    /// sync-less documents keep the pre-sync (PR-4) shape byte for byte.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut kvs = vec![
             ("scheduler", Json::Str(self.scheduler.clone())),
             ("cycles", Json::Num(self.cycles as f64)),
             ("sensed", Json::Num(self.sensed as f64)),
@@ -321,6 +335,12 @@ impl RunResult {
             ("expired", Json::Num(self.expired as f64)),
             ("power_failures", Json::Num(self.power_failures as f64)),
             ("stale_plans", Json::Num(self.stale_plans as f64)),
+        ];
+        if self.syncs_done + self.syncs_skipped > 0 {
+            kvs.push(("syncs_done", Json::Num(self.syncs_done as f64)));
+            kvs.push(("syncs_skipped", Json::Num(self.syncs_skipped as f64)));
+        }
+        kvs.extend([
             ("energy_uj", Json::Num(self.energy_uj)),
             ("mean_accuracy", Json::Num(self.mean_accuracy(3))),
             ("final_accuracy", Json::Num(self.final_accuracy())),
@@ -359,7 +379,8 @@ impl RunResult {
                         .collect(),
                 ),
             ),
-        ])
+        ]);
+        Json::obj(kvs)
     }
 }
 

@@ -20,12 +20,14 @@ use crate::nvm::{KeyId, Nvm};
 use crate::sim::{Checkpoint, RunResult};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Layout version tag (first u64 of the head blob).
-const MAGIC: u64 = 0x494C_5253_5631; // "ILRSV1"
+/// Layout version tag (first u64 of the head blob). V2 added the fleet
+/// sync counters; a V1 head (pre-sync firmware) reads as "no run state",
+/// which is the correct degradation for an in-memory store.
+const MAGIC: u64 = 0x494C_5253_5632; // "ILRSV2"
 
-/// Head blob: magic + run nonce + 8 scalar counters + 3 vector lengths +
+/// Head blob: magic + run nonce + 10 scalar counters + 3 vector lengths +
 /// total µJ.
-const HEAD_LEN: usize = 14 * 8;
+const HEAD_LEN: usize = 16 * 8;
 const CKPT_LEN: usize = 6 * 8;
 const INFER_LEN: usize = 16;
 const SERIES_LEN: usize = 16;
@@ -43,7 +45,7 @@ struct StateKeys {
 /// Parsed head blob.
 struct Head {
     nonce: u64,
-    scalars: [u64; 8],
+    scalars: [u64; 10],
     ckpts: u64,
     infers: u64,
     series: u64,
@@ -113,17 +115,17 @@ impl RunState {
         if u(0) != MAGIC {
             return None;
         }
-        let mut scalars = [0u64; 8];
+        let mut scalars = [0u64; 10];
         for (j, s) in scalars.iter_mut().enumerate() {
             *s = u(2 + j);
         }
         Some(Head {
             nonce: u(1),
             scalars,
-            ckpts: u(10),
-            infers: u(11),
-            series: u(12),
-            total_uj: f64::from_bits(u(13)),
+            ckpts: u(12),
+            infers: u(13),
+            series: u(14),
+            total_uj: f64::from_bits(u(15)),
         })
     }
 
@@ -208,6 +210,8 @@ impl RunState {
             result.power_failures,
             result.stale_plans,
             result.sensed,
+            result.syncs_done,
+            result.syncs_skipped,
         ] {
             scratch.extend_from_slice(&v.to_le_bytes());
         }
@@ -307,8 +311,18 @@ impl RunState {
             }
         }
 
-        let [learned, inferred, discarded_select, expired, cycles, power_failures, stale_plans, sensed] =
-            head.scalars;
+        let [
+            learned,
+            inferred,
+            discarded_select,
+            expired,
+            cycles,
+            power_failures,
+            stale_plans,
+            sensed,
+            syncs_done,
+            syncs_skipped,
+        ] = head.scalars;
         let meter = EnergyMeter::from_parts(tallies, series, head.total_uj);
         let result = RunResult {
             scheduler: sched,
@@ -320,6 +334,8 @@ impl RunState {
             cycles,
             power_failures,
             stale_plans,
+            syncs_done,
+            syncs_skipped,
             energy_uj: meter.total_uj(),
             energy_series: meter.series.clone(),
             action_tallies: meter
@@ -436,6 +452,19 @@ mod tests {
     fn empty_store_restores_none() {
         let mut nvm = Nvm::new();
         assert!(RunState::new().restore(&mut nvm).unwrap().is_none());
+    }
+
+    #[test]
+    fn sync_counters_round_trip_through_run_state() {
+        let (mut r, m) = sample_run(3);
+        r.syncs_done = 5;
+        r.syncs_skipped = 2;
+        let mut nvm = Nvm::new();
+        RunState::new().save(&mut nvm, &r, &m).unwrap();
+        let (back, _) = RunState::new().restore(&mut nvm).unwrap().unwrap();
+        assert_eq!(back.syncs_done, 5);
+        assert_eq!(back.syncs_skipped, 2);
+        assert_eq!(back.to_json().to_string(), r.to_json().to_string());
     }
 
     #[test]

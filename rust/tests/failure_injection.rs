@@ -188,6 +188,166 @@ fn prop_delta_saves_with_aborts_match_full_save_baseline() {
     });
 }
 
+/// Property (federated sync × §3.5): interleaving fleet *merges* into the
+/// delta-checkpoint schedule — merge → `save_delta` → power-fail →
+/// `restore` — leaves the learner bit-identical to a twin that full-saves
+/// under the same schedule. A merge rewrites model state outside the
+/// dirty tracking, so its `save_delta` MUST degrade to a full save; an
+/// aborted post-merge save must roll back to the pre-merge snapshot and
+/// self-heal on the next one.
+#[test]
+fn prop_merge_then_delta_save_with_aborts_matches_full_save_baseline() {
+    use ilearn::learning::ModelSnapshot;
+    use ilearn::util::prop;
+    // donor snapshots from independently trained learners (plain data —
+    // exactly what a fleet peer would radio over)
+    let mut be = NativeBackend::new();
+    let mut donors: Vec<ModelSnapshot> = Vec::new();
+    let mut rng = Rng::new(0xFEED);
+    for d in 0..4u64 {
+        let mut l = KnnAnomalyLearner::new();
+        for t in 0..(10 + d * 17) {
+            let f: Vec<f32> = (0..FEAT_DIM).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+            l.learn(&Example::new(f, 1_000 * d + t, false), &mut be).unwrap();
+        }
+        donors.push(l.snapshot().expect("knn snapshots"));
+    }
+    prop::check_cases("merge-delta-vs-full-knn", 0x3E6C, 16, |rng| {
+        let mut be_d = NativeBackend::new();
+        let mut be_f = NativeBackend::new();
+        let mut nvm_d = Nvm::new();
+        let mut nvm_f = Nvm::new();
+        let mut ld = KnnAnomalyLearner::new();
+        let mut lf = KnnAnomalyLearner::new();
+        for t in 0..60u64 {
+            let f: Vec<f32> = (0..FEAT_DIM).map(|_| rng.normal(0.0, 1.0) as f32).collect();
+            let ex = Example::new(f, 10_000 + t, false);
+            ld.learn(&ex, &mut be_d).unwrap();
+            lf.learn(&ex, &mut be_f).unwrap();
+            // a sync boundary fires on ~1/4 of the steps: both twins merge
+            // the same peer snapshot(s) at the same instant
+            if rng.f32() < 0.25 {
+                let donor = donors[(rng.f32() * 3.99) as usize].clone();
+                let now = 20_000 + t;
+                let expiry = if rng.f32() < 0.5 { Some(15_000) } else { None };
+                assert_eq!(
+                    ld.merge(&[donor.clone()], &mut be_d, now, expiry).unwrap(),
+                    lf.merge(&[donor], &mut be_f, now, expiry).unwrap()
+                );
+            }
+            let abort = rng.f32() < 0.3;
+            nvm_d.begin_action().unwrap();
+            ld.save_delta(&mut nvm_d).unwrap();
+            if abort {
+                nvm_d.abort_action();
+            } else {
+                nvm_d.commit_action().unwrap();
+            }
+            nvm_f.begin_action().unwrap();
+            lf.save(&mut nvm_f).unwrap();
+            if abort {
+                nvm_f.abort_action();
+            } else {
+                nvm_f.commit_action().unwrap();
+            }
+            if abort || rng.f32() < 0.1 {
+                ld = KnnAnomalyLearner::new();
+                ld.restore(&mut nvm_d).unwrap();
+                lf = KnnAnomalyLearner::new();
+                lf.restore(&mut nvm_f).unwrap();
+            }
+            assert_eq!(ld.buffer().0, lf.buffer().0, "ring buffers diverged at t={t}");
+            assert_eq!(ld.buffer().1, lf.buffer().1, "masks diverged at t={t}");
+            assert_eq!(ld.threshold(), lf.threshold(), "thresholds diverged at t={t}");
+            assert_eq!(ld.learned_count(), lf.learned_count());
+        }
+        // verdict parity after the full schedule
+        for t in 0..8u64 {
+            let scale = if t % 3 == 0 { 8.0 } else { 1.0 };
+            let f: Vec<f32> = (0..FEAT_DIM)
+                .map(|_| rng.normal(0.0, scale) as f32)
+                .collect();
+            let ex = Example::new(f, 99_000 + t, false);
+            assert_eq!(
+                ld.infer(&ex, &mut be_d).unwrap(),
+                lf.infer(&ex, &mut be_f).unwrap()
+            );
+        }
+    });
+}
+
+/// The same merge-in-schedule property for the k-means learner
+/// (count-weighted centroid merges forcing full post-merge saves).
+#[test]
+fn prop_kmeans_merge_then_delta_save_matches_full_save_baseline() {
+    use ilearn::learning::{ClusterLabelLearner, ModelSnapshot};
+    use ilearn::util::prop;
+    let mut be = NativeBackend::new();
+    let mut donors: Vec<ModelSnapshot> = Vec::new();
+    let mut rng = Rng::new(0xD0);
+    for d in 0..3u64 {
+        let mut l = ClusterLabelLearner::new(100 + d, 12);
+        for i in 0..30u64 {
+            let abnormal = i % 2 == 0;
+            let mut f = vec![0.0f32; FEAT_DIM];
+            let base = if abnormal { 8 } else { 0 };
+            for v in f[base..base + 8].iter_mut() {
+                *v = 2.0 + rng.normal(0.0, 0.2) as f32;
+            }
+            l.learn(&Example::new(f, i, abnormal), &mut be).unwrap();
+        }
+        donors.push(l.snapshot().expect("kmeans snapshots"));
+    }
+    prop::check_cases("merge-delta-vs-full-kmeans", 0x6E6C, 16, |rng| {
+        let mut be_d = NativeBackend::new();
+        let mut be_f = NativeBackend::new();
+        let mut nvm_d = Nvm::new();
+        let mut nvm_f = Nvm::new();
+        let mut ld = ClusterLabelLearner::new(9, 20);
+        let mut lf = ClusterLabelLearner::new(9, 20);
+        for t in 0..50u64 {
+            let abnormal = rng.f32() < 0.5;
+            let mut f = vec![0.0f32; FEAT_DIM];
+            let base = if abnormal { 8 } else { 0 };
+            for v in f[base..base + 8].iter_mut() {
+                *v = 2.0 + rng.normal(0.0, 0.2) as f32;
+            }
+            let ex = Example::new(f, t, abnormal);
+            ld.learn(&ex, &mut be_d).unwrap();
+            lf.learn(&ex, &mut be_f).unwrap();
+            if rng.f32() < 0.25 {
+                let donor = donors[(rng.f32() * 2.99) as usize].clone();
+                ld.merge(&[donor.clone()], &mut be_d, t, None).unwrap();
+                lf.merge(&[donor], &mut be_f, t, None).unwrap();
+            }
+            let abort = rng.f32() < 0.3;
+            nvm_d.begin_action().unwrap();
+            ld.save_delta(&mut nvm_d).unwrap();
+            if abort {
+                nvm_d.abort_action();
+            } else {
+                nvm_d.commit_action().unwrap();
+            }
+            nvm_f.begin_action().unwrap();
+            lf.save(&mut nvm_f).unwrap();
+            if abort {
+                nvm_f.abort_action();
+            } else {
+                nvm_f.commit_action().unwrap();
+            }
+            if abort || rng.f32() < 0.1 {
+                ld = ClusterLabelLearner::new(9, 20);
+                ld.restore(&mut nvm_d).unwrap();
+                lf = ClusterLabelLearner::new(9, 20);
+                lf.restore(&mut nvm_f).unwrap();
+            }
+            assert_eq!(ld.weights(), lf.weights(), "weights diverged at t={t}");
+            assert_eq!(ld.learned_count(), lf.learned_count());
+            assert_eq!(ld.labels_remaining(), lf.labels_remaining());
+        }
+    });
+}
+
 /// Same property for the k-means learner (winner-row deltas).
 #[test]
 fn prop_kmeans_delta_saves_match_full_save_baseline() {

@@ -1,10 +1,14 @@
 //! Fleet-layer integration: determinism across thread counts, the
-//! 1-shard == plain-engine equivalence on all three paper presets, and
-//! the 16-shard solar fleet acceptance run through the sweep runner.
+//! 1-shard == plain-engine equivalence on all three paper presets, the
+//! 16-shard solar fleet acceptance run through the sweep runner, and the
+//! federated-sync acceptance cells (sync-off PR-4 equivalence, synced
+//! thread-count determinism, sync-vs-isolated accuracy, energy gating).
 
 use ilearn::energy::harvester::Trace;
-use ilearn::scenario::{preset, FleetSpec, HarvesterSpec, ScenarioSpec, SweepRunner, SweepSpec};
-use ilearn::sim::{FleetResult, RunResult};
+use ilearn::scenario::{
+    preset, FleetSpec, HarvesterSpec, ScenarioSpec, SweepRunner, SweepSpec, SyncSpec,
+};
+use ilearn::sim::{FleetResult, RunResult, SyncStrategy};
 
 const H: u64 = 3_600_000_000;
 
@@ -22,6 +26,7 @@ fn with_fleet(mut spec: ScenarioSpec, shards: u32, jitter_us: u64) -> ScenarioSp
         phase_jitter_us: jitter_us,
         seed_stride: 1,
         overrides: vec![],
+        sync: None,
     });
     spec
 }
@@ -99,6 +104,71 @@ fn sixteen_shard_solar_fleet_through_the_sweep_runner() {
     assert!(doc.contains("\"fleet\"") && doc.contains("\"rollup\""));
 }
 
+fn hourly_sync(strategy: SyncStrategy) -> SyncSpec {
+    SyncSpec {
+        period_us: 3_600_000_000,
+        strategy,
+        radio: None,
+    }
+}
+
+#[test]
+fn sync_disabled_fleets_reproduce_the_isolated_shard_runs_on_all_presets() {
+    // acceptance (a), half 1: a sync-less fleet through the round-aware
+    // Fleet must equal the per-shard plain-engine runs (the PR-4 path)
+    // bit for bit on all three paper presets
+    for name in ["air_quality", "presence", "vibration"] {
+        let spec = with_fleet(preset(name, 7, 2 * H).unwrap(), 2, 1_800_000_000);
+        let fleet = spec.run_fleet(0).unwrap();
+        let manual: Vec<RunResult> = (0..2)
+            .map(|i| spec.build_shard_engine(i).unwrap().run().unwrap())
+            .collect();
+        let manual = FleetResult::aggregate(manual);
+        assert_eq!(
+            fleet_fp(&fleet),
+            fleet_fp(&manual),
+            "{name}: sync-less fleet diverged from isolated shard runs"
+        );
+        assert!(!fleet_fp(&fleet).contains("syncs_"), "{name}: sync keys leaked");
+    }
+}
+
+#[test]
+fn one_shard_fleet_with_sync_still_equals_the_plain_engine() {
+    // acceptance (a), half 2: shards = 1 reproduces the plain engine even
+    // with a sync block present (there is nobody to talk to — the round
+    // scheduler must not engage, charge radio, or touch the counters)
+    for name in ["air_quality", "presence", "vibration"] {
+        let mut spec = with_fleet(preset(name, 7, 2 * H).unwrap(), 1, 0);
+        spec.fleet.as_mut().unwrap().sync = Some(hourly_sync(SyncStrategy::Gossip));
+        let fleet = spec.run_fleet(0).unwrap();
+        let mut plain = spec.clone();
+        plain.fleet = None;
+        let solo = plain.build_engine().unwrap().run().unwrap();
+        assert_eq!(
+            fp(fleet.primary()),
+            fp(&solo),
+            "{name}: 1-shard synced fleet diverged from the plain engine"
+        );
+    }
+}
+
+#[test]
+fn synced_fleet_is_bit_identical_for_threads_1_2_and_all() {
+    // acceptance (b): a synced fleet's FleetResult is bit-identical
+    // across --threads {1, 2, 0}
+    let mut spec = with_fleet(preset("vibration", 3, 2 * H).unwrap(), 4, 60_000_000);
+    spec.fleet.as_mut().unwrap().sync = Some(hourly_sync(SyncStrategy::AllReduce));
+    let one = spec.run_fleet(1).unwrap();
+    let two = spec.run_fleet(2).unwrap();
+    let all = spec.run_fleet(0).unwrap();
+    assert_eq!(fleet_fp(&one), fleet_fp(&two), "threads 1 vs 2 diverged");
+    assert_eq!(fleet_fp(&one), fleet_fp(&all), "threads 1 vs all diverged");
+    let exchanges: u64 = one.shards.iter().map(|r| r.syncs_done).sum();
+    assert!(exchanges > 0, "no shard ever completed a sync exchange");
+    assert_eq!(one.rollup.syncs_done.total, exchanges as f64);
+}
+
 #[test]
 fn heterogeneous_fleet_mixes_harvesters_per_shard() {
     // per-shard energy diversity: one shard of a piezo fleet runs on a
@@ -118,6 +188,59 @@ fn heterogeneous_fleet_mixes_harvesters_per_shard() {
     // its energy profile must differ from the piezo shards'
     assert_ne!(fp(&fr.shards[1]), fp(&fr.shards[0]));
     assert!(fr.shards[1].cycles > 0, "trace shard never woke");
+}
+
+#[test]
+fn sixteen_shard_solar_sync_beats_the_isolated_fleet() {
+    // acceptance (c): the 16-shard solar cell with periodic sync achieves
+    // a strictly higher mean-accuracy rollup than the isolated fleet —
+    // phase-jittered shards that spend the first hours in darkness adopt
+    // the lit shards' mature models at their first affordable boundary
+    // instead of answering Unknown until they can learn for themselves
+    let isolated = with_fleet(preset("air_quality", 42, 8 * H).unwrap(), 16, 1_800_000_000);
+    let mut synced = isolated.clone();
+    synced.fleet.as_mut().unwrap().sync = Some(hourly_sync(SyncStrategy::AllReduce));
+    let iso = isolated.run_fleet(0).unwrap();
+    let syn = synced.run_fleet(0).unwrap();
+    assert!(
+        syn.rollup.mean_accuracy.mean > iso.rollup.mean_accuracy.mean,
+        "sync did not lift the fleet: synced {:.4} vs isolated {:.4}",
+        syn.rollup.mean_accuracy.mean,
+        iso.rollup.mean_accuracy.mean
+    );
+    // the lift was paid for: radio exchanges happened and were metered
+    assert!(syn.rollup.syncs_done.total > 0.0);
+    let radioed = syn
+        .shards
+        .iter()
+        .flat_map(|r| &r.action_tallies)
+        .any(|(n, c, e, _)| n == "tx" && *c > 0 && *e > 0.0);
+    assert!(radioed, "no tx tally metered");
+    // isolated documents carry no sync keys (PR-4 shape)
+    assert!(!fleet_fp(&iso).contains("syncs_"));
+    assert!(fleet_fp(&syn).contains("\"syncs_done\""));
+}
+
+#[test]
+fn starved_shard_skips_sync_rounds_energy_gating_observable() {
+    // a 0 W override shard can never cover the radio price: every round
+    // it reports a skip, while its healthy siblings keep exchanging
+    let mut spec = with_fleet(preset("vibration", 5, 3 * H).unwrap(), 3, 0);
+    {
+        let fleet = spec.fleet.as_mut().unwrap();
+        fleet.overrides = vec![(1, HarvesterSpec::Constant { power_w: 0.0 })];
+        fleet.sync = Some(hourly_sync(SyncStrategy::Gossip));
+    }
+    let fr = spec.run_fleet(0).unwrap();
+    let starved = &fr.shards[1];
+    assert_eq!(starved.syncs_done, 0, "a dead shard paid for radio");
+    assert!(
+        starved.syncs_skipped > 0,
+        "energy gating invisible: {starved:?}"
+    );
+    assert!(fr.rollup.syncs_skipped.total >= starved.syncs_skipped as f64);
+    // healthy shards completed exchanges in the same rounds
+    assert!(fr.shards[0].syncs_done + fr.shards[2].syncs_done > 0);
 }
 
 #[test]

@@ -185,6 +185,67 @@ fn sweep_grid_is_deterministic_across_thread_counts() {
 }
 
 #[test]
+fn run_and_rollup_json_keep_the_pre_sync_golden_shape() {
+    use ilearn::sim::{FleetRollup, RunResult};
+    // golden strings pinned to the PR-4 document shapes: a run (or fleet)
+    // that never hit a sync boundary must serialize WITHOUT the sync keys
+    // so archived sweep outputs diff clean against new ones
+    let r = RunResult {
+        scheduler: "s".into(),
+        ..Default::default()
+    };
+    assert_eq!(
+        r.to_json().to_string(),
+        "{\"scheduler\":\"s\",\"cycles\":0,\"sensed\":0,\"learned\":0,\"inferred\":0,\
+         \"discarded_select\":0,\"expired\":0,\"power_failures\":0,\"stale_plans\":0,\
+         \"energy_uj\":0,\"mean_accuracy\":0,\"final_accuracy\":0,\"online_accuracy\":0,\
+         \"checkpoints\":[],\"action_tallies\":[]}"
+    );
+    let zero = "{\"mean\":0,\"min\":0,\"max\":0,\"total\":0}";
+    assert_eq!(
+        FleetRollup::of(&[r.clone()]).to_json().to_string(),
+        format!(
+            "{{\"shards\":1,\"final_accuracy\":{zero},\"mean_accuracy\":{zero},\
+             \"energy_uj\":{zero},\"learned\":{zero},\"inferred\":{zero},\
+             \"power_failures\":{zero},\"stale_plans\":{zero}}}"
+        )
+    );
+    // ... and a run that DID sync gains exactly the two counters, between
+    // stale_plans and energy_uj
+    let mut synced = r;
+    synced.syncs_done = 3;
+    synced.syncs_skipped = 1;
+    assert!(synced.to_json().to_string().contains(
+        "\"stale_plans\":0,\"syncs_done\":3,\"syncs_skipped\":1,\"energy_uj\":0"
+    ));
+    let roll = FleetRollup::of(&[synced]).to_json().to_string();
+    assert!(roll.contains("\"syncs_done\""));
+}
+
+#[test]
+fn sweep_outcome_documents_keep_pre_sync_shapes_end_to_end() {
+    use ilearn::scenario::FleetSpec;
+    // one fleet-less cell and one sync-less 2-shard fleet cell through the
+    // real runner: the PR-4 payload shapes survive
+    let sweep = SweepSpec::parse(r#"{"hours": 1, "scenarios": ["vibration"], "seeds": [1, 2]}"#)
+        .unwrap();
+    let mut cells = sweep.expand().unwrap();
+    cells[1].spec.fleet = Some(FleetSpec {
+        shards: 2,
+        ..FleetSpec::default()
+    });
+    let outcomes = SweepRunner::new(2).run_cells(cells);
+    let plain = outcomes[0].to_json().to_string();
+    assert!(plain.contains("\"result\":{\"scheduler\":"), "{plain}");
+    assert!(!plain.contains("\"fleet\":{"), "{plain}");
+    assert!(!plain.contains("syncs_"), "{plain}");
+    let fleet = outcomes[1].to_json().to_string();
+    assert!(fleet.contains("\"fleet\":{\"shards\":2,\"rollup\":{"), "{fleet}");
+    assert!(!fleet.contains("syncs_"), "sync keys leaked into a sync-less fleet doc");
+    assert!(!fleet.contains("\"sync\""), "spec sync block leaked");
+}
+
+#[test]
 fn failing_cell_does_not_discard_the_sweep() {
     // backend=pjrt in the default (pure-rust) build fails that cell at
     // engine construction; the sibling native cell must still complete
