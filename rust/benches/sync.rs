@@ -107,11 +107,12 @@ fn smoke() {
     );
     // merge determinism: the same inputs merge to the same model
     let peers = knn_peers(3);
+    let peer_refs: Vec<&ModelSnapshot> = peers.iter().collect();
     let mut be = NativeBackend::new();
     let mut a = trained_knn(7, 40, 50_000);
     let mut b = trained_knn(7, 40, 50_000);
-    assert!(a.merge(&peers, &mut be, 100_000, None).unwrap());
-    assert!(b.merge(&peers, &mut be, 100_000, None).unwrap());
+    assert!(a.merge(&peer_refs, &mut be, 100_000, None).unwrap());
+    assert!(b.merge(&peer_refs, &mut be, 100_000, None).unwrap());
     assert_eq!(a.buffer().0, b.buffer().0, "knn merge nondeterministic");
     assert_eq!(a.threshold(), b.threshold());
     // a short synced fleet: bit-identical across thread counts, exchanges
@@ -143,17 +144,19 @@ fn smoke() {
 fn full() {
     // worst-case all-reduce merge compute: 15 peers (a 16-shard fleet)
     let knn15 = knn_peers(15);
+    let knn15_refs: Vec<&ModelSnapshot> = knn15.iter().collect();
     let base_knn = trained_knn(7, N_BUF, 50_000);
     let mut be = NativeBackend::new();
     let m_knn = bench("knn-ring-merge-15-peers", 1_500, || {
         let mut l = base_knn.clone();
-        ilearn::util::bench::black_box(l.merge(&knn15, &mut be, 100_000, None).unwrap());
+        ilearn::util::bench::black_box(l.merge(&knn15_refs, &mut be, 100_000, None).unwrap());
     });
     let km15 = kmeans_peers(15);
+    let km15_refs: Vec<&ModelSnapshot> = km15.iter().collect();
     let base_km = trained_kmeans(7, 40);
     let m_km = bench("kmeans-centroid-merge-15-peers", 1_500, || {
         let mut l = base_km.clone();
-        ilearn::util::bench::black_box(l.merge(&km15, &mut be, 100_000, None).unwrap());
+        ilearn::util::bench::black_box(l.merge(&km15_refs, &mut be, 100_000, None).unwrap());
     });
     println!("{}", m_knn.row());
     println!("{}", m_km.row());

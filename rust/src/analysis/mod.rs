@@ -1,0 +1,877 @@
+//! Intermittent-safety analyzer: access-trace linting over the NVM
+//! `KeyId` transaction layer.
+//!
+//! The paper's correctness story (§3.5) rests on two properties every
+//! checkpoint path must uphold: actions are atomic (a mid-action power
+//! failure replays to the committed pre-action state) and checkpoints are
+//! complete (restore reconstructs exactly what save persisted). The
+//! failure-injection tests spot-check those properties on fixed
+//! schedules; this module checks them mechanically, in the spirit of the
+//! GENESIS/SONIC toolchain (Gobieski et al., *Intelligence Beyond the
+//! Edge*), which statically eliminates write-after-read hazards so
+//! re-execution is always correct.
+//!
+//! The pipeline: arm the `Nvm` access recorder
+//! ([`crate::nvm::audit`]), drive each learner (and the
+//! [`RunState`](crate::sim::RunState) sweep-checkpoint store) through a
+//! canonical learn / save / merge / power-fail / restore schedule, then
+//! lint the recorded trace and the committed store against the rule
+//! catalog:
+//!
+//! * [`RULE_WAR`] `IL-WAR` — inside one action, a *partial* write overlaps
+//!   bytes read from committed pre-action state earlier in the same
+//!   action. Replaying the action after a mid-action power failure would
+//!   read post-write state and diverge. Whole-value overwrites are exempt:
+//!   the read-counter-then-rewrite-it idiom (generation counters, head
+//!   blobs) replays cleanly because the rewrite does not depend on
+//!   partially-written state surviving.
+//! * [`RULE_ATOM`] `IL-ATOM` — a write landed outside a `begin_action` /
+//!   `commit_action` bracket, so a power failure can tear it.
+//! * [`RULE_DELTA`] `IL-DELTA` — after a committed `save_delta`, the
+//!   store's committed bytes diverge from an identically-fed full-save
+//!   twin: the learner's dirty tracking under-declared what changed.
+//! * [`RULE_PARITY`] `IL-PARITY` — a key holding committed state is never
+//!   read back by the restore path: state silently lost across a reboot.
+//!
+//! Recording needs `cfg(debug_assertions)`, so the analyzer runs in dev
+//! builds (`cargo run -- analyze ...`, `cargo test`); a release binary
+//! reports a configuration error instead of a vacuously clean report.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::backend::ComputeBackend;
+use crate::error::{Error, Result};
+use crate::learning::{ClusterLabelLearner, Example, KnnAnomalyLearner, Learner};
+use crate::nvm::audit::{normalize, overlap, AccessEvent, AccessTrace};
+use crate::nvm::Nvm;
+use crate::scenario::{preset, BackendKind, ScenarioSpec};
+use crate::util::json::Json;
+use crate::util::Rng;
+
+use crate::backend::shapes::FEAT_DIM;
+
+/// Write-after-read hazard inside one action.
+pub const RULE_WAR: &str = "IL-WAR";
+/// Write outside a begin/commit action bracket.
+pub const RULE_ATOM: &str = "IL-ATOM";
+/// Delta checkpoint diverges from the full-save twin.
+pub const RULE_DELTA: &str = "IL-DELTA";
+/// Saved key never read back by restore.
+pub const RULE_PARITY: &str = "IL-PARITY";
+
+/// One analyzer finding: a rule violation on a key, with the offending
+/// byte range where one exists.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub key: String,
+    pub range: Option<(usize, usize)>,
+    pub detail: String,
+}
+
+impl Finding {
+    fn to_json(&self) -> Json {
+        let range = match self.range {
+            Some((s, e)) => Json::Arr(vec![Json::Num(s as f64), Json::Num(e as f64)]),
+            None => Json::Null,
+        };
+        Json::obj(vec![
+            ("rule", Json::Str(self.rule.to_string())),
+            ("key", Json::Str(self.key.clone())),
+            ("range", range),
+            ("detail", Json::Str(self.detail.clone())),
+        ])
+    }
+}
+
+/// Findings for one checkpointing path (learner × backend, or the
+/// run-state store).
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub learner: String,
+    pub backend: String,
+    pub findings: Vec<Finding>,
+}
+
+impl Entry {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("learner", Json::Str(self.learner.clone())),
+            ("backend", Json::Str(self.backend.clone())),
+            (
+                "findings",
+                Json::Arr(self.findings.iter().map(Finding::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+/// Machine-readable analyzer report for one scenario preset.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub scenario: String,
+    pub entries: Vec<Entry>,
+}
+
+impl Report {
+    pub fn findings_total(&self) -> usize {
+        self.entries.iter().map(|e| e.findings.len()).sum()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.findings_total() == 0
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("findings_total", Json::Num(self.findings_total() as f64)),
+            (
+                "entries",
+                Json::Arr(self.entries.iter().map(Entry::to_json).collect()),
+            ),
+        ])
+    }
+}
+
+/// Keep the first finding per (rule, key) — one schedule can trip the
+/// same hazard dozens of times.
+fn dedup(findings: Vec<Finding>) -> Vec<Finding> {
+    let mut seen = BTreeSet::new();
+    findings
+        .into_iter()
+        .filter(|f| seen.insert((f.rule, f.key.clone())))
+        .collect()
+}
+
+/// Lint one access trace for WAR hazards and unbracketed writes. Pure
+/// over the trace, so test schedules can assert on it directly.
+pub fn lint_trace(trace: &AccessTrace) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    // committed-observed read ranges per key, within the open action
+    let mut reads: BTreeMap<&str, Vec<(usize, usize)>> = BTreeMap::new();
+    for ev in &trace.events {
+        match ev {
+            AccessEvent::Begin | AccessEvent::Commit | AccessEvent::Abort => reads.clear(),
+            AccessEvent::Read {
+                key,
+                committed,
+                in_txn,
+                ..
+            } => {
+                if *in_txn && !committed.is_empty() {
+                    reads
+                        .entry(key.as_str())
+                        .or_default()
+                        .extend(committed.iter().copied());
+                }
+            }
+            AccessEvent::Write {
+                key,
+                range,
+                full,
+                in_txn,
+            } => {
+                if !*in_txn {
+                    findings.push(Finding {
+                        rule: RULE_ATOM,
+                        key: key.clone(),
+                        range: Some(*range),
+                        detail: "write landed outside a begin/commit action bracket \
+                                 (a power failure can tear it)"
+                            .into(),
+                    });
+                } else if !*full {
+                    let seen = reads.get(key.as_str()).map(|v| v.as_slice()).unwrap_or(&[]);
+                    if let Some(hit) = overlap(*range, seen) {
+                        findings.push(Finding {
+                            rule: RULE_WAR,
+                            key: key.clone(),
+                            range: Some(hit),
+                            detail: format!(
+                                "partial write over bytes {}..{} read from committed state \
+                                 earlier in the same action — replay after a mid-action \
+                                 power failure diverges",
+                                hit.0, hit.1
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    dedup(findings)
+}
+
+/// Byte-compare every committed key of the delta store against the
+/// full-save twin (the `IL-DELTA` oracle). `declared` carries the dirty
+/// ranges the delta save staged, for the report.
+fn compare_stores(
+    nvm: &Nvm,
+    shadow: &Nvm,
+    declared: &[(String, Vec<(usize, usize)>)],
+) -> Vec<Finding> {
+    let mut names: BTreeSet<&str> = nvm.keys().map(|(k, _)| k).collect();
+    names.extend(shadow.keys().map(|(k, _)| k));
+    let mut findings = Vec::new();
+    for name in names {
+        let got = nvm
+            .resolve(name)
+            .and_then(|id| nvm.committed_id(id))
+            .unwrap_or(&[]);
+        let want = shadow
+            .resolve(name)
+            .and_then(|id| shadow.committed_id(id))
+            .unwrap_or(&[]);
+        if got == want {
+            continue;
+        }
+        let lo = got.iter().zip(want).take_while(|(a, b)| a == b).count();
+        let hi = got.len().max(want.len());
+        let ranges = declared
+            .iter()
+            .find(|(k, _)| k.as_str() == name)
+            .map(|(_, r)| r.clone())
+            .unwrap_or_default();
+        findings.push(Finding {
+            rule: RULE_DELTA,
+            key: name.to_string(),
+            range: Some((lo, hi)),
+            detail: format!(
+                "delta-saved committed state diverges from the full-save twin from \
+                 byte {lo}; declared dirty ranges {ranges:?} do not cover every \
+                 changed byte"
+            ),
+        });
+    }
+    findings
+}
+
+/// Every key holding committed state must be read by the restore pass
+/// whose trace is given (the `IL-PARITY` rule).
+fn check_parity(nvm: &Nvm, restore_trace: &AccessTrace) -> Vec<Finding> {
+    let read: BTreeSet<&str> = restore_trace
+        .events
+        .iter()
+        .filter_map(|ev| match ev {
+            AccessEvent::Read { key, .. } => Some(key.as_str()),
+            _ => None,
+        })
+        .collect();
+    let mut findings = Vec::new();
+    for (name, id) in nvm.keys() {
+        if nvm.committed_id(id).is_some() && !read.contains(name) {
+            findings.push(Finding {
+                rule: RULE_PARITY,
+                key: name.to_string(),
+                range: None,
+                detail: "saved key never read back by restore — state silently \
+                         lost across a reboot"
+                    .into(),
+            });
+        }
+    }
+    findings
+}
+
+/// A two-population synthetic example (mirrors the feature layout the
+/// kmeans and failure-injection tests train on): 8 hot features at base
+/// 0 (normal) or 8 (abnormal), the rest zero.
+fn synth_example(rng: &mut Rng, t_us: u64, abnormal: bool) -> Example {
+    let mut f = vec![0.0f32; FEAT_DIM];
+    let base = if abnormal { 8 } else { 0 };
+    for x in f.iter_mut().skip(base).take(8) {
+        *x = 2.0 + rng.normal(0.0, 0.2) as f32;
+    }
+    Example::new(f, t_us, abnormal)
+}
+
+/// Drive one learner family through the canonical schedule under the
+/// recorder and return every finding: ~40 steps of learn (plus two merge
+/// legs fed by a separately trained donor), each followed by a
+/// `save_delta` that either commits — and is byte-compared against an
+/// identically-fed full-save twin — or power-fails mid-save (abort +
+/// reboot + restore on both stores), then a final fresh-learner restore
+/// whose trace is linted and parity-checked.
+fn analyze_learner(
+    make: &dyn Fn(u64) -> Box<dyn Learner>,
+    be: &mut dyn ComputeBackend,
+    seed: u64,
+) -> Result<Vec<Finding>> {
+    let mut findings = Vec::new();
+    let mut main = make(seed);
+    let mut twin = make(seed);
+    let mut nvm = Nvm::new();
+    let mut shadow = Nvm::new();
+
+    // the merge legs adopt state from a separately trained donor
+    let mut donor = make(seed + 1);
+    let mut donor_rng = Rng::with_stream(seed, 0xD0); // donor examples
+    for i in 0..16u64 {
+        let ex = synth_example(&mut donor_rng, i * 250_000, i % 2 == 1);
+        donor.learn(&ex, be)?;
+    }
+    let dsnap = donor.snapshot();
+
+    // boot checkpoint: every later restore finds a committed snapshot
+    nvm.audit_start();
+    nvm.begin_action()?;
+    main.save(&mut nvm)?;
+    nvm.commit_action()?;
+    shadow.begin_action()?;
+    twin.save(&mut shadow)?;
+    shadow.commit_action()?;
+
+    let mut rng = Rng::with_stream(seed, 0x5C); // schedule randomness
+    for step in 0..40u64 {
+        let now_us = (step + 1) * 500_000;
+        if step == 13 || step == 29 {
+            if let Some(s) = &dsnap {
+                main.merge(&[s], be, now_us, None)?;
+                twin.merge(&[s], be, now_us, None)?;
+            }
+        } else {
+            let ex = synth_example(&mut rng, now_us, step % 2 == 0);
+            main.learn(&ex, be)?;
+            twin.learn(&ex, be)?;
+        }
+        if rng.f32() < 0.25 {
+            // power failure mid-save: abort, reboot, restore — mirrored
+            nvm.begin_action()?;
+            main.save_delta(&mut nvm)?;
+            nvm.abort_action();
+            shadow.begin_action()?;
+            twin.save(&mut shadow)?;
+            shadow.abort_action();
+            main = make(seed);
+            twin = make(seed);
+            main.restore(&mut nvm)?;
+            twin.restore(&mut shadow)?;
+        } else {
+            nvm.begin_action()?;
+            main.save_delta(&mut nvm)?;
+            let declared: Vec<(String, Vec<(usize, usize)>)> = nvm
+                .keys()
+                .map(|(k, id)| (k.to_string(), normalize(nvm.staged_dirty(id).to_vec())))
+                .collect();
+            nvm.commit_action()?;
+            shadow.begin_action()?;
+            twin.save(&mut shadow)?;
+            shadow.commit_action()?;
+            findings.extend(compare_stores(&nvm, &shadow, &declared));
+        }
+    }
+    if let Some(trace) = nvm.audit_take() {
+        findings.extend(lint_trace(&trace));
+    }
+
+    // restore parity: a fresh learner must read back every committed key
+    let mut fresh = make(seed);
+    nvm.audit_start();
+    fresh.restore(&mut nvm)?;
+    let trace = nvm.audit_take().unwrap_or_default();
+    findings.extend(lint_trace(&trace));
+    findings.extend(check_parity(&nvm, &trace));
+    Ok(dedup(findings))
+}
+
+/// Drive the [`RunState`](crate::sim::RunState) sweep-checkpoint store
+/// through an incremental save schedule with torn (aborted) saves, then
+/// lint the trace and check restore parity the same way.
+fn analyze_run_state(seed: u64) -> Result<Vec<Finding>> {
+    use crate::actions::Action;
+    use crate::energy::EnergyMeter;
+    use crate::sim::{Checkpoint, RunResult, RunState};
+
+    let mut findings = Vec::new();
+    let mut nvm = Nvm::new();
+    let mut state = RunState::new();
+    let mut result = RunResult {
+        scheduler: "intermittent_learning".into(),
+        ..Default::default()
+    };
+    let mut meter = EnergyMeter::new();
+    let mut rng = Rng::with_stream(seed, 0xA0); // torn-save schedule
+    nvm.audit_start();
+    for i in 0..24u64 {
+        meter.record_action(Action::Learn, 9_309.0, 1_551_000);
+        meter.record("planner", 57.0, 4_300);
+        meter.sample(i * 1_000_000);
+        result.learned += 1;
+        result.sensed += 2;
+        result.cycles += 3;
+        result.infer_log.push((i * 500_000, i % 2 == 0, i % 3 == 0));
+        result.checkpoints.push(Checkpoint {
+            t_us: i * 1_000_000,
+            accuracy: 0.5 + 0.01 * i as f64,
+            learned: result.learned,
+            inferred: result.inferred,
+            energy_uj: meter.total_uj(),
+            voltage: 3.0,
+        });
+        nvm.begin_action()?;
+        state.save(&mut nvm, &result, &meter)?;
+        if rng.f32() < 0.25 {
+            nvm.abort_action(); // torn save: the next one self-heals
+        } else {
+            nvm.commit_action()?;
+        }
+    }
+    nvm.begin_action()?;
+    state.save(&mut nvm, &result, &meter)?;
+    nvm.commit_action()?;
+    if let Some(trace) = nvm.audit_take() {
+        findings.extend(lint_trace(&trace));
+    }
+
+    // a fresh RunState adopting the store must read every committed key
+    let mut adopter = RunState::new();
+    nvm.audit_start();
+    adopter.restore(&mut nvm)?;
+    let trace = nvm.audit_take().unwrap_or_default();
+    findings.extend(lint_trace(&trace));
+    findings.extend(check_parity(&nvm, &trace));
+    Ok(dedup(findings))
+}
+
+/// Backends the analyzer exercises (compiled-in ones only, so reports —
+/// and the committed goldens — are stable across default builds).
+fn backend_names() -> &'static [&'static str] {
+    if cfg!(feature = "pjrt") {
+        &["native", "pjrt"]
+    } else {
+        &["native"]
+    }
+}
+
+/// Analyze every learner family × backend (plus the run-state store)
+/// under `spec`'s name and seed.
+pub fn analyze_spec(spec: &ScenarioSpec) -> Result<Report> {
+    if !cfg!(debug_assertions) {
+        return Err(Error::Config(
+            "the intermittent-safety analyzer needs the debug-assertions access \
+             recorder; run it through a dev-profile build (`cargo run -- analyze ...`)"
+                .into(),
+        ));
+    }
+    let mut entries = Vec::new();
+    for kind in ["knn", "cluster_label"] {
+        for be_name in backend_names() {
+            let mut be = BackendKind::parse(be_name)
+                .ok_or_else(|| Error::Config(format!("unknown backend `{be_name}`")))?
+                .build()?;
+            let make: Box<dyn Fn(u64) -> Box<dyn Learner>> = match kind {
+                "knn" => Box::new(|_seed| Box::new(KnnAnomalyLearner::new()) as Box<dyn Learner>),
+                _ => Box::new(|seed| {
+                    Box::new(ClusterLabelLearner::new(seed, 64)) as Box<dyn Learner>
+                }),
+            };
+            entries.push(Entry {
+                learner: kind.to_string(),
+                backend: be_name.to_string(),
+                findings: analyze_learner(make.as_ref(), be.as_mut(), spec.seed)?,
+            });
+        }
+    }
+    entries.push(Entry {
+        learner: "run_state".to_string(),
+        backend: "-".to_string(),
+        findings: analyze_run_state(spec.seed)?,
+    });
+    Ok(Report {
+        scenario: spec.name.clone(),
+        entries,
+    })
+}
+
+/// Analyze a named paper preset (the CLI / CI entry point).
+pub fn analyze_preset(name: &str) -> Result<Report> {
+    let spec = preset(name, 42, 3_600_000_000)?;
+    analyze_spec(&spec)
+}
+
+#[cfg(test)]
+pub(crate) mod fixtures {
+    //! Seeded-bug learners: each plants exactly one hazard class the
+    //! analyzer must flag (and the shipped learners must not share).
+
+    use super::*;
+    use crate::learning::Verdict;
+
+    /// Reads its committed row then partially rewrites it inside the same
+    /// action: the textbook WAR hazard (`IL-WAR`).
+    pub struct WarLearner {
+        state: Vec<f32>,
+        learned: u64,
+    }
+
+    impl Default for WarLearner {
+        fn default() -> Self {
+            WarLearner {
+                state: vec![0.0; 4],
+                learned: 0,
+            }
+        }
+    }
+
+    impl Learner for WarLearner {
+        fn learn(&mut self, ex: &Example, _be: &mut dyn ComputeBackend) -> Result<()> {
+            let i = (self.learned % 4) as usize;
+            self.state[i] = ex.features.first().copied().unwrap_or(0.0) + self.learned as f32;
+            self.learned += 1;
+            Ok(())
+        }
+
+        fn infer(&mut self, _ex: &Example, _be: &mut dyn ComputeBackend) -> Result<Verdict> {
+            Ok(Verdict::Unknown)
+        }
+
+        fn learnable(&self) -> bool {
+            true
+        }
+
+        fn evaluate(&mut self, _be: &mut dyn ComputeBackend) -> Result<f32> {
+            Ok(0.0)
+        }
+
+        fn learned_count(&self) -> u64 {
+            self.learned
+        }
+
+        fn save(&mut self, nvm: &mut Nvm) -> Result<()> {
+            nvm.write_f32s("war/state", &self.state)
+        }
+
+        fn save_delta(&mut self, nvm: &mut Nvm) -> Result<()> {
+            // read-modify-write of the committed row in one action
+            let id = nvm.intern("war/state");
+            let _ = nvm.read_f32s_id(id);
+            nvm.write_f32s_at(id, 0, &self.state)
+        }
+
+        fn restore(&mut self, nvm: &mut Nvm) -> Result<()> {
+            if let Some(xs) = nvm.read_f32s("war/state") {
+                if xs.len() == 4 {
+                    self.state = xs;
+                }
+            }
+            Ok(())
+        }
+
+        fn name(&self) -> &'static str {
+            "war_fixture"
+        }
+    }
+
+    /// Mutates its whole state on every learn but declares only the first
+    /// element dirty: an under-declared delta checkpoint (`IL-DELTA`).
+    pub struct UnderDeltaLearner {
+        state: Vec<f32>,
+        learned: u64,
+    }
+
+    impl Default for UnderDeltaLearner {
+        fn default() -> Self {
+            UnderDeltaLearner {
+                state: vec![0.0; 4],
+                learned: 0,
+            }
+        }
+    }
+
+    impl Learner for UnderDeltaLearner {
+        fn learn(&mut self, ex: &Example, _be: &mut dyn ComputeBackend) -> Result<()> {
+            for (i, x) in self.state.iter_mut().enumerate() {
+                *x += ex.features.get(i).copied().unwrap_or(0.0) + 1.0;
+            }
+            self.learned += 1;
+            Ok(())
+        }
+
+        fn infer(&mut self, _ex: &Example, _be: &mut dyn ComputeBackend) -> Result<Verdict> {
+            Ok(Verdict::Unknown)
+        }
+
+        fn learnable(&self) -> bool {
+            true
+        }
+
+        fn evaluate(&mut self, _be: &mut dyn ComputeBackend) -> Result<f32> {
+            Ok(0.0)
+        }
+
+        fn learned_count(&self) -> u64 {
+            self.learned
+        }
+
+        fn save(&mut self, nvm: &mut Nvm) -> Result<()> {
+            nvm.write_f32s("under/state", &self.state)
+        }
+
+        fn save_delta(&mut self, nvm: &mut Nvm) -> Result<()> {
+            let id = nvm.intern("under/state");
+            nvm.write_f32s_at(id, 0, &self.state[..1])
+        }
+
+        fn restore(&mut self, nvm: &mut Nvm) -> Result<()> {
+            if let Some(xs) = nvm.read_f32s("under/state") {
+                if xs.len() == 4 {
+                    self.state = xs;
+                }
+            }
+            Ok(())
+        }
+
+        fn name(&self) -> &'static str {
+            "under_delta_fixture"
+        }
+    }
+
+    /// Writes a bookkeeping key outside any action bracket during restore
+    /// (`IL-ATOM`) — and reads it back, so parity stays clean.
+    pub struct StrayWriteLearner {
+        state: Vec<f32>,
+        learned: u64,
+    }
+
+    impl Default for StrayWriteLearner {
+        fn default() -> Self {
+            StrayWriteLearner {
+                state: vec![0.0; 4],
+                learned: 0,
+            }
+        }
+    }
+
+    impl Learner for StrayWriteLearner {
+        fn learn(&mut self, ex: &Example, _be: &mut dyn ComputeBackend) -> Result<()> {
+            let i = (self.learned % 4) as usize;
+            self.state[i] = ex.features.first().copied().unwrap_or(0.0);
+            self.learned += 1;
+            Ok(())
+        }
+
+        fn infer(&mut self, _ex: &Example, _be: &mut dyn ComputeBackend) -> Result<Verdict> {
+            Ok(Verdict::Unknown)
+        }
+
+        fn learnable(&self) -> bool {
+            true
+        }
+
+        fn evaluate(&mut self, _be: &mut dyn ComputeBackend) -> Result<f32> {
+            Ok(0.0)
+        }
+
+        fn learned_count(&self) -> u64 {
+            self.learned
+        }
+
+        fn save(&mut self, nvm: &mut Nvm) -> Result<()> {
+            nvm.write_f32s("stray/state", &self.state)
+        }
+
+        fn restore(&mut self, nvm: &mut Nvm) -> Result<()> {
+            if let Some(xs) = nvm.read_f32s("stray/state") {
+                if xs.len() == 4 {
+                    self.state = xs;
+                }
+            }
+            // bug: boot bookkeeping outside any action bracket (but read
+            // back afterwards, so only atomicity is violated, not parity)
+            let boots = nvm.read_u64("stray/boots");
+            nvm.write_u64("stray/boots", boots + 1)?;
+            let _ = nvm.read_u64("stray/boots");
+            Ok(())
+        }
+
+        fn name(&self) -> &'static str {
+            "stray_write_fixture"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::fixtures::{StrayWriteLearner, UnderDeltaLearner, WarLearner};
+    use super::*;
+    use crate::backend::native::NativeBackend;
+    use crate::scenario::PRESETS;
+
+    fn rules(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn war_fixture_flagged_with_the_war_rule() {
+        let mut be = NativeBackend::new();
+        let make = |_: u64| Box::new(WarLearner::default()) as Box<dyn Learner>;
+        let findings = analyze_learner(&make, &mut be, 7).unwrap();
+        assert!(
+            findings.iter().any(|f| f.rule == RULE_WAR && f.key == "war/state"),
+            "{findings:?}"
+        );
+        assert!(!rules(&findings).contains(&RULE_DELTA), "{findings:?}");
+        assert!(!rules(&findings).contains(&RULE_ATOM), "{findings:?}");
+    }
+
+    #[test]
+    fn under_declared_delta_flagged_with_the_delta_rule() {
+        let mut be = NativeBackend::new();
+        let make = |_: u64| Box::new(UnderDeltaLearner::default()) as Box<dyn Learner>;
+        let findings = analyze_learner(&make, &mut be, 7).unwrap();
+        assert!(
+            findings.iter().any(|f| f.rule == RULE_DELTA && f.key == "under/state"),
+            "{findings:?}"
+        );
+        assert!(!rules(&findings).contains(&RULE_WAR), "{findings:?}");
+    }
+
+    #[test]
+    fn stray_write_flagged_with_the_atomicity_rule() {
+        let mut be = NativeBackend::new();
+        let make = |_: u64| Box::new(StrayWriteLearner::default()) as Box<dyn Learner>;
+        let findings = analyze_learner(&make, &mut be, 7).unwrap();
+        assert!(
+            findings.iter().any(|f| f.rule == RULE_ATOM && f.key == "stray/boots"),
+            "{findings:?}"
+        );
+        // it reads the stray key back, so parity must not also fire
+        assert!(!rules(&findings).contains(&RULE_PARITY), "{findings:?}");
+    }
+
+    #[test]
+    fn unrestored_key_flagged_with_the_parity_rule() {
+        struct ForgetfulLearner {
+            state: Vec<f32>,
+            learned: u64,
+        }
+        impl Learner for ForgetfulLearner {
+            fn learn(&mut self, _ex: &Example, _be: &mut dyn ComputeBackend) -> Result<()> {
+                self.state[0] += 1.0;
+                self.learned += 1;
+                Ok(())
+            }
+            fn infer(
+                &mut self,
+                _ex: &Example,
+                _be: &mut dyn ComputeBackend,
+            ) -> Result<crate::learning::Verdict> {
+                Ok(crate::learning::Verdict::Unknown)
+            }
+            fn learnable(&self) -> bool {
+                true
+            }
+            fn evaluate(&mut self, _be: &mut dyn ComputeBackend) -> Result<f32> {
+                Ok(0.0)
+            }
+            fn learned_count(&self) -> u64 {
+                self.learned
+            }
+            fn save(&mut self, nvm: &mut Nvm) -> Result<()> {
+                nvm.write_f32s("forget/state", &self.state)?;
+                nvm.write_u64("forget/learned", self.learned)
+            }
+            fn restore(&mut self, nvm: &mut Nvm) -> Result<()> {
+                // bug: forget/learned is saved but never read back
+                if let Some(xs) = nvm.read_f32s("forget/state") {
+                    self.state = xs;
+                }
+                Ok(())
+            }
+            fn name(&self) -> &'static str {
+                "forgetful_fixture"
+            }
+        }
+        let mut be = NativeBackend::new();
+        let make = |_: u64| {
+            Box::new(ForgetfulLearner {
+                state: vec![0.0; 4],
+                learned: 0,
+            }) as Box<dyn Learner>
+        };
+        let findings = analyze_learner(&make, &mut be, 7).unwrap();
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.rule == RULE_PARITY && f.key == "forget/learned"),
+            "{findings:?}"
+        );
+    }
+
+    #[test]
+    fn lint_flags_war_and_atomicity_on_a_synthetic_trace() {
+        let trace = AccessTrace {
+            events: vec![
+                AccessEvent::Write {
+                    key: "loose".into(),
+                    range: (0, 8),
+                    full: true,
+                    in_txn: false,
+                },
+                AccessEvent::Begin,
+                AccessEvent::Read {
+                    key: "row".into(),
+                    range: (0, 16),
+                    committed: vec![(0, 16)],
+                    in_txn: true,
+                },
+                AccessEvent::Write {
+                    key: "row".into(),
+                    range: (4, 8),
+                    full: false,
+                    in_txn: true,
+                },
+                // full overwrite after a read replays cleanly: exempt
+                AccessEvent::Read {
+                    key: "gen".into(),
+                    range: (0, 8),
+                    committed: vec![(0, 8)],
+                    in_txn: true,
+                },
+                AccessEvent::Write {
+                    key: "gen".into(),
+                    range: (0, 8),
+                    full: true,
+                    in_txn: true,
+                },
+                AccessEvent::Commit,
+                // the bracket cleared the read set: no WAR across actions
+                AccessEvent::Begin,
+                AccessEvent::Write {
+                    key: "row".into(),
+                    range: (0, 4),
+                    full: false,
+                    in_txn: true,
+                },
+                AccessEvent::Commit,
+            ],
+        };
+        let findings = lint_trace(&trace);
+        assert_eq!(rules(&findings), vec![RULE_ATOM, RULE_WAR], "{findings:?}");
+        assert_eq!(findings[0].key, "loose");
+        assert_eq!(findings[1].key, "row");
+        assert_eq!(findings[1].range, Some((4, 8)));
+    }
+
+    #[test]
+    fn shipped_learners_and_run_state_clean_on_all_presets() {
+        for name in PRESETS {
+            let report = analyze_preset(name).unwrap();
+            assert!(report.is_clean(), "{name}: {:?}", report.entries);
+        }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn clean_report_json_matches_the_committed_golden_shape() {
+        let report = analyze_preset("air_quality").unwrap();
+        assert_eq!(
+            report.to_json().to_string(),
+            "{\"scenario\":\"air_quality\",\"findings_total\":0,\"entries\":[\
+             {\"learner\":\"knn\",\"backend\":\"native\",\"findings\":[]},\
+             {\"learner\":\"cluster_label\",\"backend\":\"native\",\"findings\":[]},\
+             {\"learner\":\"run_state\",\"backend\":\"-\",\"findings\":[]}]}"
+        );
+    }
+}

@@ -324,7 +324,7 @@ impl Learner for ClusterLabelLearner {
     /// since-merge counters reset: the round's contribution is consumed.
     fn merge(
         &mut self,
-        peers: &[ModelSnapshot],
+        peers: &[&ModelSnapshot],
         _be: &mut dyn ComputeBackend,
         _now_us: u64,
         _expiry_us: Option<u64>,
@@ -528,7 +528,7 @@ mod tests {
         let (wa, wb) = (a.weights().to_vec(), b.weights().to_vec());
         let (ca, cb) = (a.counts, b.counts);
         let snap_b = b.snapshot().unwrap();
-        assert!(a.merge(&[snap_b], &mut be, 0, None).unwrap());
+        assert!(a.merge(&[&snap_b], &mut be, 0, None).unwrap());
         for c in 0..N_CLUSTERS {
             let (na, nb) = (ca[c] as f64, cb[c] as f64);
             assert!(na > 0.0 && nb > 0.0, "populations must hit both clusters");
@@ -561,9 +561,8 @@ mod tests {
         assert_eq!(donor.evaluate(&mut be).unwrap(), 1.0);
         // a cold shard (zero labels of its own) adopts weights AND votes
         let mut cold = ClusterLabelLearner::new(999, 0);
-        assert!(cold
-            .merge(&[donor.snapshot().unwrap()], &mut be, 0, None)
-            .unwrap());
+        let dsnap = donor.snapshot().unwrap();
+        assert!(cold.merge(&[&dsnap], &mut be, 0, None).unwrap());
         assert_eq!(cold.evaluate(&mut be).unwrap(), 1.0, "votes did not fuse");
         let mut correct = 0;
         for i in 0..20 {
@@ -585,7 +584,7 @@ mod tests {
         // merging a contribution-free snapshot moves nothing
         let w = cold.weights().to_vec();
         let idle = cold.snapshot().unwrap();
-        assert!(cold.merge(&[idle], &mut be, 0, None).unwrap());
+        assert!(cold.merge(&[&idle], &mut be, 0, None).unwrap());
         assert_eq!(cold.weights(), &w[..], "zero-count merge moved the weights");
     }
 
@@ -603,8 +602,8 @@ mod tests {
         for i in 0..10 {
             donor.learn(&population(&mut rng, i % 2 == 0), &mut be).unwrap();
         }
-        l.merge(&[donor.snapshot().unwrap()], &mut be, 0, None)
-            .unwrap();
+        let dsnap = donor.snapshot().unwrap();
+        l.merge(&[&dsnap], &mut be, 0, None).unwrap();
         let before = nvm.bytes_written;
         l.save_delta(&mut nvm).unwrap();
         let wrote = (nvm.bytes_written - before) as usize;

@@ -271,7 +271,7 @@ impl Learner for KnnAnomalyLearner {
     /// now also over the fleet).
     fn merge(
         &mut self,
-        peers: &[ModelSnapshot],
+        peers: &[&ModelSnapshot],
         be: &mut dyn ComputeBackend,
         now_us: u64,
         expiry_us: Option<u64>,
@@ -527,7 +527,7 @@ mod tests {
         let snap = donor.snapshot().expect("knn snapshots");
         // a cold shard adopts the whole donor ring
         let mut cold = KnnAnomalyLearner::new();
-        assert!(cold.merge(&[snap.clone()], &mut be, 1_000, None).unwrap());
+        assert!(cold.merge(&[&snap], &mut be, 1_000, None).unwrap());
         assert_eq!(cold.buffered(), 30);
         assert_eq!(cold.learned_count(), 30);
         assert!(cold.threshold() > 0.0);
@@ -539,7 +539,7 @@ mod tests {
         );
         // re-merging the same snapshot is a no-growth fixpoint (dedup)
         let again = cold.snapshot().unwrap();
-        assert!(cold.merge(&[snap, again], &mut be, 1_000, None).unwrap());
+        assert!(cold.merge(&[&snap, &again], &mut be, 1_000, None).unwrap());
         assert_eq!(cold.buffered(), 30, "duplicates inflated the ring");
         // an empty peer list is a no-op
         assert!(!cold.merge(&[], &mut be, 1_000, None).unwrap());
@@ -556,7 +556,7 @@ mod tests {
             new.learn(&normal_ex(&mut rng, 9_000 + i), &mut be).unwrap();
         }
         let newer = new.snapshot().unwrap();
-        assert!(old.merge(&[newer], &mut be, 20_000, None).unwrap());
+        assert!(old.merge(&[&newer], &mut be, 20_000, None).unwrap());
         // two full rings compete for N_BUF slots: only the newest survive,
         // which is exactly the peer's ring here
         assert_eq!(old.buffered(), N_BUF);
@@ -574,11 +574,11 @@ mod tests {
         let snap = donor.snapshot().unwrap();
         let mut cold = KnnAnomalyLearner::new();
         // expiry 50 µs at now = 1000 µs: every donor example is stale
-        assert!(cold.merge(&[snap.clone()], &mut be, 1_000, Some(50)).unwrap());
+        assert!(cold.merge(&[&snap], &mut be, 1_000, Some(50)).unwrap());
         assert_eq!(cold.buffered(), 0, "stale peer examples were adopted");
         // same merge with a lenient expiry adopts them all (boundary is
         // strict, matching sim::expire_stale)
-        assert!(cold.merge(&[snap], &mut be, 1_000, Some(2_000)).unwrap());
+        assert!(cold.merge(&[&snap], &mut be, 1_000, Some(2_000)).unwrap());
         assert_eq!(cold.buffered(), 20);
     }
 
@@ -596,8 +596,8 @@ mod tests {
         for t in 0..5 {
             donor.learn(&normal_ex(&mut rng, 100 + t), &mut be).unwrap();
         }
-        l.merge(&[donor.snapshot().unwrap()], &mut be, 1_000, None)
-            .unwrap();
+        let dsnap = donor.snapshot().unwrap();
+        l.merge(&[&dsnap], &mut be, 1_000, None).unwrap();
         // the next delta save must rewrite the whole model, not the (now
         // void) dirty set
         let before = nvm.bytes_written;

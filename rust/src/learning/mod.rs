@@ -169,7 +169,7 @@ pub trait Learner: Send {
     /// if any peer state was folded in. Default: merging unsupported.
     fn merge(
         &mut self,
-        peers: &[ModelSnapshot],
+        peers: &[&ModelSnapshot],
         be: &mut dyn ComputeBackend,
         now_us: u64,
         expiry_us: Option<u64>,

@@ -13,8 +13,10 @@
 //!   on-device learners ([`learning`]), the discrete-event intermittent
 //!   engine ([`sim`] — split into World/Executor/Policy layers with an
 //!   event-driven charge kernel; see `ARCHITECTURE.md`), the
-//!   intermittent-computing and offline-ML baselines ([`baselines`]) and
-//!   the full evaluation harness ([`eval`]).
+//!   intermittent-computing and offline-ML baselines ([`baselines`]), the
+//!   full evaluation harness ([`eval`]) and the intermittent-safety
+//!   analyzer ([`analysis`] — access-trace linting of every checkpoint
+//!   path for WAR/atomicity/delta/parity hazards, `ilearn analyze`).
 //! * **L2 (python/compile/model.py)** — the numeric payload of each action
 //!   (k-NN anomaly scoring, competitive-learning k-means, feature
 //!   extraction) as jitted JAX functions, AOT-lowered once to HLO text.
@@ -61,6 +63,7 @@
 //! step and the `ilearn` binary is self-contained afterwards.
 
 pub mod actions;
+pub mod analysis;
 pub mod apps;
 pub mod backend;
 pub mod baselines;

@@ -6,6 +6,7 @@
 //!   sweep   — expand a JSON grid spec and run every cell on worker threads
 //!   figure  — regenerate a paper figure/table (fig6c..fig17, table3..5)
 //!   inspect — energy pre-inspection of an app's action set (§3.5 tool)
+//!   analyze — intermittent-safety analysis of every checkpoint path
 //!   list    — list scenario presets, figures, heuristics, schedulers
 //!
 //! Examples:
@@ -37,6 +38,7 @@ fn main() -> Result<()> {
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("figure") => cmd_figure(&args[1..]),
         Some("inspect") => cmd_inspect(&args[1..]),
+        Some("analyze") => cmd_analyze(&args[1..]),
         Some("list") => cmd_list(),
         Some("help") | None => {
             print_help();
@@ -81,6 +83,14 @@ fn print_help() {
                --seed N --out DIR   write <id>.json under DIR\n\
            inspect <app>    energy pre-inspection (per-action worst case)\n\
                --budget-uj E    per-wake energy budget     [default: capacitor]\n\
+           analyze <scenario>... | analyze --all\n\
+                            lint every checkpoint path (learner x backend +\n\
+                            run-state) for WAR hazards (IL-WAR), unbracketed\n\
+                            writes (IL-ATOM), delta-checkpoint divergence\n\
+                            (IL-DELTA) and restore parity (IL-PARITY);\n\
+                            exits non-zero on any finding. Needs a dev\n\
+                            (debug_assertions) build: `cargo run -- analyze`\n\
+               --out DIR        write <scenario>.json reports under DIR\n\
            list             scenario presets, figures, schedulers, heuristics"
     );
 }
@@ -478,6 +488,70 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
             }
         }
     }
+    Ok(())
+}
+
+fn cmd_analyze(args: &[String]) -> Result<()> {
+    let mut names: Vec<String> = Vec::new();
+    let mut all = false;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--all" => all = true,
+            "--out" => i += 1, // value consumed by flag()
+            a if a.starts_with("--") => bail!("unknown analyze flag `{a}`"),
+            a => names.push(a.to_string()),
+        }
+        i += 1;
+    }
+    if all {
+        names = PRESETS.iter().map(|s| s.to_string()).collect();
+    } else if names.is_empty() {
+        bail!("usage: ilearn analyze <scenario>... | ilearn analyze --all [--out DIR]");
+    }
+    let out_dir = flag(args, "--out");
+    if let Some(dir) = &out_dir {
+        std::fs::create_dir_all(dir)?;
+    }
+    let t0 = std::time::Instant::now();
+    let mut total = 0usize;
+    for name in &names {
+        let report = ilearn::analysis::analyze_preset(name)
+            .with_context(|| format!("analyzing scenario `{name}`"))?;
+        total += report.findings_total();
+        println!("== analyze: {} ==", report.scenario);
+        for entry in &report.entries {
+            let verdict = if entry.findings.is_empty() {
+                "clean".to_string()
+            } else {
+                format!("{} finding(s)", entry.findings.len())
+            };
+            println!("  {:<14} {:<8} {verdict}", entry.learner, entry.backend);
+            for f in &entry.findings {
+                let range = match f.range {
+                    Some((s, e)) => format!(" [{s}..{e})"),
+                    None => String::new(),
+                };
+                println!("    {:<10} {}{range}: {}", f.rule, f.key, f.detail);
+            }
+        }
+        if let Some(dir) = &out_dir {
+            let path = format!("{dir}/{name}.json");
+            let mut text = report.to_json().to_string();
+            text.push('\n');
+            std::fs::write(&path, text)?;
+            eprintln!("wrote {path}");
+        }
+    }
+    eprintln!(
+        "({} scenario(s) analyzed in {:.1}s)",
+        names.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    if total > 0 {
+        bail!("intermittent-safety analysis found {total} issue(s)");
+    }
+    println!("all checkpoint paths clean.");
     Ok(())
 }
 

@@ -1,0 +1,143 @@
+//! Access-trace recorder for the intermittent-safety analyzer.
+//!
+//! The auditor shadows the [`Nvm`](super::Nvm) store: when armed (debug
+//! builds only — see `Nvm::audit_start`), every transaction bracket and
+//! every byte-level read/write is appended to an [`AccessTrace`]. The
+//! `analysis` module lints that trace for write-after-read hazards,
+//! writes outside transactions, and save/restore key parity.
+//!
+//! Events are plain data so the lint rules stay pure functions over the
+//! trace; the recorder itself makes no judgements. Recording is gated by
+//! `cfg(debug_assertions)` at the `Nvm` hook sites, so the release hot
+//! path compiles the hooks down to nothing.
+
+/// One recorded store operation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AccessEvent {
+    /// `begin_action` succeeded.
+    Begin,
+    /// `commit_action` succeeded.
+    Commit,
+    /// `abort_action` rolled back an open transaction.
+    Abort,
+    /// A read of `range` bytes of `key`. `committed` holds the sub-ranges
+    /// of the read that observed *committed pre-action* state — i.e. the
+    /// read range minus the spans staged earlier in the same transaction
+    /// (read-your-writes never observes committed bytes) and clipped to
+    /// the committed value's length. Only committed observations can
+    /// participate in a write-after-read hazard.
+    Read {
+        key: String,
+        range: (usize, usize),
+        committed: Vec<(usize, usize)>,
+        in_txn: bool,
+    },
+    /// A write of `range` bytes of `key`. `full` marks whole-value
+    /// overwrites (`write_id` / `write_f32s_id`), which replace the slot
+    /// irrespective of its prior contents and therefore replay cleanly.
+    Write {
+        key: String,
+        range: (usize, usize),
+        full: bool,
+        in_txn: bool,
+    },
+}
+
+/// An ordered recording of store operations.
+#[derive(Debug, Clone, Default)]
+pub struct AccessTrace {
+    pub events: Vec<AccessEvent>,
+}
+
+impl AccessTrace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Sort half-open byte ranges and merge overlapping/adjacent ones.
+/// Empty ranges are dropped.
+pub fn normalize(mut ranges: Vec<(usize, usize)>) -> Vec<(usize, usize)> {
+    ranges.retain(|&(s, e)| e > s);
+    ranges.sort_unstable();
+    let mut out: Vec<(usize, usize)> = Vec::with_capacity(ranges.len());
+    for (s, e) in ranges {
+        match out.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => out.push((s, e)),
+        }
+    }
+    out
+}
+
+/// Subtract every range in `cuts` from `whole`, returning the surviving
+/// sub-ranges in order. `cuts` need not be normalized.
+pub fn subtract(whole: (usize, usize), cuts: &[(usize, usize)]) -> Vec<(usize, usize)> {
+    let cuts = normalize(cuts.to_vec());
+    let mut out = Vec::new();
+    let (mut cursor, end) = whole;
+    for (cs, ce) in cuts {
+        if ce <= cursor {
+            continue;
+        }
+        if cs >= end {
+            break;
+        }
+        if cs > cursor {
+            out.push((cursor, cs.min(end)));
+        }
+        cursor = cursor.max(ce);
+        if cursor >= end {
+            break;
+        }
+    }
+    if cursor < end {
+        out.push((cursor, end));
+    }
+    out
+}
+
+/// First intersection of `range` with any range in `list`, if one exists.
+pub fn overlap(range: (usize, usize), list: &[(usize, usize)]) -> Option<(usize, usize)> {
+    let (s, e) = range;
+    list.iter()
+        .filter_map(|&(ls, le)| {
+            let lo = s.max(ls);
+            let hi = e.min(le);
+            (hi > lo).then_some((lo, hi))
+        })
+        .next()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_merges_and_drops_empty() {
+        let got = normalize(vec![(8, 12), (0, 4), (4, 6), (10, 10), (11, 14)]);
+        assert_eq!(got, vec![(0, 6), (8, 14)]);
+        assert!(normalize(vec![]).is_empty());
+    }
+
+    #[test]
+    fn subtract_carves_cuts_out_of_the_whole() {
+        assert_eq!(subtract((0, 10), &[]), vec![(0, 10)]);
+        assert_eq!(subtract((0, 10), &[(2, 4), (6, 8)]), vec![(0, 2), (4, 6), (8, 10)]);
+        assert_eq!(subtract((0, 10), &[(0, 10)]), Vec::<(usize, usize)>::new());
+        assert_eq!(subtract((4, 8), &[(0, 5), (7, 12)]), vec![(5, 7)]);
+        // cuts outside the whole are ignored
+        assert_eq!(subtract((4, 8), &[(0, 2), (9, 12)]), vec![(4, 8)]);
+    }
+
+    #[test]
+    fn overlap_finds_the_first_intersection() {
+        assert_eq!(overlap((4, 8), &[(0, 2), (6, 10)]), Some((6, 8)));
+        assert_eq!(overlap((4, 8), &[(0, 4), (8, 12)]), None);
+        assert_eq!(overlap((0, 0), &[(0, 4)]), None);
+    }
+}

@@ -31,6 +31,8 @@
 //! transactions, so after warm-up the write/commit cycle performs no heap
 //! allocation.
 
+pub mod audit;
+
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -101,6 +103,11 @@ pub struct Nvm {
     pub bytes_read: u64,
     pub commits: u64,
     pub aborts: u64,
+    /// Armed access-trace recorder (debug builds; see [`Nvm::audit_start`]).
+    /// Boxed so the idle field costs one pointer; not cloned — a clone is a
+    /// different store and starts unobserved.
+    #[cfg(debug_assertions)]
+    audit: Option<Box<audit::AccessTrace>>,
 }
 
 impl Clone for Nvm {
@@ -122,6 +129,8 @@ impl Clone for Nvm {
             bytes_read: self.bytes_read,
             commits: self.commits,
             aborts: self.aborts,
+            #[cfg(debug_assertions)]
+            audit: None,
         }
     }
 }
@@ -141,6 +150,8 @@ impl Default for Nvm {
             bytes_read: 0,
             commits: 0,
             aborts: 0,
+            #[cfg(debug_assertions)]
+            audit: None,
         }
     }
 }
@@ -192,6 +203,94 @@ impl Nvm {
             .ok_or_else(|| Error::Nvm(format!("stale key handle {}", id.0)))
     }
 
+    // ---- access auditing (intermittent-safety analyzer) ----------------
+
+    /// Arm the access-trace recorder: every subsequent transaction bracket
+    /// and byte-level read/write is appended to a fresh trace until
+    /// [`Nvm::audit_take`] disarms it. Debug builds only — the release
+    /// twin is a no-op so the hot path stays unobserved.
+    #[cfg(debug_assertions)]
+    pub fn audit_start(&mut self) {
+        self.audit = Some(Box::new(audit::AccessTrace::new()));
+    }
+
+    /// Release twin of [`Nvm::audit_start`]: recording unavailable.
+    #[cfg(not(debug_assertions))]
+    pub fn audit_start(&mut self) {}
+
+    /// Disarm the recorder and take the trace recorded since
+    /// [`Nvm::audit_start`] (`None` if never armed, and always `None` in
+    /// release builds).
+    #[cfg(debug_assertions)]
+    pub fn audit_take(&mut self) -> Option<audit::AccessTrace> {
+        self.audit.take().map(|t| *t)
+    }
+
+    /// Release twin of [`Nvm::audit_take`]: recording unavailable.
+    #[cfg(not(debug_assertions))]
+    pub fn audit_take(&mut self) -> Option<audit::AccessTrace> {
+        None
+    }
+
+    #[cfg(debug_assertions)]
+    fn audit_mark(&mut self, event: audit::AccessEvent) {
+        if let Some(trace) = self.audit.as_mut() {
+            trace.events.push(event);
+        }
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[inline(always)]
+    fn audit_mark(&mut self, _event: audit::AccessEvent) {}
+
+    /// Record a read of the first `len` bytes of `id`, splitting out the
+    /// sub-ranges that observed committed pre-action state (the read range
+    /// minus spans staged earlier in this transaction, clipped to the
+    /// committed length) — only those can feed a write-after-read hazard.
+    #[cfg(debug_assertions)]
+    fn audit_read(&mut self, id: KeyId, len: usize) {
+        if self.audit.is_none() {
+            return;
+        }
+        let slot = &self.slots[id.0 as usize];
+        let climit = if slot.present {
+            len.min(slot.committed.len())
+        } else {
+            0
+        };
+        let event = audit::AccessEvent::Read {
+            key: slot.name.clone(),
+            range: (0, len),
+            committed: audit::subtract((0, climit), &slot.dirty),
+            in_txn: self.txn_open,
+        };
+        self.audit.as_mut().unwrap().events.push(event);
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[inline(always)]
+    fn audit_read(&mut self, _id: KeyId, _len: usize) {}
+
+    /// Record a write of `range` bytes of `id` (`full` = whole-value
+    /// overwrite, which replays cleanly and is exempt from WAR analysis).
+    #[cfg(debug_assertions)]
+    fn audit_write(&mut self, id: KeyId, range: (usize, usize), full: bool) {
+        if self.audit.is_none() {
+            return;
+        }
+        let event = audit::AccessEvent::Write {
+            key: self.slots[id.0 as usize].name.clone(),
+            range,
+            full,
+            in_txn: self.txn_open,
+        };
+        self.audit.as_mut().unwrap().events.push(event);
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[inline(always)]
+    fn audit_write(&mut self, _id: KeyId, _range: (usize, usize), _full: bool) {}
+
     /// Open an action transaction. Nested transactions are an error (an
     /// intermittent MCU runs one action at a time).
     pub fn begin_action(&mut self) -> Result<()> {
@@ -200,6 +299,7 @@ impl Nvm {
         }
         self.txn_open = true;
         self.staged_used = self.used;
+        self.audit_mark(audit::AccessEvent::Begin);
         Ok(())
     }
 
@@ -222,6 +322,7 @@ impl Nvm {
         self.used = self.staged_used;
         self.txn_open = false;
         self.commits += 1;
+        self.audit_mark(audit::AccessEvent::Commit);
         Ok(())
     }
 
@@ -238,6 +339,7 @@ impl Nvm {
         self.staged_used = self.used;
         self.txn_open = false;
         self.aborts += 1;
+        self.audit_mark(audit::AccessEvent::Abort);
     }
 
     /// Is an action transaction open?
@@ -336,6 +438,7 @@ impl Nvm {
             slot.present = true;
         }
         self.account_write(old_len, bytes.len(), bytes.len());
+        self.audit_write(id, (0, bytes.len()), true);
         Ok(())
     }
 
@@ -376,6 +479,7 @@ impl Nvm {
             slot.present = true;
         }
         self.account_write(old_len, new_len, bytes.len());
+        self.audit_write(id, (offset, end), false);
         Ok(())
     }
 
@@ -390,12 +494,25 @@ impl Nvm {
             return None;
         };
         self.bytes_read += len as u64;
+        self.audit_read(id, len);
         let slot = &self.slots[id.0 as usize];
         Some(if slot.staged_present {
             &slot.staged
         } else {
             &slot.committed
         })
+    }
+
+    /// Committed bytes at `id`, bypassing staging, read accounting, and
+    /// the audit recorder — the analyzer's twin-comparison peek.
+    pub fn committed_id(&self, id: KeyId) -> Option<&[u8]> {
+        let slot = self.slots.get(id.0 as usize)?;
+        slot.present.then_some(slot.committed.as_slice())
+    }
+
+    /// Iterate every interned key with its handle, in name order.
+    pub fn keys(&self) -> impl Iterator<Item = (&str, KeyId)> + '_ {
+        self.index.iter().map(|(k, &id)| (k.as_str(), id))
     }
 
     /// Does a committed or staged value exist at `id`?
@@ -435,6 +552,7 @@ impl Nvm {
             slot.present = true;
         }
         self.account_write(old_len, new_len, new_len);
+        self.audit_write(id, (0, new_len), true);
         Ok(())
     }
 
@@ -478,6 +596,7 @@ impl Nvm {
             slot.present = true;
         }
         self.account_write(old_len, new_len, xs.len() * 4);
+        self.audit_write(id, (offset, end), false);
         Ok(())
     }
 
@@ -489,6 +608,7 @@ impl Nvm {
             return false;
         }
         self.bytes_read += (out.len() * 4) as u64;
+        self.audit_read(id, out.len() * 4);
         let slot = &self.slots[id.0 as usize];
         let bytes: &[u8] = if slot.staged_present {
             &slot.staged
@@ -742,6 +862,79 @@ mod tests {
         nvm.abort_action();
         assert_eq!(nvm.used_bytes(), 10);
         assert!(!nvm.contains("c"));
+    }
+
+    #[test]
+    fn audit_records_brackets_reads_and_writes() {
+        use audit::AccessEvent;
+        let mut nvm = Nvm::new();
+        let id = nvm.intern("buf");
+        nvm.write_f32s_id(id, &[0.0; 4]).unwrap(); // pre-trace: not recorded
+        nvm.audit_start();
+        nvm.begin_action().unwrap();
+        nvm.write_f32s_at(id, 1, &[5.0]).unwrap();
+        nvm.read_f32s_id(id).unwrap();
+        nvm.commit_action().unwrap();
+        let trace = nvm.audit_take().unwrap();
+        assert_eq!(trace.events.len(), 4, "{:?}", trace.events);
+        assert_eq!(trace.events[0], AccessEvent::Begin);
+        assert_eq!(
+            trace.events[1],
+            AccessEvent::Write {
+                key: "buf".into(),
+                range: (4, 8),
+                full: false,
+                in_txn: true
+            }
+        );
+        // the read observes committed bytes everywhere except the staged span
+        assert_eq!(
+            trace.events[2],
+            AccessEvent::Read {
+                key: "buf".into(),
+                range: (0, 16),
+                committed: vec![(0, 4), (8, 16)],
+                in_txn: true
+            }
+        );
+        assert_eq!(trace.events[3], AccessEvent::Commit);
+        // taking the trace disarms the recorder
+        nvm.read_f32s_id(id).unwrap();
+        assert!(nvm.audit_take().is_none());
+    }
+
+    #[test]
+    fn audit_marks_full_overwrites_and_untransacted_writes() {
+        use audit::AccessEvent;
+        let mut nvm = Nvm::new();
+        let id = nvm.intern("gen");
+        nvm.audit_start();
+        nvm.write_u64_id(id, 3).unwrap(); // outside any transaction
+        let trace = nvm.audit_take().unwrap();
+        assert_eq!(
+            trace.events[0],
+            AccessEvent::Write {
+                key: "gen".into(),
+                range: (0, 8),
+                full: true,
+                in_txn: false
+            }
+        );
+    }
+
+    #[test]
+    fn committed_peek_bypasses_staging_and_accounting() {
+        let mut nvm = Nvm::new();
+        let id = nvm.intern("x");
+        nvm.write_id(id, &[1, 2]).unwrap();
+        nvm.begin_action().unwrap();
+        nvm.write_id(id, &[9, 9]).unwrap();
+        let before = nvm.bytes_read;
+        assert_eq!(nvm.committed_id(id), Some(&[1u8, 2][..]));
+        assert_eq!(nvm.bytes_read, before);
+        nvm.abort_action();
+        let keys: Vec<&str> = nvm.keys().map(|(k, _)| k).collect();
+        assert_eq!(keys, vec!["x"]);
     }
 
     #[test]

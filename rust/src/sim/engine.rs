@@ -358,7 +358,7 @@ impl Engine {
     /// and persist the merged model (the delta path degrades to a full
     /// save after a merge), charging the checkpoint traffic at the
     /// model's NVM byte rate exactly like the learn path does.
-    pub fn apply_sync(&mut self, peers: &[crate::learning::ModelSnapshot]) -> Result<()> {
+    pub fn apply_sync(&mut self, peers: &[&crate::learning::ModelSnapshot]) -> Result<()> {
         if peers.is_empty() {
             return Ok(());
         }
@@ -371,7 +371,14 @@ impl Engine {
             return Ok(());
         }
         let w0 = self.exec.nvm.bytes_written;
-        self.learner.save_delta(&mut self.exec.nvm)?;
+        // atomic checkpoint: a power failure mid-save must not tear the
+        // merged model (the intermittent-safety analyzer's IL-ATOM rule)
+        self.exec.nvm.begin_action()?;
+        if let Err(err) = self.learner.save_delta(&mut self.exec.nvm) {
+            self.exec.nvm.abort_action();
+            return Err(err);
+        }
+        self.exec.nvm.commit_action()?;
         let ckpt_uj = self.costs.nvm_uj_per_byte * (self.exec.nvm.bytes_written - w0) as f64;
         if ckpt_uj > 0.0 {
             let avail = self.world.cap.usable_uj().max(0.0);
@@ -598,9 +605,16 @@ impl Engine {
                     .ok_or_else(|| Error::Nvm("learn without example".into()))?;
                 self.learner.learn(e, self.backend.as_mut())?;
                 // O(dirty) delta checkpoint: only the slots this learn
-                // touched hit NVM (the first call degrades to a full save)
+                // touched hit NVM (the first call degrades to a full save),
+                // bracketed so a power failure mid-save cannot tear the
+                // committed model (the analyzer's IL-ATOM rule)
                 let w0 = self.exec.nvm.bytes_written;
-                self.learner.save_delta(&mut self.exec.nvm)?;
+                self.exec.nvm.begin_action()?;
+                if let Err(err) = self.learner.save_delta(&mut self.exec.nvm) {
+                    self.exec.nvm.abort_action();
+                    return Err(err);
+                }
+                self.exec.nvm.commit_action()?;
                 // Optionally charge the actual checkpoint traffic (the
                 // calibrated learn cost already includes a full-model
                 // save, so the default rate is 0 — see `CostModel`).
@@ -687,9 +701,17 @@ impl Engine {
             voltage: self.world.cap.voltage(),
         });
         // persist the aggregates (O(new records) — append-only deltas) so
-        // an interrupted run restores them from NVM after a host restart
-        self.run_state
-            .save(&mut self.exec.nvm, &self.result, &self.meter)?;
+        // an interrupted run restores them from NVM after a host restart —
+        // atomically, so a half-written stats save never becomes visible
+        self.exec.nvm.begin_action()?;
+        if let Err(err) = self
+            .run_state
+            .save(&mut self.exec.nvm, &self.result, &self.meter)
+        {
+            self.exec.nvm.abort_action();
+            return Err(err);
+        }
+        self.exec.nvm.commit_action()?;
         Ok(())
     }
 }
@@ -919,7 +941,7 @@ mod tests {
         assert!(donor_learned > 0, "donor learned nothing");
         let snap = donor.learner.snapshot().unwrap();
         let mut e = small_engine(0.010, 600);
-        e.apply_sync(&[snap]).unwrap();
+        e.apply_sync(&[&snap]).unwrap();
         assert_eq!(e.learner.learned_count(), donor_learned);
         // the merged model hit NVM: a cold learner restores it
         let mut back = KnnAnomalyLearner::new();

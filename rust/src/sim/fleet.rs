@@ -352,7 +352,7 @@ impl<'a, F: ShardFactory + ?Sized> Fleet<'a, F> {
         impl RoundPlan {
             /// The snapshots shard `i` merges this round (empty if it sat
             /// the round out or is the only participant).
-            fn peers_for(&self, shard: usize, strategy: SyncStrategy) -> Vec<ModelSnapshot> {
+            fn peers_for(&self, shard: usize, strategy: SyncStrategy) -> Vec<&ModelSnapshot> {
                 let m = self.participants.len();
                 let Some(pos) = self.participants.iter().position(|&(i, _)| i == shard) else {
                     return Vec::new();
@@ -365,14 +365,14 @@ impl<'a, F: ShardFactory + ?Sized> Fleet<'a, F> {
                         .participants
                         .iter()
                         .filter(|&&(i, _)| i != shard)
-                        .map(|(_, s)| s.clone())
+                        .map(|(_, s)| s)
                         .collect(),
                     SyncStrategy::Gossip => {
                         // rotating ring partner: the offset walks 1..m-1
                         // across rounds, so the gossip graph reaches every
                         // pair without ever pairing a shard with itself
                         let offset = 1 + self.round % (m - 1);
-                        vec![self.participants[(pos + offset) % m].1.clone()]
+                        vec![&self.participants[(pos + offset) % m].1]
                     }
                 }
             }

@@ -13,6 +13,15 @@ use ilearn::sim::engine::Engine;
 use ilearn::sim::{PlannerScheduler, SimConfig};
 use ilearn::util::Rng;
 
+/// Drain `nvm`'s access trace and assert the intermittent-safety analyzer
+/// finds nothing in it (debug builds; a release-profile run has no trace).
+fn assert_audit_clean(nvm: &mut Nvm, which: &str) {
+    if let Some(trace) = nvm.audit_take() {
+        let findings = ilearn::analysis::lint_trace(&trace);
+        assert!(findings.is_empty(), "analyzer findings ({which}): {findings:?}");
+    }
+}
+
 fn engine_with_trace(points: Vec<(u64, f64)>, horizon_s: u64) -> Engine {
     let profile = ilearn::sensors::accel::MotionProfile::alternating_hours(1.0, 3.0, 8);
     let sensor = ilearn::sensors::accel::Accel::new(profile, 3);
@@ -128,6 +137,8 @@ fn prop_delta_saves_with_aborts_match_full_save_baseline() {
         let mut be_f = NativeBackend::new();
         let mut nvm_d = Nvm::new();
         let mut nvm_f = Nvm::new();
+        nvm_d.audit_start();
+        nvm_f.audit_start();
         let mut ld = KnnAnomalyLearner::new();
         let mut lf = KnnAnomalyLearner::new();
         for t in 0..80u64 {
@@ -185,6 +196,8 @@ fn prop_delta_saves_with_aborts_match_full_save_baseline() {
             nvm_d.bytes_written,
             nvm_f.bytes_written
         );
+        assert_audit_clean(&mut nvm_d, "delta store");
+        assert_audit_clean(&mut nvm_f, "full store");
     });
 }
 
@@ -217,6 +230,8 @@ fn prop_merge_then_delta_save_with_aborts_matches_full_save_baseline() {
         let mut be_f = NativeBackend::new();
         let mut nvm_d = Nvm::new();
         let mut nvm_f = Nvm::new();
+        nvm_d.audit_start();
+        nvm_f.audit_start();
         let mut ld = KnnAnomalyLearner::new();
         let mut lf = KnnAnomalyLearner::new();
         for t in 0..60u64 {
@@ -227,11 +242,11 @@ fn prop_merge_then_delta_save_with_aborts_matches_full_save_baseline() {
             // a sync boundary fires on ~1/4 of the steps: both twins merge
             // the same peer snapshot(s) at the same instant
             if rng.f32() < 0.25 {
-                let donor = donors[(rng.f32() * 3.99) as usize].clone();
+                let donor = &donors[(rng.f32() * 3.99) as usize];
                 let now = 20_000 + t;
                 let expiry = if rng.f32() < 0.5 { Some(15_000) } else { None };
                 assert_eq!(
-                    ld.merge(&[donor.clone()], &mut be_d, now, expiry).unwrap(),
+                    ld.merge(&[donor], &mut be_d, now, expiry).unwrap(),
                     lf.merge(&[donor], &mut be_f, now, expiry).unwrap()
                 );
             }
@@ -273,6 +288,8 @@ fn prop_merge_then_delta_save_with_aborts_matches_full_save_baseline() {
                 lf.infer(&ex, &mut be_f).unwrap()
             );
         }
+        assert_audit_clean(&mut nvm_d, "delta store");
+        assert_audit_clean(&mut nvm_f, "full store");
     });
 }
 
@@ -303,6 +320,8 @@ fn prop_kmeans_merge_then_delta_save_matches_full_save_baseline() {
         let mut be_f = NativeBackend::new();
         let mut nvm_d = Nvm::new();
         let mut nvm_f = Nvm::new();
+        nvm_d.audit_start();
+        nvm_f.audit_start();
         let mut ld = ClusterLabelLearner::new(9, 20);
         let mut lf = ClusterLabelLearner::new(9, 20);
         for t in 0..50u64 {
@@ -316,8 +335,8 @@ fn prop_kmeans_merge_then_delta_save_matches_full_save_baseline() {
             ld.learn(&ex, &mut be_d).unwrap();
             lf.learn(&ex, &mut be_f).unwrap();
             if rng.f32() < 0.25 {
-                let donor = donors[(rng.f32() * 2.99) as usize].clone();
-                ld.merge(&[donor.clone()], &mut be_d, t, None).unwrap();
+                let donor = &donors[(rng.f32() * 2.99) as usize];
+                ld.merge(&[donor], &mut be_d, t, None).unwrap();
                 lf.merge(&[donor], &mut be_f, t, None).unwrap();
             }
             let abort = rng.f32() < 0.3;
@@ -345,6 +364,8 @@ fn prop_kmeans_merge_then_delta_save_matches_full_save_baseline() {
             assert_eq!(ld.learned_count(), lf.learned_count());
             assert_eq!(ld.labels_remaining(), lf.labels_remaining());
         }
+        assert_audit_clean(&mut nvm_d, "delta store");
+        assert_audit_clean(&mut nvm_f, "full store");
     });
 }
 
@@ -358,6 +379,8 @@ fn prop_kmeans_delta_saves_match_full_save_baseline() {
         let mut be_f = NativeBackend::new();
         let mut nvm_d = Nvm::new();
         let mut nvm_f = Nvm::new();
+        nvm_d.audit_start();
+        nvm_f.audit_start();
         let mut ld = ClusterLabelLearner::new(9, 20);
         let mut lf = ClusterLabelLearner::new(9, 20);
         for t in 0..60u64 {
@@ -398,6 +421,8 @@ fn prop_kmeans_delta_saves_match_full_save_baseline() {
             assert_eq!(ld.labels_remaining(), lf.labels_remaining());
         }
         assert!(nvm_d.bytes_written < nvm_f.bytes_written);
+        assert_audit_clean(&mut nvm_d, "delta store");
+        assert_audit_clean(&mut nvm_f, "full store");
     });
 }
 
