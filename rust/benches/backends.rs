@@ -132,8 +132,10 @@ fn main() {
             );
         }
     });
+    let mut scores = vec![0.0f32; BATCH];
     let batched = bench("pjrt knn_infer_batch (one dispatch)", 500, || {
-        black_box(pjrt.knn_infer_batch(&ex, &mask, &xs).unwrap());
+        pjrt.knn_infer_batch(&ex, &mask, &xs, &mut scores).unwrap();
+        black_box(scores[0]);
     });
     println!("{}", scalar.row());
     println!("{}", batched.row());

@@ -1,0 +1,129 @@
+//! Population-scale fleet benchmark: the streaming (fold-and-drop)
+//! fan-in at shard counts where retaining per-shard results is not an
+//! option, tracked through `BENCH_megafleet.json` (written at the repo
+//! root when run from `rust/`).
+//!
+//!     cargo bench --bench fleet_scale            # full: 10^5-shard run + JSON
+//!     cargo bench --bench fleet_scale -- --smoke # CI: parity + memory ceiling
+//!
+//! `--smoke` asserts the streaming contract cheaply: the streamed rollup
+//! is bit-identical to the retained per-shard path on a small fleet
+//! (threads 1 and all), then a 10^5-shard short-horizon fleet completes
+//! with peak RSS under a fixed ceiling — the point of fold-and-drop.
+//! Full mode runs the same population at a longer horizon and records
+//! shards/sec, peak RSS and pool telemetry.
+
+use ilearn::scenario::{preset, FleetSpec, ScenarioSpec};
+use ilearn::util::json::Json;
+use std::time::Instant;
+
+const H: u64 = 3_600_000_000;
+const MIN: u64 = 60_000_000;
+
+fn fleet_spec(shards: u32, horizon_us: u64, jitter_us: u64) -> ScenarioSpec {
+    let mut spec = preset("vibration", 42, horizon_us).expect("preset");
+    spec.fleet = Some(FleetSpec {
+        shards,
+        phase_jitter_us: jitter_us,
+        seed_stride: 1,
+        overrides: vec![],
+        sync: None,
+        stream: Some(true),
+    });
+    spec
+}
+
+/// Peak resident set (VmHWM) in bytes from `/proc/self/status`; `None`
+/// off Linux.
+fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
+fn smoke() {
+    let t0 = Instant::now();
+    // contract: the streamed rollup equals the retained path bit for bit
+    let spec = fleet_spec(6, H, 30_000_000);
+    let retained = spec.run_fleet(1).expect("retained fleet");
+    for threads in [1, 0] {
+        let streamed = spec.run_fleet_streaming(threads).expect("streamed fleet");
+        assert_eq!(
+            streamed.rollup.to_json().to_string(),
+            retained.rollup.to_json().to_string(),
+            "streamed rollup diverged from the retained path (threads {threads})"
+        );
+    }
+    // scale: 10^5 short-horizon shards, folded in bounded memory
+    const SHARDS: u32 = 100_000;
+    const CEILING_BYTES: u64 = 800 * 1024 * 1024;
+    let big = fleet_spec(SHARDS, 2 * MIN, 1_000_000);
+    let r = big.run_fleet_streaming(0).expect("mega fleet");
+    assert_eq!(r.rollup.shards, SHARDS as usize);
+    assert_eq!(r.sketches.energy_uj.count(), u64::from(SHARDS));
+    // every lane after its first shard recycles the slab + backend
+    assert!(r.slab_reuses >= u64::from(SHARDS) - r.workers as u64);
+    assert!(r.backend_reuses >= u64::from(SHARDS) - r.workers as u64);
+    if let Some(rss) = peak_rss_bytes() {
+        assert!(
+            rss < CEILING_BYTES,
+            "peak RSS {} MiB breached the {} MiB streaming ceiling",
+            rss >> 20,
+            CEILING_BYTES >> 20
+        );
+    }
+    println!(
+        "fleet_scale --smoke: rollup parity + {SHARDS} shards streamed ok ({:.1}s)",
+        t0.elapsed().as_secs_f64()
+    );
+}
+
+fn full() {
+    const SHARDS: u32 = 100_000;
+    const SIM_MIN: u64 = 20;
+    let spec = fleet_spec(SHARDS, SIM_MIN * MIN, 1_000_000);
+    let t0 = Instant::now();
+    let r = spec.run_fleet_streaming(0).expect("mega fleet");
+    let secs = t0.elapsed().as_secs_f64();
+    let rate = f64::from(SHARDS) / secs.max(1e-9);
+    let rss_mib = peak_rss_bytes().map(|b| b as f64 / (1024.0 * 1024.0));
+    println!(
+        "megafleet: {SHARDS} shards x {SIM_MIN} sim-min on {} worker(s) in {secs:.1}s \
+         ({rate:.0} shards/s, peak RSS {})",
+        r.workers,
+        rss_mib.map_or("n/a".into(), |m| format!("{m:.0} MiB")),
+    );
+    println!(
+        "  pooled: {} slab reuse(s), {} backend reuse(s); mean final accuracy {:.3}",
+        r.slab_reuses, r.backend_reuses, r.rollup.final_accuracy.mean
+    );
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("megafleet".into())),
+        ("shards", Json::Num(f64::from(SHARDS))),
+        ("sim_minutes_per_shard", Json::Num(SIM_MIN as f64)),
+        ("wall_s", Json::Num(secs)),
+        ("shards_per_sec", Json::Num(rate)),
+        ("workers", Json::Num(r.workers as f64)),
+        ("peak_rss_mib", rss_mib.map_or(Json::Null, Json::Num)),
+        ("slab_reuses", Json::Num(r.slab_reuses as f64)),
+        ("backend_reuses", Json::Num(r.backend_reuses as f64)),
+        ("learned_total", Json::Num(r.rollup.learned.total)),
+        ("final_accuracy_mean", Json::Num(r.rollup.final_accuracy.mean)),
+        ("energy_uj_p99", Json::Num(r.sketches.energy_uj.quantile(0.99))),
+    ]);
+    let path = "../BENCH_megafleet.json";
+    match std::fs::write(path, doc.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    let smoke_mode = std::env::args().any(|a| a == "--smoke");
+    if smoke_mode {
+        smoke();
+    } else {
+        full();
+    }
+}

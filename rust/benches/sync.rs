@@ -86,6 +86,7 @@ fn synced_fleet_spec(shards: u32, hours: u64, period_us: u64) -> ilearn::scenari
             strategy: SyncStrategy::Gossip,
             radio: None,
         }),
+        stream: None,
     });
     spec
 }

@@ -45,11 +45,52 @@ pub mod shapes {
     pub const KLAST: usize = 4;
 }
 
+/// One shard's k-NN `learn` slice of a wake-cohort call. The caller
+/// (a population-scale fleet) lays shard state out struct-of-arrays —
+/// flat per-lane buffers with disjoint `&mut` slices — and hands the
+/// whole cohort to the backend in one [`ComputeBackend::knn_learn_cohort`]
+/// call instead of one `knn_learn` call per shard.
+pub struct KnnLearnJob<'a> {
+    /// Cohort lane: the shard's stable slot across batched calls.
+    /// Backends key per-lane incremental caches on it.
+    pub lane: usize,
+    /// (N_BUF, FEAT_DIM) example buffer.
+    pub examples: &'a [f32],
+    /// (N_BUF) validity mask.
+    pub mask: &'a [f32],
+    /// Out: per-example anomaly scores (len N_BUF, caller scratch).
+    pub scores: &'a mut [f32],
+    /// Out: the recomputed anomaly threshold.
+    pub threshold: &'a mut f32,
+}
+
+/// One shard's k-means `learn` slice of a wake-cohort call.
+pub struct KmeansLearnJob<'a> {
+    /// Cohort lane (see [`KnnLearnJob::lane`]).
+    pub lane: usize,
+    /// (N_CLUSTERS, FEAT_DIM) centroids, updated in place.
+    pub w: &'a mut [f32],
+    /// The example to fold in.
+    pub x: &'a [f32],
+    pub eta: f32,
+    /// Out: cluster activations.
+    pub acts: &'a mut [f32; shapes::N_CLUSTERS],
+    /// Out: the winning cluster.
+    pub winner: &'a mut usize,
+}
+
 /// Numeric payloads of the learning actions. All buffers are row-major
 /// f32 at the canonical shapes above.
 ///
 /// Not `Send`: the PJRT client is thread-pinned; parallel sweeps build one
 /// engine (and backend) per worker thread instead of sharing one.
+///
+/// The `*_cohort` entry points take every shard that woke at the same
+/// event in one call. Their default implementations are the scalar loop
+/// (bit-identical by construction); backends override them to batch —
+/// the pjrt backend rides the BATCH-wide artifacts and per-lane device
+/// caches, so a thousand-shard wake costs ~n/BATCH dispatches instead
+/// of n.
 pub trait ComputeBackend {
     /// `extract`: (WINDOW, CHANNELS) window -> (CHANNELS * N_FEATURES)
     /// flattened feature matrix.
@@ -64,8 +105,55 @@ pub trait ComputeBackend {
     /// k-NN `infer`: anomaly score of one example against the buffer.
     fn knn_infer(&mut self, examples: &[f32], mask: &[f32], x: &[f32]) -> Result<f32>;
 
-    /// Batched k-NN `infer` ((BATCH, FEAT_DIM) queries).
-    fn knn_infer_batch(&mut self, examples: &[f32], mask: &[f32], xs: &[f32]) -> Result<Vec<f32>>;
+    /// Batched k-NN `infer` ((BATCH, FEAT_DIM) queries). Writes the
+    /// BATCH scores into `scores` (caller-owned scratch — allocation-free,
+    /// like `knn_learn`).
+    fn knn_infer_batch(
+        &mut self,
+        examples: &[f32],
+        mask: &[f32],
+        xs: &[f32],
+        scores: &mut [f32],
+    ) -> Result<()>;
+
+    /// Wake-cohort k-NN `infer`: score `queries` (flat, any count ×
+    /// FEAT_DIM) against one example buffer, writing one score per query
+    /// into `scores`. Used for a shard's whole evaluation probe set (and
+    /// any same-model query cohort) in one backend call.
+    fn knn_infer_cohort(
+        &mut self,
+        examples: &[f32],
+        mask: &[f32],
+        queries: &[f32],
+        scores: &mut [f32],
+    ) -> Result<()> {
+        debug_assert_eq!(queries.len(), scores.len() * shapes::FEAT_DIM);
+        for (q, s) in queries
+            .chunks_exact(shapes::FEAT_DIM)
+            .zip(scores.iter_mut())
+        {
+            *s = self.knn_infer(examples, mask, q)?;
+        }
+        Ok(())
+    }
+
+    /// Wake-cohort k-NN `learn`: one call for every shard that woke at
+    /// the same event. Each job's outputs must be bit-identical to a
+    /// scalar `knn_learn` on the same inputs (the default is that loop).
+    fn knn_learn_cohort(&mut self, jobs: &mut [KnnLearnJob<'_>]) -> Result<()> {
+        for j in jobs.iter_mut() {
+            *j.threshold = self.knn_learn(j.examples, j.mask, j.scores)?;
+        }
+        Ok(())
+    }
+
+    /// Wake-cohort k-means `learn` (see [`Self::knn_learn_cohort`]).
+    fn kmeans_learn_cohort(&mut self, jobs: &mut [KmeansLearnJob<'_>]) -> Result<()> {
+        for j in jobs.iter_mut() {
+            *j.winner = self.kmeans_learn(j.w, j.x, j.eta, j.acts)?;
+        }
+        Ok(())
+    }
 
     /// k-means `learn`: one competitive step, updating `w`
     /// ((N_CLUSTERS, FEAT_DIM)) in place. Writes the cluster activations

@@ -7,7 +7,7 @@
 //! `backend_parity` integration test.
 
 use super::shapes::*;
-use super::ComputeBackend;
+use super::{ComputeBackend, KnnLearnJob};
 use crate::error::Result;
 use crate::util::stats;
 
@@ -40,6 +40,11 @@ pub struct NativeBackend {
     valid_scratch: Vec<f32>,
     /// Incremental distance-matrix cache for `knn_learn`.
     knn_cache: Option<KnnMatrixCache>,
+    /// Per-lane distance-matrix caches for `knn_learn_cohort`: one slot
+    /// per shard lane of a population-scale fleet, so interleaved shards
+    /// keep their incremental O(ΔN·N·F) updates instead of evicting each
+    /// other out of the single scalar cache.
+    lane_caches: Vec<Option<KnnMatrixCache>>,
 }
 
 impl NativeBackend {
@@ -75,65 +80,20 @@ impl NativeBackend {
         }
         best[..k].iter().filter(|v| v.is_finite()).sum()
     }
-}
 
-impl ComputeBackend for NativeBackend {
-    fn extract(&mut self, window: &[f32]) -> Result<Vec<f32>> {
-        debug_assert_eq!(window.len(), WINDOW * CHANNELS);
-        let mut out = vec![0.0f32; CHANNELS * N_FEATURES];
-        // §Perf: fused single pass per channel (was 7 separate passes +
-        // an allocation inside `median`); see EXPERIMENTS.md §Perf.
-        let mut ch_buf = std::mem::take(&mut self.ch_scratch);
-        ch_buf.resize(WINDOW, 0.0);
-        for ch in 0..CHANNELS {
-            // gather the channel and accumulate the one-pass moments
-            let mut sum = 0.0f64;
-            let mut sq = 0.0f64;
-            let mut abs = 0.0f64;
-            let mut lo = f32::INFINITY;
-            let mut hi = f32::NEG_INFINITY;
-            let mut adiff = 0.0f64;
-            let mut prev = window[ch];
-            for r in 0..WINDOW {
-                let v = window[r * CHANNELS + ch];
-                ch_buf[r] = v;
-                let vd = v as f64;
-                sum += vd;
-                sq += vd * vd;
-                abs += vd.abs();
-                lo = lo.min(v);
-                hi = hi.max(v);
-                adiff += (v - prev).abs() as f64;
-                prev = v;
-            }
-            let n = WINDOW as f64;
-            let mean = (sum / n) as f32;
-            // zero crossings around the mean need a second (cheap) sweep
-            let mut crossings = 0u32;
-            let mut psign = ch_buf[0] >= mean;
-            for r in 1..WINDOW {
-                let s = ch_buf[r] >= mean;
-                crossings += (s != psign) as u32;
-                psign = s;
-            }
-            ch_buf.sort_unstable_by(|a, b| a.total_cmp(b));
-            let med = 0.5 * (ch_buf[WINDOW / 2 - 1] + ch_buf[WINDOW / 2]);
-
-            let f = &mut out[ch * N_FEATURES..(ch + 1) * N_FEATURES];
-            f[0] = mean;
-            f[1] = ((sq / n - (sum / n) * (sum / n)).max(0.0)).sqrt() as f32;
-            f[2] = med;
-            f[3] = (sq / n).sqrt() as f32;
-            f[4] = hi - lo;
-            f[5] = crossings as f32 / (WINDOW - 1) as f32;
-            f[6] = (adiff / (WINDOW - 1) as f64) as f32;
-            f[7] = (abs / n) as f32;
-        }
-        self.ch_scratch = ch_buf;
-        Ok(out)
-    }
-
-    fn knn_learn(&mut self, examples: &[f32], mask: &[f32], scores: &mut [f32]) -> Result<f32> {
+    /// `knn_learn` body, parameterised by which incremental cache slot
+    /// backs it: `None` = the scalar-path cache, `Some(lane)` = a cohort
+    /// lane's cache. Results are bit-identical for any cache state (a
+    /// stale or foreign cache just recomputes more rows — asserted by
+    /// `knn_learn_cache_matches_full_recompute`), so the slot choice is
+    /// purely a performance decision.
+    fn knn_learn_slot(
+        &mut self,
+        lane: Option<usize>,
+        examples: &[f32],
+        mask: &[f32],
+        scores: &mut [f32],
+    ) -> Result<f32> {
         debug_assert_eq!(examples.len(), N_BUF * FEAT_DIM);
         debug_assert_eq!(mask.len(), N_BUF);
         debug_assert_eq!(scores.len(), N_BUF);
@@ -145,13 +105,21 @@ impl ComputeBackend for NativeBackend {
         }
 
         // ---- incremental distance-matrix maintenance (§Perf) ----------
-        let cache_ok = self
-            .knn_cache
+        if let Some(l) = lane {
+            if self.lane_caches.len() <= l {
+                self.lane_caches.resize_with(l + 1, || None);
+            }
+        }
+        let slot = match lane {
+            Some(l) => &mut self.lane_caches[l],
+            None => &mut self.knn_cache,
+        };
+        let cache_ok = slot
             .as_ref()
             .map(|c| c.examples.len() == examples.len())
             .unwrap_or(false);
         let mut cache = if cache_ok {
-            self.knn_cache.take().unwrap()
+            slot.take().unwrap()
         } else {
             KnnMatrixCache {
                 examples: vec![f32::NAN; N_BUF * FEAT_DIM],
@@ -223,7 +191,10 @@ impl ComputeBackend for NativeBackend {
             }
             scores[i] = sum;
         }
-        self.knn_cache = Some(cache);
+        match lane {
+            Some(l) => self.lane_caches[l] = Some(cache),
+            None => self.knn_cache = Some(cache),
+        }
 
         // percentile over the valid scores, sorted in a reused scratch
         // (no per-call clone on the learn hot path)
@@ -234,6 +205,67 @@ impl ComputeBackend for NativeBackend {
         let thr = stats::percentile_sorted(&valid, PCTL);
         self.valid_scratch = valid;
         Ok(thr)
+    }
+}
+
+impl ComputeBackend for NativeBackend {
+    fn extract(&mut self, window: &[f32]) -> Result<Vec<f32>> {
+        debug_assert_eq!(window.len(), WINDOW * CHANNELS);
+        let mut out = vec![0.0f32; CHANNELS * N_FEATURES];
+        // §Perf: fused single pass per channel (was 7 separate passes +
+        // an allocation inside `median`); see EXPERIMENTS.md §Perf.
+        let mut ch_buf = std::mem::take(&mut self.ch_scratch);
+        ch_buf.resize(WINDOW, 0.0);
+        for ch in 0..CHANNELS {
+            // gather the channel and accumulate the one-pass moments
+            let mut sum = 0.0f64;
+            let mut sq = 0.0f64;
+            let mut abs = 0.0f64;
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            let mut adiff = 0.0f64;
+            let mut prev = window[ch];
+            for r in 0..WINDOW {
+                let v = window[r * CHANNELS + ch];
+                ch_buf[r] = v;
+                let vd = v as f64;
+                sum += vd;
+                sq += vd * vd;
+                abs += vd.abs();
+                lo = lo.min(v);
+                hi = hi.max(v);
+                adiff += (v - prev).abs() as f64;
+                prev = v;
+            }
+            let n = WINDOW as f64;
+            let mean = (sum / n) as f32;
+            // zero crossings around the mean need a second (cheap) sweep
+            let mut crossings = 0u32;
+            let mut psign = ch_buf[0] >= mean;
+            for r in 1..WINDOW {
+                let s = ch_buf[r] >= mean;
+                crossings += (s != psign) as u32;
+                psign = s;
+            }
+            ch_buf.sort_unstable_by(|a, b| a.total_cmp(b));
+            let med = 0.5 * (ch_buf[WINDOW / 2 - 1] + ch_buf[WINDOW / 2]);
+
+            let f = &mut out[ch * N_FEATURES..(ch + 1) * N_FEATURES];
+            f[0] = mean;
+            f[1] = ((sq / n - (sum / n) * (sum / n)).max(0.0)).sqrt() as f32;
+            f[2] = med;
+            f[3] = (sq / n).sqrt() as f32;
+            f[4] = hi - lo;
+            f[5] = crossings as f32 / (WINDOW - 1) as f32;
+            f[6] = (adiff / (WINDOW - 1) as f64) as f32;
+            f[7] = (abs / n) as f32;
+        }
+        self.ch_scratch = ch_buf;
+        Ok(out)
+    }
+
+    fn knn_learn(&mut self, examples: &[f32], mask: &[f32], scores: &mut [f32]) -> Result<f32> {
+        self.knn_learn_slot(None, examples, mask, scores)
     }
 
     fn knn_infer(&mut self, examples: &[f32], mask: &[f32], x: &[f32]) -> Result<f32> {
@@ -260,11 +292,21 @@ impl ComputeBackend for NativeBackend {
         examples: &[f32],
         mask: &[f32],
         xs: &[f32],
-    ) -> Result<Vec<f32>> {
+        scores: &mut [f32],
+    ) -> Result<()> {
         debug_assert_eq!(xs.len(), BATCH * FEAT_DIM);
-        (0..BATCH)
-            .map(|b| self.knn_infer(examples, mask, &xs[b * FEAT_DIM..(b + 1) * FEAT_DIM]))
-            .collect()
+        debug_assert_eq!(scores.len(), BATCH);
+        for (x, s) in xs.chunks_exact(FEAT_DIM).zip(scores.iter_mut()) {
+            *s = self.knn_infer(examples, mask, x)?;
+        }
+        Ok(())
+    }
+
+    fn knn_learn_cohort(&mut self, jobs: &mut [KnnLearnJob<'_>]) -> Result<()> {
+        for j in jobs.iter_mut() {
+            *j.threshold = self.knn_learn_slot(Some(j.lane), j.examples, j.mask, j.scores)?;
+        }
+        Ok(())
     }
 
     fn kmeans_learn(
@@ -424,12 +466,82 @@ mod tests {
         let xs: Vec<f32> = (0..BATCH * FEAT_DIM)
             .map(|_| rng.normal(0.0, 3.0) as f32)
             .collect();
-        let batch = be.knn_infer_batch(&ex, &mask, &xs).unwrap();
+        let mut batch = vec![0.0f32; BATCH];
+        be.knn_infer_batch(&ex, &mask, &xs, &mut batch).unwrap();
         for bidx in 0..BATCH {
             let s = be
                 .knn_infer(&ex, &mask, &xs[bidx * FEAT_DIM..(bidx + 1) * FEAT_DIM])
                 .unwrap();
             assert!((batch[bidx] - s).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn knn_infer_cohort_matches_scalar_bit_for_bit() {
+        let mut be = NativeBackend::new();
+        let mut rng = Rng::new(11);
+        let (ex, mask) = filled_buffer(&mut rng, 25);
+        // a non-BATCH-aligned cohort size exercises the tail
+        let n = 21;
+        let qs: Vec<f32> = (0..n * FEAT_DIM)
+            .map(|_| rng.normal(0.0, 3.0) as f32)
+            .collect();
+        let mut scores = vec![0.0f32; n];
+        be.knn_infer_cohort(&ex, &mask, &qs, &mut scores).unwrap();
+        for i in 0..n {
+            let s = be
+                .knn_infer(&ex, &mask, &qs[i * FEAT_DIM..(i + 1) * FEAT_DIM])
+                .unwrap();
+            assert_eq!(scores[i], s, "query {i}");
+        }
+    }
+
+    #[test]
+    fn knn_learn_cohort_matches_interleaved_scalar_calls_bit_for_bit() {
+        // Two shard lanes stepped in lockstep through ring updates: the
+        // cohort path (per-lane caches) must reproduce what per-shard
+        // scalar knn_learn on dedicated backends computes, bit for bit.
+        use super::super::KnnLearnJob;
+        let mut cohort_be = NativeBackend::new();
+        let mut solo = [NativeBackend::new(), NativeBackend::new()];
+        let mut rng = Rng::new(12);
+        let mut shards: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..2).map(|_| filled_buffer(&mut rng, 15)).collect();
+        let mut slot = 15usize;
+        for step in 0..10 {
+            for (ex, mask) in shards.iter_mut() {
+                for j in 0..FEAT_DIM {
+                    ex[slot * FEAT_DIM + j] = rng.normal(0.0, 3.0) as f32;
+                }
+                mask[slot] = 1.0;
+            }
+            slot = (slot + 1) % N_BUF;
+            let mut scores = vec![vec![0.0f32; N_BUF]; 2];
+            let mut thresholds = vec![0.0f32; 2];
+            {
+                let mut jobs: Vec<KnnLearnJob<'_>> = Vec::new();
+                for (lane, ((ex, mask), (sc, th))) in shards
+                    .iter()
+                    .zip(scores.iter_mut().zip(thresholds.iter_mut()))
+                    .enumerate()
+                {
+                    jobs.push(KnnLearnJob {
+                        lane,
+                        examples: ex,
+                        mask,
+                        scores: sc,
+                        threshold: th,
+                    });
+                }
+                cohort_be.knn_learn_cohort(&mut jobs).unwrap();
+            }
+            for lane in 0..2 {
+                let (ex, mask) = &shards[lane];
+                let mut want = vec![0.0f32; N_BUF];
+                let t = solo[lane].knn_learn(ex, mask, &mut want).unwrap();
+                assert_eq!(scores[lane], want, "lane {lane} step {step}");
+                assert_eq!(thresholds[lane], t, "lane {lane} step {step}");
+            }
         }
     }
 

@@ -11,7 +11,7 @@
 //! the query vector. Measured effect in EXPERIMENTS.md §Perf.
 
 use super::shapes::*;
-use super::ComputeBackend;
+use super::{ComputeBackend, KnnLearnJob};
 use crate::error::Result;
 use crate::runtime::{Arg, Runtime};
 
@@ -27,6 +27,10 @@ struct KnnDeviceCache {
 pub struct PjrtBackend {
     rt: Runtime,
     knn_cache: Option<KnnDeviceCache>,
+    /// Per-lane device caches for wake-cohort calls: each shard lane of
+    /// a population-scale fleet keeps its own device-resident k-NN
+    /// buffer, so interleaved shards don't evict each other.
+    lane_caches: Vec<Option<KnnDeviceCache>>,
     /// Number of artifact executions (for perf accounting in benches).
     pub dispatches: u64,
     /// Host→device uploads of the k-NN buffer avoided by the cache.
@@ -40,6 +44,7 @@ impl PjrtBackend {
         Ok(PjrtBackend {
             rt,
             knn_cache: None,
+            lane_caches: Vec::new(),
             dispatches: 0,
             cache_hits: 0,
         })
@@ -55,37 +60,69 @@ impl PjrtBackend {
         self.rt.load(name)?.run(inputs)
     }
 
-    /// Ensure the k-NN buffer is device-resident and current.
-    fn ensure_knn_cache(&mut self, examples: &[f32], mask: &[f32]) -> Result<()> {
-        let stale = match &self.knn_cache {
+    /// Ensure `slot` holds a current device copy of the k-NN buffer
+    /// (associated fn so `rt` and the cache slot borrow disjointly).
+    fn ensure_slot(
+        rt: &mut Runtime,
+        slot: &mut Option<KnnDeviceCache>,
+        cache_hits: &mut u64,
+        examples: &[f32],
+        mask: &[f32],
+    ) -> Result<()> {
+        let stale = match slot {
             Some(c) => c.host_ex != examples || c.host_mask != mask,
             None => true,
         };
         if stale {
-            let dev_ex = self.rt.upload(examples, &[N_BUF, FEAT_DIM])?;
-            let dev_mask = self.rt.upload(mask, &[N_BUF])?;
-            self.knn_cache = Some(KnnDeviceCache {
+            let dev_ex = rt.upload(examples, &[N_BUF, FEAT_DIM])?;
+            let dev_mask = rt.upload(mask, &[N_BUF])?;
+            *slot = Some(KnnDeviceCache {
                 host_ex: examples.to_vec(),
                 host_mask: mask.to_vec(),
                 dev_ex,
                 dev_mask,
             });
         } else {
-            self.cache_hits += 1;
+            *cache_hits += 1;
         }
         Ok(())
     }
 
-    fn run_knn(&mut self, name: &str, extra: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+    /// Ensure the k-NN buffer is device-resident and current.
+    fn ensure_knn_cache(&mut self, examples: &[f32], mask: &[f32]) -> Result<()> {
+        Self::ensure_slot(
+            &mut self.rt,
+            &mut self.knn_cache,
+            &mut self.cache_hits,
+            examples,
+            mask,
+        )
+    }
+
+    /// Dispatch a k-NN artifact against the cache in `lane` (`None` =
+    /// the scalar-path cache).
+    fn run_knn_slot(
+        &mut self,
+        name: &str,
+        extra: &[&[f32]],
+        lane: Option<usize>,
+    ) -> Result<Vec<Vec<f32>>> {
         self.dispatches += 1;
         let exe = self.rt.load(name)?;
-        let cache = self.knn_cache.as_ref().expect("cache ensured");
+        let cache = match lane {
+            Some(l) => self.lane_caches[l].as_ref().expect("lane cache ensured"),
+            None => self.knn_cache.as_ref().expect("cache ensured"),
+        };
         let mut args: Vec<Arg<'_>> = vec![
             Arg::Device(&cache.dev_ex),
             Arg::Device(&cache.dev_mask),
         ];
         args.extend(extra.iter().map(|x| Arg::Host(x)));
         exe.run_args(&args)
+    }
+
+    fn run_knn(&mut self, name: &str, extra: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.run_knn_slot(name, extra, None)
     }
 }
 
@@ -113,11 +150,63 @@ impl ComputeBackend for PjrtBackend {
         examples: &[f32],
         mask: &[f32],
         xs: &[f32],
-    ) -> Result<Vec<f32>> {
+        scores: &mut [f32],
+    ) -> Result<()> {
         debug_assert_eq!(xs.len(), BATCH * FEAT_DIM);
+        debug_assert_eq!(scores.len(), BATCH);
         self.ensure_knn_cache(examples, mask)?;
-        let mut out = self.run_knn("knn_infer_batch", &[xs])?;
-        Ok(out.remove(0))
+        let out = self.run_knn("knn_infer_batch", &[xs])?;
+        scores.copy_from_slice(&out[0]);
+        Ok(())
+    }
+
+    fn knn_infer_cohort(
+        &mut self,
+        examples: &[f32],
+        mask: &[f32],
+        queries: &[f32],
+        scores: &mut [f32],
+    ) -> Result<()> {
+        debug_assert_eq!(queries.len(), scores.len() * FEAT_DIM);
+        self.ensure_knn_cache(examples, mask)?;
+        // Ride the BATCH-wide artifact: ceil(n/BATCH) dispatches, the
+        // tail zero-padded and its padding lanes discarded.
+        let mut padded = [0.0f32; BATCH * FEAT_DIM];
+        for (qs, ss) in queries
+            .chunks(BATCH * FEAT_DIM)
+            .zip(scores.chunks_mut(BATCH))
+        {
+            if ss.len() == BATCH {
+                let out = self.run_knn("knn_infer_batch", &[qs])?;
+                ss.copy_from_slice(&out[0]);
+            } else {
+                padded[..qs.len()].copy_from_slice(qs);
+                padded[qs.len()..].fill(0.0);
+                let out = self.run_knn("knn_infer_batch", &[&padded[..]])?;
+                ss.copy_from_slice(&out[0][..ss.len()]);
+            }
+        }
+        Ok(())
+    }
+
+    fn knn_learn_cohort(&mut self, jobs: &mut [KnnLearnJob<'_>]) -> Result<()> {
+        for j in jobs.iter_mut() {
+            let l = j.lane;
+            if self.lane_caches.len() <= l {
+                self.lane_caches.resize_with(l + 1, || None);
+            }
+            Self::ensure_slot(
+                &mut self.rt,
+                &mut self.lane_caches[l],
+                &mut self.cache_hits,
+                j.examples,
+                j.mask,
+            )?;
+            let out = self.run_knn_slot("knn_learn", &[], Some(l))?;
+            j.scores.copy_from_slice(&out[0]);
+            *j.threshold = out[1][0];
+        }
+        Ok(())
     }
 
     fn kmeans_learn(

@@ -121,6 +121,7 @@ pub fn fleet16(seed: u64) -> Result<FigData> {
         seed_stride: 1,
         overrides: vec![],
         sync: None,
+        stream: None,
     });
     let fr = spec.run_fleet(0)?;
     let mut final_acc = Series::new("final_accuracy_by_shard");
@@ -166,6 +167,7 @@ pub fn sync16(seed: u64) -> Result<FigData> {
             seed_stride: 1,
             overrides: vec![],
             sync,
+            stream: None,
         });
         spec
     };

@@ -165,6 +165,36 @@ impl Learner for KnnAnomalyLearner {
         })
     }
 
+    fn infer_batch(
+        &mut self,
+        exs: &[&Example],
+        be: &mut dyn ComputeBackend,
+    ) -> Result<Vec<Verdict>> {
+        // `infer` never mutates the model, so its gate is loop-invariant:
+        // check it once, then score the whole cohort in one backend call.
+        // Bit-identical to the per-example loop — the native cohort is
+        // that loop, the pjrt cohort rides the BATCH artifact.
+        if self.buffered() <= K_NEIGHBORS || self.threshold <= 0.0 {
+            return Ok(vec![Verdict::Unknown; exs.len()]);
+        }
+        let mut queries = Vec::with_capacity(exs.len() * FEAT_DIM);
+        for ex in exs {
+            queries.extend_from_slice(&ex.features);
+        }
+        let mut scores = vec![0.0f32; exs.len()];
+        be.knn_infer_cohort(&self.buf, &self.mask, &queries, &mut scores)?;
+        Ok(scores
+            .iter()
+            .map(|&s| {
+                if s > self.threshold {
+                    Verdict::Abnormal
+                } else {
+                    Verdict::Normal
+                }
+            })
+            .collect())
+    }
+
     fn learnable(&self) -> bool {
         // k-NN can always absorb an example (ring overwrite); the paper's
         // precondition is about having a sensed example available, which
@@ -406,6 +436,27 @@ mod tests {
             t,
             false,
         )
+    }
+
+    #[test]
+    fn infer_batch_matches_per_example_infer_bit_for_bit() {
+        let mut be = NativeBackend::new();
+        let mut l = KnnAnomalyLearner::new();
+        let mut rng = Rng::new(21);
+        let probes: Vec<Example> = (0..13).map(|t| normal_ex(&mut rng, 1000 + t)).collect();
+        let refs: Vec<&Example> = probes.iter().collect();
+        // Ungated model (nothing learned): whole cohort is Unknown.
+        assert_eq!(
+            l.infer_batch(&refs, &mut be).unwrap(),
+            vec![Verdict::Unknown; 13]
+        );
+        for t in 0..30 {
+            l.learn(&normal_ex(&mut rng, t), &mut be).unwrap();
+        }
+        let batch = l.infer_batch(&refs, &mut be).unwrap();
+        for (i, p) in probes.iter().enumerate() {
+            assert_eq!(batch[i], l.infer(p, &mut be).unwrap(), "probe {i}");
+        }
     }
 
     #[test]

@@ -121,6 +121,21 @@ pub trait Learner: Send {
     /// Classify one example (the `infer` action's payload).
     fn infer(&mut self, ex: &Example, be: &mut dyn ComputeBackend) -> Result<Verdict>;
 
+    /// Classify a cohort of examples against the *current* model in one
+    /// call — the evaluation-probe path, where a whole probe set is
+    /// scored at a checkpoint wake. Must return exactly what calling
+    /// [`Learner::infer`] per example (in order) would; the default is
+    /// that loop. Learners whose backends batch (k-NN via
+    /// [`ComputeBackend::knn_infer_cohort`]) override it to amortize
+    /// dispatch: one backend call per wake event instead of per example.
+    fn infer_batch(
+        &mut self,
+        exs: &[&Example],
+        be: &mut dyn ComputeBackend,
+    ) -> Result<Vec<Verdict>> {
+        exs.iter().map(|ex| self.infer(ex, be)).collect()
+    }
+
     /// Prerequisites of `learn` (the `learnable` action): e.g. clustering
     /// needs a minimum number of examples.
     fn learnable(&self) -> bool;

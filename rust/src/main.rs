@@ -72,6 +72,10 @@ fn print_help() {
                --stride S       per-shard seed stride      [default 1]\n\
                --sync-period-us P   federated sync boundary period (0 = isolated)\n\
                --sync-strategy S    gossip|all_reduce      [default gossip]\n\
+               --stream         streaming fan-in: fold rollups + quantile\n\
+                                sketches shard by shard and drop per-shard\n\
+                                results (bounded memory at any shard count;\n\
+                                auto above 4095 isolated shards)\n\
                --threads N      worker threads             [default: all cores]\n\
                (run's --seed/--backend/--scheduler/--heuristic apply too)\n\
            sweep <FILE>     expand a JSON grid spec (scenarios x schedulers x\n\
@@ -221,6 +225,9 @@ fn cmd_fleet(args: &[String]) -> Result<()> {
     if let Some(s) = flag(args, "--stride") {
         spec.fleet.get_or_insert_with(FleetSpec::default).seed_stride = s.parse()?;
     }
+    if args.iter().any(|a| a == "--stream") {
+        spec.fleet.get_or_insert_with(FleetSpec::default).stream = Some(true);
+    }
     if let Some(p) = flag(args, "--sync-period-us") {
         let period_us: u64 = p.parse()?;
         let fleet = spec.fleet.get_or_insert_with(FleetSpec::default);
@@ -265,6 +272,67 @@ fn cmd_fleet(args: &[String]) -> Result<()> {
         spec.scheduler.label()
     );
     let t0 = std::time::Instant::now();
+    if fleet.streaming() {
+        // population-scale path: fold-and-drop fan-in, O(1) memory in
+        // the shard count, no per-shard table
+        eprintln!("  (streaming fan-in: rollups + sketches, no per-shard results)");
+        let sr = spec.run_fleet_streaming(threads)?;
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "== fleet summary: {} x {} shard(s), streamed on {} worker(s) ==",
+            spec.name, sr.rollup.shards, sr.workers
+        );
+        let roll = &sr.rollup;
+        println!("  rollups (mean / min / max / total):");
+        for (name, r) in [
+            ("final_accuracy", roll.final_accuracy),
+            ("mean_accuracy", roll.mean_accuracy),
+            ("energy_uj", roll.energy_uj),
+            ("learned", roll.learned),
+            ("inferred", roll.inferred),
+            ("power_failures", roll.power_failures),
+            ("stale_plans", roll.stale_plans),
+        ] {
+            println!(
+                "    {name:<15} {:>12.3} {:>12.3} {:>12.3} {:>14.3}",
+                r.mean, r.min, r.max, r.total
+            );
+        }
+        let sk = &sr.sketches;
+        println!("  sketches (p50 / p90 / p99):");
+        for (name, s) in [
+            ("final_accuracy", &sk.final_accuracy),
+            ("mean_accuracy", &sk.mean_accuracy),
+            ("energy_uj", &sk.energy_uj),
+            ("learned", &sk.learned),
+            ("inferred", &sk.inferred),
+            ("power_failures", &sk.power_failures),
+            ("stale_plans", &sk.stale_plans),
+        ] {
+            println!(
+                "    {name:<15} {:>12.3} {:>12.3} {:>12.3}",
+                s.quantile(0.5),
+                s.quantile(0.9),
+                s.quantile(0.99)
+            );
+        }
+        println!(
+            "  pooled: {} NVM slab reuse(s), {} backend reuse(s)",
+            sr.slab_reuses, sr.backend_reuses
+        );
+        println!(
+            "  wallclock          {:.2}s ({:.0} shards/s)",
+            secs,
+            sr.rollup.shards as f64 / secs.max(1e-9)
+        );
+        if let Some(out) = flag(args, "--out") {
+            std::fs::create_dir_all(&out)?;
+            let path = format!("{out}/{}-fleet.json", spec.label());
+            std::fs::write(&path, sr.to_json().to_string())?;
+            eprintln!("wrote {path}");
+        }
+        return Ok(());
+    }
     let fr = spec.run_fleet(threads)?;
     println!("== fleet summary: {} x {} shard(s) ==", spec.name, fr.shards.len());
     let synced = fr.rollup.syncs_done.total + fr.rollup.syncs_skipped.total > 0.0;

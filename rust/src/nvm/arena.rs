@@ -1,0 +1,118 @@
+//! Pooled NVM slab arena for population-scale fleets.
+//!
+//! A streaming fleet runs millions of logical devices through a handful
+//! of worker lanes. Giving every device its own heap slab (one [`Nvm`]
+//! per shard) is what capped the old fleet at thousands of shards; the
+//! arena instead recycles one slab per worker lane: when a shard
+//! finishes, its store is [`Nvm::reset_for_reuse`]-scrubbed (committed
+//! state erased, interned key table and grown buffer capacities kept,
+//! fresh store identity) and handed to the lane's next shard. Total
+//! slab allocations are O(workers), independent of the shard count,
+//! and steady-state shards re-run inside buffers the first shard grew.
+//!
+//! A reset store is observationally identical to a fresh one — resolved
+//! keys read as absent, counters start at zero, and the fresh
+//! `store_id` makes learner handle caches re-intern — which is what
+//! makes recycling bit-identity-safe for the fleet (`sim/soa.rs` pins
+//! this against the per-shard-engine path).
+
+use super::Nvm;
+
+/// Free-list pool of recycled NVM slabs.
+#[derive(Debug, Default)]
+pub struct NvmArena {
+    free: Vec<Nvm>,
+    /// Slabs handed out fresh (pool was empty).
+    pub builds: u64,
+    /// Slabs handed out recycled.
+    pub reuses: u64,
+}
+
+impl NvmArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A slab ready for a new device: recycled if one is pooled, else
+    /// freshly allocated.
+    pub fn take(&mut self) -> Nvm {
+        match self.free.pop() {
+            Some(nvm) => {
+                self.reuses += 1;
+                nvm
+            }
+            None => {
+                self.builds += 1;
+                Nvm::new()
+            }
+        }
+    }
+
+    /// Return a slab to the pool, scrubbing it for the next device.
+    pub fn put(&mut self, mut nvm: Nvm) {
+        nvm.reset_for_reuse();
+        self.free.push(nvm);
+    }
+
+    /// Recycled slabs currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_builds_fresh_then_reuses_what_was_put_back() {
+        let mut arena = NvmArena::new();
+        let a = arena.take();
+        assert_eq!((arena.builds, arena.reuses, arena.pooled()), (1, 0, 0));
+        arena.put(a);
+        assert_eq!(arena.pooled(), 1);
+        let b = arena.take();
+        assert_eq!((arena.builds, arena.reuses, arena.pooled()), (1, 1, 0));
+        drop(b);
+    }
+
+    #[test]
+    fn recycled_slab_reads_like_a_fresh_store() {
+        let mut arena = NvmArena::new();
+        let mut a = arena.take();
+        a.write("model", &[1, 2, 3, 4]).unwrap();
+        a.write_u64("gen", 7).unwrap();
+        let old_id = a.store_id();
+        arena.put(a);
+
+        let mut b = arena.take();
+        let fresh = Nvm::new();
+        assert_ne!(b.store_id(), old_id, "recycled store takes a new identity");
+        assert_eq!(b.read("model"), None);
+        assert_eq!(b.read_u64("gen"), 0);
+        assert_eq!(b.used_bytes(), fresh.used_bytes());
+        assert_eq!(b.bytes_written, 0);
+        assert_eq!(b.bytes_read, 0);
+        assert_eq!(b.commits, 0);
+        assert_eq!(b.aborts, 0);
+        assert!(!b.in_action());
+    }
+
+    #[test]
+    fn recycled_slab_discards_an_open_action() {
+        let mut arena = NvmArena::new();
+        let mut a = arena.take();
+        a.begin_action().unwrap();
+        a.write("staged", &[9; 16]).unwrap();
+        arena.put(a);
+        let mut b = arena.take();
+        assert!(!b.in_action());
+        assert_eq!(b.read("staged"), None);
+        // The scrubbed store supports a full fresh transaction cycle.
+        b.begin_action().unwrap();
+        b.write("staged", &[1]).unwrap();
+        b.commit_action().unwrap();
+        assert_eq!(b.read("staged"), Some(vec![1]));
+        assert_eq!(b.commits, 1);
+    }
+}

@@ -31,6 +31,7 @@
 //! transactions, so after warm-up the write/commit cycle performs no heap
 //! allocation.
 
+pub mod arena;
 pub mod audit;
 
 use std::collections::BTreeMap;
@@ -340,6 +341,39 @@ impl Nvm {
         self.txn_open = false;
         self.aborts += 1;
         self.audit_mark(audit::AccessEvent::Abort);
+    }
+
+    /// Reset this store for reuse by a new logical device (the pooled
+    /// slab arena, [`arena::NvmArena`]). Every committed and staged
+    /// value disappears — reads behave exactly like a fresh store
+    /// (resolved keys read as absent) — while the interned key table
+    /// and every slot's buffer capacity survive, so a recycled slab
+    /// re-runs a shard without re-growing what the previous shard
+    /// already allocated. The store takes a fresh [`Nvm::store_id`]
+    /// (handle caches keyed on it re-intern instead of aliasing) and
+    /// zeroes its traffic counters; an open action is discarded along
+    /// with everything else.
+    pub fn reset_for_reuse(&mut self) {
+        for slot in &mut self.slots {
+            slot.committed.clear();
+            slot.present = false;
+            slot.staged.clear();
+            slot.staged_present = false;
+            slot.dirty.clear();
+        }
+        self.txn_open = false;
+        self.txn_dirty.clear();
+        self.used = 0;
+        self.staged_used = 0;
+        self.bytes_written = 0;
+        self.bytes_read = 0;
+        self.commits = 0;
+        self.aborts = 0;
+        self.store_id = NEXT_STORE_ID.fetch_add(1, Ordering::Relaxed);
+        #[cfg(debug_assertions)]
+        {
+            self.audit = None;
+        }
     }
 
     /// Is an action transaction open?

@@ -23,7 +23,7 @@ use crate::sensors::rssi::Area;
 use crate::sensors::{AirQuality, Rssi, Sensor};
 use crate::sim::engine::Engine;
 use crate::sim::fleet::{Fleet, FleetResult, Shard, ShardFactory, SyncPlan, SyncStrategy};
-use crate::sim::{ChargeKernel, PlannerScheduler, Scheduler, SimConfig};
+use crate::sim::{ChargeKernel, PlannerScheduler, Scheduler, SimConfig, StreamResult};
 use crate::util::json::Json;
 
 // ------------------------------------------------------------ json helpers
@@ -1069,6 +1069,12 @@ pub struct FleetSpec {
     /// Round-based federated sync (`None`: isolated shards, the pre-sync
     /// fleet behavior bit for bit).
     pub sync: Option<SyncSpec>,
+    /// Streaming fan-in (`Some(true)`: fold-and-drop shard execution via
+    /// [`crate::sim::run_streaming`] — bounded memory, no per-shard
+    /// results; `Some(false)`: always retain per-shard results; `None`:
+    /// auto — stream when the fleet is isolated and at least
+    /// [`FleetSpec::STREAM_AUTO_SHARDS`] shards).
+    pub stream: Option<bool>,
 }
 
 impl Default for FleetSpec {
@@ -1079,11 +1085,26 @@ impl Default for FleetSpec {
             seed_stride: 1,
             overrides: Vec::new(),
             sync: None,
+            stream: None,
         }
     }
 }
 
 impl FleetSpec {
+    /// Auto-stream threshold: an unset `stream` knob streams isolated
+    /// fleets of at least this many shards (a million 1-KB `RunResult`s
+    /// is a gigabyte; below this, retained per-shard results are cheap
+    /// and strictly more informative).
+    pub const STREAM_AUTO_SHARDS: u32 = 4096;
+
+    /// Whether this fleet runs through the streaming (fold-and-drop)
+    /// path. Explicit `stream` wins; auto streams isolated fleets of
+    /// [`FleetSpec::STREAM_AUTO_SHARDS`]+ shards.
+    pub fn streaming(&self) -> bool {
+        self.stream
+            .unwrap_or(self.sync.is_none() && self.shards >= FleetSpec::STREAM_AUTO_SHARDS)
+    }
+
     /// Harvester override for `shard`, if one is declared.
     pub fn override_for(&self, shard: u32) -> Option<&HarvesterSpec> {
         self.overrides
@@ -1115,6 +1136,12 @@ impl FleetSpec {
         if let Some(sync) = &self.sync {
             sync.validate(what)?;
         }
+        if self.stream == Some(true) && self.sync.is_some() && self.shards > 1 {
+            return Err(Error::Config(format!(
+                "{what}: stream=true is incompatible with federated sync \
+                 (sync rounds need resident engines)"
+            )));
+        }
         Ok(())
     }
 
@@ -1138,8 +1165,11 @@ impl FleetSpec {
                 ),
             ),
         ];
-        // emitted only when present: sync-less fleet documents keep the
-        // pre-sync JSON shape byte for byte
+        // emitted only when present: pre-knob fleet documents keep
+        // their JSON shape byte for byte
+        if let Some(stream) = self.stream {
+            kvs.push(("stream", Json::Bool(stream)));
+        }
         if let Some(sync) = &self.sync {
             kvs.push(("sync", sync.to_json()));
         }
@@ -1169,6 +1199,13 @@ impl FleetSpec {
                 None => None,
                 Some(v) if v.is_null() => None,
                 Some(v) => Some(SyncSpec::from_json(v)?),
+            },
+            stream: match j.get("stream") {
+                None => None,
+                Some(v) if v.is_null() => None,
+                Some(v) => Some(v.as_bool().ok_or_else(|| {
+                    Error::Config(format!("{what}: `stream` must be a boolean"))
+                })?),
             },
         })
     }
@@ -1519,6 +1556,16 @@ impl ScenarioSpec {
         Fleet::new(self)?.run(threads)
     }
 
+    /// Run the whole fleet through the streaming (fold-and-drop) path:
+    /// per-shard results are folded into rollups + sketches and dropped,
+    /// so memory stays bounded at any shard count. The rollup is
+    /// bit-identical to [`ScenarioSpec::run_fleet`]'s over the same
+    /// shards. Errors on fleets with an active federated sync plan.
+    pub fn run_fleet_streaming(&self, threads: usize) -> Result<StreamResult> {
+        self.validate()?;
+        crate::sim::run_streaming(self, threads)
+    }
+
     pub fn to_json(&self) -> Json {
         let n_learn = if self.goal.n_learn == u64::MAX {
             Json::Null // lifelong learning phase
@@ -1840,6 +1887,7 @@ mod tests {
             seed_stride: 7,
             overrides: vec![(2, HarvesterSpec::Constant { power_w: 0.02 })],
             sync: None,
+            stream: None,
         });
         s.validate().unwrap();
         let back = ScenarioSpec::parse(&s.to_json().to_string()).unwrap();
@@ -1947,6 +1995,57 @@ mod tests {
     }
 
     #[test]
+    fn stream_knob_round_trips_validates_and_auto_resolves() {
+        let mut s = preset("vibration", 1, 2 * H).unwrap();
+        s.fleet = Some(FleetSpec {
+            shards: 3,
+            stream: Some(true),
+            ..FleetSpec::default()
+        });
+        s.validate().unwrap();
+        let text = s.to_json().to_string();
+        assert!(text.contains("\"stream\":true"), "{text}");
+        let back = ScenarioSpec::parse(&text).unwrap();
+        assert_eq!(back, s, "stream knob changed across JSON round trip");
+        // unset knob: absent from JSON (pre-knob documents unchanged)...
+        s.fleet.as_mut().unwrap().stream = None;
+        assert!(!s.to_json().to_string().contains("\"stream\""));
+        // ...and auto-resolves on fleet size and sync
+        let small = s.fleet.as_ref().unwrap().clone();
+        assert!(!small.streaming(), "small isolated fleet retains");
+        let mut big = small.clone();
+        big.shards = FleetSpec::STREAM_AUTO_SHARDS;
+        assert!(big.streaming(), "big isolated fleet streams");
+        big.sync = Some(SyncSpec {
+            period_us: 1_800_000_000,
+            strategy: SyncStrategy::Gossip,
+            radio: None,
+        });
+        assert!(!big.streaming(), "synced fleet never auto-streams");
+        // explicit stream=true wins over the auto rule
+        let forced = FleetSpec {
+            shards: 2,
+            stream: Some(true),
+            ..FleetSpec::default()
+        };
+        assert!(forced.streaming());
+        // stream=true + active sync is a config error
+        let mut bad = preset("vibration", 1, 2 * H).unwrap();
+        bad.fleet = Some(FleetSpec {
+            shards: 4,
+            sync: big.sync.clone(),
+            stream: Some(true),
+            ..FleetSpec::default()
+        });
+        assert!(bad.validate().is_err());
+        // non-boolean stream rejected
+        assert!(
+            FleetSpec::from_json(&Json::parse(r#"{"shards": 2, "stream": 1}"#).unwrap())
+                .is_err()
+        );
+    }
+
+    #[test]
     fn shard_zero_is_the_plain_engine_construction() {
         // fleet-less build_engine == build_shard_engine(0), and adding a
         // fleet block does not perturb shard 0 (base seed, zero phase)
@@ -1958,6 +2057,7 @@ mod tests {
             seed_stride: 11,
             overrides: vec![],
             sync: None,
+            stream: None,
         });
         let b = s.build_shard_engine(0).unwrap().run().unwrap();
         assert_eq!(a.to_json().to_string(), b.to_json().to_string());
@@ -1972,6 +2072,7 @@ mod tests {
             seed_stride: 0, // identical seeds: only the override differs
             overrides: vec![(1, HarvesterSpec::Constant { power_w: 0.0 })],
             sync: None,
+            stream: None,
         });
         let base = s.build_shard_engine(0).unwrap().run().unwrap();
         let dark = s.build_shard_engine(1).unwrap().run().unwrap();

@@ -145,28 +145,11 @@ pub struct Rollup {
 impl Rollup {
     /// Roll up a metric over shard values (zeros for an empty fleet).
     pub fn of(xs: impl IntoIterator<Item = f64>) -> Rollup {
-        let mut n = 0usize;
-        let (mut min, mut max, mut total) = (f64::INFINITY, f64::NEG_INFINITY, 0.0);
+        let mut acc = RollupAcc::new();
         for x in xs {
-            n += 1;
-            min = min.min(x);
-            max = max.max(x);
-            total += x;
+            acc.fold(x);
         }
-        if n == 0 {
-            return Rollup {
-                mean: 0.0,
-                min: 0.0,
-                max: 0.0,
-                total: 0.0,
-            };
-        }
-        Rollup {
-            mean: total / n as f64,
-            min,
-            max,
-            total,
-        }
+        acc.finish()
     }
 
     fn to_json(self) -> Json {
@@ -176,6 +159,54 @@ impl Rollup {
             ("max", Json::Num(self.max)),
             ("total", Json::Num(self.total)),
         ])
+    }
+}
+
+/// Streaming accumulator behind [`Rollup::of`]: `fold` one value at a
+/// time, `finish` into the rollup. Folding in shard-index order
+/// reproduces `Rollup::of` over the same values bit for bit (same
+/// min/max/total op sequence — float addition is order-dependent, so
+/// the streaming fleet's coordinator folds in strict index order).
+#[derive(Debug, Clone, Copy)]
+struct RollupAcc {
+    n: usize,
+    min: f64,
+    max: f64,
+    total: f64,
+}
+
+impl RollupAcc {
+    fn new() -> RollupAcc {
+        RollupAcc {
+            n: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            total: 0.0,
+        }
+    }
+
+    fn fold(&mut self, x: f64) {
+        self.n += 1;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.total += x;
+    }
+
+    fn finish(&self) -> Rollup {
+        if self.n == 0 {
+            return Rollup {
+                mean: 0.0,
+                min: 0.0,
+                max: 0.0,
+                total: 0.0,
+            };
+        }
+        Rollup {
+            mean: self.total / self.n as f64,
+            min: self.min,
+            max: self.max,
+            total: self.total,
+        }
     }
 }
 
@@ -202,19 +233,11 @@ pub struct FleetRollup {
 
 impl FleetRollup {
     pub fn of(shards: &[RunResult]) -> FleetRollup {
-        let roll = |f: &dyn Fn(&RunResult) -> f64| Rollup::of(shards.iter().map(f));
-        FleetRollup {
-            shards: shards.len(),
-            final_accuracy: roll(&|r| r.final_accuracy()),
-            mean_accuracy: roll(&|r| r.mean_accuracy(3)),
-            energy_uj: roll(&|r| r.energy_uj),
-            learned: roll(&|r| r.learned as f64),
-            inferred: roll(&|r| r.inferred as f64),
-            power_failures: roll(&|r| r.power_failures as f64),
-            stale_plans: roll(&|r| r.stale_plans as f64),
-            syncs_done: roll(&|r| r.syncs_done as f64),
-            syncs_skipped: roll(&|r| r.syncs_skipped as f64),
+        let mut acc = FleetRollupAcc::new();
+        for r in shards {
+            acc.fold(&ShardStats::of(r));
         }
+        acc.finish()
     }
 
     pub fn to_json(&self) -> Json {
@@ -233,6 +256,97 @@ impl FleetRollup {
             kvs.push(("syncs_skipped", self.syncs_skipped.to_json()));
         }
         Json::obj(kvs)
+    }
+}
+
+/// The scalar metrics one shard contributes to the fan-in — everything
+/// a streaming fleet retains of a `RunResult` before dropping it
+/// (struct-of-arrays across shards: the fleet keeps per-metric
+/// accumulators, not per-shard documents). Field order mirrors
+/// [`FleetRollup`]; values are exactly what [`FleetRollup::of`] reads.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardStats {
+    pub final_accuracy: f64,
+    pub mean_accuracy: f64,
+    pub energy_uj: f64,
+    pub learned: f64,
+    pub inferred: f64,
+    pub power_failures: f64,
+    pub stale_plans: f64,
+    pub syncs_done: f64,
+    pub syncs_skipped: f64,
+}
+
+impl ShardStats {
+    pub fn of(r: &RunResult) -> ShardStats {
+        ShardStats {
+            final_accuracy: r.final_accuracy(),
+            mean_accuracy: r.mean_accuracy(3),
+            energy_uj: r.energy_uj,
+            learned: r.learned as f64,
+            inferred: r.inferred as f64,
+            power_failures: r.power_failures as f64,
+            stale_plans: r.stale_plans as f64,
+            syncs_done: r.syncs_done as f64,
+            syncs_skipped: r.syncs_skipped as f64,
+        }
+    }
+}
+
+/// Streaming accumulator behind [`FleetRollup::of`]: one [`RollupAcc`]
+/// per metric, fed shard stats in index order. The retained path
+/// (`FleetRollup::of` over a `Vec<RunResult>`) and the streaming path
+/// (`sim::soa`, which folds and drops) both go through this type, so
+/// their rollups cannot drift — each metric's accumulator sees the
+/// identical value sequence either way.
+#[derive(Debug, Clone)]
+pub struct FleetRollupAcc {
+    shards: usize,
+    accs: [RollupAcc; 9],
+}
+
+impl FleetRollupAcc {
+    pub fn new() -> FleetRollupAcc {
+        FleetRollupAcc {
+            shards: 0,
+            accs: [RollupAcc::new(); 9],
+        }
+    }
+
+    /// Fold one shard's stats in (must be called in shard-index order
+    /// for bit-identity with the retained path).
+    pub fn fold(&mut self, s: &ShardStats) {
+        self.shards += 1;
+        self.accs[0].fold(s.final_accuracy);
+        self.accs[1].fold(s.mean_accuracy);
+        self.accs[2].fold(s.energy_uj);
+        self.accs[3].fold(s.learned);
+        self.accs[4].fold(s.inferred);
+        self.accs[5].fold(s.power_failures);
+        self.accs[6].fold(s.stale_plans);
+        self.accs[7].fold(s.syncs_done);
+        self.accs[8].fold(s.syncs_skipped);
+    }
+
+    pub fn finish(&self) -> FleetRollup {
+        FleetRollup {
+            shards: self.shards,
+            final_accuracy: self.accs[0].finish(),
+            mean_accuracy: self.accs[1].finish(),
+            energy_uj: self.accs[2].finish(),
+            learned: self.accs[3].finish(),
+            inferred: self.accs[4].finish(),
+            power_failures: self.accs[5].finish(),
+            stale_plans: self.accs[6].finish(),
+            syncs_done: self.accs[7].finish(),
+            syncs_skipped: self.accs[8].finish(),
+        }
+    }
+}
+
+impl Default for FleetRollupAcc {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -521,8 +635,10 @@ impl<'a, F: ShardFactory + ?Sized> Fleet<'a, F> {
     }
 }
 
+/// Shared test fixture: the minimal constant-power fleet factory, used
+/// by this module's tests and the streaming fleet's ([`super::soa`]).
 #[cfg(test)]
-mod tests {
+pub(crate) mod testfleet {
     use super::*;
     use crate::backend::native::NativeBackend;
     use crate::energy::cost::CostModel;
@@ -533,8 +649,8 @@ mod tests {
     use crate::sim::SimConfig;
 
     /// Minimal factory: constant-power worlds, seeds striding by 10.
-    struct ConstFleet {
-        n: u32,
+    pub(crate) struct ConstFleet {
+        pub n: u32,
     }
 
     impl ShardFactory for ConstFleet {
@@ -575,6 +691,12 @@ mod tests {
                 .build()
         }
     }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testfleet::ConstFleet;
+    use super::*;
 
     fn fingerprint(f: &FleetResult) -> String {
         f.to_json().to_string()

@@ -27,6 +27,7 @@ pub mod executor;
 pub mod fleet;
 pub mod policy;
 pub mod probe;
+pub mod soa;
 pub mod state;
 pub mod world;
 
@@ -35,6 +36,7 @@ pub use fleet::{
     Fleet, FleetResult, FleetRollup, Rollup, Shard, ShardFactory, SyncPlan, SyncStrategy,
 };
 pub use policy::Policy;
+pub use soa::{run_streaming, FleetSketches, StreamResult};
 pub use state::RunState;
 pub use world::World;
 

@@ -162,9 +162,13 @@ impl ProbeCache {
     }
 }
 
-
 /// Probe accuracy of a learner: fraction of probes classified correctly
 /// (Unknown counts as wrong — an undecided learner is not yet useful).
+///
+/// The probe set is a wake-event cohort: it is scored through
+/// [`Learner::infer_batch`], one backend cohort call per checkpoint
+/// instead of one dispatch per probe, with verdicts identical to the
+/// per-probe loop by the `infer_batch` contract.
 pub fn probe_accuracy(
     probes: &[Probe],
     learner: &mut dyn Learner,
@@ -173,9 +177,10 @@ pub fn probe_accuracy(
     if probes.is_empty() {
         return Ok(0.0);
     }
+    let exs: Vec<&crate::learning::Example> = probes.iter().map(|p| &p.example).collect();
+    let verdicts = learner.infer_batch(&exs, be)?;
     let mut ok = 0usize;
-    for p in probes {
-        let v = learner.infer(&p.example, be)?;
+    for (p, v) in probes.iter().zip(verdicts) {
         let correct = match v {
             Verdict::Abnormal => p.example.truth_abnormal,
             Verdict::Normal => !p.example.truth_abnormal,

@@ -1,0 +1,315 @@
+//! Streaming population-scale fleets: fold-and-drop shard execution.
+//!
+//! [`super::fleet::Fleet`] retains one `RunResult` per shard (and, in
+//! federated mode, one resident `Engine` per shard) — fine at
+//! thousands of shards, impossible at the ROADMAP's 10⁵–10⁶. This
+//! module runs the same shards through three structural changes:
+//!
+//! * **Struct-of-arrays fan-in.** What the fleet retains per shard is
+//!   no longer an array-of-structs `Vec<RunResult>` but per-metric
+//!   accumulators: each shard is reduced to [`ShardStats`] and folded
+//!   into a [`FleetRollupAcc`] (exact mean/min/max/total, index-ordered
+//!   so float op order matches the retained path bit for bit) plus
+//!   [`FleetSketches`] (order-invariant quantile/histogram sketches).
+//!   Memory is O(1) in the shard count.
+//! * **Pooled NVM slab arena.** Each worker lane owns an
+//!   [`NvmArena`]: the first shard on a lane grows a slab, every later
+//!   shard reuses it after a [`crate::nvm::Nvm::reset_for_reuse`]
+//!   scrub. Slab allocations are O(workers), not O(shards), and
+//!   steady-state shards run inside already-grown buffers.
+//! * **Pooled backends.** The lane's compute backend (with its warm
+//!   distance-matrix / device caches and scratch) carries across
+//!   shards instead of being rebuilt per shard. Safe for bit-identity:
+//!   a stale k-NN cache recomputes exactly the changed rows
+//!   (`knn_learn_cache_matches_full_recompute` pins this), and the
+//!   pjrt device cache re-uploads on host mismatch.
+//!
+//! Work is distributed by [`pool::fold_indexed`]: the coordinator folds
+//! each shard's stats in strict index order *while* workers run, then
+//! drops them — no per-shard `Engine` or `RunResult` survives the fold.
+//! The streaming path is for isolated fleets; a federated sync plan
+//! needs resident engines at round barriers and is rejected up front.
+
+use crate::backend::native::NativeBackend;
+use crate::error::{Error, Result};
+use crate::nvm::arena::NvmArena;
+use crate::sim::fleet::{FleetRollup, FleetRollupAcc, ShardFactory, ShardStats};
+use crate::util::json::Json;
+use crate::util::pool;
+use crate::util::sketch::MetricSketch;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Order-invariant quantile/histogram sketches over the fleet's
+/// per-shard metrics — the distributional complement to the exact
+/// [`FleetRollup`]. Sync metrics are absent: the streaming path runs
+/// isolated fleets only.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FleetSketches {
+    pub final_accuracy: MetricSketch,
+    pub mean_accuracy: MetricSketch,
+    pub energy_uj: MetricSketch,
+    pub learned: MetricSketch,
+    pub inferred: MetricSketch,
+    pub power_failures: MetricSketch,
+    pub stale_plans: MetricSketch,
+}
+
+impl FleetSketches {
+    pub fn new() -> FleetSketches {
+        FleetSketches::default()
+    }
+
+    pub fn fold(&mut self, s: &ShardStats) {
+        self.final_accuracy.record(s.final_accuracy);
+        self.mean_accuracy.record(s.mean_accuracy);
+        self.energy_uj.record(s.energy_uj);
+        self.learned.record(s.learned);
+        self.inferred.record(s.inferred);
+        self.power_failures.record(s.power_failures);
+        self.stale_plans.record(s.stale_plans);
+    }
+
+    /// Merge another sketch set in (associative and order-invariant —
+    /// see [`MetricSketch::merge`]).
+    pub fn merge(&mut self, other: &FleetSketches) {
+        self.final_accuracy.merge(&other.final_accuracy);
+        self.mean_accuracy.merge(&other.mean_accuracy);
+        self.energy_uj.merge(&other.energy_uj);
+        self.learned.merge(&other.learned);
+        self.inferred.merge(&other.inferred);
+        self.power_failures.merge(&other.power_failures);
+        self.stale_plans.merge(&other.stale_plans);
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("final_accuracy", self.final_accuracy.to_json()),
+            ("mean_accuracy", self.mean_accuracy.to_json()),
+            ("energy_uj", self.energy_uj.to_json()),
+            ("learned", self.learned.to_json()),
+            ("inferred", self.inferred.to_json()),
+            ("power_failures", self.power_failures.to_json()),
+            ("stale_plans", self.stale_plans.to_json()),
+        ])
+    }
+}
+
+/// What a streaming fleet run produces: the exact rollups (bit-identical
+/// to [`super::fleet::FleetResult::rollup`] over the same shards), the
+/// metric sketches, and pool telemetry. Deliberately no per-shard data —
+/// that's the point.
+#[derive(Debug)]
+pub struct StreamResult {
+    pub rollup: FleetRollup,
+    pub sketches: FleetSketches,
+    /// Shards that adopted a recycled NVM slab (fleet-wide; the first
+    /// shard on each worker lane builds the lane's slab).
+    pub slab_reuses: u64,
+    /// Shards that inherited the lane's warm compute backend.
+    pub backend_reuses: u64,
+    /// Worker threads the run resolved to.
+    pub workers: usize,
+}
+
+impl StreamResult {
+    /// JSON document: like the retained fleet's but with `"sketches"`
+    /// in place of `"per_shard"`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shards", Json::Num(self.rollup.shards as f64)),
+            ("rollup", self.rollup.to_json()),
+            ("sketches", self.sketches.to_json()),
+        ])
+    }
+}
+
+/// Per-worker lane state: the pooled slab arena and the carried backend.
+/// Built on the worker thread (backends are deliberately not `Send`).
+struct Lane {
+    arena: NvmArena,
+    backend: Option<Box<dyn crate::backend::ComputeBackend>>,
+}
+
+/// Run every shard of `factory` and fold the results in shard-index
+/// order into rollups + sketches, retaining nothing per shard. The
+/// rollup is bit-identical to `Fleet::run`'s over the same factory, for
+/// any worker count (`threads`, 0 = available parallelism).
+pub fn run_streaming<F: ShardFactory + ?Sized>(
+    factory: &F,
+    threads: usize,
+) -> Result<StreamResult> {
+    let n = factory.shard_count() as usize;
+    if n == 0 {
+        return Err(Error::Config("fleet: shard count must be >= 1".into()));
+    }
+    if let Some(plan) = factory.sync_plan() {
+        if n > 1 && !plan.boundaries().is_empty() {
+            return Err(Error::Config(
+                "streaming fleet: federated sync needs resident engines — \
+                 use the per-shard path (stream=false)"
+                    .into(),
+            ));
+        }
+    }
+    let workers = pool::resolve_workers(threads, n);
+    let slab_reuses = AtomicU64::new(0);
+    let backend_reuses = AtomicU64::new(0);
+    let mut acc = FleetRollupAcc::new();
+    let mut sketches = FleetSketches::new();
+    let mut first_err: Option<Error> = None;
+    pool::fold_indexed(
+        n,
+        threads,
+        || Lane {
+            arena: NvmArena::new(),
+            backend: None,
+        },
+        |lane, i| run_shard(factory, lane, i as u32, &slab_reuses, &backend_reuses),
+        |_, r| match r {
+            Ok(stats) => {
+                acc.fold(&stats);
+                sketches.fold(&stats);
+            }
+            Err(e) => {
+                // first failure by shard index, matching Fleet::run's
+                // collect short-circuit
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        },
+    );
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    Ok(StreamResult {
+        rollup: acc.finish(),
+        sketches,
+        slab_reuses: slab_reuses.into_inner(),
+        backend_reuses: backend_reuses.into_inner(),
+        workers,
+    })
+}
+
+/// Run one shard on a lane, swapping in the lane's pooled resources and
+/// reclaiming them afterwards. The swap is bit-identity-safe: the
+/// builder writes nothing to NVM before the run (a reset slab reads
+/// exactly like the fresh store it replaces), and backend caches are
+/// result-invariant by the pinned cache-vs-recompute tests.
+fn run_shard<F: ShardFactory + ?Sized>(
+    factory: &F,
+    lane: &mut Lane,
+    index: u32,
+    slab_reuses: &AtomicU64,
+    backend_reuses: &AtomicU64,
+) -> Result<ShardStats> {
+    let mut e = factory.build_shard_engine(index)?;
+    if lane.arena.pooled() > 0 {
+        e.exec.nvm = lane.arena.take();
+        slab_reuses.fetch_add(1, Ordering::Relaxed);
+    }
+    if let Some(be) = lane.backend.take() {
+        e.backend = be;
+        backend_reuses.fetch_add(1, Ordering::Relaxed);
+    }
+    let out = e.run_to_end();
+    // reclaim the pooled resources whatever the outcome (reset scrubs
+    // any half-finished state), then drop the engine
+    lane.arena.put(std::mem::take(&mut e.exec.nvm));
+    lane.backend = Some(std::mem::replace(
+        &mut e.backend,
+        Box::new(NativeBackend::new()),
+    ));
+    out.map(|r| ShardStats::of(&r))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::engine::Engine;
+    use crate::sim::fleet::testfleet::ConstFleet;
+    use crate::sim::fleet::{Fleet, Shard, SyncPlan, SyncStrategy};
+
+    #[test]
+    fn streaming_rollup_matches_retained_fleet_for_any_thread_count() {
+        let fleet = ConstFleet { n: 6 };
+        let retained = Fleet::new(&fleet).unwrap().run(1).unwrap();
+        for threads in [1, 2, 0] {
+            let streamed = run_streaming(&fleet, threads).unwrap();
+            assert_eq!(
+                streamed.rollup.to_json().to_string(),
+                retained.rollup.to_json().to_string(),
+                "threads={threads}"
+            );
+            assert_eq!(streamed.sketches.final_accuracy.count(), 6);
+        }
+    }
+
+    #[test]
+    fn streaming_document_is_deterministic_across_thread_counts() {
+        let fleet = ConstFleet { n: 5 };
+        let docs: Vec<String> = [1, 2, 0]
+            .iter()
+            .map(|&t| run_streaming(&fleet, t).unwrap().to_json().to_string())
+            .collect();
+        assert_eq!(docs[0], docs[1]);
+        assert_eq!(docs[0], docs[2]);
+        assert!(docs[0].contains("\"sketches\":{\"final_accuracy\":"));
+        assert!(!docs[0].contains("per_shard"));
+    }
+
+    #[test]
+    fn lanes_recycle_slabs_and_backends() {
+        let fleet = ConstFleet { n: 8 };
+        let r = run_streaming(&fleet, 1).unwrap();
+        // one worker lane: first shard builds, the other 7 recycle
+        assert_eq!(r.workers, 1);
+        assert_eq!(r.slab_reuses, 7);
+        assert_eq!(r.backend_reuses, 7);
+    }
+
+    #[test]
+    fn zero_shards_is_a_config_error() {
+        let fleet = ConstFleet { n: 0 };
+        let err = run_streaming(&fleet, 1).unwrap_err();
+        assert!(err.to_string().contains("shard count"), "{err}");
+    }
+
+    /// ConstFleet with a sync plan bolted on.
+    struct Synced {
+        inner: ConstFleet,
+        plan: SyncPlan,
+    }
+
+    impl ShardFactory for Synced {
+        fn shard_count(&self) -> u32 {
+            self.inner.shard_count()
+        }
+        fn shard(&self, index: u32) -> Result<Shard> {
+            self.inner.shard(index)
+        }
+        fn build_shard_engine(&self, index: u32) -> Result<Engine> {
+            self.inner.build_shard_engine(index)
+        }
+        fn sync_plan(&self) -> Option<SyncPlan> {
+            Some(self.plan)
+        }
+    }
+
+    #[test]
+    fn active_sync_plan_is_rejected() {
+        let mut fleet = Synced {
+            inner: ConstFleet { n: 4 },
+            plan: SyncPlan {
+                period_us: 300_000_000,
+                strategy: SyncStrategy::Gossip,
+                horizon_us: 900_000_000,
+            },
+        };
+        let err = run_streaming(&fleet, 1).unwrap_err();
+        assert!(err.to_string().contains("streaming fleet"), "{err}");
+        // a 1-shard "fleet" has no exchanges: streaming is fine
+        fleet.inner.n = 1;
+        assert!(run_streaming(&fleet, 1).is_ok());
+    }
+}

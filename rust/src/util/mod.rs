@@ -9,6 +9,7 @@ pub mod json;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod sketch;
 pub mod stats;
 
 pub use rng::Rng;

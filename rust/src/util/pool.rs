@@ -69,6 +69,65 @@ where
         .collect()
 }
 
+/// Streaming variant of [`run_indexed`]: results are folded on the
+/// calling thread in strict index order *while* the workers run, and
+/// then dropped — nothing is retained per item, so a million-item
+/// fan-out costs O(workers) memory instead of O(n).
+///
+/// Each worker owns a lane state built by `init()` on the worker thread
+/// (it never crosses threads, so it may hold non-`Send` resources such
+/// as compute backends or pooled NVM slabs) and threads it through every
+/// item it claims. The coordinator holds out-of-order arrivals in a
+/// reorder buffer and calls `fold(i, result)` exactly once per index, in
+/// ascending index order — the same fold sequence a serial loop would
+/// produce, for any worker count. The buffer only holds results that
+/// arrived ahead of the next expected index, so it stays O(workers) in
+/// practice.
+pub fn fold_indexed<S, T, I, F, G>(n: usize, threads: usize, init: I, job: F, mut fold: G)
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+    G: FnMut(usize, T),
+{
+    if n == 0 {
+        return;
+    }
+    let workers = resolve_workers(threads, n);
+    let next = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, T)>();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let init = &init;
+            let job = &job;
+            scope.spawn(move || {
+                let mut lane = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    if tx.send((i, job(&mut lane, i))).is_err() {
+                        break; // receiver gone: nothing left to report to
+                    }
+                }
+            });
+        }
+        drop(tx); // workers hold the remaining senders
+        let mut hold: std::collections::BTreeMap<usize, T> = std::collections::BTreeMap::new();
+        let mut want = 0usize;
+        for (i, r) in rx {
+            hold.insert(i, r);
+            while let Some(r) = hold.remove(&want) {
+                fold(want, r);
+                want += 1;
+            }
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -85,6 +144,56 @@ mod tests {
     fn empty_input_spawns_nothing() {
         let out: Vec<u32> = run_indexed(0, 4, |_| unreachable!());
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn fold_indexed_folds_in_strict_index_order_for_any_thread_count() {
+        for threads in [1, 2, 0] {
+            let mut seen = Vec::new();
+            fold_indexed(
+                17,
+                threads,
+                || 0u64, // lane state: items this worker has claimed
+                |lane, i| {
+                    *lane += 1;
+                    (i * i, *lane)
+                },
+                |i, (sq, claimed)| {
+                    assert!(claimed >= 1);
+                    seen.push((i, sq));
+                },
+            );
+            let want: Vec<_> = (0..17).map(|i| (i, i * i)).collect();
+            assert_eq!(seen, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fold_indexed_on_empty_input_never_calls_anything() {
+        fold_indexed(
+            0,
+            4,
+            || (),
+            |_, _| unreachable!("no items to claim"),
+            |_, ()| unreachable!("nothing to fold"),
+        );
+    }
+
+    #[test]
+    fn fold_indexed_lane_state_persists_across_claims() {
+        // One worker claims all items, so its lane counter must reach n.
+        let mut last = 0;
+        fold_indexed(
+            9,
+            1,
+            || 0usize,
+            |lane, _| {
+                *lane += 1;
+                *lane
+            },
+            |_, c| last = last.max(c),
+        );
+        assert_eq!(last, 9);
     }
 
     #[test]

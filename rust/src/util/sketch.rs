@@ -1,0 +1,321 @@
+//! Mergeable metric sketches for streaming fleet fan-in.
+//!
+//! A population-scale fleet folds each shard's scalar metrics into a
+//! [`MetricSketch`] and drops the shard's `RunResult` — the fleet's
+//! memory footprint is the sketch, not the population. The sketch keeps
+//! an exact `n`/`min`/`max` plus a sparse base-2 log histogram (8
+//! sub-buckets per octave), which answers quantile queries with a
+//! bounded relative error of `1/(2*SUB)` = 6.25%.
+//!
+//! Everything the sketch stores is either an integer count or a
+//! `min`/`max` fold, so merging two sketches — or folding values in any
+//! order — produces the *identical* sketch: the structure is fully
+//! order- and associativity-invariant. Deliberately absent are sums and
+//! means: float addition is order-dependent, so those stay in the
+//! fleet's index-ordered `Rollup` accumulators (`sim/fleet.rs`), which
+//! reproduce the retained path's op order exactly.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Sub-buckets per power-of-two octave. Quantile estimates land in the
+/// true value's bucket, whose width is `2^e / SUB`, so the midpoint
+/// estimate is within `1/(2*SUB)` relative error.
+const SUB: i64 = 8;
+
+/// Synthetic bucket key for subnormal positives (below them all).
+const KEY_SUBNORMAL: i64 = i64::MIN / 2;
+/// Synthetic bucket key for `+inf` (above them all).
+const KEY_INF: i64 = i64::MAX / 2;
+
+/// Bucket key for a finite positive normal `v`: `exponent * SUB + sub`,
+/// monotone in `v` (larger values always get larger keys).
+fn bucket_of(v: f64) -> i64 {
+    let e = ((v.to_bits() >> 52) & 0x7ff) as i64;
+    if e == 0 {
+        return KEY_SUBNORMAL;
+    }
+    if e == 0x7ff {
+        return KEY_INF;
+    }
+    let exp = e - 1023;
+    // Mantissa fraction in [1, 2): v / 2^exp, with 2^exp rebuilt from
+    // the raw exponent bits (exact, no libm).
+    let frac = v / f64::from_bits((e as u64) << 52);
+    let sub = ((frac - 1.0) * SUB as f64) as i64;
+    exp * SUB + sub.clamp(0, SUB - 1)
+}
+
+/// Midpoint of a bucket — the quantile estimate for any value in it.
+fn bucket_mid(k: i64) -> f64 {
+    if k == KEY_SUBNORMAL {
+        return 0.0;
+    }
+    if k == KEY_INF {
+        return f64::MAX;
+    }
+    let exp = k.div_euclid(SUB);
+    let sub = k.rem_euclid(SUB);
+    let base = 2f64.powi(exp as i32);
+    let width = base / SUB as f64;
+    base + sub as f64 * width + width / 2.0
+}
+
+/// Order-invariant streaming summary of one scalar metric: exact
+/// count/min/max plus a sparse log2 histogram for quantiles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricSketch {
+    n: u64,
+    min: f64,
+    max: f64,
+    /// Values counted as exactly zero (no log bucket exists for them).
+    zeros: u64,
+    /// Negative values, counted as a single mass at [`Self::min`] —
+    /// fleet metrics are non-negative, this is a safety net.
+    negatives: u64,
+    /// Sparse log2 buckets for finite positives: key → count.
+    bins: BTreeMap<i64, u64>,
+}
+
+impl Default for MetricSketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricSketch {
+    pub fn new() -> Self {
+        MetricSketch {
+            n: 0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            zeros: 0,
+            negatives: 0,
+            bins: BTreeMap::new(),
+        }
+    }
+
+    /// Fold one value in. Every update is a count increment or a
+    /// min/max fold, so record order never changes the result.
+    pub fn record(&mut self, v: f64) {
+        self.n += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if v > 0.0 {
+            *self.bins.entry(bucket_of(v)).or_insert(0) += 1;
+        } else if v < 0.0 {
+            self.negatives += 1;
+        } else {
+            // 0.0 (and NaN, which no fleet metric produces).
+            self.zeros += 1;
+        }
+    }
+
+    /// Fold another sketch in. `merge(a, b)` equals recording all of
+    /// `b`'s values into `a` — in any order, grouped any way.
+    pub fn merge(&mut self, other: &MetricSketch) {
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.zeros += other.zeros;
+        self.negatives += other.negatives;
+        for (&k, &c) in &other.bins {
+            *self.bins.entry(k).or_insert(0) += c;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Exact minimum (0.0 when empty, matching the `Rollup` convention).
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Quantile estimate for `q` in [0, 1]: the value at rank
+    /// `ceil(q * n)` (1-based), estimated as its bucket's midpoint and
+    /// clamped to the exact `[min, max]`. Relative error is at most
+    /// `1/(2*SUB)` = 6.25% for positive values; an empty sketch
+    /// answers 0.0 and a singleton answers its value exactly (the
+    /// clamp collapses to it).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let rank = ((q * self.n as f64).ceil() as u64).clamp(1, self.n);
+        // The extreme ranks are known exactly — answer them exactly.
+        if rank == 1 {
+            return self.min;
+        }
+        if rank == self.n {
+            return self.max;
+        }
+        let mut cum = self.negatives;
+        if rank <= cum {
+            return self.min;
+        }
+        cum += self.zeros;
+        if rank <= cum {
+            return 0.0;
+        }
+        for (&k, &c) in &self.bins {
+            cum += c;
+            if rank <= cum {
+                return bucket_mid(k).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("min", Json::Num(self.min())),
+            ("max", Json::Num(self.max())),
+            ("p50", Json::Num(self.quantile(0.5))),
+            ("p90", Json::Num(self.quantile(0.9))),
+            ("p99", Json::Num(self.quantile(0.99))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn sketch_of(vals: &[f64]) -> MetricSketch {
+        let mut s = MetricSketch::new();
+        for &v in vals {
+            s.record(v);
+        }
+        s
+    }
+
+    #[test]
+    fn empty_sketch_is_all_zeros() {
+        let s = MetricSketch::new();
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.quantile(0.5), 0.0);
+        assert_eq!(
+            s.to_json().to_string(),
+            "{\"n\":0,\"min\":0,\"max\":0,\"p50\":0,\"p90\":0,\"p99\":0}"
+        );
+    }
+
+    #[test]
+    fn singleton_sketch_answers_its_value_exactly() {
+        let s = sketch_of(&[3.7]);
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.min(), 3.7);
+        assert_eq!(s.max(), 3.7);
+        // Bucket midpoint clamped to [min, max] collapses to the value.
+        for q in [0.0, 0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(s.quantile(q), 3.7, "q={q}");
+        }
+    }
+
+    #[test]
+    fn zeros_and_negatives_have_exact_answers() {
+        let s = sketch_of(&[0.0, 0.0, -2.0, 5.0]);
+        assert_eq!(s.min(), -2.0);
+        assert_eq!(s.max(), 5.0);
+        // Rank walk: negatives first, then zeros, then positives.
+        assert_eq!(s.quantile(0.25), -2.0);
+        assert_eq!(s.quantile(0.5), 0.0);
+        assert_eq!(s.quantile(0.75), 0.0);
+    }
+
+    #[test]
+    fn merge_is_order_and_grouping_invariant() {
+        let mut rng = Rng::new(17);
+        let vals: Vec<f64> = (0..300)
+            .map(|_| rng.f64() * 1_000.0 + 0.001)
+            .collect();
+        let forward = sketch_of(&vals);
+
+        // Reverse record order.
+        let mut rev = vals.clone();
+        rev.reverse();
+        assert_eq!(forward, sketch_of(&rev));
+
+        // Shuffled record order.
+        let mut shuf = vals.clone();
+        rng.shuffle(&mut shuf);
+        assert_eq!(forward, sketch_of(&shuf));
+
+        // Chunked sub-sketches merged back-to-front.
+        let mut merged = MetricSketch::new();
+        for chunk in vals.chunks(37).rev() {
+            merged.merge(&sketch_of(chunk));
+        }
+        assert_eq!(forward, merged);
+
+        // Unbalanced merge tree: ((a+b)+c) vs (a+(b+c)).
+        let (a, b, c) = (
+            sketch_of(&vals[..100]),
+            sketch_of(&vals[100..200]),
+            sketch_of(&vals[200..]),
+        );
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right);
+        assert_eq!(left, forward);
+    }
+
+    #[test]
+    fn quantile_error_is_within_the_log_bucket_bound() {
+        let mut rng = Rng::new(7);
+        // Values spanning ~6 orders of magnitude.
+        let vals: Vec<f64> = (0..500)
+            .map(|_| (rng.f64() * 6.0 - 3.0).exp2() * (1.0 + rng.f64()))
+            .collect();
+        let s = sketch_of(&vals);
+        let mut sorted = vals.clone();
+        sorted.sort_by(f64::total_cmp);
+        for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+            let exact = sorted[rank - 1];
+            let est = s.quantile(q);
+            // Bound: midpoint of a bucket of width 2^e/SUB around a
+            // value >= 2^e, i.e. 1/(2*SUB) = 6.25% relative.
+            assert!(
+                (est - exact).abs() <= exact * (1.0 / (2.0 * SUB as f64)) + 1e-12,
+                "q={q}: est {est} exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn min_and_max_stay_exact_through_merges() {
+        let a = sketch_of(&[4.0, 9.0, 1.5]);
+        let mut b = sketch_of(&[8.25, 0.5]);
+        b.merge(&a);
+        assert_eq!(b.min(), 0.5);
+        assert_eq!(b.max(), 9.0);
+        assert_eq!(b.count(), 5);
+        assert_eq!(b.quantile(0.0), 0.5);
+        assert_eq!(b.quantile(1.0), 9.0);
+    }
+}

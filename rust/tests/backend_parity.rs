@@ -89,8 +89,10 @@ fn knn_infer_parity_scalar_and_batch() {
         assert!(close(a, b, 1e-4), "pjrt {a} native {b}");
     }
     let xs = vecn(&mut rng, BATCH * FEAT_DIM, 3.0);
-    let a = p.knn_infer_batch(&ex, &mask, &xs).unwrap();
-    let b = n.knn_infer_batch(&ex, &mask, &xs).unwrap();
+    let mut a = vec![0.0f32; BATCH];
+    let mut b = vec![0.0f32; BATCH];
+    p.knn_infer_batch(&ex, &mask, &xs, &mut a).unwrap();
+    n.knn_infer_batch(&ex, &mask, &xs, &mut b).unwrap();
     for i in 0..BATCH {
         assert!(close(a[i], b[i], 1e-4), "batch {i}: {} vs {}", a[i], b[i]);
     }

@@ -27,6 +27,7 @@ fn with_fleet(mut spec: ScenarioSpec, shards: u32, jitter_us: u64) -> ScenarioSp
         seed_stride: 1,
         overrides: vec![],
         sync: None,
+        stream: None,
     });
     spec
 }
@@ -102,6 +103,62 @@ fn sixteen_shard_solar_fleet_through_the_sweep_runner() {
     // the cell document carries the fleet aggregate
     let doc = serial[0].to_json().to_string();
     assert!(doc.contains("\"fleet\"") && doc.contains("\"rollup\""));
+}
+
+#[test]
+fn streaming_fleet_reproduces_the_retained_rollups_on_all_presets() {
+    // population-scale acceptance: the fold-and-drop fan-in equals the
+    // retained per-shard path's rollup bit for bit on every paper preset
+    for name in ["air_quality", "presence", "vibration"] {
+        let spec = with_fleet(preset(name, 7, 2 * H).unwrap(), 4, 1_800_000_000);
+        let retained = spec.run_fleet(0).unwrap();
+        let streamed = spec.run_fleet_streaming(0).unwrap();
+        assert_eq!(
+            streamed.rollup.to_json().to_string(),
+            retained.rollup.to_json().to_string(),
+            "{name}: streamed rollup diverged from the retained fan-in"
+        );
+        // every shard's stats reached the sketches before being dropped
+        assert_eq!(streamed.sketches.final_accuracy.count(), 4, "{name}");
+        assert_eq!(streamed.sketches.energy_uj.count(), 4, "{name}");
+    }
+}
+
+#[test]
+fn streaming_sixteen_shard_solar_fleet_is_thread_count_invariant() {
+    // the 16-shard solar acceptance cell through the streaming path:
+    // bit-identical to the retained fan-in for threads in {1, 2, 0}
+    let spec = with_fleet(preset("air_quality", 42, 8 * H).unwrap(), 16, 1_800_000_000);
+    let retained = spec.run_fleet(0).unwrap();
+    for threads in [1, 2, 0] {
+        let streamed = spec.run_fleet_streaming(threads).unwrap();
+        assert_eq!(
+            streamed.rollup.to_json().to_string(),
+            retained.rollup.to_json().to_string(),
+            "threads {threads}: streamed rollup diverged"
+        );
+    }
+}
+
+#[test]
+fn one_shard_streaming_fleet_matches_the_bare_engine() {
+    // golden pin: streaming a 1-shard fleet is the plain engine run
+    // folded once, and the document keeps sketches in, per-shard out
+    for name in ["air_quality", "presence", "vibration"] {
+        let plain = preset(name, 7, 2 * H).unwrap();
+        let solo = plain.build_engine().unwrap().run().unwrap();
+        let streamed = with_fleet(plain, 1, 0).run_fleet_streaming(1).unwrap();
+        let expect = FleetResult::aggregate(vec![solo]);
+        assert_eq!(
+            streamed.rollup.to_json().to_string(),
+            expect.rollup.to_json().to_string(),
+            "{name}: 1-shard streamed rollup diverged from the bare engine"
+        );
+        let doc = streamed.to_json().to_string();
+        assert!(doc.starts_with("{\"shards\":1,\"rollup\":{"), "{doc}");
+        assert!(doc.contains("\"sketches\":{\"final_accuracy\":{\"n\":1,"), "{doc}");
+        assert!(!doc.contains("per_shard"), "{doc}");
+    }
 }
 
 fn hourly_sync(strategy: SyncStrategy) -> SyncSpec {
