@@ -37,6 +37,14 @@ pub enum Error {
     #[error("nvm: {0}")]
     Nvm(String),
 
+    /// An injected power failure tripped ([`crate::fault::FaultInjector`]):
+    /// the device is dead until the host reboots it via
+    /// [`crate::nvm::Nvm::power_failure_reset`]. Every NVM operation after
+    /// the trip surfaces this error without mutating the store, so the
+    /// torn durable state is preserved exactly for crash-recovery checks.
+    #[error("power cut (fault injection)")]
+    PowerCut,
+
     /// I/O wrapper.
     #[error("io: {0}")]
     Io(#[from] std::io::Error),

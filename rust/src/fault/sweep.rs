@@ -1,0 +1,280 @@
+//! The crash-sweep driver: execute a scenario once to enumerate its
+//! persist steps, then re-execute it once per cut point, killing the
+//! device at that exact step and asserting the store recovers to a
+//! bit-exact commit boundary.
+//!
+//! The oracle is the reference run's per-commit digest log
+//! ([`crate::nvm::Nvm::start_digest_log`]): a run cut after `k` durable
+//! commit records must recover to exactly `log[k]` — the committed image
+//! the *uninterrupted* twin had after its `k`-th commit. On top of the
+//! digest check, every cut run reboots into a fresh device (new engine,
+//! recovered NVM) and must restore its run state
+//! ([`crate::sim::engine::Engine::restore_run_state`]) and learner
+//! ([`crate::learning::Learner::restore`]) without error — the
+//! self-healing restore path the paper's §3.5 claim needs.
+//!
+//! [`sweep_scenario_sabotaged`] is the negative control: the same sweep
+//! with the store's commit order deliberately broken (record before
+//! flushes). A sweep that cannot flag that bug proves nothing, so the
+//! self-test pins that it does.
+
+use crate::error::Result;
+use crate::fault::{FaultPlan, FaultPoint, SweepMode};
+use crate::nvm::Recovery;
+use crate::scenario::ScenarioSpec;
+use crate::util::json::Json;
+
+/// The outcome of one crash sweep, machine-readable via
+/// [`CrashReport::to_json`]. The JSON document carries only fields that
+/// are stable for a given (scenario, mode, seed, horizon) — cut counts
+/// and violations — so it can be pinned as a golden file; the run-shape
+/// statistics (`persist_steps`, `commits`, heal tallies) are for human
+/// output.
+#[derive(Debug, Clone)]
+pub struct CrashReport {
+    pub scenario: String,
+    pub mode: SweepMode,
+    /// Cut points executed (every one ran a full re-execution).
+    pub cuts: usize,
+    pub seed: u64,
+    pub horizon_us: u64,
+    /// Persist steps the reference run enumerated.
+    pub persist_steps: usize,
+    /// Journaled (non-empty) commits the reference run completed.
+    pub commits: usize,
+    /// Cut runs healed by rolling the interrupted commit back.
+    pub rolled_back: usize,
+    /// Cut runs healed by rolling the interrupted commit forward.
+    pub rolled_forward: usize,
+    /// Cut runs that left no interrupted commit to heal (the cut landed
+    /// before the commit journaled anything durable).
+    pub clean_cuts: usize,
+    /// Consistency violations, one line each. Empty means the claim held
+    /// at every cut point.
+    pub violations: Vec<String>,
+}
+
+impl CrashReport {
+    /// Did every cut point recover to a bit-exact commit boundary?
+    pub fn clean(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn mode_label(&self) -> &'static str {
+        match self.mode {
+            SweepMode::Exhaustive => "exhaustive",
+            SweepMode::Sample { .. } => "sample",
+        }
+    }
+
+    /// Golden-stable JSON document (see the type docs for what is
+    /// deliberately excluded).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scenario", Json::Str(self.scenario.clone())),
+            ("mode", Json::Str(self.mode_label().into())),
+            ("cuts", Json::Num(self.cuts as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("horizon_us", Json::Num(self.horizon_us as f64)),
+            (
+                "violations",
+                Json::Arr(self.violations.iter().cloned().map(Json::Str).collect()),
+            ),
+            (
+                "verdict",
+                Json::Str(if self.clean() { "clean" } else { "violations" }.into()),
+            ),
+        ])
+    }
+
+    /// Human-readable summary (one line) for progress output.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {} cuts over {} persist steps ({} commits): \
+             {} rolled back, {} rolled forward, {} clean, {} violations",
+            self.scenario,
+            self.cuts,
+            self.persist_steps,
+            self.commits,
+            self.rolled_back,
+            self.rolled_forward,
+            self.clean_cuts,
+            self.violations.len()
+        )
+    }
+}
+
+/// Run the crash sweep for `spec` under `mode`.
+pub fn sweep_scenario(spec: &ScenarioSpec, mode: SweepMode) -> Result<CrashReport> {
+    sweep_inner(spec, mode, false)
+}
+
+/// Negative control: the same sweep with the store's commit order broken
+/// (record before flushes). A correct sweep MUST report violations here.
+#[doc(hidden)]
+pub fn sweep_scenario_sabotaged(spec: &ScenarioSpec, mode: SweepMode) -> Result<CrashReport> {
+    sweep_inner(spec, mode, true)
+}
+
+fn describe(p: FaultPoint) -> String {
+    match p {
+        FaultPoint::Boundary(s) => format!("cut@step{s}"),
+        FaultPoint::Tear { step, offset } => format!("tear@step{step}+{offset}B"),
+    }
+}
+
+fn sweep_inner(spec: &ScenarioSpec, mode: SweepMode, record_first: bool) -> Result<CrashReport> {
+    // reference run: enumerate the persist steps and log the committed
+    // digest at every commit boundary
+    let mut reference = spec.build_engine()?;
+    if record_first {
+        reference.exec.nvm.debug_commit_record_first(true);
+    }
+    reference.exec.nvm.fault_mut().start_trace();
+    reference.exec.nvm.start_digest_log();
+    let _ = reference.run_to_end()?;
+    let trace = reference.exec.nvm.fault_mut().take_trace().unwrap_or_default();
+    let digests = reference.exec.nvm.take_digest_log().unwrap_or_default();
+    let plan = FaultPlan::from_trace(&trace, mode);
+
+    let mut report = CrashReport {
+        scenario: spec.name.clone(),
+        mode,
+        cuts: plan.points.len(),
+        seed: spec.seed,
+        horizon_us: spec.horizon_us,
+        persist_steps: trace.len(),
+        commits: digests.len().saturating_sub(1),
+        rolled_back: 0,
+        rolled_forward: 0,
+        clean_cuts: 0,
+        violations: Vec::new(),
+    };
+
+    for &point in &plan.points {
+        // re-execute with the device set to die at exactly this step
+        let mut e = spec.build_engine()?;
+        if record_first {
+            e.exec.nvm.debug_commit_record_first(true);
+        }
+        e.exec.nvm.fault_mut().arm(point);
+        let run = e.run_to_end();
+        if !e.exec.nvm.fault().tripped() {
+            // the armed step never executed: the cut run diverged from
+            // the reference run's persist-step enumeration
+            report.violations.push(format!(
+                "{}: armed cut never fired (run {})",
+                describe(point),
+                if run.is_ok() { "completed" } else { "failed early" }
+            ));
+            continue;
+        }
+        let records = e.exec.nvm.fault().records_done() as usize;
+        // reboot: volatile state is lost, torn durable state survives
+        e.exec.nvm.power_failure_reset();
+        match e.exec.nvm.recover() {
+            Recovery::Clean => report.clean_cuts += 1,
+            Recovery::RolledBack => report.rolled_back += 1,
+            Recovery::RolledForward => report.rolled_forward += 1,
+        }
+        let got = e.exec.nvm.committed_digest();
+        match digests.get(records) {
+            Some(&want) if want == got => {}
+            Some(&want) => report.violations.push(format!(
+                "{}: recovered digest {got:016x} != reference {want:016x} \
+                 after {records} durable commits",
+                describe(point)
+            )),
+            None => report.violations.push(format!(
+                "{}: {records} durable commit records exceed the reference \
+                 log ({} commits)",
+                describe(point),
+                digests.len().saturating_sub(1)
+            )),
+        }
+        // the healed store must boot a fresh device: run state and
+        // learner restore with no error
+        let mut twin = spec.build_engine()?;
+        twin.exec.nvm = std::mem::take(&mut e.exec.nvm);
+        if let Err(err) = twin.restore_run_state() {
+            report.violations.push(format!(
+                "{}: run-state restore failed after heal: {err}",
+                describe(point)
+            ));
+            continue;
+        }
+        if let Err(err) = twin.learner.restore(&mut twin.exec.nvm) {
+            report.violations.push(format!(
+                "{}: learner restore failed after heal: {err}",
+                describe(point)
+            ));
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario;
+
+    /// A deliberately tiny vibration world: a 30-second horizon keeps the
+    /// persist-step count (and so the exhaustive cut count) small enough
+    /// to re-execute at every point.
+    fn short_vibration() -> ScenarioSpec {
+        scenario::preset("vibration", 7, 30_000_000).unwrap()
+    }
+
+    #[test]
+    fn exhaustive_sweep_of_a_short_vibration_run_is_clean() {
+        let spec = short_vibration();
+        let r = sweep_scenario(&spec, SweepMode::Exhaustive).unwrap();
+        assert!(r.persist_steps > 0, "no persist steps enumerated");
+        assert!(r.commits > 0, "no journaled commits");
+        assert!(r.cuts >= r.persist_steps, "boundaries alone cover steps");
+        assert_eq!(r.violations, Vec::<String>::new());
+        assert!(r.clean());
+        // cuts before a commit's record must have rolled it back
+        assert!(r.rolled_back > 0, "no cut landed inside a commit");
+        // a valid record is adopted immediately in commit_action, so the
+        // injector can never strand one un-adopted: every heal rolls back
+        assert_eq!(r.rolled_forward, 0);
+        assert_eq!(
+            r.rolled_back + r.rolled_forward + r.clean_cuts,
+            r.cuts,
+            "every cut healed exactly once"
+        );
+        let doc = r.to_json().to_string();
+        assert!(doc.contains("\"verdict\":\"clean\""), "{doc}");
+        assert!(doc.contains("\"mode\":\"exhaustive\""), "{doc}");
+    }
+
+    #[test]
+    fn negative_control_the_record_first_bug_is_caught() {
+        // break the commit order (record before flushes) and the sweep
+        // must find digest corruption — if it cannot catch a planted
+        // wrong-order bug, a clean verdict means nothing
+        let spec = short_vibration();
+        let r = sweep_scenario_sabotaged(&spec, SweepMode::Exhaustive).unwrap();
+        assert!(!r.clean(), "sabotaged store passed the sweep");
+        assert!(
+            r.violations.iter().any(|v| v.contains("digest")),
+            "violations never mention the digest mismatch: {:?}",
+            r.violations
+        );
+        let doc = r.to_json().to_string();
+        assert!(doc.contains("\"verdict\":\"violations\""), "{doc}");
+    }
+
+    #[test]
+    fn sampled_sweeps_are_seeded_and_stable() {
+        let spec = short_vibration();
+        let mode = SweepMode::Sample { n: 6, seed: 9 };
+        let a = sweep_scenario(&spec, mode).unwrap();
+        let b = sweep_scenario(&spec, mode).unwrap();
+        assert_eq!(a.cuts, 6);
+        assert!(a.clean(), "{:?}", a.violations);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert!(a.to_json().to_string().contains("\"mode\":\"sample\""));
+    }
+}

@@ -70,6 +70,7 @@ pub mod baselines;
 pub mod energy;
 pub mod error;
 pub mod eval;
+pub mod fault;
 pub mod learning;
 pub mod nvm;
 pub mod planner;

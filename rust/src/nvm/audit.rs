@@ -41,6 +41,18 @@ pub enum AccessEvent {
         full: bool,
         in_txn: bool,
     },
+    /// A commit persist step durably flushed the staged image of `key`
+    /// (`bytes` long) into the redo area. Flushes happen in sorted key
+    /// order before the commit record, so a trace shows exactly how far
+    /// a torn commit progressed.
+    Flush { key: String, bytes: usize },
+    /// The checksummed commit record was written — the single persist
+    /// step that makes the transaction durable (the nonce-last idiom).
+    Record { bytes: usize },
+    /// `Nvm::recover` healed an interrupted commit: `rolled_back` means
+    /// the pre-transaction image was restored; `false` means a complete
+    /// commit record was found and the staged image was rolled forward.
+    Heal { rolled_back: bool },
 }
 
 /// An ordered recording of store operations.

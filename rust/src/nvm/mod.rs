@@ -30,6 +30,23 @@
 //! Every buffer (staging, dirty lists) keeps its capacity across
 //! transactions, so after warm-up the write/commit cycle performs no heap
 //! allocation.
+//!
+//! §Crash consistency — commit is not atomic on real FRAM/EEPROM, so it
+//! is not modeled as atomic here either. A non-empty commit executes as
+//! **persist steps**: each staged slot flushes to a durable redo area in
+//! deterministic (key-id) order, then a checksummed **commit record** is
+//! written last — the same written-last idiom `sim/state.rs::RunState`
+//! uses for its head blob. A power failure between or inside steps (the
+//! [`crate::fault::FaultInjector`] every store carries can cut or tear
+//! any step) leaves a representable torn state: after
+//! [`Nvm::power_failure_reset`] (volatile loss), [`Nvm::recover`] rolls
+//! the interrupted commit forward (valid record: adopt every flushed
+//! image, exactly what commit would have done) or back (missing/torn
+//! record: the pre-transaction committed image stands untouched). The
+//! record's checksum covers only the record itself — which is what lets
+//! the crash sweep's negative control catch a wrong-order commit. The
+//! record is framework overhead and is deliberately *not* charged to
+//! `bytes_written` (the committed byte goldens predate it).
 
 pub mod arena;
 pub mod audit;
@@ -38,6 +55,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::error::{Error, Result};
+use crate::fault::{self, FaultInjector, StepKind, StepOutcome};
 
 /// Interned key handle: resolve a string key once ([`Nvm::intern`]), then
 /// address the slot directly. Handles are only meaningful for the store
@@ -82,6 +100,81 @@ impl Slot {
     }
 }
 
+/// One durable flush-log entry of an in-flight commit: slot `id`'s
+/// staged image, `done` of `len` bytes flushed (a tear leaves a proper
+/// prefix).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct JournalEntry {
+    id: u32,
+    len: usize,
+    done: usize,
+}
+
+/// The durable commit journal: the flush log and commit record of the
+/// in-flight (or interrupted) commit. Buffers keep their capacity across
+/// commits so the steady-state commit cycle stays allocation-free.
+#[derive(Debug, Clone, Default)]
+struct Journal {
+    /// Commits durably recorded over this store's lifetime (encoded into
+    /// each record so no two records are bit-identical).
+    seq: u64,
+    /// Flush log of the in-flight commit (durable with each flush step).
+    entries: Vec<JournalEntry>,
+    /// `staged_used` snapshot encoded in the record; adopted as the
+    /// committed byte counter on roll-forward.
+    staged_used: usize,
+    /// Encoded commit record bytes (layout: seq, staged_used, n,
+    /// n×(id, len), FNV-1a checksum).
+    record_buf: Vec<u8>,
+    /// Durable prefix of `record_buf` (`None` = record never started;
+    /// `Some(n) < len` = torn record).
+    record_done: Option<usize>,
+}
+
+impl Journal {
+    /// Is a complete, checksum-valid, structurally sound commit record
+    /// durable?
+    fn record_valid(&self) -> bool {
+        let Some(done) = self.record_done else {
+            return false;
+        };
+        let buf = &self.record_buf;
+        if done != buf.len() || buf.len() < 28 {
+            return false;
+        }
+        let n = u32::from_le_bytes(buf[16..20].try_into().unwrap()) as usize;
+        if buf.len() != 28 + 12 * n {
+            return false;
+        }
+        let tail = u64::from_le_bytes(buf[buf.len() - 8..].try_into().unwrap());
+        fault::fnv1a(&buf[..buf.len() - 8]) == tail
+    }
+
+    /// Anything of an interrupted commit to recover from?
+    fn dirty(&self) -> bool {
+        !self.entries.is_empty() || self.record_done.is_some()
+    }
+
+    fn clear(&mut self) {
+        self.entries.clear();
+        self.record_done = None;
+    }
+}
+
+/// What [`Nvm::recover`] found (and did) at boot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Recovery {
+    /// No interrupted commit: the store was already consistent.
+    Clean,
+    /// A valid commit record with its flushed images: the interrupted
+    /// commit was completed (adopted) exactly as `commit_action` would
+    /// have.
+    RolledForward,
+    /// A missing or torn commit record: the interrupted commit was
+    /// discarded and the pre-transaction committed image stands.
+    RolledBack,
+}
+
 /// Byte-granular non-volatile store with transactional action semantics.
 #[derive(Debug)]
 pub struct Nvm {
@@ -99,6 +192,19 @@ pub struct Nvm {
     /// range from 512 B (PIC) to 256 KB (MSP430 FRAM).
     pub capacity: usize,
     store_id: u64,
+    /// Durable commit journal (flush log + commit record) of the
+    /// in-flight commit; survives a power cut for [`Nvm::recover`].
+    journal: Journal,
+    /// Power-failure injector (disarmed by default: one branch per
+    /// persist step). Not cloned — a clone is a different device.
+    fault: FaultInjector,
+    /// Reference-mode per-commit digest log (see
+    /// [`Nvm::start_digest_log`]); not cloned.
+    digest_log: Option<Vec<u64>>,
+    /// Negative-control bug knob: commit record written before flushes.
+    record_first: bool,
+    /// Fixture knob: die right after the record becomes durable.
+    cut_after_record: bool,
     // accounting
     pub bytes_written: u64,
     pub bytes_read: u64,
@@ -126,6 +232,11 @@ impl Clone for Nvm {
             staged_used: self.staged_used,
             capacity: self.capacity,
             store_id: NEXT_STORE_ID.fetch_add(1, Ordering::Relaxed),
+            journal: self.journal.clone(),
+            fault: FaultInjector::default(),
+            digest_log: None,
+            record_first: self.record_first,
+            cut_after_record: false,
             bytes_written: self.bytes_written,
             bytes_read: self.bytes_read,
             commits: self.commits,
@@ -147,6 +258,11 @@ impl Default for Nvm {
             staged_used: 0,
             capacity: 0,
             store_id: NEXT_STORE_ID.fetch_add(1, Ordering::Relaxed),
+            journal: Journal::default(),
+            fault: FaultInjector::default(),
+            digest_log: None,
+            record_first: false,
+            cut_after_record: false,
             bytes_written: 0,
             bytes_read: 0,
             commits: 0,
@@ -292,9 +408,38 @@ impl Nvm {
     #[inline(always)]
     fn audit_write(&mut self, _id: KeyId, _range: (usize, usize), _full: bool) {}
 
+    /// Record a commit-path flush persist step (key name cloned only
+    /// when a trace is armed).
+    #[cfg(debug_assertions)]
+    fn audit_flush(&mut self, id: KeyId, bytes: usize) {
+        if self.audit.is_none() {
+            return;
+        }
+        let event = audit::AccessEvent::Flush {
+            key: self.slots[id.0 as usize].name.clone(),
+            bytes,
+        };
+        self.audit.as_mut().unwrap().events.push(event);
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[inline(always)]
+    fn audit_flush(&mut self, _id: KeyId, _bytes: usize) {}
+
+    /// Dead-device guard: after an injected power cut every NVM operation
+    /// fails without mutating, preserving the torn durable state.
+    #[inline]
+    fn fault_check(&self) -> Result<()> {
+        if self.fault.tripped() {
+            return Err(Error::PowerCut);
+        }
+        Ok(())
+    }
+
     /// Open an action transaction. Nested transactions are an error (an
     /// intermittent MCU runs one action at a time).
     pub fn begin_action(&mut self) -> Result<()> {
+        self.fault_check()?;
         if self.txn_open {
             return Err(Error::Nvm("action already in flight".into()));
         }
@@ -304,11 +449,103 @@ impl Nvm {
         Ok(())
     }
 
-    /// Commit the in-flight action's writes.
+    /// Persist steps 1..k of a commit: flush each staged slot's image to
+    /// the durable redo area, in key-id order, appending to the durable
+    /// flush log. Errors with [`Error::PowerCut`] if the injector cuts or
+    /// tears a step (a tear logs the durable prefix length).
+    fn persist_flushes(&mut self) -> Result<()> {
+        for i in 0..self.txn_dirty.len() {
+            let id = self.txn_dirty[i];
+            let len = self.slots[id.0 as usize].staged.len();
+            let outcome =
+                self.fault
+                    .on_step(StepKind::Flush, &self.slots[id.0 as usize].name, len);
+            match outcome {
+                StepOutcome::Run => {
+                    self.journal.entries.push(JournalEntry { id: id.0, len, done: len });
+                    self.audit_flush(id, len);
+                }
+                StepOutcome::Cut => return Err(Error::PowerCut),
+                StepOutcome::Tear(done) => {
+                    self.journal.entries.push(JournalEntry { id: id.0, len, done });
+                    return Err(Error::PowerCut);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The final persist step of a commit: encode and durably write the
+    /// checksummed commit record. The record names every slot the commit
+    /// flushes (id + length) plus the committed-byte counter, and its
+    /// FNV-1a checksum covers only the record bytes themselves — a torn
+    /// record is detectable, flushed data is trusted.
+    fn persist_record(&mut self) -> Result<()> {
+        self.journal.staged_used = self.staged_used;
+        let mut buf = std::mem::take(&mut self.journal.record_buf);
+        buf.clear();
+        buf.extend_from_slice(&(self.journal.seq + 1).to_le_bytes());
+        buf.extend_from_slice(&(self.staged_used as u64).to_le_bytes());
+        buf.extend_from_slice(&(self.txn_dirty.len() as u32).to_le_bytes());
+        for id in &self.txn_dirty {
+            buf.extend_from_slice(&id.0.to_le_bytes());
+            buf.extend_from_slice(&(self.slots[id.0 as usize].staged.len() as u64).to_le_bytes());
+        }
+        let sum = fault::fnv1a(&buf);
+        buf.extend_from_slice(&sum.to_le_bytes());
+        let len = buf.len();
+        self.journal.record_buf = buf;
+        match self.fault.on_step(StepKind::Record, "<commit-record>", len) {
+            StepOutcome::Run => {
+                self.journal.record_done = Some(len);
+                self.audit_mark(audit::AccessEvent::Record { bytes: len });
+                Ok(())
+            }
+            StepOutcome::Cut => Err(Error::PowerCut),
+            StepOutcome::Tear(done) => {
+                self.journal.record_done = Some(done);
+                Err(Error::PowerCut)
+            }
+        }
+    }
+
+    /// Commit the in-flight action's writes. A commit that staged nothing
+    /// is RAM-only; a non-empty commit runs the persist-step protocol
+    /// (flushes in key-id order, checksummed record last) and only then
+    /// adopts the staged images — so a power failure at any point leaves
+    /// a state [`Nvm::recover`] heals to a bit-exact commit boundary.
     pub fn commit_action(&mut self) -> Result<()> {
+        self.fault_check()?;
         if !self.txn_open {
             return Err(Error::Nvm("commit without begin".into()));
         }
+        if self.txn_dirty.is_empty() {
+            // nothing staged: no durable work, no record
+            self.txn_open = false;
+            self.commits += 1;
+            self.audit_mark(audit::AccessEvent::Commit);
+            return Ok(());
+        }
+        // deterministic flush order, so a reference run and a cut run
+        // enumerate identical persist steps
+        self.txn_dirty.sort_unstable_by_key(|id| id.0);
+        self.journal.clear();
+        if self.record_first {
+            // negative-control bug: record before flushes (wrong order)
+            self.persist_record()?;
+            self.persist_flushes()?;
+        } else {
+            self.persist_flushes()?;
+            self.persist_record()?;
+        }
+        if self.cut_after_record {
+            // fixture knob: the record is durable but the device dies
+            // before the RAM-side adoption — roll-forward territory
+            self.fault.force_trip();
+            return Err(Error::PowerCut);
+        }
+        // the commit is durable; adopt the staged images (recovery
+        // performs this exact adoption if power fails before we do)
         while let Some(id) = self.txn_dirty.pop() {
             let slot = &mut self.slots[id.0 as usize];
             if slot.staged_present {
@@ -321,15 +558,23 @@ impl Nvm {
             slot.dirty.clear();
         }
         self.used = self.staged_used;
+        self.journal.clear();
+        self.journal.seq += 1;
         self.txn_open = false;
         self.commits += 1;
         self.audit_mark(audit::AccessEvent::Commit);
+        if self.digest_log.is_some() {
+            let d = self.committed_digest();
+            self.digest_log.as_mut().unwrap().push(d);
+        }
         Ok(())
     }
 
     /// Discard the in-flight action's writes (power failure mid-action).
+    /// A no-op on a dead (fault-tripped) device: post-cut cleanup must
+    /// not destroy the torn evidence recovery inspects.
     pub fn abort_action(&mut self) {
-        if !self.txn_open {
+        if self.fault.tripped() || !self.txn_open {
             return;
         }
         while let Some(id) = self.txn_dirty.pop() {
@@ -341,6 +586,157 @@ impl Nvm {
         self.txn_open = false;
         self.aborts += 1;
         self.audit_mark(audit::AccessEvent::Abort);
+    }
+
+    /// Model the volatile loss of a host reboot after a power cut: the
+    /// open transaction's RAM bookkeeping and any staged image the
+    /// interrupted commit did **not** completely flush disappear; what
+    /// reached durable media — committed values, fully-flushed redo
+    /// images, the flush log and (possibly torn) commit record — stays.
+    /// Also quiets the injector ([`FaultInjector::reboot`]). Call
+    /// [`Nvm::recover`] next to heal the interrupted commit.
+    pub fn power_failure_reset(&mut self) {
+        while let Some(id) = self.txn_dirty.pop() {
+            let complete = self
+                .journal
+                .entries
+                .iter()
+                .any(|e| e.id == id.0 && e.done == e.len);
+            let slot = &mut self.slots[id.0 as usize];
+            if !complete {
+                slot.staged.clear();
+                slot.staged_present = false;
+            }
+            slot.dirty.clear();
+        }
+        self.txn_open = false;
+        self.staged_used = self.used;
+        self.fault.reboot();
+    }
+
+    /// Crash recovery: inspect the commit journal a power failure left
+    /// behind and heal the store to an exact commit boundary. A valid
+    /// commit record rolls the interrupted commit **forward** (every
+    /// recorded slot's flushed image is adopted, exactly as
+    /// `commit_action` would have); a missing or torn record rolls it
+    /// **back** (flushed images are discarded; the pre-transaction
+    /// committed image stands untouched). Idempotent, and [`Recovery::
+    /// Clean`] on a store with no interrupted commit — callers run it
+    /// unconditionally at boot, before restoring learners or run state.
+    pub fn recover(&mut self) -> Recovery {
+        if !self.journal.dirty() {
+            return Recovery::Clean;
+        }
+        if self.journal.record_valid() {
+            // roll forward: replay the recorded entry set from the redo
+            // area. The record is trusted (its checksum proved it whole);
+            // if a recorded slot was never flushed — only possible under
+            // a wrong-order commit bug — garbage is adopted, which is
+            // precisely the corruption the crash sweep exists to catch.
+            let buf = std::mem::take(&mut self.journal.record_buf);
+            let n = u32::from_le_bytes(buf[16..20].try_into().unwrap()) as usize;
+            for e in 0..n {
+                let at = 20 + e * 12;
+                let id = u32::from_le_bytes(buf[at..at + 4].try_into().unwrap()) as usize;
+                if let Some(slot) = self.slots.get_mut(id) {
+                    std::mem::swap(&mut slot.committed, &mut slot.staged);
+                    slot.present = true;
+                    slot.staged_present = false;
+                    slot.dirty.clear();
+                }
+            }
+            self.journal.record_buf = buf;
+            self.used = self.journal.staged_used;
+            self.staged_used = self.used;
+            self.journal.clear();
+            self.journal.seq += 1;
+            self.commits += 1;
+            self.audit_mark(audit::AccessEvent::Heal { rolled_back: false });
+            Recovery::RolledForward
+        } else {
+            // roll back: discard the flushed images; committed is the
+            // pre-transaction image and was never touched by the commit
+            for i in 0..self.journal.entries.len() {
+                let id = self.journal.entries[i].id as usize;
+                if let Some(slot) = self.slots.get_mut(id) {
+                    slot.staged_present = false;
+                    slot.dirty.clear();
+                }
+            }
+            self.journal.clear();
+            self.staged_used = self.used;
+            self.aborts += 1;
+            self.audit_mark(audit::AccessEvent::Heal { rolled_back: true });
+            Recovery::RolledBack
+        }
+    }
+
+    /// The store's power-failure injector (disarmed by default).
+    pub fn fault(&self) -> &FaultInjector {
+        &self.fault
+    }
+
+    /// Mutable injector access: arm fault points, start step traces.
+    pub fn fault_mut(&mut self) -> &mut FaultInjector {
+        &mut self.fault
+    }
+
+    /// FNV-1a fingerprint of the committed (durable, post-recovery)
+    /// image: every interned key's name, presence, and committed bytes,
+    /// in name order. Staged state, counters, and capacity are excluded —
+    /// this is the durability fingerprint the crash sweep compares.
+    pub fn committed_digest(&self) -> u64 {
+        let mut h = fault::Fnv64::new();
+        for (name, &id) in &self.index {
+            let slot = &self.slots[id.0 as usize];
+            h.update(name.as_bytes());
+            h.update(&[0xff, slot.present as u8]);
+            if slot.present {
+                h.update(&(slot.committed.len() as u64).to_le_bytes());
+                h.update(&slot.committed);
+            }
+        }
+        h.finish()
+    }
+
+    /// Arm the reference-mode digest log: the current committed digest
+    /// is recorded immediately, then again after every journaled
+    /// (non-empty) commit — `log[k]` is the committed image after `k`
+    /// durable commit records, the oracle a cut run's recovered digest
+    /// must land on.
+    pub fn start_digest_log(&mut self) {
+        let d = self.committed_digest();
+        self.digest_log = Some(vec![d]);
+    }
+
+    /// Take the digest log (`None` if never armed).
+    pub fn take_digest_log(&mut self) -> Option<Vec<u64>> {
+        self.digest_log.take()
+    }
+
+    /// Negative-control bug knob (crash-sweep self-test only): write the
+    /// commit record *before* the slot flushes — the classic wrong-order
+    /// bug the sweep must catch. Never set outside tests.
+    #[doc(hidden)]
+    pub fn debug_commit_record_first(&mut self, on: bool) {
+        self.record_first = on;
+    }
+
+    /// Fixture knob: die right after the commit record becomes durable,
+    /// before the RAM-side adoption — the one torn state only
+    /// roll-forward recovery can reach. Never set outside tests.
+    #[doc(hidden)]
+    pub fn debug_cut_after_record(&mut self, on: bool) {
+        self.cut_after_record = on;
+    }
+
+    /// Fixture knob: flip a bit of the in-flight commit record (medium
+    /// decay / checksum corruption). Never call outside tests.
+    #[doc(hidden)]
+    pub fn debug_corrupt_record(&mut self) {
+        if let Some(b) = self.journal.record_buf.last_mut() {
+            *b ^= 0x01;
+        }
     }
 
     /// Reset this store for reuse by a new logical device (the pooled
@@ -369,6 +765,13 @@ impl Nvm {
         self.bytes_read = 0;
         self.commits = 0;
         self.aborts = 0;
+        self.journal.clear();
+        self.journal.seq = 0;
+        self.journal.record_buf.clear();
+        self.fault = FaultInjector::default();
+        self.digest_log = None;
+        self.record_first = false;
+        self.cut_after_record = false;
         self.store_id = NEXT_STORE_ID.fetch_add(1, Ordering::Relaxed);
         #[cfg(debug_assertions)]
         {
@@ -452,6 +855,7 @@ impl Nvm {
     /// staged; outside (framework bookkeeping, e.g. at boot) it commits
     /// immediately. Allocation-free once the slot's buffers have grown.
     pub fn write_id(&mut self, id: KeyId, bytes: &[u8]) -> Result<()> {
+        self.fault_check()?;
         self.slot(id)?;
         self.check_capacity(id, bytes.len())?;
         let old_len = self.slots[id.0 as usize].pending_len();
@@ -483,6 +887,7 @@ impl Nvm {
     /// staging buffer from the committed value (read-your-writes), and the
     /// dirty span is recorded per slot.
     pub fn write_at(&mut self, id: KeyId, offset: usize, bytes: &[u8]) -> Result<()> {
+        self.fault_check()?;
         self.slot(id)?;
         let end = offset + bytes.len();
         let old_len = self.slots[id.0 as usize].pending_len();
@@ -518,7 +923,11 @@ impl Nvm {
     }
 
     /// Borrowing read with read-your-writes semantics (no clone).
+    /// Reads nothing (and charges nothing) on a dead device.
     pub fn read_id(&mut self, id: KeyId) -> Option<&[u8]> {
+        if self.fault.tripped() {
+            return None;
+        }
         let slot = self.slots.get(id.0 as usize)?;
         let len = if slot.staged_present {
             slot.staged.len()
@@ -561,6 +970,7 @@ impl Nvm {
 
     /// Write an f32 slice through a handle (full value).
     pub fn write_f32s_id(&mut self, id: KeyId, xs: &[f32]) -> Result<()> {
+        self.fault_check()?;
         self.slot(id)?;
         let new_len = xs.len() * 4;
         self.check_capacity(id, new_len)?;
@@ -593,6 +1003,7 @@ impl Nvm {
     /// Range write of f32s at *element* offset `at` (the dirty-slot
     /// delta-checkpoint primitive: one ring row, one cluster row).
     pub fn write_f32s_at(&mut self, id: KeyId, at: usize, xs: &[f32]) -> Result<()> {
+        self.fault_check()?;
         self.slot(id)?;
         let offset = at * 4;
         let end = offset + xs.len() * 4;
@@ -638,7 +1049,7 @@ impl Nvm {
     /// `false` (leaving `out` untouched, charging no read) unless a value
     /// of exactly `out.len()` f32s exists.
     pub fn read_f32s_into(&mut self, id: KeyId, out: &mut [f32]) -> bool {
-        if self.value_len(id) != Some(out.len() * 4) {
+        if self.fault.tripped() || self.value_len(id) != Some(out.len() * 4) {
             return false;
         }
         self.bytes_read += (out.len() * 4) as u64;
@@ -910,7 +1321,7 @@ mod tests {
         nvm.read_f32s_id(id).unwrap();
         nvm.commit_action().unwrap();
         let trace = nvm.audit_take().unwrap();
-        assert_eq!(trace.events.len(), 4, "{:?}", trace.events);
+        assert_eq!(trace.events.len(), 6, "{:?}", trace.events);
         assert_eq!(trace.events[0], AccessEvent::Begin);
         assert_eq!(
             trace.events[1],
@@ -931,7 +1342,16 @@ mod tests {
                 in_txn: true
             }
         );
-        assert_eq!(trace.events[3], AccessEvent::Commit);
+        // the commit's persist steps: one slot flush, then the record
+        assert_eq!(
+            trace.events[3],
+            AccessEvent::Flush {
+                key: "buf".into(),
+                bytes: 16
+            }
+        );
+        assert!(matches!(trace.events[4], AccessEvent::Record { .. }));
+        assert_eq!(trace.events[5], AccessEvent::Commit);
         // taking the trace disarms the recorder
         nvm.read_f32s_id(id).unwrap();
         assert!(nvm.audit_take().is_none());
@@ -969,6 +1389,203 @@ mod tests {
         nvm.abort_action();
         let keys: Vec<&str> = nvm.keys().map(|(k, _)| k).collect();
         assert_eq!(keys, vec!["x"]);
+    }
+
+    // ---- crash consistency: torn commits, detect-and-heal ---------------
+
+    use crate::fault::FaultPoint;
+
+    #[test]
+    fn empty_commits_are_ram_only_with_no_persist_steps() {
+        let mut nvm = Nvm::new();
+        nvm.fault_mut().start_trace();
+        nvm.begin_action().unwrap();
+        nvm.commit_action().unwrap();
+        assert!(nvm.fault_mut().take_trace().unwrap().is_empty());
+        assert_eq!(nvm.fault().records_done(), 0);
+        assert_eq!(nvm.commits, 1);
+    }
+
+    #[test]
+    fn boundary_cut_before_any_flush_heals_to_the_pre_txn_image() {
+        let mut nvm = Nvm::new();
+        nvm.write("a", &[1, 2, 3]).unwrap();
+        nvm.write("b", &[4, 5]).unwrap();
+        let before = nvm.committed_digest();
+        nvm.begin_action().unwrap();
+        nvm.write("a", &[9, 9, 9]).unwrap();
+        nvm.write("b", &[8, 8]).unwrap();
+        nvm.fault_mut().arm(FaultPoint::Boundary(0));
+        assert!(matches!(nvm.commit_action(), Err(Error::PowerCut)));
+        // dead until reboot: no op mutates, reads see nothing
+        assert!(matches!(nvm.begin_action(), Err(Error::PowerCut)));
+        assert!(nvm.read("a").is_none());
+        nvm.abort_action(); // post-cut cleanup must not destroy evidence
+        nvm.power_failure_reset();
+        assert_eq!(nvm.recover(), Recovery::RolledBack);
+        assert_eq!(nvm.committed_digest(), before);
+        assert_eq!(nvm.read("a").unwrap(), vec![1, 2, 3]);
+        assert_eq!(nvm.read("b").unwrap(), vec![4, 5]);
+        // fully usable after the heal
+        nvm.begin_action().unwrap();
+        nvm.write("a", &[7]).unwrap();
+        nvm.commit_action().unwrap();
+        assert_eq!(nvm.read("a").unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn missing_commit_record_rolls_back_flushed_slots() {
+        // cut at the record step: both slots flushed durably, record absent
+        let mut nvm = Nvm::new();
+        nvm.write("a", &[1; 4]).unwrap();
+        nvm.write("b", &[2; 4]).unwrap();
+        let before = nvm.committed_digest();
+        nvm.begin_action().unwrap();
+        nvm.write("a", &[7; 4]).unwrap();
+        nvm.write("b", &[8; 4]).unwrap();
+        nvm.fault_mut().arm(FaultPoint::Boundary(2)); // steps: flush a, flush b, record
+        assert!(matches!(nvm.commit_action(), Err(Error::PowerCut)));
+        nvm.power_failure_reset();
+        assert_eq!(nvm.recover(), Recovery::RolledBack);
+        assert_eq!(nvm.committed_digest(), before);
+        assert_eq!(nvm.read("a").unwrap(), vec![1; 4]);
+    }
+
+    #[test]
+    fn torn_slot_flush_rolls_back() {
+        let mut nvm = Nvm::new();
+        nvm.write("buf", &[0; 8]).unwrap();
+        let before = nvm.committed_digest();
+        nvm.begin_action().unwrap();
+        nvm.write("buf", &[9; 8]).unwrap();
+        nvm.fault_mut().arm(FaultPoint::Tear { step: 0, offset: 3 });
+        assert!(matches!(nvm.commit_action(), Err(Error::PowerCut)));
+        nvm.power_failure_reset();
+        assert_eq!(nvm.recover(), Recovery::RolledBack);
+        assert_eq!(nvm.committed_digest(), before);
+        assert_eq!(nvm.read("buf").unwrap(), vec![0; 8]);
+    }
+
+    #[test]
+    fn torn_commit_record_rolls_back() {
+        let mut nvm = Nvm::new();
+        nvm.write("x", &[1]).unwrap();
+        let before = nvm.committed_digest();
+        nvm.begin_action().unwrap();
+        nvm.write("x", &[2]).unwrap();
+        nvm.fault_mut().arm(FaultPoint::Tear { step: 1, offset: 10 });
+        assert!(matches!(nvm.commit_action(), Err(Error::PowerCut)));
+        nvm.power_failure_reset();
+        assert_eq!(nvm.recover(), Recovery::RolledBack);
+        assert_eq!(nvm.committed_digest(), before);
+        assert_eq!(nvm.read("x").unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn corrupted_record_checksum_rolls_back() {
+        // record fully written, then the medium decays a record byte:
+        // the checksum catches it and the commit is discarded whole
+        let mut nvm = Nvm::new();
+        nvm.write("x", &[1]).unwrap();
+        let before = nvm.committed_digest();
+        nvm.debug_cut_after_record(true);
+        nvm.begin_action().unwrap();
+        nvm.write("x", &[2]).unwrap();
+        assert!(matches!(nvm.commit_action(), Err(Error::PowerCut)));
+        nvm.debug_corrupt_record();
+        nvm.power_failure_reset();
+        assert_eq!(nvm.recover(), Recovery::RolledBack);
+        assert_eq!(nvm.committed_digest(), before);
+        assert_eq!(nvm.read("x").unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn cut_after_record_rolls_forward_to_the_committed_image() {
+        let mut nvm = Nvm::new();
+        nvm.write("x", &[1]).unwrap();
+        let mut twin = nvm.clone();
+        nvm.debug_cut_after_record(true);
+        nvm.begin_action().unwrap();
+        nvm.write("x", &[2]).unwrap();
+        assert!(matches!(nvm.commit_action(), Err(Error::PowerCut)));
+        nvm.debug_cut_after_record(false);
+        nvm.power_failure_reset();
+        assert_eq!(nvm.recover(), Recovery::RolledForward);
+        // bit-identical to a twin whose commit was never interrupted
+        twin.begin_action().unwrap();
+        twin.write("x", &[2]).unwrap();
+        twin.commit_action().unwrap();
+        assert_eq!(nvm.committed_digest(), twin.committed_digest());
+        assert_eq!(nvm.read("x").unwrap(), vec![2]);
+        assert_eq!(nvm.used_bytes(), twin.used_bytes());
+    }
+
+    #[test]
+    fn record_first_bug_corrupts_the_roll_forward() {
+        // negative control: a wrong-order commit (record before flushes)
+        // leaves a valid record over unflushed data — recovery trusts the
+        // record and adopts garbage, which digests must expose
+        let mut nvm = Nvm::new();
+        nvm.write("a", &[1; 4]).unwrap();
+        nvm.write("b", &[2; 4]).unwrap();
+        let mut twin = nvm.clone();
+        nvm.debug_commit_record_first(true);
+        nvm.begin_action().unwrap();
+        nvm.write("a", &[7; 4]).unwrap();
+        nvm.write("b", &[8; 4]).unwrap();
+        nvm.fault_mut().arm(FaultPoint::Boundary(1)); // record ran (step 0), cut first flush
+        assert!(matches!(nvm.commit_action(), Err(Error::PowerCut)));
+        nvm.power_failure_reset();
+        assert_eq!(nvm.recover(), Recovery::RolledForward);
+        twin.begin_action().unwrap();
+        twin.write("a", &[7; 4]).unwrap();
+        twin.write("b", &[8; 4]).unwrap();
+        twin.commit_action().unwrap();
+        assert_ne!(
+            nvm.committed_digest(),
+            twin.committed_digest(),
+            "the seeded wrong-order bug must corrupt the store"
+        );
+    }
+
+    #[test]
+    fn recover_is_clean_on_healthy_stores_and_idempotent_after_a_heal() {
+        let mut nvm = Nvm::new();
+        assert_eq!(nvm.recover(), Recovery::Clean);
+        nvm.begin_action().unwrap();
+        nvm.write("x", &[5]).unwrap();
+        nvm.commit_action().unwrap();
+        assert_eq!(nvm.recover(), Recovery::Clean);
+        nvm.begin_action().unwrap();
+        nvm.write("x", &[6]).unwrap();
+        let next = nvm.fault().steps_seen();
+        nvm.fault_mut().arm(FaultPoint::Boundary(next));
+        assert!(nvm.commit_action().is_err());
+        nvm.power_failure_reset();
+        assert_eq!(nvm.recover(), Recovery::RolledBack);
+        assert_eq!(nvm.recover(), Recovery::Clean);
+        assert_eq!(nvm.read("x").unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn digest_log_records_one_digest_per_journaled_commit() {
+        let mut nvm = Nvm::new();
+        nvm.write("x", &[1]).unwrap();
+        nvm.start_digest_log();
+        nvm.begin_action().unwrap();
+        nvm.commit_action().unwrap(); // empty commit: no entry
+        nvm.begin_action().unwrap();
+        nvm.write("x", &[2]).unwrap();
+        nvm.commit_action().unwrap();
+        nvm.begin_action().unwrap();
+        nvm.write("x", &[3]).unwrap();
+        nvm.commit_action().unwrap();
+        let log = nvm.take_digest_log().unwrap();
+        assert_eq!(log.len(), 3, "initial + 2 journaled commits");
+        assert_eq!(log[2], nvm.committed_digest());
+        assert_ne!(log[0], log[1]);
+        assert_eq!(nvm.fault().records_done(), 2);
+        assert!(nvm.take_digest_log().is_none());
     }
 
     #[test]

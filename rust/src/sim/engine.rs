@@ -282,16 +282,21 @@ impl Engine {
         Ok(std::mem::take(&mut self.result))
     }
 
-    /// Attempt the radio exchange of one fleet sync round: charge the
-    /// `tx` + `rx_peers`·`rx` price against the capacitor and, if the
-    /// shard can afford it, advance the clock by the airtime and return
-    /// the learner's model snapshot. Wake bursts routinely end at
+    /// Attempt the rendezvous of one fleet sync round: charge the
+    /// capacitor toward the worst-case `tx` + `rx_peers`·`rx` radio price
+    /// and, if the shard can get there, return the learner's model
+    /// snapshot as its bid to participate. Wake bursts routinely end at
     /// brown-out, so the shard first *charges toward the price* (the
     /// rendezvous window runs to `deadline_us`, normally the next sync
     /// boundary); a shard whose harvester cannot get it there in a whole
     /// round skips (`syncs_skipped`) — sync is an energy-gated action,
     /// not a free barrier. Learners that do not support snapshots opt the
     /// shard out silently (no charge, no counters).
+    ///
+    /// Nothing is spent here: once the round coordinator knows who showed
+    /// up, each participant pays via [`Engine::commit_sync`] — or, if it
+    /// turned out to be alone, skips the pointless exchange for free via
+    /// [`Engine::solo_sync`] (the PR-5 lone-participant tax).
     pub fn prepare_sync(
         &mut self,
         rx_peers: u32,
@@ -341,8 +346,22 @@ impl Engine {
             self.result.syncs_skipped += 1;
             return None;
         }
+        let _ = price_us; // airtime is spent at commit, not at rendezvous
+        Some(snap)
+    }
+
+    /// Pay for one prepared sync exchange: deduct the radio price for the
+    /// `rx_peers` peers that actually showed up, advance the clock by the
+    /// airtime and meter one `Tx` plus `rx_peers` `Rx` actions. Call only
+    /// after [`Engine::prepare_sync`] returned a snapshot this round — the
+    /// rendezvous already charged the capacitor up to the worst-case price
+    /// and no simulation ran in between, so the deduction cannot fail
+    /// (actual peers ≤ the fleet-wide count the rendezvous charged for).
+    pub fn commit_sync(&mut self, rx_peers: u32) {
+        let (price_uj, price_us) = self.costs.sync_price(rx_peers);
         let ok = self.world.cap.deduct_uj(price_uj);
-        debug_assert!(ok, "usable_uj covered the sync price");
+        debug_assert!(ok, "prepare_sync charged toward the sync price");
+        let _ = ok;
         self.world.advance_us(price_us);
         let tx = self.costs.cost(Action::Tx);
         let rx = self.costs.cost(Action::Rx);
@@ -351,7 +370,20 @@ impl Engine {
             self.meter.record_action(Action::Rx, rx.energy_uj, rx.time_us);
         }
         self.result.syncs_done += 1;
-        Some(snap)
+    }
+
+    /// A prepared sync round where nobody else made the rendezvous:
+    /// broadcasting to nobody and listening to silence buys nothing, so
+    /// the exchange is skipped with zero energy and zero airtime and the
+    /// round is counted under [`RunResult::syncs_solo`].
+    pub fn solo_sync(&mut self) {
+        self.result.syncs_solo += 1;
+    }
+
+    /// Count a sync round this shard sat out without even attempting the
+    /// rendezvous — the fleet tier's quarantined catch-up rounds.
+    pub fn note_sync_skipped(&mut self) {
+        self.result.syncs_skipped += 1;
     }
 
     /// Fold the peer snapshots of one sync round into the local learner
@@ -397,7 +429,13 @@ impl Engine {
     /// `exec.nvm` was carried over. Returns `false` when the store holds
     /// no run state. The learner restores separately through its own NVM
     /// checkpoint ([`crate::learning::Learner::restore`]).
+    ///
+    /// Self-heals first: if the carried-over store died inside a commit,
+    /// [`crate::nvm::Nvm::recover`] rolls the interrupted transaction
+    /// forward (complete commit record) or back (torn) before anything
+    /// reads it, so a restore never observes a half-committed snapshot.
     pub fn restore_run_state(&mut self) -> Result<bool> {
+        self.exec.nvm.recover();
         match self.run_state.restore(&mut self.exec.nvm)? {
             Some((result, meter)) => {
                 self.result = result;
@@ -887,6 +925,10 @@ mod tests {
         let t0 = e.now_us();
         let snap = e.prepare_sync(1, t0);
         assert!(snap.is_some(), "full capacitor could not afford a sync");
+        // the rendezvous itself spends nothing — the commit pays
+        assert_eq!(e.world.cap.usable_uj(), before);
+        assert_eq!(e.now_us(), t0);
+        e.commit_sync(1);
         let (price_uj, price_us) = e.costs.sync_price(1);
         assert!((before - e.world.cap.usable_uj() - price_uj).abs() < 1e-6);
         assert_eq!(e.now_us() - t0, price_us, "airtime not charged");
@@ -910,7 +952,28 @@ mod tests {
         let mut e = small_engine(0.010, 600);
         e.world.cap.set_voltage(3.3);
         assert!(e.prepare_sync(3, 0).is_some());
+        e.commit_sync(3);
         assert_eq!(e.meter.tally("rx").count, 3);
+    }
+
+    #[test]
+    fn lone_participant_skips_the_exchange_for_free() {
+        let mut e = small_engine(0.010, 1800);
+        e.world.cap.set_voltage(3.3);
+        let before = e.world.cap.usable_uj();
+        let t0 = e.now_us();
+        assert!(e.prepare_sync(1, t0).is_some());
+        e.solo_sync();
+        assert_eq!(e.world.cap.usable_uj(), before, "solo round spent energy");
+        assert_eq!(e.now_us(), t0, "solo round spent airtime");
+        assert_eq!(e.meter.tally("tx").count, 0);
+        assert_eq!(e.meter.tally("rx").count, 0);
+        e.run_until(e.cfg.horizon_us).unwrap();
+        let r = e.finish().unwrap();
+        assert_eq!(r.syncs_solo, 1);
+        assert_eq!(r.syncs_done, 0);
+        let doc = r.to_json().to_string();
+        assert!(doc.contains("\"syncs_solo\":1"), "{doc}");
     }
 
     #[test]
@@ -922,6 +985,7 @@ mod tests {
         let t0 = e.now_us();
         assert!(e.prepare_sync(1, t0 + 600_000_000).is_some());
         assert!(e.now_us() > t0, "no charging time passed");
+        e.commit_sync(1);
         assert_eq!(e.result.syncs_done, 1);
         // a dead harvester never gets there: the window runs out at the
         // deadline and the round is skipped

@@ -28,6 +28,77 @@ use crate::util::pool;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 
+/// Consecutive energy-gated sync rounds before a shard enters
+/// quarantined catch-up ([`QuarantineState`]).
+const QUARANTINE_AFTER: u32 = 3;
+/// Cap on the quarantine backoff: rounds sat out per quarantine spell.
+const QUARANTINE_MAX_BACKOFF: u32 = 8;
+
+/// Wrap a shard-local failure with the shard it came from, so one bad
+/// shard surfaces as a clean, attributable error instead of an anonymous
+/// one. The fleet still fails as a whole — rollups over a silently
+/// partial fleet would be unrepresentative — but the operator knows
+/// exactly which device to look at.
+pub(crate) fn shard_error(index: u32, err: Error) -> Error {
+    Error::Config(format!("fleet shard {index}: {err}"))
+}
+
+/// Graceful degradation for chronically energy-gated shards: after
+/// [`QUARANTINE_AFTER`] consecutive rounds in which a shard could not
+/// charge to the radio price inside the rendezvous window, it stops
+/// attending the rendezvous for a bounded backoff (1, 2, 4, … rounds,
+/// doubling per re-entry and capped at [`QUARANTINE_MAX_BACKOFF`]) and
+/// spends those rounds catching up — charging and working on its normal
+/// wake rhythm instead of idling against a gate it cannot afford, with
+/// each sat-out round still counted under `syncs_skipped`. One
+/// successful rendezvous fully rehabilitates the shard. Pure per-shard
+/// state — round behavior is a function of the shard's own history, so
+/// fleet results stay bit-identical for any worker-thread count.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct QuarantineState {
+    gated_streak: u32,
+    sit_out: u32,
+    backoff: u32,
+}
+
+impl QuarantineState {
+    pub(crate) fn new() -> QuarantineState {
+        QuarantineState {
+            gated_streak: 0,
+            sit_out: 0,
+            backoff: 1,
+        }
+    }
+
+    /// True when the shard should sit this round out without attempting
+    /// the rendezvous; consumes one backoff round.
+    pub(crate) fn sits_out(&mut self) -> bool {
+        if self.sit_out > 0 {
+            self.sit_out -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The shard charged to the price and made the rendezvous: fully
+    /// rehabilitated.
+    pub(crate) fn on_made_rendezvous(&mut self) {
+        self.gated_streak = 0;
+        self.backoff = 1;
+    }
+
+    /// The shard could not afford the exchange this round.
+    pub(crate) fn on_gated(&mut self) {
+        self.gated_streak += 1;
+        if self.gated_streak >= QUARANTINE_AFTER {
+            self.gated_streak = 0;
+            self.sit_out = self.backoff;
+            self.backoff = (self.backoff * 2).min(QUARANTINE_MAX_BACKOFF);
+        }
+    }
+}
+
 /// One shard's identity: its index plus the derived world parameters.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Shard {
@@ -224,11 +295,12 @@ pub struct FleetRollup {
     pub inferred: Rollup,
     pub power_failures: Rollup,
     pub stale_plans: Rollup,
-    /// Completed / energy-skipped sync exchanges per shard (all zero for
-    /// an isolated fleet; omitted from the JSON then, so sync-less
+    /// Completed / energy-skipped / solo sync rounds per shard (all zero
+    /// for an isolated fleet; omitted from the JSON then, so sync-less
     /// documents keep the PR-4 shape byte for byte).
     pub syncs_done: Rollup,
     pub syncs_skipped: Rollup,
+    pub syncs_solo: Rollup,
 }
 
 impl FleetRollup {
@@ -251,9 +323,10 @@ impl FleetRollup {
             ("power_failures", self.power_failures.to_json()),
             ("stale_plans", self.stale_plans.to_json()),
         ];
-        if self.syncs_done.total + self.syncs_skipped.total > 0.0 {
+        if self.syncs_done.total + self.syncs_skipped.total + self.syncs_solo.total > 0.0 {
             kvs.push(("syncs_done", self.syncs_done.to_json()));
             kvs.push(("syncs_skipped", self.syncs_skipped.to_json()));
+            kvs.push(("syncs_solo", self.syncs_solo.to_json()));
         }
         Json::obj(kvs)
     }
@@ -275,6 +348,7 @@ pub struct ShardStats {
     pub stale_plans: f64,
     pub syncs_done: f64,
     pub syncs_skipped: f64,
+    pub syncs_solo: f64,
 }
 
 impl ShardStats {
@@ -289,6 +363,7 @@ impl ShardStats {
             stale_plans: r.stale_plans as f64,
             syncs_done: r.syncs_done as f64,
             syncs_skipped: r.syncs_skipped as f64,
+            syncs_solo: r.syncs_solo as f64,
         }
     }
 }
@@ -302,14 +377,14 @@ impl ShardStats {
 #[derive(Debug, Clone)]
 pub struct FleetRollupAcc {
     shards: usize,
-    accs: [RollupAcc; 9],
+    accs: [RollupAcc; 10],
 }
 
 impl FleetRollupAcc {
     pub fn new() -> FleetRollupAcc {
         FleetRollupAcc {
             shards: 0,
-            accs: [RollupAcc::new(); 9],
+            accs: [RollupAcc::new(); 10],
         }
     }
 
@@ -326,6 +401,7 @@ impl FleetRollupAcc {
         self.accs[6].fold(s.stale_plans);
         self.accs[7].fold(s.syncs_done);
         self.accs[8].fold(s.syncs_skipped);
+        self.accs[9].fold(s.syncs_solo);
     }
 
     pub fn finish(&self) -> FleetRollup {
@@ -340,6 +416,7 @@ impl FleetRollupAcc {
             stale_plans: self.accs[6].finish(),
             syncs_done: self.accs[7].finish(),
             syncs_skipped: self.accs[8].finish(),
+            syncs_solo: self.accs[9].finish(),
         }
     }
 }
@@ -426,7 +503,10 @@ impl<'a, F: ShardFactory + ?Sized> Fleet<'a, F> {
             Some(plan) => self.run_rounds(threads, plan),
             None => {
                 let results = pool::run_indexed(self.shards.len(), threads, |i| {
-                    self.factory.run_shard(self.shards[i].index)
+                    let index = self.shards[i].index;
+                    self.factory
+                        .run_shard(index)
+                        .map_err(|e| shard_error(index, e))
                 });
                 let shards: Result<Vec<RunResult>> = results.into_iter().collect();
                 Ok(FleetResult::aggregate(shards?))
@@ -444,11 +524,14 @@ impl<'a, F: ShardFactory + ?Sized> Fleet<'a, F> {
     ///
     /// Per round: every worker runs its shards to the boundary
     /// ([`Engine::run_until`]) and reports one of {snapshot, out} per
-    /// shard — out covering energy-skipped exchanges, shards past the
-    /// horizon, failed shards and non-snapshotting learners. The
-    /// coordinator (the calling thread) sorts the participants by shard
-    /// index, broadcasts the round plan, and each worker merges its
-    /// participating shards' peer sets ([`Engine::apply_sync`]).
+    /// shard — out covering energy-skipped exchanges, quarantined
+    /// shards ([`QuarantineState`]), shards past the horizon, failed
+    /// shards and non-snapshotting learners. The coordinator (the
+    /// calling thread) sorts the participants by shard index and
+    /// broadcasts the round plan; each participant then pays the radio
+    /// price ([`Engine::commit_sync`]) and merges its peer set
+    /// ([`Engine::apply_sync`]) — unless the plan shows it was alone, in
+    /// which case it skips the exchange for free ([`Engine::solo_sync`]).
     fn run_rounds(&self, threads: usize, plan: SyncPlan) -> Result<FleetResult> {
         enum Report {
             Snapshot(ModelSnapshot),
@@ -512,14 +595,29 @@ impl<'a, F: ShardFactory + ?Sized> Fleet<'a, F> {
                     (&claim, &boundaries, self.factory, &self.shards);
                 scope.spawn(move || {
                     let body = std::panic::AssertUnwindSafe(|| {
+                    /// One worker-owned shard: its slot, engine, and the
+                    /// round bookkeeping that must stay pinned to it.
+                    struct Owned {
+                        slot: usize,
+                        engine: Result<Engine>,
+                        quarantine: QuarantineState,
+                        /// Sent a snapshot at the current boundary; pays
+                        /// (or goes solo) once the round plan arrives.
+                        in_round: bool,
+                    }
                     // claim shards and build their engines on this thread
-                    let mut mine: Vec<(usize, Result<Engine>)> = Vec::new();
+                    let mut mine: Vec<Owned> = Vec::new();
                     loop {
                         let i = claim.fetch_add(1, Ordering::Relaxed);
                         if i >= n {
                             break;
                         }
-                        mine.push((i, factory.build_shard_engine(shards[i].index)));
+                        mine.push(Owned {
+                            slot: i,
+                            engine: factory.build_shard_engine(shards[i].index),
+                            quarantine: QuarantineState::new(),
+                            in_round: false,
+                        });
                     }
                     if mine.is_empty() {
                         return;
@@ -531,25 +629,41 @@ impl<'a, F: ShardFactory + ?Sized> Fleet<'a, F> {
                             .get(round + 1)
                             .copied()
                             .unwrap_or(plan.horizon_us);
-                        for (i, eng) in &mut mine {
-                            let report = match eng {
+                        for sh in &mut mine {
+                            let report = match &mut sh.engine {
                                 Ok(e) => match e.run_until(boundary) {
                                     // the horizon ends a shard's rounds
                                     Ok(()) if e.now_us() < e.cfg.horizon_us => {
-                                        match e.prepare_sync(rx_peers, deadline) {
-                                            Some(s) => Report::Snapshot(s),
-                                            None => Report::Out,
+                                        if sh.quarantine.sits_out() {
+                                            // quarantined catch-up: keep
+                                            // the normal charge/wake
+                                            // rhythm instead of idling at
+                                            // a gate it cannot afford
+                                            e.note_sync_skipped();
+                                            Report::Out
+                                        } else {
+                                            match e.prepare_sync(rx_peers, deadline) {
+                                                Some(s) => {
+                                                    sh.quarantine.on_made_rendezvous();
+                                                    sh.in_round = true;
+                                                    Report::Snapshot(s)
+                                                }
+                                                None => {
+                                                    sh.quarantine.on_gated();
+                                                    Report::Out
+                                                }
+                                            }
                                         }
                                     }
                                     Ok(()) => Report::Out,
                                     Err(err) => {
-                                        *eng = Err(err);
+                                        sh.engine = Err(err);
                                         Report::Out
                                     }
                                 },
                                 Err(_) => Report::Out,
                             };
-                            if rep_tx.send((*i, report)).is_err() {
+                            if rep_tx.send((sh.slot, report)).is_err() {
                                 return;
                             }
                         }
@@ -560,22 +674,40 @@ impl<'a, F: ShardFactory + ?Sized> Fleet<'a, F> {
                             // shards out, so healthy results still report
                             break 'rounds;
                         };
-                        for (i, eng) in &mut mine {
-                            if let Ok(e) = eng {
-                                let peers = round_plan.peers_for(*i, plan.strategy);
-                                if let Err(err) = e.apply_sync(&peers) {
-                                    *eng = Err(err);
+                        for sh in &mut mine {
+                            if !std::mem::take(&mut sh.in_round) {
+                                continue;
+                            }
+                            if let Ok(e) = &mut sh.engine {
+                                if round_plan.participants.len() >= 2 {
+                                    // pay the fleet-quoted price (the
+                                    // radio budgets a full listen window
+                                    // regardless of who transmits), then
+                                    // merge the peer set
+                                    e.commit_sync(rx_peers);
+                                    let peers =
+                                        round_plan.peers_for(sh.slot, plan.strategy);
+                                    if let Err(err) = e.apply_sync(&peers) {
+                                        sh.engine = Err(err);
+                                    }
+                                } else {
+                                    // nobody else made the rendezvous:
+                                    // skip the exchange for free
+                                    e.solo_sync();
                                 }
                             }
                         }
                     }
-                    for (i, eng) in mine {
-                        let out = eng.and_then(|mut e| {
-                            let horizon = e.cfg.horizon_us;
-                            e.run_until(horizon)?;
-                            e.finish()
-                        });
-                        if res_tx.send((i, out)).is_err() {
+                    for sh in mine {
+                        let out = sh
+                            .engine
+                            .and_then(|mut e| {
+                                let horizon = e.cfg.horizon_us;
+                                e.run_until(horizon)?;
+                                e.finish()
+                            })
+                            .map_err(|e| shard_error(shards[sh.slot].index, e));
+                        if res_tx.send((sh.slot, out)).is_err() {
                             return;
                         }
                     }
@@ -884,6 +1016,176 @@ mod tests {
                 assert_eq!(ca.learned, cb.learned);
                 assert_eq!(ca.energy_uj, cb.energy_uj);
             }
+        }
+    }
+
+    #[test]
+    fn quarantine_backoff_doubles_and_caps() {
+        // always-gated shard: 3 gated rounds buy 1 sit-out, then 2, 4, 8,
+        // 8, ... (doubling, capped)
+        let mut q = QuarantineState::new();
+        let mut pattern = String::new();
+        for _ in 0..40 {
+            if q.sits_out() {
+                pattern.push('q');
+            } else {
+                q.on_gated();
+                pattern.push('g');
+            }
+        }
+        assert!(
+            pattern.starts_with("gggqgggqqgggqqqqgggqqqqqqqq"),
+            "unexpected schedule: {pattern}"
+        );
+        // one successful rendezvous fully rehabilitates
+        let mut q = QuarantineState::new();
+        for _ in 0..3 {
+            assert!(!q.sits_out());
+            q.on_gated();
+        }
+        assert!(q.sits_out(), "third gate should trigger quarantine");
+        assert!(!q.sits_out(), "first sit-out spent");
+        q.on_made_rendezvous();
+        q.on_gated();
+        q.on_gated();
+        assert!(!q.sits_out(), "streak reset by the rendezvous");
+        q.on_gated();
+        assert!(q.sits_out(), "backoff restarts at one round");
+        assert!(!q.sits_out());
+    }
+
+    /// ConstFleet's recipe, but with one harvester power per shard — the
+    /// rig for fleets where some shards can afford the radio and some
+    /// never can.
+    struct MixedPowerFleet {
+        powers: Vec<f64>,
+        plan: Option<SyncPlan>,
+    }
+
+    impl ShardFactory for MixedPowerFleet {
+        fn shard_count(&self) -> u32 {
+            self.powers.len() as u32
+        }
+        fn shard(&self, index: u32) -> Result<Shard> {
+            Ok(Shard {
+                index,
+                seed: 1 + u64::from(index) * 10,
+                phase_us: 0,
+            })
+        }
+        fn build_shard_engine(&self, index: u32) -> Result<Engine> {
+            use crate::backend::native::NativeBackend;
+            use crate::energy::cost::CostModel;
+            use crate::energy::harvester::Constant;
+            use crate::energy::Capacitor;
+            use crate::learning::KnnAnomalyLearner;
+            use crate::sensors::accel::{Accel, MotionProfile};
+            use crate::sim::SimConfig;
+            let sh = self.shard(index)?;
+            let profile = MotionProfile::alternating_hours(1.0, 3.0, 2);
+            Engine::builder()
+                .sim(SimConfig {
+                    seed: sh.seed,
+                    horizon_us: 900_000_000,
+                    eval_period_us: 300_000_000,
+                    probe_count: 10,
+                    charge_step_us: 10_000_000,
+                    probe_lookback_us: 3_600_000_000,
+                    ..Default::default()
+                })
+                .harvester(Box::new(Constant(self.powers[index as usize])))
+                .capacitor(Capacitor::vibration())
+                .sensor(Box::new(Accel::new(profile, sh.seed)))
+                .learner(Box::new(KnnAnomalyLearner::new()))
+                .backend(Box::new(NativeBackend::new()))
+                .costs(CostModel::kmeans())
+                .build()
+        }
+        fn sync_plan(&self) -> Option<SyncPlan> {
+            self.plan
+        }
+    }
+
+    #[test]
+    fn lone_rendezvous_participant_skips_the_exchange_and_counts_solo() {
+        // shard 0 harvests plenty; shard 1 harvests nothing, so it is
+        // energy-gated at every rendezvous and shard 0 always stands alone
+        let factory = MixedPowerFleet {
+            powers: vec![0.010, 0.0],
+            plan: Some(SyncPlan {
+                period_us: 300_000_000,
+                strategy: SyncStrategy::Gossip,
+                horizon_us: 900_000_000,
+            }),
+        };
+        let fleet = Fleet::new(&factory).unwrap();
+        let fr = fleet.run(1).unwrap();
+        let live = &fr.shards[0];
+        let dark = &fr.shards[1];
+        assert!(live.syncs_solo > 0, "live shard never stood alone");
+        assert_eq!(live.syncs_done, 0, "nobody to exchange with");
+        // the lone participant pays nothing: no radio action ever fires
+        assert!(
+            !live.action_tallies.iter().any(|(n, ..)| n == "tx"),
+            "solo rendezvous still paid the broadcast"
+        );
+        assert!(dark.syncs_skipped > 0, "dark shard should be gated");
+        assert_eq!(dark.syncs_done + dark.syncs_solo, 0);
+        assert_eq!(fr.rollup.syncs_solo.total, live.syncs_solo as f64);
+        assert!(fingerprint(&fr).contains("\"syncs_solo\""));
+        // per-shard quarantine state keeps thread counts bit-identical
+        assert_eq!(fingerprint(&fr), fingerprint(&fleet.run(2).unwrap()));
+        assert_eq!(fingerprint(&fr), fingerprint(&fleet.run(0).unwrap()));
+    }
+
+    /// ConstFleet with one shard whose engine fails to build — standing in
+    /// for a shard whose NVM image no longer restores.
+    struct BrokenShardFleet {
+        inner: ConstFleet,
+        broken: u32,
+        plan: Option<SyncPlan>,
+    }
+
+    impl ShardFactory for BrokenShardFleet {
+        fn shard_count(&self) -> u32 {
+            self.inner.shard_count()
+        }
+        fn shard(&self, index: u32) -> Result<Shard> {
+            self.inner.shard(index)
+        }
+        fn build_shard_engine(&self, index: u32) -> Result<Engine> {
+            if index == self.broken {
+                return Err(Error::Nvm("restore failed: torn learner snapshot".into()));
+            }
+            self.inner.build_shard_engine(index)
+        }
+        fn sync_plan(&self) -> Option<SyncPlan> {
+            self.plan
+        }
+    }
+
+    #[test]
+    fn failing_shard_surfaces_a_clean_per_shard_error() {
+        // both the isolated pool and the round scheduler must name the
+        // shard that failed, not just bubble a bare NVM error
+        let plans = [
+            None,
+            Some(SyncPlan {
+                period_us: 300_000_000,
+                strategy: SyncStrategy::Gossip,
+                horizon_us: 900_000_000,
+            }),
+        ];
+        for plan in plans {
+            let factory = BrokenShardFleet {
+                inner: ConstFleet { n: 3 },
+                broken: 1,
+                plan,
+            };
+            let err = Fleet::new(&factory).unwrap().run(0).unwrap_err();
+            let msg = err.to_string();
+            assert!(msg.contains("fleet shard 1"), "{msg}");
+            assert!(msg.contains("torn learner snapshot"), "{msg}");
         }
     }
 }

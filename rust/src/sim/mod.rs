@@ -271,15 +271,21 @@ pub struct RunResult {
     /// buggy scheduler cannot spin without consuming energy or time).
     pub stale_plans: u64,
     /// Fleet sync exchanges this shard paid for and performed: radio
-    /// Tx + listen window charged, snapshot broadcast. Counted whether or
-    /// not a peer transmitted the same round (a lone participant still
-    /// burns the airtime — radios cannot know in advance who will talk).
+    /// Tx + listen window charged, snapshot broadcast and peers merged.
+    /// Only rendezvous with ≥ 2 participants count — the round
+    /// coordinator knows who showed up before anyone keys the radio, so
+    /// a lone participant commits nothing (see [`RunResult::syncs_solo`]).
     /// 0 for sync-less runs.
     pub syncs_done: u64,
     /// Fleet sync rounds this shard skipped because its capacitor could
     /// not cover the radio price — the paper's learn-or-discard energy
     /// gating lifted to the fleet tier.
     pub syncs_skipped: u64,
+    /// Fleet sync rounds where this shard was the only participant with
+    /// energy to spare: the exchange is skipped (broadcasting to nobody
+    /// and listening to silence buys nothing) and no radio energy is
+    /// spent. Fixes the PR-5 lone-participant tax.
+    pub syncs_solo: u64,
     /// Total energy spent, µJ.
     pub energy_uj: f64,
     /// Energy time series (t_us, cumulative µJ).
@@ -338,9 +344,10 @@ impl RunResult {
             ("power_failures", Json::Num(self.power_failures as f64)),
             ("stale_plans", Json::Num(self.stale_plans as f64)),
         ];
-        if self.syncs_done + self.syncs_skipped > 0 {
+        if self.syncs_done + self.syncs_skipped + self.syncs_solo > 0 {
             kvs.push(("syncs_done", Json::Num(self.syncs_done as f64)));
             kvs.push(("syncs_skipped", Json::Num(self.syncs_skipped as f64)));
+            kvs.push(("syncs_solo", Json::Num(self.syncs_solo as f64)));
         }
         kvs.extend([
             ("energy_uj", Json::Num(self.energy_uj)),

@@ -33,7 +33,7 @@
 use crate::backend::native::NativeBackend;
 use crate::error::{Error, Result};
 use crate::nvm::arena::NvmArena;
-use crate::sim::fleet::{FleetRollup, FleetRollupAcc, ShardFactory, ShardStats};
+use crate::sim::fleet::{shard_error, FleetRollup, FleetRollupAcc, ShardFactory, ShardStats};
 use crate::util::json::Json;
 use crate::util::pool;
 use crate::util::sketch::MetricSketch;
@@ -203,7 +203,9 @@ fn run_shard<F: ShardFactory + ?Sized>(
     slab_reuses: &AtomicU64,
     backend_reuses: &AtomicU64,
 ) -> Result<ShardStats> {
-    let mut e = factory.build_shard_engine(index)?;
+    let mut e = factory
+        .build_shard_engine(index)
+        .map_err(|e| shard_error(index, e))?;
     if lane.arena.pooled() > 0 {
         e.exec.nvm = lane.arena.take();
         slab_reuses.fetch_add(1, Ordering::Relaxed);
@@ -221,6 +223,7 @@ fn run_shard<F: ShardFactory + ?Sized>(
         Box::new(NativeBackend::new()),
     ));
     out.map(|r| ShardStats::of(&r))
+        .map_err(|e| shard_error(index, e))
 }
 
 #[cfg(test)]
@@ -294,6 +297,39 @@ mod tests {
         fn sync_plan(&self) -> Option<SyncPlan> {
             Some(self.plan)
         }
+    }
+
+    /// ConstFleet with one shard whose engine fails to build.
+    struct Broken {
+        inner: ConstFleet,
+        broken: u32,
+    }
+
+    impl ShardFactory for Broken {
+        fn shard_count(&self) -> u32 {
+            self.inner.shard_count()
+        }
+        fn shard(&self, index: u32) -> Result<Shard> {
+            self.inner.shard(index)
+        }
+        fn build_shard_engine(&self, index: u32) -> Result<Engine> {
+            if index == self.broken {
+                return Err(Error::Nvm("restore failed: torn learner snapshot".into()));
+            }
+            self.inner.build_shard_engine(index)
+        }
+    }
+
+    #[test]
+    fn failing_shard_is_named_in_the_error() {
+        let fleet = Broken {
+            inner: ConstFleet { n: 4 },
+            broken: 2,
+        };
+        let err = run_streaming(&fleet, 1).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("fleet shard 2"), "{msg}");
+        assert!(msg.contains("torn learner snapshot"), "{msg}");
     }
 
     #[test]

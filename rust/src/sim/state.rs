@@ -21,13 +21,14 @@ use crate::sim::{Checkpoint, RunResult};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Layout version tag (first u64 of the head blob). V2 added the fleet
-/// sync counters; a V1 head (pre-sync firmware) reads as "no run state",
-/// which is the correct degradation for an in-memory store.
-const MAGIC: u64 = 0x494C_5253_5632; // "ILRSV2"
+/// sync counters and V3 the solo-sync counter; an old head (earlier
+/// firmware) reads as "no run state", which is the correct degradation
+/// for an in-memory store.
+const MAGIC: u64 = 0x494C_5253_5633; // "ILRSV3"
 
-/// Head blob: magic + run nonce + 10 scalar counters + 3 vector lengths +
+/// Head blob: magic + run nonce + 11 scalar counters + 3 vector lengths +
 /// total µJ.
-const HEAD_LEN: usize = 16 * 8;
+const HEAD_LEN: usize = 17 * 8;
 const CKPT_LEN: usize = 6 * 8;
 const INFER_LEN: usize = 16;
 const SERIES_LEN: usize = 16;
@@ -45,7 +46,7 @@ struct StateKeys {
 /// Parsed head blob.
 struct Head {
     nonce: u64,
-    scalars: [u64; 10],
+    scalars: [u64; 11],
     ckpts: u64,
     infers: u64,
     series: u64,
@@ -115,17 +116,17 @@ impl RunState {
         if u(0) != MAGIC {
             return None;
         }
-        let mut scalars = [0u64; 10];
+        let mut scalars = [0u64; 11];
         for (j, s) in scalars.iter_mut().enumerate() {
             *s = u(2 + j);
         }
         Some(Head {
             nonce: u(1),
             scalars,
-            ckpts: u(12),
-            infers: u(13),
-            series: u(14),
-            total_uj: f64::from_bits(u(15)),
+            ckpts: u(13),
+            infers: u(14),
+            series: u(15),
+            total_uj: f64::from_bits(u(16)),
         })
     }
 
@@ -212,6 +213,7 @@ impl RunState {
             result.sensed,
             result.syncs_done,
             result.syncs_skipped,
+            result.syncs_solo,
         ] {
             scratch.extend_from_slice(&v.to_le_bytes());
         }
@@ -322,6 +324,7 @@ impl RunState {
             sensed,
             syncs_done,
             syncs_skipped,
+            syncs_solo,
         ] = head.scalars;
         let meter = EnergyMeter::from_parts(tallies, series, head.total_uj);
         let result = RunResult {
@@ -336,6 +339,7 @@ impl RunState {
             stale_plans,
             syncs_done,
             syncs_skipped,
+            syncs_solo,
             energy_uj: meter.total_uj(),
             energy_series: meter.series.clone(),
             action_tallies: meter
@@ -459,11 +463,13 @@ mod tests {
         let (mut r, m) = sample_run(3);
         r.syncs_done = 5;
         r.syncs_skipped = 2;
+        r.syncs_solo = 1;
         let mut nvm = Nvm::new();
         RunState::new().save(&mut nvm, &r, &m).unwrap();
         let (back, _) = RunState::new().restore(&mut nvm).unwrap().unwrap();
         assert_eq!(back.syncs_done, 5);
         assert_eq!(back.syncs_skipped, 2);
+        assert_eq!(back.syncs_solo, 1);
         assert_eq!(back.to_json().to_string(), r.to_json().to_string());
     }
 

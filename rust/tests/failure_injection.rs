@@ -4,6 +4,7 @@
 use ilearn::backend::native::NativeBackend;
 use ilearn::backend::shapes::FEAT_DIM;
 use ilearn::energy::harvester::Trace;
+use ilearn::fault::decide;
 use ilearn::energy::{Capacitor, CostModel};
 use ilearn::learning::{Example, KnnAnomalyLearner, Learner};
 use ilearn::nvm::Nvm;
@@ -147,18 +148,19 @@ fn prop_delta_saves_with_aborts_match_full_save_baseline() {
             ld.learn(&ex, &mut be_d).unwrap();
             lf.learn(&ex, &mut be_f).unwrap();
             // the checkpoint runs inside an action transaction; a power
-            // failure mid-action aborts it on both stores
-            let abort = rng.f32() < 0.3;
+            // failure mid-action aborts it on both stores (schedule drawn
+            // through the one fault-injection source of truth)
+            let d = decide(rng, 0.3, 0.1);
             nvm_d.begin_action().unwrap();
             ld.save_delta(&mut nvm_d).unwrap();
-            if abort {
+            if d.abort {
                 nvm_d.abort_action();
             } else {
                 nvm_d.commit_action().unwrap();
             }
             nvm_f.begin_action().unwrap();
             lf.save(&mut nvm_f).unwrap();
-            if abort {
+            if d.abort {
                 nvm_f.abort_action();
             } else {
                 nvm_f.commit_action().unwrap();
@@ -166,7 +168,7 @@ fn prop_delta_saves_with_aborts_match_full_save_baseline() {
             // a power failure reboots the device: volatile learner state
             // is lost and restored from NVM (an occasional clean reboot
             // exercises the same path without a failure)
-            if abort || rng.f32() < 0.1 {
+            if d.reboot {
                 ld = KnnAnomalyLearner::new();
                 ld.restore(&mut nvm_d).unwrap();
                 lf = KnnAnomalyLearner::new();
@@ -250,22 +252,22 @@ fn prop_merge_then_delta_save_with_aborts_matches_full_save_baseline() {
                     lf.merge(&[donor], &mut be_f, now, expiry).unwrap()
                 );
             }
-            let abort = rng.f32() < 0.3;
+            let d = decide(rng, 0.3, 0.1);
             nvm_d.begin_action().unwrap();
             ld.save_delta(&mut nvm_d).unwrap();
-            if abort {
+            if d.abort {
                 nvm_d.abort_action();
             } else {
                 nvm_d.commit_action().unwrap();
             }
             nvm_f.begin_action().unwrap();
             lf.save(&mut nvm_f).unwrap();
-            if abort {
+            if d.abort {
                 nvm_f.abort_action();
             } else {
                 nvm_f.commit_action().unwrap();
             }
-            if abort || rng.f32() < 0.1 {
+            if d.reboot {
                 ld = KnnAnomalyLearner::new();
                 ld.restore(&mut nvm_d).unwrap();
                 lf = KnnAnomalyLearner::new();
@@ -339,22 +341,22 @@ fn prop_kmeans_merge_then_delta_save_matches_full_save_baseline() {
                 ld.merge(&[donor], &mut be_d, t, None).unwrap();
                 lf.merge(&[donor], &mut be_f, t, None).unwrap();
             }
-            let abort = rng.f32() < 0.3;
+            let d = decide(rng, 0.3, 0.1);
             nvm_d.begin_action().unwrap();
             ld.save_delta(&mut nvm_d).unwrap();
-            if abort {
+            if d.abort {
                 nvm_d.abort_action();
             } else {
                 nvm_d.commit_action().unwrap();
             }
             nvm_f.begin_action().unwrap();
             lf.save(&mut nvm_f).unwrap();
-            if abort {
+            if d.abort {
                 nvm_f.abort_action();
             } else {
                 nvm_f.commit_action().unwrap();
             }
-            if abort || rng.f32() < 0.1 {
+            if d.reboot {
                 ld = ClusterLabelLearner::new(9, 20);
                 ld.restore(&mut nvm_d).unwrap();
                 lf = ClusterLabelLearner::new(9, 20);
@@ -393,22 +395,22 @@ fn prop_kmeans_delta_saves_match_full_save_baseline() {
             let ex = Example::new(f, t, abnormal);
             ld.learn(&ex, &mut be_d).unwrap();
             lf.learn(&ex, &mut be_f).unwrap();
-            let abort = rng.f32() < 0.3;
+            let d = decide(rng, 0.3, 0.1);
             nvm_d.begin_action().unwrap();
             ld.save_delta(&mut nvm_d).unwrap();
-            if abort {
+            if d.abort {
                 nvm_d.abort_action();
             } else {
                 nvm_d.commit_action().unwrap();
             }
             nvm_f.begin_action().unwrap();
             lf.save(&mut nvm_f).unwrap();
-            if abort {
+            if d.abort {
                 nvm_f.abort_action();
             } else {
                 nvm_f.commit_action().unwrap();
             }
-            if abort || rng.f32() < 0.1 {
+            if d.reboot {
                 // reboot constructs the same firmware-determined initial
                 // learner (seed 9) before restoring, as a device would
                 ld = ClusterLabelLearner::new(9, 20);
