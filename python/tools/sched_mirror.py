@@ -1,0 +1,132 @@
+"""Executable Python mirror of the event-scheduler wake accounting and
+the delta-snapshot wire sizes.
+
+Mirror of ``rust/src/sim/sched.rs::planned_wakes`` (one heap event per
+shard-local strict-interior sync boundary) against the round barrier's
+equivalent (every shard dragged to every fastest-cadence boundary), over
+the 64-shard 30/60/90-minute fleet of ``rust/benches/event_sched.rs``,
+plus the ``ModelSnapshot::KnnDelta`` wire formulas behind the
+``knn_delta_*_bytes`` rows of ``BENCH_sync.json``. The counts and bytes
+are exact and deterministic — unlike wall time they do not depend on the
+box the bench runs on — so this mirror is the source of the committed
+``BENCH_sched.json`` count rows and the ``BENCH_sync.json`` wire-size
+rows in environments without a Rust toolchain (the PR-session sandbox).
+
+Run:
+
+    python3 python/tools/sched_mirror.py [--emit-json]
+
+``--emit-json`` writes BENCH_sched.json at the repo root with the exact
+count rows and ``null`` wall-time fields, and refreshes the wire-size
+rows of BENCH_sync.json in place; ``cargo bench --bench event_sched``
+/ ``--bench sync`` (on a toolchain-equipped box) overwrite them with the
+same counts plus measured timings, and CI's ``--smoke`` modes re-assert
+the invariants every push.
+
+Keep this file in sync with sched.rs / knn.rs — it is a mirror, not a
+spec.
+"""
+
+import json
+import sys
+
+# rust/src/backend/mod.rs shapes
+CHANNELS = 4
+N_FEATURES = 8
+FEAT_DIM = CHANNELS * N_FEATURES  # 32
+N_BUF = 64
+
+F32 = 4
+U64 = 8
+
+MIN30_US = 1_800_000_000
+HOUR_US = 3_600_000_000
+
+
+def planned_wakes(periods, horizon_us):
+    """sched.rs planned_wakes: strict-interior boundaries per shard."""
+    return sum((horizon_us - 1) // p for p in periods if p and horizon_us)
+
+
+def het_periods(shards):
+    """benches/event_sched.rs cadence mix: shard i syncs every
+    (1 + i % 3) x 30 min."""
+    return [(1 + i % 3) * MIN30_US for i in range(shards)]
+
+
+def knn_full_snapshot():
+    """ModelSnapshot::Knn bytes(): buf + mask + times + learned +
+    threshold-et-al (8 + 8 + 4), as billed on first contact."""
+    return N_BUF * FEAT_DIM * F32 + N_BUF * F32 + N_BUF * U64 + U64 + U64 + F32
+
+
+def knn_delta_snapshot(slots):
+    """ModelSnapshot::KnnDelta bytes(): changed rows + their times +
+    learned + threshold."""
+    return slots * (FEAT_DIM * F32 + U64) + U64 + F32
+
+
+def main():
+    shards = 64
+    horizon_us = 4 * HOUR_US
+    periods = het_periods(shards)
+    event = planned_wakes(periods, horizon_us)
+    barrier = shards * ((horizon_us - 1) // min(periods))
+    ratio = barrier / event
+    print("64-shard 30/60/90 min fleet over 4 h:")
+    print(f"  event heap wakes:       {event}")
+    print(f"  barrier-equivalent:     {barrier}")
+    print(f"  ratio:                  {ratio:.2f}x fewer wakes")
+    full = knn_full_snapshot()
+    empty = knn_delta_snapshot(0)
+    one = knn_delta_snapshot(1)
+    print(f"knn snapshot wire sizes: full {full} B, delta {one} B/slot, {empty} B empty")
+    assert event == 259 and barrier == 448
+    assert (full, one, empty) == (8980, 148, 12)
+
+    if "--emit-json" in sys.argv:
+        import pathlib
+
+        root = pathlib.Path(__file__).resolve().parents[2]
+        doc = {
+            "bench": "event_sched",
+            "source": "python/tools/sched_mirror.py (exact wake counts; "
+            "wall-time fields pending `cargo bench --bench event_sched` "
+            "on a toolchain-equipped box)",
+            "fleet_shards": shards,
+            "uniform_sim_hours_per_shard": 2,
+            "uniform_rounds_ms": None,
+            "uniform_event_ms": None,
+            "het_sim_hours_per_shard": 4,
+            "het_periods_min_pattern": "30/60/90",
+            "het_event_ms": None,
+            "het_event_wakes": event,
+            "het_barrier_wakes": barrier,
+            "het_wake_ratio": round(ratio, 2),
+            "het_syncs_done": None,
+            "het_syncs_solo": None,
+            "het_syncs_skipped": None,
+        }
+        out = root / "BENCH_sched.json"
+        out.write_text(json.dumps(doc, indent=1) + "\n")
+        print(f"wrote {out}")
+
+        sync_path = root / "BENCH_sync.json"
+        old = json.loads(sync_path.read_text())
+        old["knn_snapshot_bytes"] = full
+        # keep the delta rows next to the snapshot rows, where
+        # `cargo bench --bench sync` writes them
+        sync_doc = {}
+        for key, value in old.items():
+            if key.startswith("knn_delta_"):
+                continue
+            sync_doc[key] = value
+            if key == "kmeans_snapshot_bytes":
+                sync_doc["knn_delta_empty_bytes"] = empty
+                sync_doc["knn_delta_one_slot_bytes"] = one
+        sync_path.write_text(json.dumps(sync_doc, indent=1) + "\n")
+        print(f"refreshed wire-size rows in {sync_path}")
+
+
+if __name__ == "__main__":
+    main()

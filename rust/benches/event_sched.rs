@@ -1,0 +1,187 @@
+//! Event-scheduler benchmark: the global event heap against the PR-5
+//! round barrier. Tracked over time through `BENCH_sched.json` (written
+//! at the repo root when run from `rust/`).
+//!
+//!     cargo bench --bench event_sched            # full comparison + JSON
+//!     cargo bench --bench event_sched -- --smoke # CI: rollup equality
+//!
+//! The full mode times a 64-shard uniform-period fleet under both
+//! coordinators (they must produce bit-identical results — the wall gap
+//! is pure scheduling overhead) and then runs the barrier-inexpressible
+//! case: a 64-shard fleet on a 30/60/90 min cadence mix, reporting its
+//! wall time and the wake-event accounting (the heap schedules one event
+//! per shard-local boundary; a barrier would drag all 64 shards to every
+//! fastest-cadence boundary). `--smoke` asserts event-vs-rounds rollup
+//! equality and the per-shard boundary attendance on small cells.
+
+use ilearn::scenario::{preset, FleetSpec, ScenarioSpec, ShardOverride, SyncSpec};
+use ilearn::sim::{planned_wakes, FleetSched, SyncStrategy};
+use ilearn::util::bench::time_once;
+use ilearn::util::json::Json;
+use std::time::Instant;
+
+const H: u64 = 3_600_000_000;
+const MIN30: u64 = 1_800_000_000;
+
+/// A synced vibration fleet; shard `i` syncs every `(1 + i % 3) × 30`
+/// minutes when `heterogeneous`, else every 30 minutes.
+fn fleet_spec(shards: u32, hours: u64, heterogeneous: bool, sched: FleetSched) -> ScenarioSpec {
+    let mut spec = preset("vibration", 42, hours * H).expect("preset");
+    let overrides = if heterogeneous {
+        (0..shards)
+            .filter(|i| i % 3 != 0)
+            .map(|i| ShardOverride::sync_period(i, u64::from(1 + i % 3) * MIN30))
+            .collect()
+    } else {
+        vec![]
+    };
+    spec.fleet = Some(FleetSpec {
+        shards,
+        phase_jitter_us: 30_000_000,
+        seed_stride: 1,
+        overrides,
+        sync: Some(SyncSpec {
+            period_us: MIN30,
+            strategy: SyncStrategy::Gossip,
+            radio: None,
+        }),
+        sched: Some(sched),
+        stream: None,
+    });
+    spec
+}
+
+/// Shard `i`'s cadence under the `fleet_spec` pattern.
+fn periods(shards: u32, heterogeneous: bool) -> Vec<u64> {
+    (0..shards)
+        .map(|i| {
+            if heterogeneous {
+                u64::from(1 + i % 3) * MIN30
+            } else {
+                MIN30
+            }
+        })
+        .collect()
+}
+
+fn smoke() {
+    let t0 = Instant::now();
+    // event vs rounds: bit-identical rollups on a short uniform cell,
+    // and the event side is thread-count deterministic
+    let golden = fleet_spec(4, 2, false, FleetSched::Rounds)
+        .run_fleet(0)
+        .expect("rounds fleet");
+    assert!(
+        golden.rollup.syncs_done.total > 0.0,
+        "barrier reference never exchanged"
+    );
+    let event_spec = fleet_spec(4, 2, false, FleetSched::Event);
+    for threads in [1, 0] {
+        let event = event_spec.run_fleet(threads).expect("event fleet");
+        assert_eq!(
+            event.to_json().to_string(),
+            golden.to_json().to_string(),
+            "event scheduler diverged from the round barrier (threads {threads})"
+        );
+    }
+    // heterogeneous cadences: every shard attends exactly its own
+    // strict-interior boundaries, nothing drags it to the others'
+    let het = fleet_spec(3, 2, true, FleetSched::Event)
+        .run_fleet(0)
+        .expect("heterogeneous fleet");
+    let attempts: Vec<u64> = het
+        .shards
+        .iter()
+        .map(|r| r.syncs_done + r.syncs_skipped + r.syncs_solo)
+        .collect();
+    assert_eq!(attempts, vec![3, 1, 1], "per-shard boundary attendance");
+    assert_eq!(
+        attempts.iter().sum::<u64>(),
+        planned_wakes(&periods(3, true), 2 * H),
+        "heap wake accounting drifted"
+    );
+    println!(
+        "event_sched --smoke: event==rounds + heterogeneous attendance ok ({:.1}s)",
+        t0.elapsed().as_secs_f64()
+    );
+}
+
+fn full() {
+    // 64 shards, one uniform cadence: the two coordinators must agree
+    // bit for bit, so the wall gap is pure scheduling overhead
+    let (rounds, rm) = time_once("fleet-64x2h-rounds-barrier", || {
+        fleet_spec(64, 2, false, FleetSched::Rounds)
+            .run_fleet(0)
+            .expect("rounds fleet")
+    });
+    let (event, em) = time_once("fleet-64x2h-event-heap", || {
+        fleet_spec(64, 2, false, FleetSched::Event)
+            .run_fleet(0)
+            .expect("event fleet")
+    });
+    assert_eq!(
+        rounds.to_json().to_string(),
+        event.to_json().to_string(),
+        "uniform-period coordinators disagree"
+    );
+    println!("{}", rm.row());
+    println!("{}", em.row());
+
+    // the barrier-inexpressible case: 30/60/90 min cadences across 64
+    // shards — only the event heap runs it, and it schedules one wake
+    // per shard-local boundary instead of 64 per fastest boundary
+    let het_periods = periods(64, true);
+    let horizon = 4 * H;
+    let (het, hm) = time_once("fleet-64x4h-heterogeneous-event", || {
+        fleet_spec(64, 4, true, FleetSched::Event)
+            .run_fleet(0)
+            .expect("heterogeneous fleet")
+    });
+    println!("{}", hm.row());
+    let event_wakes = planned_wakes(&het_periods, horizon);
+    let fastest = *het_periods.iter().min().expect("periods");
+    let barrier_wakes = 64 * ((horizon - 1) / fastest);
+    println!(
+        "wake events: {event_wakes} (heap) vs {barrier_wakes} (barrier equivalent), \
+         {:.2}x fewer; {} exchanges / {} solo",
+        barrier_wakes as f64 / event_wakes as f64,
+        het.rollup.syncs_done.total as u64,
+        het.rollup.syncs_solo.total as u64,
+    );
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("event_sched".into())),
+        ("fleet_shards", Json::Num(64.0)),
+        ("uniform_sim_hours_per_shard", Json::Num(2.0)),
+        ("uniform_rounds_ms", Json::Num(rm.mean_ns / 1e6)),
+        ("uniform_event_ms", Json::Num(em.mean_ns / 1e6)),
+        ("het_sim_hours_per_shard", Json::Num(4.0)),
+        ("het_periods_min_pattern", Json::Str("30/60/90".into())),
+        ("het_event_ms", Json::Num(hm.mean_ns / 1e6)),
+        ("het_event_wakes", Json::Num(event_wakes as f64)),
+        ("het_barrier_wakes", Json::Num(barrier_wakes as f64)),
+        (
+            "het_wake_ratio",
+            Json::Num(barrier_wakes as f64 / event_wakes as f64),
+        ),
+        ("het_syncs_done", Json::Num(het.rollup.syncs_done.total)),
+        ("het_syncs_solo", Json::Num(het.rollup.syncs_solo.total)),
+        (
+            "het_syncs_skipped",
+            Json::Num(het.rollup.syncs_skipped.total),
+        ),
+    ]);
+    let path = "../BENCH_sched.json";
+    match std::fs::write(path, doc.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    if std::env::args().any(|a| a == "--smoke") {
+        smoke();
+    } else {
+        full();
+    }
+}

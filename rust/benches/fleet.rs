@@ -28,6 +28,7 @@ fn fleet_spec(shards: u32, hours: u64) -> ilearn::scenario::ScenarioSpec {
         seed_stride: 1,
         overrides: vec![],
         sync: None,
+        sched: None,
         stream: None,
     });
     spec

@@ -28,6 +28,7 @@ fn fleet_spec(shards: u32, horizon_us: u64, jitter_us: u64) -> ScenarioSpec {
         seed_stride: 1,
         overrides: vec![],
         sync: None,
+        sched: None,
         stream: Some(true),
     });
     spec

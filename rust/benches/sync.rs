@@ -86,6 +86,7 @@ fn synced_fleet_spec(shards: u32, hours: u64, period_us: u64) -> ilearn::scenari
             strategy: SyncStrategy::Gossip,
             radio: None,
         }),
+        sched: None,
         stream: None,
     });
     spec
@@ -116,6 +117,29 @@ fn smoke() {
     assert!(b.merge(&peer_refs, &mut be, 100_000, None).unwrap());
     assert_eq!(a.buffer().0, b.buffer().0, "knn merge nondeterministic");
     assert_eq!(a.threshold(), b.threshold());
+    // delta snapshots: the full ring rides the first contact, then only
+    // the slots learned since the last committed broadcast
+    let mut d = trained_knn(2, N_BUF, 0);
+    assert!(
+        matches!(d.snapshot_outgoing().unwrap(), ModelSnapshot::Knn { .. }),
+        "first contact must radio the full ring"
+    );
+    d.note_broadcast();
+    let empty = d.snapshot_outgoing().unwrap();
+    assert_eq!(empty.bytes(), 8 + 4, "empty delta wire size drifted");
+    let f: Vec<f32> = vec![0.5; FEAT_DIM];
+    d.learn(&Example::new(f, 999_999, false), &mut be).unwrap();
+    let one_slot = d.snapshot_outgoing().unwrap();
+    assert_eq!(
+        one_slot.bytes(),
+        FEAT_DIM * 4 + 8 + 8 + 4,
+        "one-slot delta wire size drifted"
+    );
+    assert_eq!(
+        one_slot.full_bytes(),
+        knn_snap.bytes(),
+        "delta full-snapshot fallback size drifted"
+    );
     // a short synced fleet: bit-identical across thread counts, exchanges
     // happen and are metered
     let spec = synced_fleet_spec(3, 1, 20 * 60 * 1_000_000);
@@ -193,6 +217,16 @@ fn full() {
 
     let knn_snap = base_knn.snapshot().unwrap();
     let km_snap = base_km.snapshot().unwrap();
+    // delta snapshot wire sizes: what `commit_sync` bills after the
+    // first (full) contact
+    let (delta_empty, delta_one_slot) = {
+        let mut d = base_knn.clone();
+        d.note_broadcast();
+        let empty = d.snapshot_outgoing().unwrap().bytes();
+        let f: Vec<f32> = vec![0.5; FEAT_DIM];
+        d.learn(&Example::new(f, 999_999, false), &mut be).unwrap();
+        (empty, d.snapshot_outgoing().unwrap().bytes())
+    };
     let doc = Json::obj(vec![
         ("bench", Json::Str("sync".into())),
         ("knn_merge_15_peers_ns", Json::Num(m_knn.mean_ns)),
@@ -204,6 +238,8 @@ fn full() {
         ),
         ("knn_snapshot_bytes", Json::Num(knn_snap.bytes() as f64)),
         ("kmeans_snapshot_bytes", Json::Num(km_snap.bytes() as f64)),
+        ("knn_delta_empty_bytes", Json::Num(delta_empty as f64)),
+        ("knn_delta_one_slot_bytes", Json::Num(delta_one_slot as f64)),
         ("fleet_shards", Json::Num(8.0)),
         ("fleet_sim_hours_per_shard", Json::Num(2.0)),
         ("fleet_synced_ms", Json::Num(sm.mean_ns / 1e6)),

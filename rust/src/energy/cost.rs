@@ -200,6 +200,36 @@ impl CostModel {
             tx.time_us + rx.time_us * u64::from(rx_peers),
         )
     }
+
+    /// [`CostModel::sync_price`] with the `tx` leg scaled to the actual
+    /// payload: the calibrated `Tx` cost prices a *full* model snapshot
+    /// (`tx_full_bytes` on the wire), so a delta snapshot of `tx_bytes`
+    /// pays `tx_bytes / tx_full_bytes` of it — airtime and radio energy
+    /// shrink together, the wire analog of the O(dirty) NVM delta
+    /// checkpoint. A payload at (or somehow above) the full size pays
+    /// exactly the calibrated price: the scale factor is exactly 1.0, so
+    /// full-snapshot fleets are float-bit-identical to the unscaled
+    /// [`CostModel::sync_price`]. The `rx` legs stay at full price — a
+    /// receiver budgets the whole listen window, not the bytes that
+    /// happen to arrive.
+    pub fn sync_price_bytes(
+        &self,
+        rx_peers: u32,
+        tx_bytes: usize,
+        tx_full_bytes: usize,
+    ) -> (f64, u64) {
+        let tx = self.cost(Action::Tx);
+        let rx = self.cost(Action::Rx);
+        let scale = if tx_bytes < tx_full_bytes && tx_full_bytes > 0 {
+            tx_bytes as f64 / tx_full_bytes as f64
+        } else {
+            1.0
+        };
+        (
+            tx.energy_uj * scale + rx.energy_uj * f64::from(rx_peers),
+            (tx.time_us as f64 * scale).round() as u64 + rx.time_us * u64::from(rx_peers),
+        )
+    }
 }
 
 #[cfg(test)]
@@ -262,6 +292,31 @@ mod tests {
             let (ar_uj, ar_us) = m.sync_price(15);
             assert_eq!(ar_uj, tx.energy_uj + 15.0 * rx.energy_uj);
             assert!(ar_us > gossip_us);
+        }
+    }
+
+    #[test]
+    fn byte_scaled_sync_price_shrinks_tx_and_keeps_full_exact() {
+        for m in [CostModel::knn(), CostModel::kmeans(), CostModel::knn_rssi()] {
+            // a full payload pays exactly the unscaled price, bit for bit
+            for peers in [0u32, 1, 15] {
+                assert_eq!(
+                    m.sync_price_bytes(peers, 8_980, 8_980),
+                    m.sync_price(peers),
+                    "{}",
+                    m.name
+                );
+                // degenerate full size: no scaling either
+                assert_eq!(m.sync_price_bytes(peers, 0, 0), m.sync_price(peers));
+            }
+            // a quarter payload pays a quarter of the tx leg only
+            let tx = m.cost(Action::Tx);
+            let rx = m.cost(Action::Rx);
+            let (uj, us) = m.sync_price_bytes(1, 2_245, 8_980);
+            assert!((uj - (tx.energy_uj * 0.25 + rx.energy_uj)).abs() < 1e-9);
+            assert_eq!(us, (tx.time_us as f64 * 0.25).round() as u64 + rx.time_us);
+            let (full_uj, full_us) = m.sync_price(1);
+            assert!(uj < full_uj && us < full_us, "{}", m.name);
         }
     }
 }

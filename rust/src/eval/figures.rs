@@ -121,6 +121,7 @@ pub fn fleet16(seed: u64) -> Result<FigData> {
         seed_stride: 1,
         overrides: vec![],
         sync: None,
+        sched: None,
         stream: None,
     });
     let fr = spec.run_fleet(0)?;
@@ -167,6 +168,7 @@ pub fn sync16(seed: u64) -> Result<FigData> {
             seed_stride: 1,
             overrides: vec![],
             sync,
+            sched: None,
             stream: None,
         });
         spec

@@ -59,6 +59,21 @@ pub struct KnnAnomalyLearner {
     /// Generation of this learner's last save (mirrors the NVM `knn/gen`
     /// counter; a mismatch means NVM lost a save — full save required).
     save_gen: u64,
+    /// Model generation: bumped on every `learn` and every `merge`. The
+    /// wire-delta analog of `save_gen` — it orders ring writes so an
+    /// outgoing snapshot can carry only the rows written since the last
+    /// committed broadcast.
+    model_gen: u64,
+    /// Per-slot model generation of the row currently in the slot. Rows a
+    /// merge adopts from peers are stamped with the merge's generation
+    /// (they are news to *this* shard's next partner); rows the merge
+    /// keeps from the local ring carry their generation through the slot
+    /// move.
+    slot_gens: Vec<u64>,
+    /// `model_gen` at the last *committed* broadcast
+    /// ([`Learner::note_broadcast`]); `None` until first contact, which
+    /// forces the full-snapshot fallback.
+    last_broadcast_gen: Option<u64>,
 }
 
 impl Default for KnnAnomalyLearner {
@@ -81,6 +96,9 @@ impl KnnAnomalyLearner {
             keys: None,
             dirty_slots: Vec::with_capacity(N_BUF),
             save_gen: 0,
+            model_gen: 0,
+            slot_gens: vec![0; N_BUF],
+            last_broadcast_gen: None,
         }
     }
 
@@ -146,6 +164,8 @@ impl Learner for KnnAnomalyLearner {
         self.times[slot] = ex.t_us;
         self.next = (self.next + 1) % N_BUF;
         self.learned += 1;
+        self.model_gen += 1;
+        self.slot_gens[slot] = self.model_gen;
         if !self.dirty_slots.contains(&slot) {
             self.dirty_slots.push(slot);
         }
@@ -277,6 +297,9 @@ impl Learner for KnnAnomalyLearner {
         self.learned = nvm.read_u64_id(k.learned);
         self.save_gen = nvm.read_u64_id(k.gen);
         self.dirty_slots.clear();
+        // broadcast tracking is not persisted: after a restore the next
+        // outgoing snapshot falls back to full, exactly like first contact
+        self.last_broadcast_gen = None;
         Ok(())
     }
 
@@ -307,19 +330,24 @@ impl Learner for KnnAnomalyLearner {
         expiry_us: Option<u64>,
     ) -> Result<bool> {
         // candidate = (t, source rank, age rank within source, borrowed
-        // feature row); self is source 0, peers follow in caller order —
-        // fully deterministic
+        // feature row, model generation); self is source 0, peers follow
+        // in caller order — fully deterministic. Rows adopted from peers
+        // are stamped with this merge's generation (`adopt_gen`) so the
+        // next outgoing wire delta forwards them; local rows keep their
+        // generation through any slot move.
         struct Cand<'a> {
             t: u64,
             src: usize,
             age: usize,
             row: &'a [f32],
+            gen: u64,
         }
         /// Push one ring's valid entries, walking backwards from the
         /// cursor so age 0 is the most recently written slot. `expiry`
         /// (`Some` only for adopted peer data — Mayfly discards stale
         /// *sensor data*, not local models) drops entries with
-        /// `t + expiry <= now`.
+        /// `t + expiry <= now`. `gens` carries per-slot generations for
+        /// the local ring; peer rings stamp every row `adopt_gen`.
         #[allow(clippy::too_many_arguments)]
         fn push_ring<'a>(
             cands: &mut Vec<Cand<'a>>,
@@ -330,6 +358,8 @@ impl Learner for KnnAnomalyLearner {
             next: usize,
             now_us: u64,
             expiry: Option<u64>,
+            gens: Option<&'a [u64]>,
+            adopt_gen: u64,
         ) {
             for age in 0..N_BUF {
                 let slot = (next + N_BUF - 1 - age) % N_BUF;
@@ -347,28 +377,71 @@ impl Learner for KnnAnomalyLearner {
                     src,
                     age,
                     row: &buf[slot * FEAT_DIM..(slot + 1) * FEAT_DIM],
+                    gen: gens.map_or(adopt_gen, |g| g[slot]),
                 });
             }
         }
+        let adopt_gen = self.model_gen + 1;
         let mut cands: Vec<Cand> = Vec::new();
         push_ring(
-            &mut cands, 0, &self.buf, &self.mask, &self.times, self.next, now_us, None,
+            &mut cands,
+            0,
+            &self.buf,
+            &self.mask,
+            &self.times,
+            self.next,
+            now_us,
+            None,
+            Some(&self.slot_gens),
+            adopt_gen,
         );
         let mut merged_learned = self.learned;
         let mut any_peer = false;
         for (i, p) in peers.iter().enumerate() {
-            if let ModelSnapshot::Knn {
-                buf,
-                mask,
-                times,
-                next,
-                learned,
-                ..
-            } = p
-            {
-                any_peer = true;
-                merged_learned = merged_learned.max(*learned);
-                push_ring(&mut cands, i + 1, buf, mask, times, *next, now_us, expiry_us);
+            match p {
+                ModelSnapshot::Knn {
+                    buf,
+                    mask,
+                    times,
+                    next,
+                    learned,
+                    ..
+                } => {
+                    any_peer = true;
+                    merged_learned = merged_learned.max(*learned);
+                    push_ring(
+                        &mut cands, i + 1, buf, mask, times, *next, now_us, expiry_us, None,
+                        adopt_gen,
+                    );
+                }
+                // wire delta: rows arrive newest first, so the position
+                // within the payload is the in-source age rank
+                ModelSnapshot::KnnDelta {
+                    rows,
+                    times,
+                    learned,
+                    ..
+                } => {
+                    any_peer = true;
+                    merged_learned = merged_learned.max(*learned);
+                    for (age, (row, &t)) in
+                        rows.chunks_exact(FEAT_DIM).zip(times.iter()).enumerate()
+                    {
+                        if let Some(e) = expiry_us {
+                            if t.saturating_add(e) <= now_us {
+                                continue;
+                            }
+                        }
+                        cands.push(Cand {
+                            t,
+                            src: i + 1,
+                            age,
+                            row,
+                            gen: adopt_gen,
+                        });
+                    }
+                }
+                ModelSnapshot::Kmeans { .. } => {}
             }
         }
         if !any_peer {
@@ -398,10 +471,12 @@ impl Learner for KnnAnomalyLearner {
         let mut buf = vec![0.0f32; N_BUF * FEAT_DIM];
         let mut mask = vec![0.0f32; N_BUF];
         let mut times = vec![0u64; N_BUF];
+        let mut gens = vec![0u64; N_BUF];
         for (slot, c) in kept.iter().rev().enumerate() {
             buf[slot * FEAT_DIM..(slot + 1) * FEAT_DIM].copy_from_slice(c.row);
             mask[slot] = 1.0;
             times[slot] = c.t;
+            gens[slot] = c.gen;
         }
         let kept_len = kept.len();
         drop(kept);
@@ -410,6 +485,8 @@ impl Learner for KnnAnomalyLearner {
         self.buf = buf;
         self.mask = mask;
         self.times = times;
+        self.slot_gens = gens;
+        self.model_gen = adopt_gen;
         self.learned = merged_learned;
         self.threshold = be.knn_learn(&self.buf, &self.mask, &mut self.scores)?;
         // the whole model changed: dirty tracking is void, the next
@@ -417,6 +494,42 @@ impl Learner for KnnAnomalyLearner {
         self.dirty_slots.clear();
         self.save_gen = 0;
         Ok(true)
+    }
+
+    /// Wire delta: the ring rows written (learned or adopted) since the
+    /// last committed broadcast, walked newest first so the receiver's
+    /// in-payload position is the recency rank. Falls back to the full
+    /// snapshot on first contact, after a restore, or whenever the delta
+    /// would not beat the full payload.
+    fn snapshot_outgoing(&self) -> Option<ModelSnapshot> {
+        let base = match self.last_broadcast_gen {
+            Some(g) => g,
+            None => return self.snapshot(),
+        };
+        let mut rows = Vec::new();
+        let mut times = Vec::new();
+        for age in 0..N_BUF {
+            let slot = (self.next + N_BUF - 1 - age) % N_BUF;
+            if self.mask[slot] <= 0.5 || self.slot_gens[slot] <= base {
+                continue;
+            }
+            rows.extend_from_slice(&self.buf[slot * FEAT_DIM..(slot + 1) * FEAT_DIM]);
+            times.push(self.times[slot]);
+        }
+        let delta = ModelSnapshot::KnnDelta {
+            rows,
+            times,
+            learned: self.learned,
+            threshold: self.threshold,
+        };
+        if delta.bytes() >= delta.full_bytes() {
+            return self.snapshot();
+        }
+        Some(delta)
+    }
+
+    fn note_broadcast(&mut self) {
+        self.last_broadcast_gen = Some(self.model_gen);
     }
 
     fn name(&self) -> &'static str {
@@ -662,6 +775,101 @@ mod tests {
         assert_eq!(back.buffer().1, l.buffer().1);
         assert_eq!(back.threshold(), l.threshold());
         assert_eq!(back.learned_count(), l.learned_count());
+    }
+
+    #[test]
+    fn first_broadcast_is_full_then_deltas_carry_only_new_rows() {
+        let mut be = NativeBackend::new();
+        let mut l = KnnAnomalyLearner::new();
+        let mut rng = Rng::new(14);
+        for t in 0..5 {
+            l.learn(&normal_ex(&mut rng, t), &mut be).unwrap();
+        }
+        // first contact: full snapshot
+        let first = l.snapshot_outgoing().unwrap();
+        assert!(matches!(&first, ModelSnapshot::Knn { .. }));
+        assert_eq!(first.bytes(), first.full_bytes());
+        l.note_broadcast();
+        // two learns later: a two-row delta, newest first
+        l.learn(&normal_ex(&mut rng, 100), &mut be).unwrap();
+        l.learn(&normal_ex(&mut rng, 101), &mut be).unwrap();
+        let delta = l.snapshot_outgoing().unwrap();
+        match &delta {
+            ModelSnapshot::KnnDelta { times, learned, .. } => {
+                assert_eq!(times, &[101, 100]);
+                assert_eq!(*learned, 7);
+            }
+            other => panic!("expected a delta, got {other:?}"),
+        }
+        assert_eq!(delta.bytes(), 2 * FEAT_DIM * 4 + 2 * 8 + 8 + 4);
+        assert_eq!(delta.full_bytes(), first.bytes());
+        // nothing new since the last committed broadcast: an empty delta
+        l.note_broadcast();
+        let empty = l.snapshot_outgoing().unwrap();
+        assert_eq!(empty.bytes(), 8 + 4);
+        // a restore voids broadcast tracking: back to the full fallback
+        let mut nvm = Nvm::new();
+        l.save(&mut nvm).unwrap();
+        l.restore(&mut nvm).unwrap();
+        assert!(matches!(
+            l.snapshot_outgoing().unwrap(),
+            ModelSnapshot::Knn { .. }
+        ));
+    }
+
+    #[test]
+    fn delta_merge_matches_full_merge() {
+        let mut be = NativeBackend::new();
+        let mut rng = Rng::new(15);
+        let mut donor = KnnAnomalyLearner::new();
+        for t in 0..10 {
+            donor.learn(&normal_ex(&mut rng, 100 + t), &mut be).unwrap();
+        }
+        // follower A tracks the donor: full snapshot, then a delta
+        let mut a = KnnAnomalyLearner::new();
+        assert!(a
+            .merge(&[&donor.snapshot_outgoing().unwrap()], &mut be, 1_000, None)
+            .unwrap());
+        donor.note_broadcast();
+        for t in 0..4 {
+            donor.learn(&normal_ex(&mut rng, 200 + t), &mut be).unwrap();
+        }
+        let delta = donor.snapshot_outgoing().unwrap();
+        assert!(matches!(&delta, ModelSnapshot::KnnDelta { .. }));
+        assert!(a.merge(&[&delta], &mut be, 1_000, None).unwrap());
+        // follower B gets the same state in one full merge
+        let mut b = KnnAnomalyLearner::new();
+        assert!(b
+            .merge(&[&donor.snapshot().unwrap()], &mut be, 1_000, None)
+            .unwrap());
+        assert_eq!(a.buffer().0, b.buffer().0);
+        assert_eq!(a.buffer().1, b.buffer().1);
+        assert_eq!(a.threshold(), b.threshold());
+        assert_eq!(a.learned_count(), b.learned_count());
+    }
+
+    #[test]
+    fn adopted_peer_rows_ride_the_next_outgoing_delta() {
+        let mut be = NativeBackend::new();
+        let mut rng = Rng::new(16);
+        let mut a = KnnAnomalyLearner::new();
+        for t in 0..6 {
+            a.learn(&normal_ex(&mut rng, t), &mut be).unwrap();
+        }
+        a.note_broadcast(); // peers have seen everything so far
+        let mut donor = KnnAnomalyLearner::new();
+        for t in 0..3 {
+            donor.learn(&normal_ex(&mut rng, 500 + t), &mut be).unwrap();
+        }
+        a.merge(&[&donor.snapshot().unwrap()], &mut be, 1_000, None)
+            .unwrap();
+        // gossip forwards what the merge adopted, not just local learns
+        match a.snapshot_outgoing().unwrap() {
+            ModelSnapshot::KnnDelta { times, .. } => {
+                assert_eq!(times, vec![502, 501, 500]);
+            }
+            other => panic!("expected a delta, got {other:?}"),
+        }
     }
 
     #[test]

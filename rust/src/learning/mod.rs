@@ -14,7 +14,7 @@ pub mod knn;
 pub use kmeans_nn::ClusterLabelLearner;
 pub use knn::KnnAnomalyLearner;
 
-use crate::backend::shapes::N_CLUSTERS;
+use crate::backend::shapes::{FEAT_DIM, N_BUF, N_CLUSTERS};
 use crate::backend::ComputeBackend;
 use crate::error::Result;
 use crate::nvm::Nvm;
@@ -37,6 +37,22 @@ pub enum ModelSnapshot {
         times: Vec<u64>,
         /// Next ring slot to overwrite.
         next: usize,
+        /// Monotonic learned-example counter.
+        learned: u64,
+        /// Current anomaly threshold AS_TH.
+        threshold: f32,
+    },
+    /// k-NN *delta* snapshot: only the ring rows written since the
+    /// sender's last committed broadcast, newest first — the wire analog
+    /// of the NVM delta checkpoint. Receivers treat each row as one merge
+    /// candidate (recency from `times`, subject to Mayfly expiry); senders
+    /// fall back to the full [`ModelSnapshot::Knn`] on first contact or
+    /// whenever the delta would not be smaller.
+    KnnDelta {
+        /// (k, FEAT_DIM) changed rows, newest first, row-major.
+        rows: Vec<f32>,
+        /// (k) per-row acquisition time, µs.
+        times: Vec<u64>,
         /// Monotonic learned-example counter.
         learned: u64,
         /// Current anomaly threshold AS_TH.
@@ -67,9 +83,25 @@ impl ModelSnapshot {
             ModelSnapshot::Knn {
                 buf, mask, times, ..
             } => buf.len() * 4 + mask.len() * 4 + times.len() * 8 + 8 + 8 + 4,
+            ModelSnapshot::KnnDelta { rows, times, .. } => {
+                rows.len() * 4 + times.len() * 8 + 8 + 4
+            }
             ModelSnapshot::Kmeans { w, .. } => {
                 w.len() * 4 + N_CLUSTERS * 4 + N_CLUSTERS * 2 * 4 + N_CLUSTERS * 4 + 8
             }
+        }
+    }
+
+    /// Wire size of the *full* snapshot this payload stands in for — what
+    /// the radio would carry without delta compression. The sync price
+    /// scales the calibrated `Tx` cost by `bytes() / full_bytes()`, so a
+    /// full snapshot keeps the exact calibrated price.
+    pub fn full_bytes(&self) -> usize {
+        match self {
+            ModelSnapshot::KnnDelta { .. } => {
+                N_BUF * FEAT_DIM * 4 + N_BUF * 4 + N_BUF * 8 + 8 + 8 + 4
+            }
+            _ => self.bytes(),
         }
     }
 }
@@ -172,6 +204,23 @@ pub trait Learner: Send {
     fn snapshot(&self) -> Option<ModelSnapshot> {
         None
     }
+
+    /// Snapshot to *transmit* at a sync rendezvous. Learners that track
+    /// what they last broadcast may return a delta
+    /// ([`ModelSnapshot::KnnDelta`]) covering only the state written since
+    /// — with a full-snapshot fallback on first contact or whenever the
+    /// delta would not be smaller. Must describe the same model state as
+    /// [`Learner::snapshot`]. Default: the full snapshot.
+    fn snapshot_outgoing(&self) -> Option<ModelSnapshot> {
+        self.snapshot()
+    }
+
+    /// The rendezvous committed: the payload from the last
+    /// [`Learner::snapshot_outgoing`] was actually transmitted, so the
+    /// next outgoing delta may be taken relative to it. Called only by
+    /// [`crate::sim::engine::Engine::commit_sync`] — never for solo or
+    /// skipped rounds, whose snapshots reached nobody.
+    fn note_broadcast(&mut self) {}
 
     /// Fold peer snapshots into the local model at a sync boundary.
     /// `now_us` is the boundary instant and `expiry_us` the deployment's

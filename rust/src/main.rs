@@ -73,6 +73,8 @@ fn print_help() {
                --stride S       per-shard seed stride      [default 1]\n\
                --sync-period-us P   federated sync boundary period (0 = isolated)\n\
                --sync-strategy S    gossip|all_reduce      [default gossip]\n\
+               --sched S        event|rounds coordinator for synced fleets\n\
+                                [default event; rounds = reference barrier]\n\
                --stream         streaming fan-in: fold rollups + quantile\n\
                                 sketches shard by shard and drop per-shard\n\
                                 results (bounded memory at any shard count;\n\
@@ -266,6 +268,11 @@ fn cmd_fleet(args: &[String]) -> Result<()> {
             Some(sync) => sync.strategy = strategy,
             None => bail!("--sync-strategy needs --sync-period-us (or a spec sync block)"),
         }
+    }
+    if let Some(s) = flag(args, "--sched") {
+        let sched = ilearn::sim::FleetSched::parse(&s)
+            .with_context(|| format!("unknown fleet sched `{s}` (event|rounds)"))?;
+        spec.fleet.get_or_insert_with(FleetSpec::default).sched = Some(sched);
     }
     let threads: usize = flag(args, "--threads").map_or(Ok(0), |s| s.parse())?;
     let fleet = spec.fleet.clone().unwrap_or_default();

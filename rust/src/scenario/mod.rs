@@ -19,8 +19,8 @@
 //!   deterministic cell order.
 //! * [`FleetSpec`] — the `"fleet"` block: deploy one scenario across N
 //!   shards (phase-jittered harvesters, strided seeds, optional per-shard
-//!   harvester overrides). The sweep runner schedules shard-level work
-//!   items and fans each cell's shards into a
+//!   harvester and sync-cadence overrides). The sweep runner schedules
+//!   shard-level work items and fans each cell's shards into a
 //!   [`crate::sim::fleet::FleetResult`].
 
 pub mod spec;
@@ -28,7 +28,7 @@ pub mod sweep;
 
 pub use spec::{
     BackendKind, CapacitorSpec, CostKind, FleetSpec, HarvesterSpec, LearnerSpec, MotionSpec,
-    RadioSpec, ScenarioSpec, SchedulerKind, SensorSpec, SyncSpec,
+    RadioSpec, ScenarioSpec, SchedulerKind, SensorSpec, ShardOverride, SyncSpec,
 };
 pub use sweep::{SweepCell, SweepOutcome, SweepRunner, SweepSpec};
 

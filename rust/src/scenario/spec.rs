@@ -22,7 +22,9 @@ use crate::sensors::accel::{Accel, MotionProfile};
 use crate::sensors::rssi::Area;
 use crate::sensors::{AirQuality, Rssi, Sensor};
 use crate::sim::engine::Engine;
-use crate::sim::fleet::{Fleet, FleetResult, Shard, ShardFactory, SyncPlan, SyncStrategy};
+use crate::sim::fleet::{
+    Fleet, FleetResult, FleetSched, Shard, ShardFactory, SyncPlan, SyncStrategy,
+};
 use crate::sim::{ChargeKernel, PlannerScheduler, Scheduler, SimConfig, StreamResult};
 use crate::util::json::Json;
 
@@ -1045,6 +1047,106 @@ impl SyncSpec {
     }
 }
 
+// --------------------------------------------------------- shard override
+
+/// One shard's declared deviations from the fleet-wide scenario: replace
+/// its harvester (heterogeneous power — a few RF nodes in a solar
+/// deployment) and/or its sync cadence (heterogeneous rendezvous — a
+/// starved node attends every other boundary). At least one field must
+/// be set; `sync_period_us` requires a `"sync"` block and the event
+/// scheduler (the round barrier pauses every shard at every fleet-wide
+/// boundary and cannot honor per-shard cadences).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardOverride {
+    /// Shard index this override applies to.
+    pub shard: u32,
+    /// Replacement harvester (`None`: the scenario's own).
+    pub harvester: Option<HarvesterSpec>,
+    /// Shard-local sync period, µs (`None`: the fleet-wide period).
+    pub sync_period_us: Option<u64>,
+}
+
+impl ShardOverride {
+    /// Harvester-only override (the pre-event-scheduler shape).
+    pub fn harvester(shard: u32, harvester: HarvesterSpec) -> Self {
+        ShardOverride {
+            shard,
+            harvester: Some(harvester),
+            sync_period_us: None,
+        }
+    }
+
+    /// Sync-cadence-only override.
+    pub fn sync_period(shard: u32, period_us: u64) -> Self {
+        ShardOverride {
+            shard,
+            harvester: None,
+            sync_period_us: Some(period_us),
+        }
+    }
+
+    fn validate(&self, what: &str, shards: u32, synced: bool) -> Result<()> {
+        if self.shard >= shards {
+            return Err(Error::Config(format!(
+                "{what}: fleet override names shard {} but the fleet has {shards} shard(s)",
+                self.shard
+            )));
+        }
+        if self.harvester.is_none() && self.sync_period_us.is_none() {
+            return Err(Error::Config(format!(
+                "{what}: fleet override for shard {} sets neither a harvester \
+                 nor a sync_period_us",
+                self.shard
+            )));
+        }
+        if let Some(h) = &self.harvester {
+            h.validate(&format!("{what} (shard {} override)", self.shard))?;
+        }
+        if let Some(p) = self.sync_period_us {
+            if p == 0 {
+                return Err(Error::Config(format!(
+                    "{what}: shard {} sync_period_us override must be > 0",
+                    self.shard
+                )));
+            }
+            if !synced {
+                return Err(Error::Config(format!(
+                    "{what}: shard {} overrides sync_period_us but the fleet \
+                     has no sync block",
+                    self.shard
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    fn to_json(&self) -> Json {
+        // emitted only when present: pre-event-scheduler harvester-only
+        // overrides keep their JSON shape byte for byte
+        let mut kvs = vec![("shard", Json::Num(self.shard as f64))];
+        if let Some(h) = &self.harvester {
+            kvs.push(("harvester", h.to_json()));
+        }
+        if let Some(p) = self.sync_period_us {
+            kvs.push(("sync_period_us", Json::Num(p as f64)));
+        }
+        Json::obj(kvs)
+    }
+
+    fn from_json(j: &Json) -> Result<ShardOverride> {
+        let what = "fleet override";
+        Ok(ShardOverride {
+            shard: req_u32(j, "shard", what)?,
+            harvester: match j.get("harvester") {
+                None => None,
+                Some(v) if v.is_null() => None,
+                Some(v) => Some(HarvesterSpec::from_json(v)?),
+            },
+            sync_period_us: opt_u64(j, "sync_period_us", what)?,
+        })
+    }
+}
+
 // ------------------------------------------------------------- fleet spec
 
 /// A fleet block: one scenario deployed across `shards` devices. Shard
@@ -1054,8 +1156,9 @@ impl SyncSpec {
 /// `i × phase_jitter_us` phase-shifts the harvester (so 16 solar nodes
 /// see the same diurnal curve each a little deeper into the day, and
 /// trace shards replay distinct slices of one recording). `overrides`
-/// optionally replaces the harvester of named shards (heterogeneous
-/// fleets: a few RF nodes in a solar deployment).
+/// optionally replaces the harvester and/or sync cadence of named shards
+/// (heterogeneous fleets: a few RF nodes in a solar deployment, a weak
+/// node syncing at half rate).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FleetSpec {
     pub shards: u32,
@@ -1064,11 +1167,15 @@ pub struct FleetSpec {
     pub phase_jitter_us: u64,
     /// Per-shard seed stride (shard i runs at seed + i × this).
     pub seed_stride: u64,
-    /// (shard index, harvester) overrides, sorted by shard index.
-    pub overrides: Vec<(u32, HarvesterSpec)>,
+    /// Per-shard overrides, sorted by shard index.
+    pub overrides: Vec<ShardOverride>,
     /// Round-based federated sync (`None`: isolated shards, the pre-sync
     /// fleet behavior bit for bit).
     pub sync: Option<SyncSpec>,
+    /// Which coordinator drives the synced fleet (`None`: the default,
+    /// [`FleetSched::Event`]). `rounds` pins the reference barrier and is
+    /// incompatible with per-shard sync cadences.
+    pub sched: Option<FleetSched>,
     /// Streaming fan-in (`Some(true)`: fold-and-drop shard execution via
     /// [`crate::sim::run_streaming`] — bounded memory, no per-shard
     /// results; `Some(false)`: always retain per-shard results; `None`:
@@ -1085,6 +1192,7 @@ impl Default for FleetSpec {
             seed_stride: 1,
             overrides: Vec::new(),
             sync: None,
+            sched: None,
             stream: None,
         }
     }
@@ -1109,8 +1217,16 @@ impl FleetSpec {
     pub fn override_for(&self, shard: u32) -> Option<&HarvesterSpec> {
         self.overrides
             .iter()
-            .find(|&&(i, _)| i == shard)
-            .map(|(_, h)| h)
+            .find(|o| o.shard == shard)
+            .and_then(|o| o.harvester.as_ref())
+    }
+
+    /// Sync-cadence override for `shard`, if one is declared.
+    pub fn sync_period_for(&self, shard: u32) -> Option<u64> {
+        self.overrides
+            .iter()
+            .find(|o| o.shard == shard)
+            .and_then(|o| o.sync_period_us)
     }
 
     fn validate(&self, what: &str) -> Result<()> {
@@ -1118,23 +1234,34 @@ impl FleetSpec {
             return Err(Error::Config(format!("{what}: fleet shards must be >= 1")));
         }
         for w in self.overrides.windows(2) {
-            if w[0].0 >= w[1].0 {
+            if w[0].shard >= w[1].shard {
                 return Err(Error::Config(format!(
                     "{what}: fleet override shard indices must be strictly increasing"
                 )));
             }
         }
-        for (i, h) in &self.overrides {
-            if *i >= self.shards {
-                return Err(Error::Config(format!(
-                    "{what}: fleet override names shard {i} but the fleet has {} shard(s)",
-                    self.shards
-                )));
-            }
-            h.validate(&format!("{what} (shard {i} override)"))?;
+        for o in &self.overrides {
+            o.validate(what, self.shards, self.sync.is_some())?;
         }
         if let Some(sync) = &self.sync {
             sync.validate(what)?;
+        }
+        if let Some(sched) = self.sched {
+            if self.sync.is_none() {
+                return Err(Error::Config(format!(
+                    "{what}: `sched` ({}) named but the fleet has no sync \
+                     block to schedule",
+                    sched.name()
+                )));
+            }
+            if sched == FleetSched::Rounds
+                && self.overrides.iter().any(|o| o.sync_period_us.is_some())
+            {
+                return Err(Error::Config(format!(
+                    "{what}: the round barrier needs one uniform sync period — \
+                     per-shard sync_period_us overrides require the event scheduler"
+                )));
+            }
         }
         if self.stream == Some(true) && self.sync.is_some() && self.shards > 1 {
             return Err(Error::Config(format!(
@@ -1152,17 +1279,7 @@ impl FleetSpec {
             ("seed_stride", Json::Num(self.seed_stride as f64)),
             (
                 "overrides",
-                Json::Arr(
-                    self.overrides
-                        .iter()
-                        .map(|(i, h)| {
-                            Json::obj(vec![
-                                ("shard", Json::Num(*i as f64)),
-                                ("harvester", h.to_json()),
-                            ])
-                        })
-                        .collect(),
-                ),
+                Json::Arr(self.overrides.iter().map(|o| o.to_json()).collect()),
             ),
         ];
         // emitted only when present: pre-knob fleet documents keep
@@ -1172,6 +1289,9 @@ impl FleetSpec {
         }
         if let Some(sync) = &self.sync {
             kvs.push(("sync", sync.to_json()));
+        }
+        if let Some(sched) = self.sched {
+            kvs.push(("sched", Json::Str(sched.name().into())));
         }
         Json::obj(kvs)
     }
@@ -1184,10 +1304,7 @@ impl FleetSpec {
                 Error::Config(format!("{what}: `overrides` must be an array"))
             })?;
             for o in arr {
-                overrides.push((
-                    req_u32(o, "shard", "fleet override")?,
-                    HarvesterSpec::from_json(req(o, "harvester", "fleet override")?)?,
-                ));
+                overrides.push(ShardOverride::from_json(o)?);
             }
         }
         Ok(FleetSpec {
@@ -1199,6 +1316,20 @@ impl FleetSpec {
                 None => None,
                 Some(v) if v.is_null() => None,
                 Some(v) => Some(SyncSpec::from_json(v)?),
+            },
+            sched: match j.get("sched") {
+                None => None,
+                Some(v) if v.is_null() => None,
+                Some(v) => {
+                    let name = v.as_str().ok_or_else(|| {
+                        Error::Config(format!("{what}: `sched` must be a string"))
+                    })?;
+                    Some(FleetSched::parse(name).ok_or_else(|| {
+                        Error::Config(format!(
+                            "unknown fleet sched `{name}` (event|rounds)"
+                        ))
+                    })?)
+                }
             },
             stream: match j.get("stream") {
                 None => None,
@@ -1702,6 +1833,21 @@ impl ShardFactory for ScenarioSpec {
     fn sync_plan(&self) -> Option<SyncPlan> {
         ScenarioSpec::sync_plan(self)
     }
+
+    fn shard_sync_period_us(&self, index: u32) -> u64 {
+        self.fleet
+            .as_ref()
+            .and_then(|f| f.sync_period_for(index))
+            .or_else(|| ScenarioSpec::sync_plan(self).map(|p| p.period_us))
+            .unwrap_or(0)
+    }
+
+    fn fleet_sched(&self) -> FleetSched {
+        self.fleet
+            .as_ref()
+            .and_then(|f| f.sched)
+            .unwrap_or_default()
+    }
 }
 
 #[cfg(test)]
@@ -1885,8 +2031,12 @@ mod tests {
             shards: 4,
             phase_jitter_us: 250_000,
             seed_stride: 7,
-            overrides: vec![(2, HarvesterSpec::Constant { power_w: 0.02 })],
+            overrides: vec![ShardOverride::harvester(
+                2,
+                HarvesterSpec::Constant { power_w: 0.02 },
+            )],
             sync: None,
+            sched: None,
             stream: None,
         });
         s.validate().unwrap();
@@ -1904,12 +2054,13 @@ mod tests {
         bad.fleet.as_mut().unwrap().shards = 0;
         assert!(bad.validate().is_err());
         let mut bad = s.clone();
-        bad.fleet.as_mut().unwrap().overrides = vec![(9, HarvesterSpec::Constant { power_w: 0.1 })];
+        bad.fleet.as_mut().unwrap().overrides =
+            vec![ShardOverride::harvester(9, HarvesterSpec::Constant { power_w: 0.1 })];
         assert!(bad.validate().is_err());
         let mut bad = s.clone();
         bad.fleet.as_mut().unwrap().overrides = vec![
-            (2, HarvesterSpec::Constant { power_w: 0.1 }),
-            (2, HarvesterSpec::Constant { power_w: 0.2 }),
+            ShardOverride::harvester(2, HarvesterSpec::Constant { power_w: 0.1 }),
+            ShardOverride::harvester(2, HarvesterSpec::Constant { power_w: 0.2 }),
         ];
         assert!(bad.validate().is_err());
         let mut bad = s.clone();
@@ -1918,7 +2069,7 @@ mod tests {
         // an invalid override harvester is caught too
         let mut bad = s;
         bad.fleet.as_mut().unwrap().overrides =
-            vec![(1, HarvesterSpec::Constant { power_w: -1.0 })];
+            vec![ShardOverride::harvester(1, HarvesterSpec::Constant { power_w: -1.0 })];
         assert!(bad.validate().is_err());
     }
 
@@ -1995,6 +2146,77 @@ mod tests {
     }
 
     #[test]
+    fn per_shard_sync_and_sched_knobs_round_trip_and_validate() {
+        let mut s = preset("air_quality", 1, 2 * H).unwrap();
+        s.fleet = Some(FleetSpec {
+            shards: 4,
+            overrides: vec![
+                ShardOverride::sync_period(1, 3_600_000_000),
+                ShardOverride {
+                    shard: 2,
+                    harvester: Some(HarvesterSpec::Constant { power_w: 0.02 }),
+                    sync_period_us: Some(900_000_000),
+                },
+            ],
+            sync: Some(SyncSpec {
+                period_us: 1_800_000_000,
+                strategy: SyncStrategy::Gossip,
+                radio: None,
+            }),
+            sched: Some(FleetSched::Event),
+            ..FleetSpec::default()
+        });
+        s.validate().unwrap();
+        let text = s.to_json().to_string();
+        assert!(text.contains("\"sched\":\"event\""), "{text}");
+        let back = ScenarioSpec::parse(&text).unwrap();
+        assert_eq!(back, s, "override/sched knobs changed across JSON round trip");
+        // the shard-factory view: overridden cadences, plan-period default
+        assert_eq!(back.shard_sync_period_us(0), 1_800_000_000);
+        assert_eq!(back.shard_sync_period_us(1), 3_600_000_000);
+        assert_eq!(back.shard_sync_period_us(2), 900_000_000);
+        assert_eq!(back.fleet_sched(), FleetSched::Event);
+        // harvester-only overrides without a sched keep the pre-event
+        // wire shape: no new keys at all
+        let mut old = s.clone();
+        old.fleet.as_mut().unwrap().overrides =
+            vec![ShardOverride::harvester(2, HarvesterSpec::Constant { power_w: 0.02 })];
+        old.fleet.as_mut().unwrap().sched = None;
+        let text = old.to_json().to_string();
+        assert!(!text.contains("sync_period_us"), "{text}");
+        assert!(!text.contains("\"sched\""), "{text}");
+        // bad blocks rejected: an override with no fields, a zero-period
+        // cadence, cadences without a sync block, a sched without a sync
+        // block, and the round barrier over per-shard cadences
+        let mut bad = s.clone();
+        bad.fleet.as_mut().unwrap().overrides[0] = ShardOverride {
+            shard: 1,
+            harvester: None,
+            sync_period_us: None,
+        };
+        assert!(bad.validate().is_err());
+        let mut bad = s.clone();
+        bad.fleet.as_mut().unwrap().overrides[0].sync_period_us = Some(0);
+        assert!(bad.validate().is_err());
+        let mut bad = s.clone();
+        bad.fleet.as_mut().unwrap().sync = None;
+        bad.fleet.as_mut().unwrap().sched = None;
+        assert!(bad.validate().is_err());
+        let mut bad = s.clone();
+        bad.fleet.as_mut().unwrap().overrides.clear();
+        bad.fleet.as_mut().unwrap().sync = None;
+        assert!(bad.validate().is_err());
+        let mut bad = s;
+        bad.fleet.as_mut().unwrap().sched = Some(FleetSched::Rounds);
+        assert!(bad.validate().is_err());
+        // unknown sched names are parse errors
+        assert!(FleetSpec::from_json(
+            &Json::parse(r#"{"shards": 2, "sched": "warp"}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
     fn stream_knob_round_trips_validates_and_auto_resolves() {
         let mut s = preset("vibration", 1, 2 * H).unwrap();
         s.fleet = Some(FleetSpec {
@@ -2057,6 +2279,7 @@ mod tests {
             seed_stride: 11,
             overrides: vec![],
             sync: None,
+            sched: None,
             stream: None,
         });
         let b = s.build_shard_engine(0).unwrap().run().unwrap();
@@ -2070,8 +2293,12 @@ mod tests {
             shards: 3,
             phase_jitter_us: 0,
             seed_stride: 0, // identical seeds: only the override differs
-            overrides: vec![(1, HarvesterSpec::Constant { power_w: 0.0 })],
+            overrides: vec![ShardOverride::harvester(
+                1,
+                HarvesterSpec::Constant { power_w: 0.0 },
+            )],
             sync: None,
+            sched: None,
             stream: None,
         });
         let base = s.build_shard_engine(0).unwrap().run().unwrap();

@@ -59,6 +59,11 @@ pub struct Engine {
     pub meter: EnergyMeter,
 
     pending: Vec<PendingEx>,
+    /// Scaled `tx` price (µJ, µs) of the snapshot returned by the last
+    /// [`Engine::prepare_sync`], consumed by [`Engine::commit_sync`] so
+    /// the commit pays for the bytes the rendezvous actually bid (a delta
+    /// snapshot pays a fraction of the calibrated full-snapshot `Tx`).
+    pending_sync: Option<(f64, u64)>,
     /// Scratch mirror of `pending`'s last actions handed to the scheduler
     /// (reused every decision — no per-decision allocation).
     plan_scratch: Vec<Action>,
@@ -200,6 +205,7 @@ impl EngineBuilder {
             costs: self.costs.expect("checked"),
             meter: EnergyMeter::new(),
             pending: Vec::new(),
+            pending_sync: None,
             plan_scratch: Vec::new(),
             result: RunResult::default(),
             next_eval_us: 0,
@@ -219,6 +225,13 @@ impl Engine {
     /// Current simulated time (µs).
     pub fn now_us(&self) -> u64 {
         self.world.now_us()
+    }
+
+    /// Usable energy currently stored in the capacitor (µJ) — the local
+    /// state the event scheduler's energy-aware partner selection reads
+    /// at a rendezvous (starved shards are paired with rich ones).
+    pub fn stored_energy_uj(&self) -> f64 {
+        self.world.cap.usable_uj()
     }
 
     /// The run's aggregates so far (live during a run; repopulated by
@@ -302,13 +315,19 @@ impl Engine {
         rx_peers: u32,
         deadline_us: u64,
     ) -> Option<crate::learning::ModelSnapshot> {
+        self.pending_sync = None;
         // the snapshot is taken before the energy gate on purpose: it is
         // also the participation probe, and a non-snapshotting learner
         // must opt out without the gate moving the clock. The copy a
-        // skipped round wastes (one ring, ~9 KB) is noise next to the
-        // round of simulation around it.
-        let snap = self.learner.snapshot()?;
-        let (price_uj, price_us) = self.costs.sync_price(rx_peers);
+        // skipped round wastes (one ring, ~9 KB worst case) is noise next
+        // to the round of simulation around it.
+        let snap = self.learner.snapshot_outgoing()?;
+        let tx_share = self
+            .costs
+            .sync_price_bytes(0, snap.bytes(), snap.full_bytes());
+        let (price_uj, price_us) =
+            self.costs
+                .sync_price_bytes(rx_peers, snap.bytes(), snap.full_bytes());
         // wake for the exchange: charge (inside the rendezvous window)
         // until the radio price fits — keeping the eval-cadence
         // checkpoints alive exactly like charge_phase does during
@@ -347,6 +366,7 @@ impl Engine {
             return None;
         }
         let _ = price_us; // airtime is spent at commit, not at rendezvous
+        self.pending_sync = Some(tx_share);
         Some(snap)
     }
 
@@ -358,17 +378,27 @@ impl Engine {
     /// and no simulation ran in between, so the deduction cannot fail
     /// (actual peers ≤ the fleet-wide count the rendezvous charged for).
     pub fn commit_sync(&mut self, rx_peers: u32) {
-        let (price_uj, price_us) = self.costs.sync_price(rx_peers);
+        // the tx leg is what the rendezvous actually bid (a delta snapshot
+        // pays its byte-scaled share); the rx legs are full listen windows
+        // for the peers that showed up
+        let (tx_uj, tx_us) = self.pending_sync.take().unwrap_or_else(|| {
+            let tx = self.costs.cost(Action::Tx);
+            (tx.energy_uj, tx.time_us)
+        });
+        let rx = self.costs.cost(Action::Rx);
+        let price_uj = tx_uj + rx.energy_uj * f64::from(rx_peers);
+        let price_us = tx_us + rx.time_us * u64::from(rx_peers);
         let ok = self.world.cap.deduct_uj(price_uj);
         debug_assert!(ok, "prepare_sync charged toward the sync price");
         let _ = ok;
         self.world.advance_us(price_us);
-        let tx = self.costs.cost(Action::Tx);
-        let rx = self.costs.cost(Action::Rx);
-        self.meter.record_action(Action::Tx, tx.energy_uj, tx.time_us);
+        self.meter.record_action(Action::Tx, tx_uj, tx_us);
         for _ in 0..rx_peers {
             self.meter.record_action(Action::Rx, rx.energy_uj, rx.time_us);
         }
+        // the outgoing snapshot reached its peers: the learner may take
+        // its next wire delta relative to it
+        self.learner.note_broadcast();
         self.result.syncs_done += 1;
     }
 
@@ -377,6 +407,9 @@ impl Engine {
     /// the exchange is skipped with zero energy and zero airtime and the
     /// round is counted under [`RunResult::syncs_solo`].
     pub fn solo_sync(&mut self) {
+        // the prepared snapshot reached nobody: drop its pending tx price
+        // and leave the learner's broadcast tracking untouched
+        self.pending_sync = None;
         self.result.syncs_solo += 1;
     }
 
@@ -995,6 +1028,37 @@ mod tests {
         assert!(dark.prepare_sync(1, t0 + 600_000_000).is_none());
         assert!(dark.now_us() >= t0 + 600_000_000, "skip before the deadline");
         assert_eq!(dark.result.syncs_skipped, 1);
+    }
+
+    #[test]
+    fn delta_snapshots_shrink_the_sync_commit_price() {
+        let mut e = small_engine(0.010, 1800);
+        e.run_until(300_000_000).unwrap();
+        assert!(e.learner.learned_count() > 0);
+        // first contact: full snapshot at the exact calibrated price
+        e.world.cap.set_voltage(3.3);
+        let t0 = e.now_us();
+        assert!(e.prepare_sync(1, t0).is_some());
+        e.commit_sync(1);
+        let (full_uj, full_us) = e.costs.sync_price(1);
+        // steady state: the next exchange radios a delta and pays its
+        // byte-scaled share of the tx leg (the rx leg stays full)
+        e.world.cap.set_voltage(3.3);
+        let before = e.world.cap.usable_uj();
+        let t1 = e.now_us();
+        let snap = e.prepare_sync(1, t1).expect("prepared");
+        assert!(
+            snap.bytes() < snap.full_bytes(),
+            "no delta: {} B",
+            snap.bytes()
+        );
+        e.commit_sync(1);
+        let paid = before - e.world.cap.usable_uj();
+        let rx_uj = e.costs.cost(Action::Rx).energy_uj;
+        assert!(paid < full_uj, "delta paid the full price: {paid} uJ");
+        assert!(paid >= rx_uj, "rx leg must stay at full price");
+        assert!(e.now_us() - t1 < full_us, "delta paid full airtime");
+        assert_eq!(e.meter.tally("tx").count, 2);
     }
 
     #[test]

@@ -28,10 +28,11 @@ use crate::util::pool;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 
-/// Consecutive energy-gated sync rounds before a shard enters
+/// Consecutive energy-gated sync rendezvous before a shard enters
 /// quarantined catch-up ([`QuarantineState`]).
 const QUARANTINE_AFTER: u32 = 3;
-/// Cap on the quarantine backoff: rounds sat out per quarantine spell.
+/// Cap on the quarantine backoff, in multiples of the shard's own sync
+/// period per quarantine spell.
 const QUARANTINE_MAX_BACKOFF: u32 = 8;
 
 /// Wrap a shard-local failure with the shard it came from, so one bad
@@ -44,20 +45,27 @@ pub(crate) fn shard_error(index: u32, err: Error) -> Error {
 }
 
 /// Graceful degradation for chronically energy-gated shards: after
-/// [`QUARANTINE_AFTER`] consecutive rounds in which a shard could not
-/// charge to the radio price inside the rendezvous window, it stops
-/// attending the rendezvous for a bounded backoff (1, 2, 4, … rounds,
-/// doubling per re-entry and capped at [`QUARANTINE_MAX_BACKOFF`]) and
-/// spends those rounds catching up — charging and working on its normal
-/// wake rhythm instead of idling against a gate it cannot afford, with
-/// each sat-out round still counted under `syncs_skipped`. One
-/// successful rendezvous fully rehabilitates the shard. Pure per-shard
-/// state — round behavior is a function of the shard's own history, so
+/// [`QUARANTINE_AFTER`] consecutive rendezvous in which a shard could
+/// not charge to the radio price inside its window, it stops attending
+/// for a bounded *time* backoff (1, 2, 4, … sync periods, doubling per
+/// re-entry and capped at [`QUARANTINE_MAX_BACKOFF`]) and spends the
+/// spell catching up — charging and working on its normal wake rhythm
+/// instead of idling against a gate it cannot afford, with each sat-out
+/// boundary still counted under `syncs_skipped`. One successful
+/// rendezvous fully rehabilitates the shard. The backoff is denominated
+/// in µs (not rounds): under the round barrier every boundary is one
+/// global period apart so a spell of `backoff` periods covers exactly
+/// `backoff` rounds — the pre-event-scheduler behavior, bit for bit —
+/// while the event scheduler turns the same state into pushed-out wake
+/// times on heterogeneous per-shard cadences. Pure per-shard state —
+/// rendezvous behavior is a function of the shard's own history, so
 /// fleet results stay bit-identical for any worker-thread count.
 #[derive(Debug, Clone, Copy)]
 pub(crate) struct QuarantineState {
     gated_streak: u32,
-    sit_out: u32,
+    /// Sit out every rendezvous at instants `<= backoff_until_us`
+    /// (0 = never quarantined yet; boundaries are strictly positive).
+    backoff_until_us: u64,
     backoff: u32,
 }
 
@@ -65,20 +73,15 @@ impl QuarantineState {
     pub(crate) fn new() -> QuarantineState {
         QuarantineState {
             gated_streak: 0,
-            sit_out: 0,
+            backoff_until_us: 0,
             backoff: 1,
         }
     }
 
-    /// True when the shard should sit this round out without attempting
-    /// the rendezvous; consumes one backoff round.
-    pub(crate) fn sits_out(&mut self) -> bool {
-        if self.sit_out > 0 {
-            self.sit_out -= 1;
-            true
-        } else {
-            false
-        }
+    /// True when the shard should sit out a rendezvous at `now_us`
+    /// without attempting it.
+    pub(crate) fn sits_out(&self, now_us: u64) -> bool {
+        now_us <= self.backoff_until_us
     }
 
     /// The shard charged to the price and made the rendezvous: fully
@@ -88,12 +91,14 @@ impl QuarantineState {
         self.backoff = 1;
     }
 
-    /// The shard could not afford the exchange this round.
-    pub(crate) fn on_gated(&mut self) {
+    /// The shard could not afford the exchange at the `now_us` boundary
+    /// of its own `period_us` sync cadence.
+    pub(crate) fn on_gated(&mut self, now_us: u64, period_us: u64) {
         self.gated_streak += 1;
         if self.gated_streak >= QUARANTINE_AFTER {
             self.gated_streak = 0;
-            self.sit_out = self.backoff;
+            self.backoff_until_us =
+                now_us.saturating_add(u64::from(self.backoff).saturating_mul(period_us));
             self.backoff = (self.backoff * 2).min(QUARANTINE_MAX_BACKOFF);
         }
     }
@@ -201,6 +206,55 @@ pub trait ShardFactory: Sync {
     /// behavior, bit for bit.
     fn sync_plan(&self) -> Option<SyncPlan> {
         None
+    }
+
+    /// Shard `index`'s own sync cadence, µs (0 = the shard never attends
+    /// a rendezvous). Defaults to the fleet-wide plan period; factories
+    /// with per-shard `sync_period_us` overrides return heterogeneous
+    /// cadences here, which only the event scheduler
+    /// ([`crate::sim::sched`]) can honor.
+    fn shard_sync_period_us(&self, index: u32) -> u64 {
+        let _ = index;
+        self.sync_plan().map_or(0, |p| p.period_us)
+    }
+
+    /// Which coordinator drives a synced fleet (ignored for isolated
+    /// fleets). The default is the event scheduler, which is pinned
+    /// bit-identical to the round barrier under a uniform period.
+    fn fleet_sched(&self) -> FleetSched {
+        FleetSched::Event
+    }
+}
+
+/// Which coordinator drives a synced fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FleetSched {
+    /// The global discrete-event scheduler ([`crate::sim::sched`]):
+    /// rendezvous are per-shard heap events, heterogeneous sync periods
+    /// are honored, idle shards cost one heap entry. The default.
+    #[default]
+    Event,
+    /// The PR-5 round barrier ([`Fleet::run_rounds`]): every shard
+    /// pauses at every fleet-wide boundary. Uniform period only; kept
+    /// as the reference oracle for the event scheduler's bit-identity
+    /// pin.
+    Rounds,
+}
+
+impl FleetSched {
+    pub fn name(self) -> &'static str {
+        match self {
+            FleetSched::Event => "event",
+            FleetSched::Rounds => "rounds",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FleetSched> {
+        match s {
+            "event" => Some(FleetSched::Event),
+            "rounds" => Some(FleetSched::Rounds),
+            _ => None,
+        }
     }
 }
 
@@ -489,18 +543,30 @@ impl<'a, F: ShardFactory + ?Sized> Fleet<'a, F> {
     /// count; the first failing shard fails the fleet.
     ///
     /// Without a sync plan (or with a degenerate one — a single shard, or
-    /// no boundary inside the horizon) every shard runs in isolation on
-    /// the claim-counter pool, exactly the PR-4 path. With one, the fleet
-    /// becomes a round scheduler: all shards run to each sync boundary,
-    /// exchange learner snapshots under the radio energy gate, merge, and
-    /// continue ([`Fleet::run_rounds`]).
+    /// no shard with a boundary inside the horizon) every shard runs in
+    /// isolation on the claim-counter pool, exactly the PR-4 path. With
+    /// one, the fleet is driven by the factory's [`FleetSched`]: the
+    /// event scheduler ([`crate::sim::sched`], the default) turns each
+    /// shard's own boundaries into heap events, or the round barrier
+    /// ([`Fleet::run_rounds`]) pauses all shards at every fleet-wide
+    /// boundary. Both exchange learner snapshots under the radio energy
+    /// gate, merge, and continue; under a uniform period they are pinned
+    /// bit-identical.
     pub fn run(&self, threads: usize) -> Result<FleetResult> {
-        let plan = self
-            .factory
-            .sync_plan()
-            .filter(|p| self.shards.len() > 1 && !p.boundaries().is_empty());
+        let plan = self.factory.sync_plan().filter(|p| {
+            self.shards.len() > 1
+                && self.shards.iter().any(|sh| {
+                    let period = self.factory.shard_sync_period_us(sh.index);
+                    period > 0 && period < p.horizon_us
+                })
+        });
         match plan {
-            Some(plan) => self.run_rounds(threads, plan),
+            Some(plan) => match self.factory.fleet_sched() {
+                FleetSched::Event => {
+                    super::sched::run_events(self.factory, &self.shards, threads, plan)
+                }
+                FleetSched::Rounds => self.run_rounds(threads, plan),
+            },
             None => {
                 let results = pool::run_indexed(self.shards.len(), threads, |i| {
                     let index = self.shards[i].index;
@@ -634,7 +700,7 @@ impl<'a, F: ShardFactory + ?Sized> Fleet<'a, F> {
                                 Ok(e) => match e.run_until(boundary) {
                                     // the horizon ends a shard's rounds
                                     Ok(()) if e.now_us() < e.cfg.horizon_us => {
-                                        if sh.quarantine.sits_out() {
+                                        if sh.quarantine.sits_out(boundary) {
                                             // quarantined catch-up: keep
                                             // the normal charge/wake
                                             // rhythm instead of idling at
@@ -649,7 +715,8 @@ impl<'a, F: ShardFactory + ?Sized> Fleet<'a, F> {
                                                     Report::Snapshot(s)
                                                 }
                                                 None => {
-                                                    sh.quarantine.on_gated();
+                                                    sh.quarantine
+                                                        .on_gated(boundary, plan.period_us);
                                                     Report::Out
                                                 }
                                             }
@@ -1021,15 +1088,20 @@ mod tests {
 
     #[test]
     fn quarantine_backoff_doubles_and_caps() {
-        // always-gated shard: 3 gated rounds buy 1 sit-out, then 2, 4, 8,
-        // 8, ... (doubling, capped)
+        // always-gated shard on a fixed boundary cadence: 3 gated
+        // boundaries buy 1 sat-out period, then 2, 4, 8, 8, ...
+        // (doubling, capped) — the time-based backoff walks the exact
+        // round schedule the pre-event-scheduler (round-counted) state
+        // machine produced
+        const P: u64 = 1_000_000;
         let mut q = QuarantineState::new();
         let mut pattern = String::new();
-        for _ in 0..40 {
-            if q.sits_out() {
+        for k in 1..=40u64 {
+            let boundary = k * P;
+            if q.sits_out(boundary) {
                 pattern.push('q');
             } else {
-                q.on_gated();
+                q.on_gated(boundary, P);
                 pattern.push('g');
             }
         }
@@ -1039,19 +1111,19 @@ mod tests {
         );
         // one successful rendezvous fully rehabilitates
         let mut q = QuarantineState::new();
-        for _ in 0..3 {
-            assert!(!q.sits_out());
-            q.on_gated();
+        for k in 1..=3u64 {
+            assert!(!q.sits_out(k * P));
+            q.on_gated(k * P, P);
         }
-        assert!(q.sits_out(), "third gate should trigger quarantine");
-        assert!(!q.sits_out(), "first sit-out spent");
+        assert!(q.sits_out(4 * P), "third gate should trigger quarantine");
+        assert!(!q.sits_out(5 * P), "first sit-out spent");
         q.on_made_rendezvous();
-        q.on_gated();
-        q.on_gated();
-        assert!(!q.sits_out(), "streak reset by the rendezvous");
-        q.on_gated();
-        assert!(q.sits_out(), "backoff restarts at one round");
-        assert!(!q.sits_out());
+        q.on_gated(6 * P, P);
+        q.on_gated(7 * P, P);
+        assert!(!q.sits_out(8 * P), "streak reset by the rendezvous");
+        q.on_gated(8 * P, P);
+        assert!(q.sits_out(9 * P), "backoff restarts at one period");
+        assert!(!q.sits_out(10 * P));
     }
 
     /// ConstFleet's recipe, but with one harvester power per shard — the

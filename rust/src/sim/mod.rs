@@ -19,7 +19,9 @@
 //! [`fleet::Fleet`] generalizes one scenario from a single device to `N`
 //! shards — one World/Executor/Policy stack per shard with fan-in
 //! aggregation ([`fleet::FleetResult`]); the plain `Engine` run is its
-//! 1-shard special case. [`state::RunState`] persists a run's aggregates
+//! 1-shard special case, and synced fleets advance on [`sched`]'s global
+//! event heap — per-shard rendezvous instead of fleet-wide round
+//! barriers. [`state::RunState`] persists a run's aggregates
 //! through NVM so interrupted runs restore bit-identically.
 
 pub mod engine;
@@ -27,15 +29,18 @@ pub mod executor;
 pub mod fleet;
 pub mod policy;
 pub mod probe;
+pub mod sched;
 pub mod soa;
 pub mod state;
 pub mod world;
 
 pub use executor::{Exec, Executor};
 pub use fleet::{
-    Fleet, FleetResult, FleetRollup, Rollup, Shard, ShardFactory, SyncPlan, SyncStrategy,
+    Fleet, FleetResult, FleetRollup, FleetSched, Rollup, Shard, ShardFactory, SyncPlan,
+    SyncStrategy,
 };
 pub use policy::Policy;
+pub use sched::planned_wakes;
 pub use soa::{run_streaming, FleetSketches, StreamResult};
 pub use state::RunState;
 pub use world::World;

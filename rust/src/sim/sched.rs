@@ -1,0 +1,706 @@
+//! The global discrete-event fleet scheduler: rendezvous as heap events
+//! instead of fleet-wide round barriers.
+//!
+//! The PR-5 round scheduler ([`super::fleet::Fleet`]) pauses *every*
+//! shard at *every* fleet-wide sync boundary — the slowest shard of a
+//! round gates the whole population, and per-shard sync cadences are
+//! unrepresentable. This module replaces that barrier for synced fleets
+//! with a single global binary min-heap of `(wake_us, slot)` events:
+//!
+//! - Each resident shard is a component whose next wake is its own next
+//!   sync boundary (`period, 2·period, … < horizon` over its *own*
+//!   `sync_period_us`). An idle shard costs one heap entry, not a
+//!   blocked worker.
+//! - Popping a wake time `t` yields the rendezvous *group* at `t`: all
+//!   shards whose boundary lands there. Heterogeneous cadences meet
+//!   pairwise at shared instants (30 s and 60 s shards at 60 s
+//!   multiples); a shard alone at its boundary goes solo for free.
+//! - Quarantine backoff is event re-scheduling: a quarantined shard's
+//!   wake is pushed out without waking the shard at all, and the skipped
+//!   boundaries are flushed into its `syncs_skipped` counter at its next
+//!   real wake.
+//!
+//! Determinism does not depend on worker timing. The heap is keyed on
+//! `(wake_us, slot)` so equal-time pops are slot-ordered; a group at
+//! time `t` is dispatched only when no in-flight shard could still push
+//! an event at or before `t` (the dispatch gate `t < min(t' + period')`
+//! over in-flight shards), so group membership is a pure function of
+//! the simulated trajectories; and the group plan is built from
+//! participants sorted by slot, whatever order their reports arrived
+//! in. Under one uniform period the scheduler degenerates to exactly
+//! the round barrier's groups, deadlines and gossip rotation, which is
+//! pinned bit-identical to [`super::fleet::Fleet`]'s rounds path.
+//!
+//! Partner selection: uniform-period fleets keep the PR-5 rotation
+//! (`offset = 1 + round % (m - 1)`) — required for the bit-identity pin
+//! — while heterogeneous fleets use energy-aware pairing: the
+//! capacitor-starved half of the participants merges the energy-rich
+//! half's snapshots, deterministic with a slot tie-break.
+
+use crate::error::{Error, Result};
+use crate::learning::ModelSnapshot;
+use crate::sim::engine::Engine;
+use crate::sim::fleet::{
+    shard_error, FleetResult, QuarantineState, Shard, ShardFactory, SyncPlan, SyncStrategy,
+};
+use crate::sim::RunResult;
+use crate::util::pool;
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap};
+use std::sync::{mpsc, Arc};
+
+pub use crate::sim::fleet::FleetSched;
+
+/// Total wake events the heap schedules for `periods` over `horizon_us`:
+/// each shard contributes one event per boundary of its own cadence
+/// (`period, 2·period, … < horizon`; 0 = the shard never syncs). The
+/// round barrier's equivalent is `shards × boundaries(min period)` —
+/// the gap is what retiring the barrier saves.
+pub fn planned_wakes(periods: &[u64], horizon_us: u64) -> u64 {
+    periods
+        .iter()
+        .map(|&p| {
+            if p == 0 || horizon_us == 0 {
+                0
+            } else {
+                (horizon_us - 1) / p
+            }
+        })
+        .sum()
+}
+
+/// The PR-5 gossip rotation for a uniform-period rendezvous: at the
+/// 0-based boundary `k`, participant `i` (slot order) merges participant
+/// `(i + offset) % m` where `offset = 1 + k % (m - 1)` — the offset
+/// walks 1..m-1 across boundaries, so the gossip graph reaches every
+/// pair without ever pairing a shard with itself. Must match
+/// `Fleet::run_rounds` exactly: it is the event scheduler's half of the
+/// uniform-period bit-identity pin.
+fn rotation_partners(m: usize, k: u64) -> Vec<usize> {
+    let offset = 1 + (k % (m as u64 - 1)) as usize;
+    (0..m).map(|i| (i + offset) % m).collect()
+}
+
+/// Energy-aware gossip pairing for heterogeneous-cadence rendezvous:
+/// sort the `m` participants by (stored energy, slot — the tie-break
+/// that keeps the pairing deterministic), then the i-th poorest merges
+/// the i-th richest's snapshot. With odd `m` the middle participant
+/// would pair with itself; it merges its right neighbor in energy order
+/// instead. Returns `partner[i]` = the participant index participant
+/// `i` merges.
+pub(crate) fn energy_partners(energy_uj: &[f64]) -> Vec<usize> {
+    let m = energy_uj.len();
+    debug_assert!(m >= 2);
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| {
+        energy_uj[a]
+            .partial_cmp(&energy_uj[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut partner = vec![0usize; m];
+    for (i, &poor) in order.iter().enumerate() {
+        let mut j = m - 1 - i;
+        if j == i {
+            j = (i + 1) % m;
+        }
+        partner[poor] = order[j];
+    }
+    partner
+}
+
+/// One rendezvous group's committed plan: the participants (sorted by
+/// slot) and, for gossip, who merges whom.
+struct EventPlan {
+    participants: Vec<(usize, ModelSnapshot)>,
+    strategy: SyncStrategy,
+    rx_peers: u32,
+    /// Gossip partner of `participants[i]` as an index into
+    /// `participants` (empty under all-reduce or when `m < 2`).
+    partner: Vec<usize>,
+}
+
+impl EventPlan {
+    /// The snapshots shard `slot` merges at this rendezvous.
+    fn peers_for(&self, slot: usize) -> Vec<&ModelSnapshot> {
+        let m = self.participants.len();
+        let Some(pos) = self.participants.iter().position(|&(i, _)| i == slot) else {
+            return Vec::new();
+        };
+        if m < 2 {
+            return Vec::new();
+        }
+        match self.strategy {
+            SyncStrategy::AllReduce => self
+                .participants
+                .iter()
+                .filter(|&&(i, _)| i != slot)
+                .map(|(_, s)| s)
+                .collect(),
+            SyncStrategy::Gossip => vec![&self.participants[self.partner[pos]].1],
+        }
+    }
+}
+
+/// Coordinator → worker commands. Engines are not `Send` (their compute
+/// backends are thread-pinned), so each worker owns the engines of its
+/// statically assigned slots (`slot % workers`) and the coordinator
+/// drives them through a per-worker FIFO mailbox.
+enum Cmd {
+    /// Run shard `slot` to its boundary at `t_us`, flush `skips`
+    /// quarantine-skipped boundaries, then attempt the rendezvous
+    /// (charge toward the radio price until `deadline_us`).
+    Tick {
+        slot: usize,
+        t_us: u64,
+        deadline_us: u64,
+        skips: u64,
+        rx_peers: u32,
+    },
+    /// The rendezvous plan for `slot`: commit + merge, or go solo.
+    Plan { slot: usize, plan: Arc<EventPlan> },
+    /// Run shard `slot` out to the horizon (flushing `skips`) and report
+    /// its result.
+    Drain { slot: usize, skips: u64 },
+}
+
+/// Worker → coordinator rendezvous reports.
+enum Report {
+    /// The shard charged to the price: its broadcast snapshot plus its
+    /// post-charge stored energy (for energy-aware partner selection).
+    Ready {
+        slot: usize,
+        snap: ModelSnapshot,
+        energy_uj: f64,
+    },
+    /// The shard could not afford the exchange inside its window.
+    Gated { slot: usize },
+    /// The shard is past the horizon or failed: drop it from the heap.
+    Done { slot: usize },
+    /// A worker panicked: the coordinator must stop waiting on reports.
+    Poison,
+}
+
+/// A rendezvous group being assembled at one wake time: how many ticked
+/// shards still owe a report, and what came back so far.
+#[derive(Default)]
+struct Group {
+    expect: usize,
+    ready: Vec<(usize, ModelSnapshot, f64)>,
+    gated: Vec<usize>,
+    done: Vec<usize>,
+}
+
+impl Group {
+    fn arrived(&self) -> usize {
+        self.ready.len() + self.gated.len() + self.done.len()
+    }
+}
+
+/// Coordinator-side per-shard state. The engine itself lives on the
+/// owning worker; everything the scheduler decides from (cadence,
+/// quarantine, batched skips) lives here so those decisions are
+/// single-threaded and deterministic.
+struct SlotState {
+    period_us: u64,
+    quarantine: QuarantineState,
+    /// Boundaries sat out under quarantine since the shard's last wake —
+    /// flushed into the engine's `syncs_skipped` at its next Tick/Drain
+    /// (the whole point: a quarantined shard is not woken to count).
+    pending_skips: u64,
+    /// The wake time of the in-flight Tick, if any.
+    in_flight: Option<u64>,
+    /// Past the horizon or failed: no further events.
+    done: bool,
+}
+
+/// Run a synced fleet on the event heap. Entered from [`super::fleet::
+/// Fleet::run`] when the factory's [`FleetSched`] is `Event` (the
+/// default); `plan` carries the fleet-wide strategy/horizon while each
+/// shard's cadence comes from `ShardFactory::shard_sync_period_us`.
+pub(crate) fn run_events<F: ShardFactory + ?Sized>(
+    factory: &F,
+    shards: &[Shard],
+    threads: usize,
+    plan: SyncPlan,
+) -> Result<FleetResult> {
+    let n = shards.len();
+    let horizon = plan.horizon_us;
+    let rx_peers = plan.rx_peers(n as u32);
+    let workers = pool::resolve_workers(threads, n);
+    let periods: Vec<u64> = shards
+        .iter()
+        .map(|sh| factory.shard_sync_period_us(sh.index))
+        .collect();
+    // all shards on one cadence → the rotation keeps the bit-identity
+    // pin with the round barrier; any spread → energy-aware pairing
+    let uniform = periods[0] > 0 && periods.iter().all(|&p| p == periods[0]);
+
+    let mut slots: Vec<SlotState> = periods
+        .iter()
+        .map(|&period_us| SlotState {
+            period_us,
+            quarantine: QuarantineState::new(),
+            pending_skips: 0,
+            in_flight: None,
+            done: false,
+        })
+        .collect();
+    let (rep_tx, rep_rx) = mpsc::channel::<Report>();
+    let (res_tx, res_rx) = mpsc::channel::<(usize, Result<RunResult>)>();
+    let mut results: Vec<Option<Result<RunResult>>> = (0..n).map(|_| None).collect();
+
+    std::thread::scope(|scope| {
+        let mut cmd_txs = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+            cmd_txs.push(cmd_tx);
+            let rep_tx = rep_tx.clone();
+            let poison_tx = rep_tx.clone();
+            let res_tx = res_tx.clone();
+            scope.spawn(move || {
+                let body = std::panic::AssertUnwindSafe(|| {
+                    // build this worker's engines up front; the static
+                    // slot % workers assignment means the coordinator
+                    // knows every shard's mailbox without a handshake
+                    let mut pos = vec![usize::MAX; n];
+                    let mut engines: Vec<Result<Engine>> = Vec::new();
+                    for slot in (w..n).step_by(workers) {
+                        pos[slot] = engines.len();
+                        engines.push(factory.build_shard_engine(shards[slot].index));
+                    }
+                    for cmd in cmd_rx {
+                        match cmd {
+                            Cmd::Tick {
+                                slot,
+                                t_us,
+                                deadline_us,
+                                skips,
+                                rx_peers,
+                            } => {
+                                let engine = &mut engines[pos[slot]];
+                                let report = match engine {
+                                    Ok(e) => {
+                                        for _ in 0..skips {
+                                            e.note_sync_skipped();
+                                        }
+                                        match e.run_until(t_us) {
+                                            // the horizon ends a shard's rendezvous
+                                            Ok(()) if e.now_us() < e.cfg.horizon_us => {
+                                                match e.prepare_sync(rx_peers, deadline_us) {
+                                                    Some(snap) => Report::Ready {
+                                                        slot,
+                                                        snap,
+                                                        energy_uj: e.stored_energy_uj(),
+                                                    },
+                                                    None => Report::Gated { slot },
+                                                }
+                                            }
+                                            Ok(()) => Report::Done { slot },
+                                            Err(err) => {
+                                                *engine = Err(err);
+                                                Report::Done { slot }
+                                            }
+                                        }
+                                    }
+                                    Err(_) => Report::Done { slot },
+                                };
+                                if rep_tx.send(report).is_err() {
+                                    return;
+                                }
+                            }
+                            Cmd::Plan { slot, plan } => {
+                                let engine = &mut engines[pos[slot]];
+                                if let Ok(e) = engine {
+                                    if plan.participants.len() >= 2 {
+                                        // pay the fleet-quoted price (the radio
+                                        // budgets a full listen window regardless
+                                        // of who transmits), then merge the peers
+                                        e.commit_sync(plan.rx_peers);
+                                        let peers = plan.peers_for(slot);
+                                        if let Err(err) = e.apply_sync(&peers) {
+                                            *engine = Err(err);
+                                        }
+                                    } else {
+                                        // nobody else made this rendezvous:
+                                        // skip the exchange for free
+                                        e.solo_sync();
+                                    }
+                                }
+                            }
+                            Cmd::Drain { slot, skips } => {
+                                let engine = std::mem::replace(
+                                    &mut engines[pos[slot]],
+                                    Err(Error::Config("shard already drained".into())),
+                                );
+                                let out = engine
+                                    .and_then(|mut e| {
+                                        for _ in 0..skips {
+                                            e.note_sync_skipped();
+                                        }
+                                        let horizon = e.cfg.horizon_us;
+                                        e.run_until(horizon)?;
+                                        e.finish()
+                                    })
+                                    .map_err(|e| shard_error(shards[slot].index, e));
+                                if res_tx.send((slot, out)).is_err() {
+                                    return;
+                                }
+                            }
+                        }
+                    }
+                });
+                if std::panic::catch_unwind(body).is_err() {
+                    // a worker bug must not hang the coordinator: poison
+                    // it so it stops waiting (the panic message already
+                    // went to stderr via the default hook); the lost
+                    // worker's shards surface as worker-exited errors
+                    let _ = poison_tx.send(Report::Poison);
+                }
+            });
+        }
+        drop(res_tx);
+
+        // --- the event loop (coordinator) ---
+        let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+        for (slot, state) in slots.iter().enumerate() {
+            if state.period_us > 0 && state.period_us < horizon {
+                heap.push(Reverse((state.period_us, slot)));
+            }
+        }
+        let mut groups: BTreeMap<u64, Group> = BTreeMap::new();
+        let mut in_flight = 0usize;
+        // the dispatch gate: a group at `t` may only be dispatched once
+        // no in-flight shard could still push an event at or before `t`
+        // (its next boundary is its wake time + its period), so group
+        // membership never depends on worker timing
+        let min_next_push = |slots: &[SlotState]| {
+            slots
+                .iter()
+                .filter_map(|s| s.in_flight.map(|t| t + s.period_us))
+                .min()
+                .unwrap_or(u64::MAX)
+        };
+        'events: loop {
+            // dispatch every event the gate allows, in (time, slot) order
+            while let Some(&Reverse((t, slot))) = heap.peek() {
+                if in_flight > 0 && t >= min_next_push(&slots) {
+                    break;
+                }
+                heap.pop();
+                let state = &mut slots[slot];
+                if state.quarantine.sits_out(t) {
+                    // quarantine as event re-scheduling: push the wake
+                    // out one period without waking the shard at all
+                    state.pending_skips += 1;
+                    let next = t + state.period_us;
+                    if next < horizon {
+                        heap.push(Reverse((next, slot)));
+                    }
+                    continue;
+                }
+                let deadline_us = (t + state.period_us).min(horizon);
+                let skips = std::mem::take(&mut state.pending_skips);
+                state.in_flight = Some(t);
+                in_flight += 1;
+                groups.entry(t).or_default().expect += 1;
+                if cmd_txs[slot % workers]
+                    .send(Cmd::Tick {
+                        slot,
+                        t_us: t,
+                        deadline_us,
+                        skips,
+                        rx_peers,
+                    })
+                    .is_err()
+                {
+                    break 'events;
+                }
+            }
+            if in_flight == 0 {
+                break; // heap drained: all rendezvous played out
+            }
+            let report = match rep_rx.recv() {
+                Ok(r) => r,
+                Err(_) => break,
+            };
+            let slot = match &report {
+                Report::Ready { slot, .. }
+                | Report::Gated { slot }
+                | Report::Done { slot } => *slot,
+                Report::Poison => break,
+            };
+            let t = slots[slot].in_flight.expect("report from an idle shard");
+            let g = groups.get_mut(&t).expect("group of an in-flight shard");
+            match report {
+                Report::Ready {
+                    slot,
+                    snap,
+                    energy_uj,
+                } => g.ready.push((slot, snap, energy_uj)),
+                Report::Gated { slot } => g.gated.push(slot),
+                Report::Done { slot } => g.done.push(slot),
+                Report::Poison => unreachable!(),
+            }
+            if g.arrived() < g.expect {
+                continue;
+            }
+            // the group is complete: settle quarantine, pick partners,
+            // broadcast the plan, reschedule every member
+            let mut group = groups.remove(&t).expect("completed group");
+            group.ready.sort_by_key(|&(slot, ..)| slot);
+            for &slot in &group.gated {
+                let period = slots[slot].period_us;
+                slots[slot].quarantine.on_gated(t, period);
+            }
+            for &(slot, ..) in &group.ready {
+                slots[slot].quarantine.on_made_rendezvous();
+            }
+            for &slot in &group.done {
+                slots[slot].done = true;
+            }
+            let m = group.ready.len();
+            let partner = if m >= 2 && plan.strategy == SyncStrategy::Gossip {
+                if uniform {
+                    // 0-based boundary index of this uniform rendezvous —
+                    // exactly the round barrier's round counter
+                    rotation_partners(m, t / periods[0] - 1)
+                } else {
+                    let energies: Vec<f64> = group.ready.iter().map(|&(.., e)| e).collect();
+                    energy_partners(&energies)
+                }
+            } else {
+                Vec::new()
+            };
+            let ready_slots: Vec<usize> = group.ready.iter().map(|&(slot, ..)| slot).collect();
+            let event_plan = Arc::new(EventPlan {
+                participants: group
+                    .ready
+                    .into_iter()
+                    .map(|(slot, snap, _)| (slot, snap))
+                    .collect(),
+                strategy: plan.strategy,
+                rx_peers,
+                partner,
+            });
+            for &slot in &ready_slots {
+                if cmd_txs[slot % workers]
+                    .send(Cmd::Plan {
+                        slot,
+                        plan: event_plan.clone(),
+                    })
+                    .is_err()
+                {
+                    break 'events;
+                }
+            }
+            for member in ready_slots
+                .into_iter()
+                .chain(group.gated)
+                .chain(group.done)
+            {
+                let state = &mut slots[member];
+                state.in_flight = None;
+                in_flight -= 1;
+                if !state.done {
+                    let next = t + state.period_us;
+                    if next < horizon {
+                        heap.push(Reverse((next, member)));
+                    }
+                }
+            }
+        }
+
+        // drain: run every shard out to the horizon and collect, with
+        // any still-pending quarantine skips flushed on the way
+        for (slot, state) in slots.iter_mut().enumerate() {
+            let skips = std::mem::take(&mut state.pending_skips);
+            let _ = cmd_txs[slot % workers].send(Cmd::Drain { slot, skips });
+        }
+        drop(cmd_txs);
+        for (slot, r) in res_rx {
+            results[slot] = Some(r);
+        }
+    });
+    let shards: Result<Vec<RunResult>> = results
+        .into_iter()
+        .enumerate()
+        .map(|(i, r)| {
+            r.unwrap_or_else(|| {
+                Err(Error::Config(format!(
+                    "fleet shard {i}: worker exited without reporting a result"
+                )))
+            })
+        })
+        .collect();
+    Ok(FleetResult::aggregate(shards?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::fleet::testfleet::ConstFleet;
+    use crate::sim::fleet::Fleet;
+
+    /// ConstFleet plus a sync plan, a scheduler choice, and optional
+    /// per-shard cadences — the event-scheduler test rig.
+    struct EventFleet {
+        inner: ConstFleet,
+        plan: SyncPlan,
+        sched: FleetSched,
+        /// Per-shard periods (empty = the plan's uniform period).
+        periods: Vec<u64>,
+    }
+
+    impl EventFleet {
+        fn uniform(n: u32, period_us: u64, strategy: SyncStrategy, sched: FleetSched) -> Self {
+            EventFleet {
+                inner: ConstFleet { n },
+                plan: SyncPlan {
+                    period_us,
+                    strategy,
+                    horizon_us: 900_000_000, // ConstFleet's horizon
+                },
+                sched,
+                periods: Vec::new(),
+            }
+        }
+    }
+
+    impl ShardFactory for EventFleet {
+        fn shard_count(&self) -> u32 {
+            self.inner.shard_count()
+        }
+        fn shard(&self, index: u32) -> Result<Shard> {
+            self.inner.shard(index)
+        }
+        fn build_shard_engine(&self, index: u32) -> Result<Engine> {
+            self.inner.build_shard_engine(index)
+        }
+        fn sync_plan(&self) -> Option<SyncPlan> {
+            Some(self.plan)
+        }
+        fn shard_sync_period_us(&self, index: u32) -> u64 {
+            self.periods
+                .get(index as usize)
+                .copied()
+                .unwrap_or(self.plan.period_us)
+        }
+        fn fleet_sched(&self) -> FleetSched {
+            self.sched
+        }
+    }
+
+    fn fingerprint(f: &FleetResult) -> String {
+        f.to_json().to_string()
+    }
+
+    #[test]
+    fn uniform_period_event_schedule_is_bit_identical_to_rounds() {
+        for strategy in [SyncStrategy::Gossip, SyncStrategy::AllReduce] {
+            let rounds = EventFleet::uniform(4, 300_000_000, strategy, FleetSched::Rounds);
+            let golden = Fleet::new(&rounds).unwrap().run(0).unwrap();
+            assert!(
+                golden.shards.iter().any(|r| r.syncs_done > 0),
+                "{strategy:?}: barrier reference never exchanged"
+            );
+            let event = EventFleet::uniform(4, 300_000_000, strategy, FleetSched::Event);
+            let fleet = Fleet::new(&event).unwrap();
+            for threads in [1, 2, 0] {
+                assert_eq!(
+                    fingerprint(&fleet.run(threads).unwrap()),
+                    fingerprint(&golden),
+                    "{strategy:?}: event scheduler diverged from the round \
+                     barrier at threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn heterogeneous_cadences_attend_their_own_boundaries_only() {
+        // periods 150 s / 300 s / 450 s over a 900 s horizon: shard 0
+        // attends 5 boundaries, shard 1 two, shard 2 one — every attended
+        // boundary ends as exactly one of done/skipped/solo, and no
+        // fleet-wide barrier means the counts differ per shard
+        let mut factory =
+            EventFleet::uniform(3, 300_000_000, SyncStrategy::Gossip, FleetSched::Event);
+        factory.periods = vec![150_000_000, 300_000_000, 450_000_000];
+        let fleet = Fleet::new(&factory).unwrap();
+        let fr = fleet.run(1).unwrap();
+        let attended: Vec<u64> = fr
+            .shards
+            .iter()
+            .map(|r| r.syncs_done + r.syncs_skipped + r.syncs_solo)
+            .collect();
+        assert_eq!(attended, vec![5, 2, 1], "per-shard rendezvous counts");
+        // the heap schedules exactly those wakes
+        assert_eq!(planned_wakes(&factory.periods, 900_000_000), 8);
+        // deterministic across thread counts
+        for threads in [2, 0] {
+            assert_eq!(
+                fingerprint(&fr),
+                fingerprint(&fleet.run(threads).unwrap()),
+                "heterogeneous fleet diverged at threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn shared_boundaries_of_mixed_cadences_still_exchange() {
+        // 150 s and 300 s shards meet at 300 s multiples: the faster
+        // shard's solo boundaries and the shared pairwise ones add up
+        let mut factory =
+            EventFleet::uniform(2, 300_000_000, SyncStrategy::Gossip, FleetSched::Event);
+        factory.periods = vec![150_000_000, 300_000_000];
+        let fr = Fleet::new(&factory).unwrap().run(0).unwrap();
+        let fast = &fr.shards[0];
+        let slow = &fr.shards[1];
+        assert_eq!(fast.syncs_done + fast.syncs_skipped + fast.syncs_solo, 5);
+        assert_eq!(slow.syncs_done + slow.syncs_skipped + slow.syncs_solo, 2);
+        // exchanges can only happen at the two shared boundaries
+        assert!(fast.syncs_done <= 2 && slow.syncs_done <= 2);
+        assert!(
+            fr.shards.iter().any(|r| r.syncs_done > 0),
+            "constant-power shards never afforded a shared rendezvous"
+        );
+    }
+
+    #[test]
+    fn energy_pairing_is_deterministic_and_pairs_poor_with_rich() {
+        // even count: strict poorest<->richest pairing
+        let partner = energy_partners(&[50.0, 10.0, 40.0, 20.0]);
+        // energy order: 1 (10) < 3 (20) < 2 (40) < 0 (50)
+        assert_eq!(partner, vec![1, 0, 3, 2]);
+        // ties break by participant index: 1 and 2 tie at 10, order 1 < 2
+        let partner = energy_partners(&[30.0, 10.0, 10.0]);
+        // order: 1, 2, 0; middle (2) pairs right in energy order (0)
+        assert_eq!(partner[1], 0, "poorest merges richest");
+        assert_eq!(partner[2], 0, "odd middle merges its right neighbor");
+        assert_eq!(partner[0], 1, "richest merges poorest");
+        // never self-paired
+        for (i, &p) in partner.iter().enumerate() {
+            assert_ne!(i, p);
+        }
+    }
+
+    #[test]
+    fn rotation_partners_match_the_round_barrier_formula() {
+        // m = 4: offsets walk 1, 2, 3, 1, ... across boundaries
+        assert_eq!(rotation_partners(4, 0), vec![1, 2, 3, 0]);
+        assert_eq!(rotation_partners(4, 1), vec![2, 3, 0, 1]);
+        assert_eq!(rotation_partners(4, 2), vec![3, 0, 1, 2]);
+        assert_eq!(rotation_partners(4, 3), vec![1, 2, 3, 0]);
+        // m = 2 always pairs the two participants
+        assert_eq!(rotation_partners(2, 7), vec![1, 0]);
+    }
+
+    #[test]
+    fn planned_wakes_counts_strict_interior_boundaries() {
+        assert_eq!(planned_wakes(&[300], 900), 2); // 300, 600
+        assert_eq!(planned_wakes(&[450], 900), 1); // 450 (900 excluded)
+        assert_eq!(planned_wakes(&[900], 900), 0);
+        assert_eq!(planned_wakes(&[0], 900), 0); // opted out
+        assert_eq!(planned_wakes(&[300, 450, 0], 900), 3);
+    }
+}

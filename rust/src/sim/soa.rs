@@ -28,7 +28,9 @@
 //! each shard's stats in strict index order *while* workers run, then
 //! drops them — no per-shard `Engine` or `RunResult` survives the fold.
 //! The streaming path is for isolated fleets; a federated sync plan
-//! needs resident engines at round barriers and is rejected up front.
+//! needs resident engines at its rendezvous (whether the event heap's
+//! pairwise boundaries or the round barrier, [`crate::sim::sched`] vs
+//! [`super::fleet::Fleet::run_rounds`]) and is rejected up front.
 
 use crate::backend::native::NativeBackend;
 use crate::error::{Error, Result};
@@ -145,8 +147,8 @@ pub fn run_streaming<F: ShardFactory + ?Sized>(
     if let Some(plan) = factory.sync_plan() {
         if n > 1 && !plan.boundaries().is_empty() {
             return Err(Error::Config(
-                "streaming fleet: federated sync needs resident engines — \
-                 use the per-shard path (stream=false)"
+                "streaming fleet: federated sync needs resident engines \
+                 at its rendezvous — use the per-shard path (stream=false)"
                     .into(),
             ));
         }

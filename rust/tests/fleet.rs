@@ -6,9 +6,10 @@
 
 use ilearn::energy::harvester::Trace;
 use ilearn::scenario::{
-    preset, FleetSpec, HarvesterSpec, ScenarioSpec, SweepRunner, SweepSpec, SyncSpec,
+    preset, FleetSpec, HarvesterSpec, ScenarioSpec, ShardOverride, SweepRunner, SweepSpec,
+    SyncSpec,
 };
-use ilearn::sim::{FleetResult, RunResult, SyncStrategy};
+use ilearn::sim::{FleetResult, FleetSched, RunResult, SyncStrategy};
 
 const H: u64 = 3_600_000_000;
 
@@ -27,6 +28,7 @@ fn with_fleet(mut spec: ScenarioSpec, shards: u32, jitter_us: u64) -> ScenarioSp
         seed_stride: 1,
         overrides: vec![],
         sync: None,
+        sched: None,
         stream: None,
     });
     spec
@@ -232,7 +234,7 @@ fn heterogeneous_fleet_mixes_harvesters_per_shard() {
     // recorded trace slice instead
     let trace = Trace::parse_csv("0,0.0\n300000000,0.012\n").unwrap();
     let mut spec = with_fleet(preset("vibration", 5, 2 * H).unwrap(), 3, 0);
-    spec.fleet.as_mut().unwrap().overrides = vec![(
+    spec.fleet.as_mut().unwrap().overrides = vec![ShardOverride::harvester(
         1,
         HarvesterSpec::Trace {
             points: trace,
@@ -285,7 +287,8 @@ fn starved_shard_skips_sync_rounds_energy_gating_observable() {
     let mut spec = with_fleet(preset("vibration", 5, 3 * H).unwrap(), 3, 0);
     {
         let fleet = spec.fleet.as_mut().unwrap();
-        fleet.overrides = vec![(1, HarvesterSpec::Constant { power_w: 0.0 })];
+        fleet.overrides =
+            vec![ShardOverride::harvester(1, HarvesterSpec::Constant { power_w: 0.0 })];
         fleet.sync = Some(hourly_sync(SyncStrategy::Gossip));
     }
     let fr = spec.run_fleet(0).unwrap();
@@ -298,6 +301,82 @@ fn starved_shard_skips_sync_rounds_energy_gating_observable() {
     assert!(fr.rollup.syncs_skipped.total >= starved.syncs_skipped as f64);
     // healthy shards completed exchanges in the same rounds
     assert!(fr.shards[0].syncs_done + fr.shards[2].syncs_done > 0);
+}
+
+#[test]
+fn event_scheduler_matches_the_round_barrier_on_all_presets() {
+    // acceptance: under one uniform sync period the event heap replays
+    // the round barrier bit for bit — same rendezvous instants, same
+    // rotation partners, same radio prices — on every paper preset, and
+    // the event side is itself deterministic for threads {1, 2, 0}
+    for name in ["air_quality", "presence", "vibration"] {
+        let mut spec = with_fleet(preset(name, 7, 2 * H).unwrap(), 3, 1_800_000_000);
+        spec.fleet.as_mut().unwrap().sync = Some(hourly_sync(SyncStrategy::Gossip));
+        spec.fleet.as_mut().unwrap().sched = Some(FleetSched::Rounds);
+        let rounds = spec.run_fleet(0).unwrap();
+        spec.fleet.as_mut().unwrap().sched = Some(FleetSched::Event);
+        for threads in [1, 2, 0] {
+            let event = spec.run_fleet(threads).unwrap();
+            assert_eq!(
+                fleet_fp(&rounds),
+                fleet_fp(&event),
+                "{name}: event scheduler diverged from the round barrier (threads {threads})"
+            );
+        }
+        // an unset `sched` knob defaults to the event scheduler
+        spec.fleet.as_mut().unwrap().sched = None;
+        assert_eq!(
+            fleet_fp(&rounds),
+            fleet_fp(&spec.run_fleet(0).unwrap()),
+            "{name}: default sched is not the event scheduler"
+        );
+    }
+}
+
+#[test]
+fn heterogeneous_period_fleet_attends_per_shard_boundaries_only() {
+    // periods 30/60/90 min over a 2 h horizon: shard 0 wakes at its own
+    // three boundaries, shards 1 and 2 only at theirs — there is no
+    // fleet-wide barrier to drag them to the others'. Every attended
+    // boundary is accounted exactly once (done, skipped or solo), and
+    // the whole fleet is bit-identical across thread counts.
+    let mut spec = with_fleet(preset("vibration", 7, 2 * H).unwrap(), 3, 0);
+    {
+        let fleet = spec.fleet.as_mut().unwrap();
+        fleet.sync = Some(SyncSpec {
+            period_us: 1_800_000_000,
+            strategy: SyncStrategy::Gossip,
+            radio: None,
+        });
+        fleet.overrides = vec![
+            ShardOverride::sync_period(1, 3_600_000_000),
+            ShardOverride::sync_period(2, 5_400_000_000),
+        ];
+    }
+    let fr = spec.run_fleet(1).unwrap();
+    // strict-interior boundary counts: 30 min → {30, 60, 90}, 60 min →
+    // {60}, 90 min → {90} (the 120 min horizon itself is never a wake)
+    let attempts: Vec<u64> = fr
+        .shards
+        .iter()
+        .map(|r| r.syncs_done + r.syncs_skipped + r.syncs_solo)
+        .collect();
+    assert_eq!(attempts, vec![3, 1, 1], "per-shard rendezvous attendance");
+    // shard 0's 30 min boundary has no partner: whenever it can afford
+    // the radio it rides solo, never a phantom exchange
+    assert!(fr.shards[1].syncs_done <= 1 && fr.shards[2].syncs_done <= 1);
+    for threads in [2, 0] {
+        assert_eq!(
+            fleet_fp(&fr),
+            fleet_fp(&spec.run_fleet(threads).unwrap()),
+            "threads {threads}: heterogeneous-period fleet diverged"
+        );
+    }
+    // the rounds barrier cannot express per-shard cadences: named
+    // together they are rejected up front
+    spec.fleet.as_mut().unwrap().sched = Some(FleetSched::Rounds);
+    let err = spec.run_fleet(1).unwrap_err().to_string();
+    assert!(err.contains("event scheduler"), "{err}");
 }
 
 #[test]
