@@ -1,0 +1,172 @@
+"""Executable Python mirror of the EWMA harvest forecaster's accuracy
+against the exact piecewise view, over the recorded preset traces.
+
+Mirror of ``rust/src/energy/harvester.rs::{Ewma, piecewise_mean_w}`` and
+the EWMA unit tests there: replay each ``examples/traces/*.csv`` at the
+test's 30 s sampling cadence, run the identical rational-decay recurrence
+(``w = dt / (dt + tau)`` — no ``exp``, so Python's f64 arithmetic
+reproduces Rust's bit for bit), and score the estimate against the exact
+piecewise-constant mean of the *next* 10 simulated minutes. The error
+rows are exact and deterministic — unlike wall time they do not depend on
+the box the bench runs on — so this mirror is the source of the committed
+``BENCH_forecast.json`` accuracy rows in environments without a Rust
+toolchain (the PR-session sandbox).
+
+Run:
+
+    python3 python/tools/forecast_mirror.py [--emit-json]
+
+``--emit-json`` writes BENCH_forecast.json at the repo root with the
+exact accuracy rows and ``null`` simulation/wall-time fields;
+``cargo bench --bench forecast`` (on a toolchain-equipped box) overwrites
+it with the same accuracy rows plus the starved-solar elision counts and
+measured timings, and CI's ``--smoke`` mode re-asserts the invariants
+every push.
+
+Keep this file in sync with harvester.rs / benches/forecast.rs — it is a
+mirror, not a spec.
+"""
+
+import json
+import sys
+import pathlib
+
+# rust/src/energy/harvester.rs::Forecast::EWMA_TAU_US
+TAU_US = 120_000_000
+# the EWMA unit tests' replay cadence and scoring lookahead
+STEP_US = 30_000_000
+LOOKAHEAD_US = 600_000_000
+
+ROOT = pathlib.Path(__file__).resolve().parents[2]
+# per-trace mean-relative-error ceilings, asserted identically by the
+# harvester.rs EWMA unit tests (measured: 0.6562 / 0.1415 / 0.0720)
+TRACES = {"kinetic_walk": 0.75, "rf_office": 0.20, "solar_day": 0.12}
+
+
+def load_trace(name):
+    """Trace::parse_csv: `t_us,power_w` rows, comments and blanks skipped."""
+    points = []
+    for raw in (ROOT / "examples" / "traces" / f"{name}.csv").read_text().splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        t, p = line.split(",")
+        points.append((int(t.strip()), float(p.strip())))
+    assert points, name
+    return points
+
+
+def power_w(points, t_us):
+    """Trace::power_w: last point at or before t (0 before the first)."""
+    p = 0.0
+    for start, pw in points:
+        if t_us >= start:
+            p = pw
+        else:
+            break
+    return p
+
+
+def piecewise_mean_w(points, from_us, to_us):
+    """piecewise_mean_w over a Trace: exact piecewise-constant mean."""
+    if to_us <= from_us:
+        return power_w(points, from_us)
+    bounds = [t for t, _ in points if from_us < t < to_us]
+    acc = 0.0
+    t = from_us
+    for b in bounds + [to_us]:
+        acc += power_w(points, t) * (b - t)
+        t = b
+    return acc / (to_us - from_us)
+
+
+class Ewma:
+    """harvester.rs::Ewma — rational decay, first sample primes."""
+
+    def __init__(self, tau_us=TAU_US):
+        self.tau_us = tau_us
+        self.est_w = 0.0
+        self.last_us = 0
+        self.primed = False
+
+    def observe(self, t_us, p_w):
+        if not self.primed:
+            self.est_w, self.last_us, self.primed = p_w, t_us, True
+            return
+        dt = t_us - self.last_us
+        if dt <= 0:
+            return
+        w = dt / (dt + self.tau_us)
+        self.est_w += (p_w - self.est_w) * w
+        self.last_us = t_us
+
+    def mean_power_w(self):
+        return self.est_w
+
+
+def score(points):
+    """Replay at STEP_US; score each estimate against the exact mean of
+    the next LOOKAHEAD_US. Returns (windows, mean_rel_err) where the
+    error is normalized by the mean future power (the trace's scale)."""
+    span = points[-1][0]
+    ewma = Ewma()
+    abs_err = 0.0
+    base = 0.0
+    windows = 0
+    t = points[0][0]
+    while t + LOOKAHEAD_US <= span:
+        ewma.observe(t, power_w(points, t))
+        future = piecewise_mean_w(points, t, t + LOOKAHEAD_US)
+        abs_err += abs(ewma.mean_power_w() - future)
+        base += future
+        windows += 1
+        t += STEP_US
+    assert windows > 0 and base > 0.0
+    return windows, abs_err / base
+
+
+def main():
+    rows = {}
+    for name, bound in TRACES.items():
+        points = load_trace(name)
+        windows, rel = score(points)
+        rows[name] = (windows, rel)
+        print(f"{name}: {windows} windows, mean relative error {rel:.4f} (bound {bound})")
+        # same ceilings as the harvester.rs EWMA unit tests; rel >= 1.0
+        # would mean the estimator is no better than predicting zero
+        assert rel < bound, f"{name}: EWMA relative error {rel} >= {bound}"
+
+    if "--emit-json" in sys.argv:
+        doc = {
+            "bench": "forecast",
+            "source": "python/tools/forecast_mirror.py (exact EWMA accuracy rows; "
+            "elision/wall-time fields pending `cargo bench --bench forecast` "
+            "on a toolchain-equipped box)",
+            "ewma_tau_us": TAU_US,
+            "ewma_sample_step_us": STEP_US,
+            "ewma_lookahead_us": LOOKAHEAD_US,
+        }
+        for name, (windows, rel) in rows.items():
+            doc[f"{name}_windows"] = windows
+            doc[f"{name}_mean_rel_err"] = round(rel, 4)
+            doc[f"{name}_rel_err_bound"] = TRACES[name]
+        doc.update(
+            {
+                "starved_solar_default_ckpt_bytes": None,
+                "starved_solar_forecast_ckpt_bytes": None,
+                "starved_solar_ckpt_bytes_saved_pct": None,
+                "starved_solar_checkpoints_taken": None,
+                "starved_solar_checkpoints_elided": None,
+                "starved_solar_accuracy_delta": None,
+                "fleet_learns_deferred_per_shard_day": None,
+                "default_ms": None,
+                "forecast_ms": None,
+            }
+        )
+        out = ROOT / "BENCH_forecast.json"
+        out.write_text(json.dumps(doc, indent=1) + "\n")
+        print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

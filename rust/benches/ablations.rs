@@ -55,6 +55,7 @@ fn main() {
             window_learns: 1,
             window_infers: 1,
             window_cycle: 2,
+            forecast_uj: None,
         };
         let m = bench("d", 60, || {
             black_box(planner.next_action(&pending, &ctx, &costs));

@@ -86,6 +86,7 @@ fn main() {
             window_learns: 1,
             window_infers: 2,
             window_cycle: 3,
+            forecast_uj: None,
         };
         println!(
             "{}",

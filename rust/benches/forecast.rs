@@ -1,0 +1,293 @@
+//! Forecast-aware planning benchmark: checkpoint elision and sync energy
+//! reserves against the default policy. Tracked over time through
+//! `BENCH_forecast.json` (written at the repo root when run from `rust/`).
+//!
+//!     cargo bench --bench forecast            # full comparison + JSON
+//!     cargo bench --bench forecast -- --smoke # CI: elision + accuracy gates
+//!
+//! Three claims are pinned, mirroring `python/tools/forecast_mirror.py`
+//! (same EWMA cadence, lookahead and per-trace error ceilings — keep the
+//! two in sync):
+//!
+//! 1. The EWMA forecaster tracks all three recorded preset traces within
+//!    the mirror's relative-error bounds.
+//! 2. On a starved 24 h solar world, forecast mode elides enough probe-grid
+//!    and post-learn checkpoints to cut checkpoint NVM traffic by >= 30%,
+//!    while staying within kernel-equivalence accuracy tolerance of the
+//!    default policy (elision never touches what the run computes, only
+//!    what it redundantly persists; the remaining drift is the
+//!    harvest-sized planning budget).
+//! 3. In a synced starved-solar fleet with an expensive radio, the sync
+//!    reserve defers at least one pre-rendezvous learn per shard-day so
+//!    `prepare_sync` stops burning a learn it then skips.
+
+use ilearn::energy::harvester::{piecewise_mean_w, Ewma, Forecast, Trace};
+use ilearn::energy::Harvester;
+use ilearn::scenario::{
+    preset, FleetSpec, PolicySpec, RadioSpec, ScenarioSpec, SyncSpec,
+};
+use ilearn::sim::{RunResult, SyncStrategy};
+use ilearn::util::bench::time_once;
+use ilearn::util::json::Json;
+use std::time::Instant;
+
+const H: u64 = 3_600_000_000;
+const MIN30: u64 = 1_800_000_000;
+
+/// Mirror cadence: one observation every 30 s, scored against the exact
+/// piecewise mean over the next 10 min.
+const STEP_US: u64 = 30_000_000;
+const LOOKAHEAD_US: u64 = 600_000_000;
+
+/// Per-trace (name, relative-error ceiling) — forecast_mirror.py's rows,
+/// with slack above its measured 0.6562 / 0.1415 / 0.0720.
+const TRACES: [(&str, f64); 3] = [
+    ("kinetic_walk", 0.75),
+    ("rf_office", 0.20),
+    ("solar_day", 0.12),
+];
+
+/// |a - b| within `rel` of the larger, or within `abs` absolutely (the
+/// kernel-equivalence shape from `tests/kernel_equivalence.rs`).
+fn close(a: f64, b: f64, rel: f64, abs: f64) -> bool {
+    (a - b).abs() <= (rel * a.abs().max(b.abs())).max(abs)
+}
+
+/// Replay a recorded trace through the EWMA at the mirror cadence; returns
+/// (scored windows, mean relative error vs the exact piecewise future).
+fn ewma_replay(trace: &Trace) -> (usize, f64) {
+    let span = trace.points.last().expect("non-empty trace").0;
+    let mut ewma = Ewma::new(Forecast::EWMA_TAU_US);
+    let (mut windows, mut abs_err, mut base) = (0usize, 0.0, 0.0);
+    let mut t = trace.points[0].0;
+    while t + LOOKAHEAD_US <= span {
+        ewma.observe(t, trace.power_w(t));
+        let future = piecewise_mean_w(trace, t, t + LOOKAHEAD_US);
+        abs_err += (ewma.mean_power_w() - future).abs();
+        base += future;
+        windows += 1;
+        t += STEP_US;
+    }
+    assert!(base > 0.0, "trace integrates to zero power");
+    (windows, abs_err / base)
+}
+
+/// The starved 24 h solar world: the air-quality preset (solar k-NN) with
+/// its 0.2 F reservoir cut to 10 mF — the full usable window (~19 mJ)
+/// covers barely one learn path, so every wake is checkpoint-adjacent —
+/// and a 5-minute probe grid so run-state saves dominate NVM traffic.
+fn starved_solar(horizon_us: u64, forecast: bool) -> ScenarioSpec {
+    let mut spec = preset("air_quality", 42, horizon_us).expect("preset");
+    spec.name = "starved_solar".into();
+    spec.capacitor.c_f = 0.010;
+    spec.eval_period_us = 300_000_000;
+    if forecast {
+        spec.policy = Some(PolicySpec { forecast: true });
+    }
+    spec
+}
+
+/// A 3-shard synced starved-solar fleet under an expensive radio (28 mJ
+/// per gossip exchange against a ~96 mJ usable window): around dusk the
+/// refill forecast to the next boundary goes to zero, so the reserve must
+/// bind while the free budget still covers a learn.
+fn starved_fleet(forecast: bool) -> ScenarioSpec {
+    let mut spec = starved_solar(24 * H, forecast);
+    spec.capacitor.c_f = 0.050;
+    spec.fleet = Some(FleetSpec {
+        shards: 3,
+        phase_jitter_us: 30_000_000,
+        seed_stride: 1,
+        overrides: vec![],
+        sync: Some(SyncSpec {
+            period_us: MIN30,
+            strategy: SyncStrategy::Gossip,
+            radio: Some(RadioSpec {
+                tx_uj: 20_000.0,
+                tx_us: 85_000,
+                rx_uj: 8_000.0,
+                rx_us: 85_000,
+            }),
+        }),
+        sched: None,
+        stream: None,
+    });
+    spec
+}
+
+fn run(spec: &ScenarioSpec) -> RunResult {
+    spec.build_engine().expect("engine").run().expect("run")
+}
+
+/// Gate the starved-solar pair: elision fires, the final save persists,
+/// >= 30% of checkpoint NVM bytes disappear, and accuracy stays within
+/// kernel-equivalence tolerance. Returns (default, forecast).
+fn assert_starved_pair(horizon_us: u64) -> (RunResult, RunResult) {
+    let default = run(&starved_solar(horizon_us, false));
+    let forecast = run(&starved_solar(horizon_us, true));
+    assert_eq!(
+        default.checkpoints_taken + default.checkpoints_elided,
+        0,
+        "default policy must not report forecast counters"
+    );
+    assert!(default.ckpt_nvm_bytes > 0, "default run never checkpointed");
+    assert!(
+        forecast.checkpoints_elided > 0,
+        "forecast mode never elided a checkpoint"
+    );
+    assert!(
+        forecast.checkpoints_taken >= 1,
+        "the final horizon save must always persist"
+    );
+    assert!(
+        forecast.ckpt_nvm_bytes as f64 <= 0.7 * default.ckpt_nvm_bytes as f64,
+        "elision saved too little NVM traffic: {} vs {} bytes",
+        forecast.ckpt_nvm_bytes,
+        default.ckpt_nvm_bytes
+    );
+    assert!(
+        close(forecast.mean_accuracy(3), default.mean_accuracy(3), 0.15, 0.05)
+            && close(forecast.final_accuracy(), default.final_accuracy(), 0.15, 0.05),
+        "forecast mode drifted out of accuracy tolerance: mean {:.3} vs {:.3}, \
+         final {:.3} vs {:.3}",
+        forecast.mean_accuracy(3),
+        default.mean_accuracy(3),
+        forecast.final_accuracy(),
+        default.final_accuracy()
+    );
+    (default, forecast)
+}
+
+fn smoke() {
+    let t0 = Instant::now();
+    // 1. the EWMA tracks every recorded preset trace within the mirror's
+    //    ceilings (>= 1.0 would mean no better than predicting zero)
+    for (name, bound) in TRACES {
+        let trace =
+            Trace::from_csv(&format!("../examples/traces/{name}.csv")).expect("trace");
+        let (_, rel) = ewma_replay(&trace);
+        assert!(rel < bound, "{name}: EWMA relative error {rel} >= {bound}");
+    }
+    // 2. starved solar: elision + byte reduction + accuracy tolerance
+    let (_, forecast) = assert_starved_pair(24 * H);
+    let doc = forecast.to_json().to_string();
+    assert!(doc.contains("\"checkpoints_elided\""), "{doc}");
+    // 3. sync reserves: at least one deferred pre-rendezvous learn per
+    //    synced shard-day, and the held-back price keeps shards attending
+    let fleet = starved_fleet(true).run_fleet(0).expect("fleet");
+    let deferred: u64 = fleet.shards.iter().map(|r| r.learns_deferred).sum();
+    let shard_days = fleet.shards.len() as u64; // 24 h horizon = 1 day each
+    assert!(
+        deferred >= shard_days,
+        "sync reserve never bound: {deferred} deferrals over {shard_days} shard-days"
+    );
+    assert!(
+        fleet.rollup.syncs_done.total > 0.0,
+        "reserved shards never exchanged"
+    );
+    println!(
+        "forecast --smoke: EWMA bounds + elision >=30% + reserve deferrals ok ({:.1}s)",
+        t0.elapsed().as_secs_f64()
+    );
+}
+
+fn full() {
+    let mut kvs = vec![
+        ("bench", Json::Str("forecast".into())),
+        ("source", Json::Str("cargo bench --bench forecast".into())),
+        ("ewma_tau_us", Json::Num(Forecast::EWMA_TAU_US as f64)),
+        ("ewma_sample_step_us", Json::Num(STEP_US as f64)),
+        ("ewma_lookahead_us", Json::Num(LOOKAHEAD_US as f64)),
+    ];
+    for (name, bound) in TRACES {
+        let trace =
+            Trace::from_csv(&format!("../examples/traces/{name}.csv")).expect("trace");
+        let (windows, rel) = ewma_replay(&trace);
+        println!("{name}: {windows} windows, mean relative error {rel:.4} (< {bound})");
+        // Json::obj takes &str keys, so the per-trace names are leaked
+        // once per bench process — three short strings
+        let key = |s: &str| -> &'static str {
+            Box::leak(format!("{name}_{s}").into_boxed_str())
+        };
+        kvs.push((key("windows"), Json::Num(windows as f64)));
+        kvs.push((key("mean_rel_err"), Json::Num((rel * 1e4).round() / 1e4)));
+        kvs.push((key("rel_err_bound"), Json::Num(bound)));
+    }
+
+    let (default, dm) = time_once("starved-solar-24h-default", || {
+        run(&starved_solar(24 * H, false))
+    });
+    let (forecast, fm) = time_once("starved-solar-24h-forecast", || {
+        run(&starved_solar(24 * H, true))
+    });
+    println!("{}", dm.row());
+    println!("{}", fm.row());
+    let saved_pct =
+        100.0 * (1.0 - forecast.ckpt_nvm_bytes as f64 / default.ckpt_nvm_bytes as f64);
+    let acc_delta = forecast.mean_accuracy(3) - default.mean_accuracy(3);
+    println!(
+        "checkpoint NVM: {} -> {} bytes ({saved_pct:.1}% saved), {} taken / {} elided, \
+         accuracy delta {acc_delta:+.4}",
+        default.ckpt_nvm_bytes,
+        forecast.ckpt_nvm_bytes,
+        forecast.checkpoints_taken,
+        forecast.checkpoints_elided,
+    );
+
+    let fleet = starved_fleet(true).run_fleet(0).expect("fleet");
+    let deferred: u64 = fleet.shards.iter().map(|r| r.learns_deferred).sum();
+    let per_shard_day = deferred as f64 / fleet.shards.len() as f64;
+    println!(
+        "fleet reserves: {deferred} learns deferred across {} shards \
+         ({per_shard_day:.2} per shard-day), {} exchanges",
+        fleet.shards.len(),
+        fleet.rollup.syncs_done.total as u64,
+    );
+
+    kvs.extend([
+        (
+            "starved_solar_default_ckpt_bytes",
+            Json::Num(default.ckpt_nvm_bytes as f64),
+        ),
+        (
+            "starved_solar_forecast_ckpt_bytes",
+            Json::Num(forecast.ckpt_nvm_bytes as f64),
+        ),
+        (
+            "starved_solar_ckpt_bytes_saved_pct",
+            Json::Num((saved_pct * 10.0).round() / 10.0),
+        ),
+        (
+            "starved_solar_checkpoints_taken",
+            Json::Num(forecast.checkpoints_taken as f64),
+        ),
+        (
+            "starved_solar_checkpoints_elided",
+            Json::Num(forecast.checkpoints_elided as f64),
+        ),
+        (
+            "starved_solar_accuracy_delta",
+            Json::Num((acc_delta * 1e4).round() / 1e4),
+        ),
+        (
+            "fleet_learns_deferred_per_shard_day",
+            Json::Num((per_shard_day * 100.0).round() / 100.0),
+        ),
+        ("default_ms", Json::Num(dm.mean_ns / 1e6)),
+        ("forecast_ms", Json::Num(fm.mean_ns / 1e6)),
+    ]);
+    let doc = Json::obj(kvs);
+    let path = "../BENCH_forecast.json";
+    match std::fs::write(path, doc.to_string()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => println!("could not write {path}: {e}"),
+    }
+}
+
+fn main() {
+    if std::env::args().any(|a| a == "--smoke") {
+        smoke();
+    } else {
+        full();
+    }
+}

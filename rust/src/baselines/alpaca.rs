@@ -126,6 +126,7 @@ mod tests {
             window_learns: 0,
             window_infers: 0,
             window_cycle: 1,
+            forecast_uj: None,
         }
     }
 

@@ -76,6 +76,7 @@ mod tests {
             window_learns: 0,
             window_infers: 0,
             window_cycle: 1,
+            forecast_uj: None,
         };
         let mut m = MayflyScheduler::new(1.0, 1);
         let mut a = DutyCycleScheduler::new(1.0);

@@ -606,6 +606,7 @@ pub fn fig17(seed: u64) -> Result<FigData> {
         window_learns: 1,
         window_infers: 1,
         window_cycle: 2,
+        forecast_uj: None,
     };
     let pending = vec![Action::Decide, Action::Sense];
     let meas = bench::bench("planner.next_action", 60, || {

@@ -267,6 +267,35 @@ mod tests {
     }
 
     #[test]
+    fn exhaustive_sweep_of_a_forecast_run_with_elisions_is_clean() {
+        // Forecast mode skips probe-grid checkpoints it can prove redundant.
+        // Elision is a pure function of simulation state, so the reference
+        // run and every cut re-execution elide identically and the journaled
+        // commit sequences stay aligned — an elided checkpoint must never
+        // widen the replay window past a boundary this sweep verifies.
+        let mut spec = short_vibration();
+        spec.policy = Some(crate::scenario::PolicySpec { forecast: true });
+        // the elision path must actually fire in this world, otherwise the
+        // sweep below exercises nothing new
+        let r0 = spec.build_engine().unwrap().run().unwrap();
+        assert!(
+            r0.checkpoints_elided > 0,
+            "short vibration world never elided a checkpoint"
+        );
+        assert!(r0.checkpoints_taken >= 1, "final horizon save must persist");
+        let r = sweep_scenario(&spec, SweepMode::Exhaustive).unwrap();
+        assert!(r.persist_steps > 0, "no persist steps enumerated");
+        assert!(r.commits > 0, "no journaled commits");
+        assert_eq!(r.violations, Vec::<String>::new());
+        assert!(r.clean());
+        assert_eq!(
+            r.rolled_back + r.rolled_forward + r.clean_cuts,
+            r.cuts,
+            "every cut healed exactly once"
+        );
+    }
+
+    #[test]
     fn sampled_sweeps_are_seeded_and_stable() {
         let spec = short_vibration();
         let mode = SweepMode::Sample { n: 6, seed: 9 };

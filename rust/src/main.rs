@@ -22,8 +22,8 @@ use ilearn::apps::AppKind;
 use ilearn::energy::inspect;
 use ilearn::eval::figures;
 use ilearn::scenario::{
-    BackendKind, FleetSpec, ScenarioSpec, SchedulerKind, SweepRunner, SweepSpec, SyncSpec,
-    PRESETS,
+    BackendKind, FleetSpec, PolicySpec, ScenarioSpec, SchedulerKind, SweepRunner, SweepSpec,
+    SyncSpec, PRESETS,
 };
 use ilearn::selection::Heuristic;
 use ilearn::sim::RunResult;
@@ -62,6 +62,8 @@ fn print_help() {
                --backend B      native|pjrt                [default native]\n\
                --scheduler S    planner|alpaca:<pct>|mayfly:<pct>:<expiry_s>\n\
                --heuristic X    round_robin|k_last_lists|randomized|none\n\
+               --forecast       forecast-aware planning: checkpoint elision,\n\
+                                harvest-sized bursts, sync energy reserves\n\
            run --spec FILE  run a declarative scenario spec (JSON)\n\
                --seed/--backend/--scheduler/--heuristic override the spec\n\
                (--hours is preset-only: spec worlds are horizon-derived)\n\
@@ -80,7 +82,7 @@ fn print_help() {
                                 results (bounded memory at any shard count;\n\
                                 auto above 4095 isolated shards)\n\
                --threads N      worker threads             [default: all cores]\n\
-               (run's --seed/--backend/--scheduler/--heuristic apply too)\n\
+               (run's --seed/--backend/--scheduler/--heuristic/--forecast apply too)\n\
            sweep <FILE>     expand a JSON grid spec (scenarios x schedulers x\n\
                             heuristics x backends x seeds) and run every cell\n\
                             on worker threads, one JSON result per cell\n\
@@ -183,6 +185,9 @@ fn run_spec(args: &[String]) -> Result<ScenarioSpec> {
         spec.heuristic =
             Heuristic::parse(&h).with_context(|| format!("unknown heuristic `{h}`"))?;
     }
+    if args.iter().any(|a| a == "--forecast") {
+        spec.policy = Some(PolicySpec { forecast: true });
+    }
     Ok(spec)
 }
 
@@ -195,6 +200,12 @@ fn print_run_summary(spec: &ScenarioSpec, r: &RunResult, wall_s: f64) {
     println!("  discarded (select) {}", r.discarded_select);
     println!("  expired (mayfly)   {}", r.expired);
     println!("  power failures     {}", r.power_failures);
+    if r.checkpoints_taken + r.checkpoints_elided > 0 {
+        println!("  checkpoints taken  {}", r.checkpoints_taken);
+        println!("  checkpoints elided {}", r.checkpoints_elided);
+        println!("  learns deferred    {}", r.learns_deferred);
+        println!("  ckpt NVM bytes     {}", r.ckpt_nvm_bytes);
+    }
     println!("  energy             {:.1} mJ", r.energy_uj / 1000.0);
     println!("  mean probe acc.    {:.3}", r.mean_accuracy(3));
     println!("  final probe acc.   {:.3}", r.final_accuracy());

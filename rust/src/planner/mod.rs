@@ -94,6 +94,12 @@ pub struct PlanContext {
     /// Harvesting cycles elapsed in the current window (1-based during a
     /// wake burst; the §4.2 rate targets scale with it).
     pub window_cycle: u32,
+    /// Forecast energy budget, µJ: stored usable energy plus the net
+    /// harvest predicted over the current burst window, minus any sync
+    /// reserve the engine is holding for an upcoming rendezvous. `None`
+    /// when forecast-aware planning is off — the planner then behaves
+    /// bit-identically to the pre-forecast policy.
+    pub forecast_uj: Option<f64>,
 }
 
 /// What the planner tells the engine to do next.
@@ -202,12 +208,27 @@ impl DynamicActionPlanner {
         let w = self.weights(ctx);
         self.memo.clear();
 
+        // Forecast gate: a transition whose energy cost exceeds the
+        // predicted budget cannot complete before the capacitor dies —
+        // starting it only buys a rollback. Filtering here sizes the
+        // burst to the forecast harvest window (Islam et al. 2025); when
+        // every candidate is filtered the planner idles and the engine
+        // sleeps the device into the next harvest segment. `None` (the
+        // knob off) filters nothing.
+        let fits = |a: Action| match ctx.forecast_uj {
+            Some(budget_uj) => costs.cost(a).energy_uj <= budget_uj,
+            None => true,
+        };
+
         let mut best = f64::NEG_INFINITY;
         let mut best_move = Planned::Idle;
 
         // Candidate 1: advance each pending example along the diagram.
         for (slot, &last) in pending.iter().enumerate() {
             for &nxt in last.next() {
+                if !fits(nxt) {
+                    continue;
+                }
                 // The Decide branch is resolved here: advancing to Select
                 // commits to the learn path, advancing to Infer to the
                 // inference path.
@@ -227,7 +248,7 @@ impl DynamicActionPlanner {
         }
 
         // Candidate 2: sense a new example (if admission allows).
-        if pending.len() < self.cfg.max_admitted {
+        if pending.len() < self.cfg.max_admitted && fits(Action::Sense) {
             let mut state = pending.clone();
             state.push(Action::Sense);
             let gain = -self.cfg.lambda_energy * costs.cost(Action::Sense).energy_uj / 1_000.0;
@@ -335,6 +356,7 @@ mod tests {
             window_learns: 0,
             window_infers: 0,
             window_cycle: 1,
+            forecast_uj: None,
         }
     }
 
@@ -469,6 +491,7 @@ mod tests {
             window_learns: 0,
             window_infers: 0,
             window_cycle: p.goal.window,
+            forecast_uj: None,
         };
         let caught_up = PlanContext {
             window_learns: p.goal.rho_learn.ceil() as u32 + 1,
@@ -484,5 +507,35 @@ mod tests {
         let costs = CostModel::knn();
         let mv = p.next_action(&vec![], &ctx(0, 0.5), &costs);
         assert_eq!(mv, Planned::Idle);
+    }
+
+    #[test]
+    fn forecast_budget_filters_unaffordable_transitions() {
+        let costs = CostModel::knn();
+        let budget = |b: f64| PlanContext {
+            forecast_uj: Some(b),
+            ..ctx(0, 0.0)
+        };
+        // a budget below the cheapest transition forces Idle — the engine
+        // then sleeps the device into the next harvest segment instead of
+        // starting work that can only roll back
+        let mut p = DynamicActionPlanner::default();
+        let mv = p.next_action(&vec![Action::Sense], &budget(0.0), &costs);
+        assert_eq!(mv, Planned::Idle);
+        // a budget that cannot cover Learn never starts one
+        let learn_uj = costs.cost(Action::Learn).energy_uj;
+        let mv = p.next_action(&vec![Action::Select], &budget(learn_uj - 1.0), &costs);
+        assert_ne!(
+            mv,
+            Planned::Advance { slot: 0, action: Action::Learn }
+        );
+        // an unlimited budget decides exactly like no forecast at all
+        let mut a = DynamicActionPlanner::default();
+        let mut b = DynamicActionPlanner::default();
+        for pending in [vec![], vec![Action::Sense], vec![Action::Select, Action::Extract]] {
+            let open = a.next_action(&pending, &budget(f64::INFINITY), &costs);
+            let off = b.next_action(&pending, &ctx(0, 0.0), &costs);
+            assert_eq!(open, off, "{pending:?}");
+        }
     }
 }

@@ -28,7 +28,7 @@ pub mod sweep;
 
 pub use spec::{
     BackendKind, CapacitorSpec, CostKind, FleetSpec, HarvesterSpec, LearnerSpec, MotionSpec,
-    RadioSpec, ScenarioSpec, SchedulerKind, SensorSpec, ShardOverride, SyncSpec,
+    PolicySpec, RadioSpec, ScenarioSpec, SchedulerKind, SensorSpec, ShardOverride, SyncSpec,
 };
 pub use sweep::{SweepCell, SweepOutcome, SweepRunner, SweepSpec};
 
@@ -95,6 +95,7 @@ pub fn air_quality(seed: u64, horizon_us: u64) -> ScenarioSpec {
         probe_lookback_us: 6 * 3_600_000_000,
         charge_step_us: 60_000_000,
         charge_kernel: ChargeKernel::default(),
+        policy: None,
         fleet: None,
     }
 }
@@ -131,6 +132,7 @@ pub fn presence(seed: u64, horizon_us: u64) -> ScenarioSpec {
         probe_lookback_us: 2 * 3_600_000_000,
         charge_step_us: 60_000_000,
         charge_kernel: ChargeKernel::default(),
+        policy: None,
         fleet: None,
     }
 }
@@ -173,6 +175,7 @@ pub fn vibration(seed: u64, horizon_us: u64) -> ScenarioSpec {
         // sample right past them
         charge_step_us: 1_000_000,
         charge_kernel: ChargeKernel::default(),
+        policy: None,
         fleet: None,
     }
 }

@@ -1342,6 +1342,39 @@ impl FleetSpec {
     }
 }
 
+// ------------------------------------------------------------ policy spec
+
+/// Policy-layer knobs beyond the scheduler choice. The whole block is
+/// optional in spec JSON and omitted when unset, so pre-forecast specs
+/// round-trip byte-identically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PolicySpec {
+    /// Forecast-aware planning: checkpoint elision, harvest-sized bursts
+    /// and sync energy reserves. Off by default; present-but-false runs
+    /// bit-identically to an absent block.
+    pub forecast: bool,
+}
+
+impl PolicySpec {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![("forecast", Json::Bool(self.forecast))])
+    }
+
+    fn from_json(j: &Json) -> Result<PolicySpec> {
+        let forecast = match j.get("forecast") {
+            None => false,
+            Some(v) if v.is_null() => false,
+            Some(Json::Bool(b)) => *b,
+            Some(_) => {
+                return Err(Error::Config(
+                    "scenario: `policy.forecast` must be a boolean".into(),
+                ))
+            }
+        };
+        Ok(PolicySpec { forecast })
+    }
+}
+
 // ---------------------------------------------------------- scenario spec
 
 /// A complete, declarative experiment scenario. Everything an engine needs
@@ -1376,6 +1409,9 @@ pub struct ScenarioSpec {
     /// Charging integrator: the event-driven analytic kernel (default) or
     /// the stepped reference oracle.
     pub charge_kernel: ChargeKernel,
+    /// Policy-layer knobs (`None` = all defaults; serialized only when
+    /// present, so pre-policy spec JSON is untouched).
+    pub policy: Option<PolicySpec>,
     /// Fleet block: deploy this scenario across N shards (`None` = the
     /// plain single device, which equals a 1-shard fleet bit-for-bit).
     pub fleet: Option<FleetSpec>,
@@ -1549,6 +1585,7 @@ impl ScenarioSpec {
             charge_step_us: self.charge_step_us,
             probe_lookback_us: self.probe_lookback_us,
             charge_kernel: self.charge_kernel,
+            forecast: self.policy.is_some_and(|p| p.forecast),
         }
     }
 
@@ -1703,7 +1740,7 @@ impl ScenarioSpec {
         } else {
             Json::Num(self.goal.n_learn as f64)
         };
-        Json::obj(vec![
+        let mut kvs = vec![
             ("name", Json::Str(self.name.clone())),
             ("seed", Json::Num(self.seed as f64)),
             ("horizon_us", Json::Num(self.horizon_us as f64)),
@@ -1723,6 +1760,13 @@ impl ScenarioSpec {
             ),
             ("scheduler", self.scheduler.to_json()),
             ("heuristic", Json::Str(self.heuristic.name().into())),
+        ];
+        // optional policy block: omitted when unset so pre-policy spec
+        // documents stay byte-identical
+        if let Some(p) = &self.policy {
+            kvs.push(("policy", p.to_json()));
+        }
+        kvs.extend([
             ("backend", Json::Str(self.backend.name().into())),
             ("eval_period_us", Json::Num(self.eval_period_us as f64)),
             ("probe_count", Json::Num(self.probe_count as f64)),
@@ -1736,7 +1780,8 @@ impl ScenarioSpec {
                     None => Json::Null,
                 },
             ),
-        ])
+        ]);
+        Json::obj(kvs)
     }
 
     pub fn from_json(j: &Json) -> Result<ScenarioSpec> {
@@ -1797,6 +1842,12 @@ impl ScenarioSpec {
             probe_lookback_us: req_u64(j, "probe_lookback_us", what)?,
             charge_step_us: req_u64(j, "charge_step_us", what)?,
             charge_kernel,
+            // optional (older specs predate the policy block): defaults
+            policy: match j.get("policy") {
+                None => None,
+                Some(v) if v.is_null() => None,
+                Some(v) => Some(PolicySpec::from_json(v)?),
+            },
             fleet: match j.get("fleet") {
                 None => None,
                 Some(v) if v.is_null() => None,
@@ -1990,6 +2041,47 @@ mod tests {
         // unknown kernel names are rejected
         if let Json::Obj(kvs) = &mut j {
             kvs.push(("charge_kernel".into(), Json::Str("warp".into())));
+        }
+        assert!(ScenarioSpec::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn policy_block_round_trips_and_defaults() {
+        // absent by default: the document carries no "policy" key at all,
+        // so pre-forecast spec JSON (and its golden pins) are untouched
+        let s = preset("vibration", 1, 2 * H).unwrap();
+        assert_eq!(s.policy, None);
+        let doc = s.to_json().to_string();
+        assert!(!doc.contains("\"policy\""), "{doc}");
+        assert!(
+            !s.sim_config().forecast,
+            "absent policy block must not enable the forecast"
+        );
+        // present-but-false round-trips and still compiles to forecast off
+        let mut s = preset("vibration", 1, 2 * H).unwrap();
+        s.policy = Some(PolicySpec { forecast: false });
+        let back = ScenarioSpec::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(back.policy, Some(PolicySpec { forecast: false }));
+        assert!(!back.sim_config().forecast);
+        // enabled: survives the round trip and reaches the engine config
+        s.policy = Some(PolicySpec { forecast: true });
+        let doc = s.to_json().to_string();
+        assert!(doc.contains("\"policy\":{\"forecast\":true}"), "{doc}");
+        let back = ScenarioSpec::parse(&doc).unwrap();
+        assert!(back.sim_config().forecast);
+        assert!(back.build_engine().unwrap().world.forecast_enabled());
+        // an empty or null block means defaults; a non-bool is rejected
+        let mut j = preset("vibration", 1, 2 * H).unwrap().to_json();
+        if let Json::Obj(kvs) = &mut j {
+            kvs.push(("policy".into(), Json::obj(vec![])));
+        }
+        assert!(!ScenarioSpec::from_json(&j).unwrap().policy.unwrap().forecast);
+        if let Json::Obj(kvs) = &mut j {
+            kvs.retain(|(k, _)| k != "policy");
+            kvs.push((
+                "policy".into(),
+                Json::obj(vec![("forecast", Json::Num(1.0))]),
+            ));
         }
         assert!(ScenarioSpec::from_json(&j).is_err());
     }

@@ -43,6 +43,18 @@ use crate::sim::{
 /// letting it repeat would spin the burst loop for free).
 const MAX_STALE_PLANS: u32 = 3;
 
+/// Checkpoint-elision safety margin: a persist may be skipped only when
+/// stored energy plus the forecast's net harvest over the persist window
+/// covers this many full learn paths — the device will comfortably reach
+/// the next persist point, so the skipped save costs at most re-running
+/// work whose inputs replay deterministically.
+const ELIDE_MARGIN: f64 = 2.0;
+
+/// Longest burst window the forecast budget looks ahead over: the
+/// harvester's current segment, capped here so bursts stay harvest-sized
+/// even inside an hours-long analytic segment.
+const BURST_WINDOW_MAX_US: u64 = 60_000_000;
+
 /// The assembled device: one [`World`], one [`Executor`], one [`Policy`],
 /// plus the learner/backend/costs/meter the action payloads run against.
 pub struct Engine {
@@ -64,6 +76,13 @@ pub struct Engine {
     /// the commit pays for the bytes the rendezvous actually bid (a delta
     /// snapshot pays a fraction of the calibrated full-snapshot `Tx`).
     pending_sync: Option<(f64, u64)>,
+    /// The next known rendezvous boundary `(boundary_us, rx_peers)` the
+    /// fleet tier announced via [`Engine::note_next_sync`] — the radio
+    /// price forecast-aware planning holds in reserve ahead of a sync.
+    next_sync: Option<(u64, u32)>,
+    /// Work counters (learned, inferred, sensed, syncs_done) at the last
+    /// persisted run-state save — the nothing-at-risk elision test.
+    last_persist_mark: (u64, u64, u64, u64),
     /// Scratch mirror of `pending`'s last actions handed to the scheduler
     /// (reused every decision — no per-decision allocation).
     plan_scratch: Vec<Action>,
@@ -191,13 +210,17 @@ impl EngineBuilder {
         let backend = self
             .backend
             .unwrap_or_else(|| Box::new(NativeBackend::new()));
+        let mut world = World::new(
+            self.harvester.expect("checked"),
+            self.cap.expect("checked"),
+            self.sensor.expect("checked"),
+        );
+        if cfg.forecast {
+            world.enable_forecast();
+        }
         Ok(Engine {
             cfg,
-            world: World::new(
-                self.harvester.expect("checked"),
-                self.cap.expect("checked"),
-                self.sensor.expect("checked"),
-            ),
+            world,
             exec: Executor::new(),
             policy: Policy::new(scheduler, selector),
             learner: self.learner.expect("checked"),
@@ -206,6 +229,8 @@ impl EngineBuilder {
             meter: EnergyMeter::new(),
             pending: Vec::new(),
             pending_sync: None,
+            next_sync: None,
+            last_persist_mark: (0, 0, 0, 0),
             plan_scratch: Vec::new(),
             result: RunResult::default(),
             next_eval_us: 0,
@@ -232,6 +257,99 @@ impl Engine {
     /// at a rendezvous (starved shards are paired with rich ones).
     pub fn stored_energy_uj(&self) -> f64 {
         self.world.cap.usable_uj()
+    }
+
+    /// Announce the next fleet rendezvous boundary so forecast-aware
+    /// planning can hold the radio price in reserve ahead of it — instead
+    /// of burning a learn that [`Engine::prepare_sync`] then skips for
+    /// lack of energy. The fleet tiers (round scheduler and event heap)
+    /// call this before driving the shard to the boundary; it is a no-op
+    /// unless the forecast knob is on, and `prepare_sync` clears the
+    /// reserve once the rendezvous it funded arrives.
+    pub fn note_next_sync(&mut self, boundary_us: u64, rx_peers: u32) {
+        if self.world.forecast_enabled() && boundary_us > self.world.now_us() {
+            self.next_sync = Some((boundary_us, rx_peers));
+        }
+    }
+
+    /// Forecast-mode planning budgets for the current decision:
+    /// `(reserved, free)` in µJ, `None` when the forecast knob is off.
+    /// `free` is stored usable energy plus the net harvest the forecast
+    /// predicts over the burst window (the harvester's current segment,
+    /// capped at [`BURST_WINDOW_MAX_US`] — harvest-sized bursts);
+    /// `reserved` additionally holds back whatever part of the next
+    /// rendezvous' radio price the window up to the boundary will not
+    /// re-harvest.
+    fn forecast_budgets(&self) -> Option<(f64, f64)> {
+        if !self.world.forecast_enabled() {
+            return None; // off: the decision path costs nothing extra
+        }
+        let now = self.world.now_us();
+        let seg = self.world.harvester.segment_end_us(now).max(now + 1);
+        let window = (seg - now).min(BURST_WINDOW_MAX_US);
+        let free = self.world.cap.usable_uj() + self.world.forecast_net_uj(window)?;
+        let reserved = match self.next_sync {
+            Some((boundary_us, rx_peers)) if boundary_us > now => {
+                let (price_uj, _) = self.costs.sync_price(rx_peers);
+                let refill = self.world.forecast_net_uj(boundary_us - now).unwrap_or(0.0);
+                (free - (price_uj - refill).max(0.0)).max(0.0)
+            }
+            _ => free,
+        };
+        Some((reserved, free))
+    }
+
+    /// Can the upcoming model/state persist be safely skipped? Only in
+    /// forecast mode, never at or past the horizon (the final checkpoint
+    /// always persists), and only when either
+    ///
+    /// * the margin holds — stored energy plus the forecast's net harvest
+    ///   over the persist window covers [`ELIDE_MARGIN`] full learn
+    ///   paths, so the device will comfortably reach the next persist
+    ///   point — or
+    /// * (eval-grid saves only) nothing durable is at risk: no learn,
+    ///   infer, sense or sync completed since the last persisted save, so
+    ///   a crash at worst replays probe records whose inputs re-derive
+    ///   deterministically.
+    ///
+    /// Soundness: elision is a pure function of simulation state, so a
+    /// crash-sweep cut run elides the exact same checkpoints as its
+    /// uninterrupted reference — every persist that *does* happen is
+    /// still one atomic commit, the per-commit digest logs stay aligned,
+    /// and recovery lands on the same commit boundary `fault::sweep`
+    /// verifies. An elided save never widens the replay window beyond
+    /// what the sweep checks; it only re-runs work whose inputs replay.
+    fn checkpoint_elidable(&self, grid_save: bool) -> bool {
+        if !self.cfg.forecast {
+            return false;
+        }
+        let now = self.world.now_us();
+        if now >= self.cfg.horizon_us {
+            return false;
+        }
+        if grid_save && !self.work_since_last_persist() {
+            return true;
+        }
+        let dt = self
+            .next_eval_us
+            .saturating_sub(now)
+            .clamp(1, self.cfg.eval_period_us.max(1));
+        let banked = self.world.cap.usable_uj() + self.world.forecast_net_uj(dt).unwrap_or(0.0);
+        banked >= ELIDE_MARGIN * self.costs.learn_path_uj()
+    }
+
+    /// Did any durable-work counter move since the last persisted save?
+    fn work_since_last_persist(&self) -> bool {
+        self.persist_mark() != self.last_persist_mark
+    }
+
+    fn persist_mark(&self) -> (u64, u64, u64, u64) {
+        (
+            self.result.learned,
+            self.result.inferred,
+            self.result.sensed,
+            self.result.syncs_done,
+        )
     }
 
     /// The run's aggregates so far (live during a run; repopulated by
@@ -316,6 +434,9 @@ impl Engine {
         deadline_us: u64,
     ) -> Option<crate::learning::ModelSnapshot> {
         self.pending_sync = None;
+        // the rendezvous the forecast reserve was funding is here: release
+        // the hold (the fleet tier re-announces the next boundary)
+        self.next_sync = None;
         // the snapshot is taken before the energy gate on purpose: it is
         // also the participation probe, and a non-snapshotting learner
         // must opt out without the gate moving the clock. The copy a
@@ -435,16 +556,17 @@ impl Engine {
         if !merged {
             return Ok(());
         }
-        let w0 = self.exec.nvm.bytes_written;
         // atomic checkpoint: a power failure mid-save must not tear the
-        // merged model (the intermittent-safety analyzer's IL-ATOM rule)
-        self.exec.nvm.begin_action()?;
-        if let Err(err) = self.learner.save_delta(&mut self.exec.nvm) {
-            self.exec.nvm.abort_action();
-            return Err(err);
+        // merged model (the intermittent-safety analyzer's IL-ATOM rule).
+        // Never elided: a merged model aggregates peer work this shard
+        // cannot re-derive locally, so it is always at risk.
+        let learner = self.learner.as_mut();
+        let bytes = self.exec.persist_model(|nvm| learner.save_delta(nvm))?;
+        if self.cfg.forecast {
+            self.result.checkpoints_taken += 1;
         }
-        self.exec.nvm.commit_action()?;
-        let ckpt_uj = self.costs.nvm_uj_per_byte * (self.exec.nvm.bytes_written - w0) as f64;
+        self.result.ckpt_nvm_bytes += bytes;
+        let ckpt_uj = self.costs.nvm_uj_per_byte * bytes as f64;
         if ckpt_uj > 0.0 {
             let avail = self.world.cap.usable_uj().max(0.0);
             if self.world.cap.deduct_uj(ckpt_uj) {
@@ -533,7 +655,10 @@ impl Engine {
             }
 
             // scheduler decision (+ overhead)
-            let ctx = self.policy.context(self.result.learned, self.quality);
+            let budgets = self.forecast_budgets();
+            let ctx = self
+                .policy
+                .context(self.result.learned, self.quality, budgets.map(|(r, _)| r));
             self.plan_scratch.clear();
             self.plan_scratch.extend(self.pending.iter().map(|p| p.last));
             let oh = self.policy.overhead(&self.costs);
@@ -546,6 +671,31 @@ impl Engine {
                 self.meter.record("planner", oh.energy_uj, oh.time_us);
             }
             let planned = self.policy.decide(&self.plan_scratch, &ctx, &self.costs);
+            // attribute the sync reserve: when the unreserved budget would
+            // have started or advanced a learn path that the reserved one
+            // did not, the engine deferred that work to keep the upcoming
+            // rendezvous funded (a learn it would otherwise burn just
+            // before `prepare_sync` skips the exchange)
+            if let Some((reserved, free)) = budgets {
+                if free > reserved {
+                    let free_ctx =
+                        self.policy
+                            .context(self.result.learned, self.quality, Some(free));
+                    let unreserved =
+                        self.policy.decide(&self.plan_scratch, &free_ctx, &self.costs);
+                    let learn_path = matches!(
+                        unreserved,
+                        Planned::SenseNew
+                            | Planned::Advance {
+                                action: Action::Learn,
+                                ..
+                            }
+                    );
+                    if learn_path && unreserved != planned {
+                        self.result.learns_deferred += 1;
+                    }
+                }
+            }
 
             match planned {
                 Planned::Idle => {
@@ -678,30 +828,35 @@ impl Engine {
                 // O(dirty) delta checkpoint: only the slots this learn
                 // touched hit NVM (the first call degrades to a full save),
                 // bracketed so a power failure mid-save cannot tear the
-                // committed model (the analyzer's IL-ATOM rule)
-                let w0 = self.exec.nvm.bytes_written;
-                self.exec.nvm.begin_action()?;
-                if let Err(err) = self.learner.save_delta(&mut self.exec.nvm) {
-                    self.exec.nvm.abort_action();
-                    return Err(err);
-                }
-                self.exec.nvm.commit_action()?;
-                // Optionally charge the actual checkpoint traffic (the
-                // calibrated learn cost already includes a full-model
-                // save, so the default rate is 0 — see `CostModel`).
-                let ckpt_uj =
-                    self.costs.nvm_uj_per_byte * (self.exec.nvm.bytes_written - w0) as f64;
-                if ckpt_uj > 0.0 {
-                    let avail = self.world.cap.usable_uj().max(0.0);
-                    if self.world.cap.deduct_uj(ckpt_uj) {
-                        self.meter.record("nvm_ckpt", ckpt_uj, 0);
-                    } else {
-                        // brown-out paying for the checkpoint: the learn
-                        // and its committed save stand (the FRAM write
-                        // landed before the debt was discovered); meter
-                        // what actually drained, not the full price
-                        self.result.power_failures += 1;
-                        self.meter.record("nvm_ckpt", avail.min(ckpt_uj), 0);
+                // committed model (the analyzer's IL-ATOM rule). Forecast
+                // mode may elide the save when the energy margin proves the
+                // device reaches the next persist point — the dirty slots
+                // stay dirty, so the next save that does run covers them.
+                if self.checkpoint_elidable(false) {
+                    self.result.checkpoints_elided += 1;
+                } else {
+                    if self.cfg.forecast {
+                        self.result.checkpoints_taken += 1;
+                    }
+                    let learner = self.learner.as_mut();
+                    let bytes = self.exec.persist_model(|nvm| learner.save_delta(nvm))?;
+                    self.result.ckpt_nvm_bytes += bytes;
+                    // Optionally charge the actual checkpoint traffic (the
+                    // calibrated learn cost already includes a full-model
+                    // save, so the default rate is 0 — see `CostModel`).
+                    let ckpt_uj = self.costs.nvm_uj_per_byte * bytes as f64;
+                    if ckpt_uj > 0.0 {
+                        let avail = self.world.cap.usable_uj().max(0.0);
+                        if self.world.cap.deduct_uj(ckpt_uj) {
+                            self.meter.record("nvm_ckpt", ckpt_uj, 0);
+                        } else {
+                            // brown-out paying for the checkpoint: the learn
+                            // and its committed save stand (the FRAM write
+                            // landed before the debt was discovered); meter
+                            // what actually drained, not the full price
+                            self.result.power_failures += 1;
+                            self.meter.record("nvm_ckpt", avail.min(ckpt_uj), 0);
+                        }
                     }
                 }
                 self.result.learned += 1;
@@ -773,16 +928,26 @@ impl Engine {
         });
         // persist the aggregates (O(new records) — append-only deltas) so
         // an interrupted run restores them from NVM after a host restart —
-        // atomically, so a half-written stats save never becomes visible
-        self.exec.nvm.begin_action()?;
-        if let Err(err) = self
-            .run_state
-            .save(&mut self.exec.nvm, &self.result, &self.meter)
-        {
-            self.exec.nvm.abort_action();
-            return Err(err);
+        // atomically, so a half-written stats save never becomes visible.
+        // Forecast mode elides the save when the energy margin holds or
+        // when no durable work happened since the last persisted save
+        // (night grids: only probe records changed); the final checkpoint
+        // at the horizon always persists.
+        if self.checkpoint_elidable(true) {
+            self.result.checkpoints_elided += 1;
+            return Ok(());
         }
-        self.exec.nvm.commit_action()?;
+        if self.cfg.forecast {
+            self.result.checkpoints_taken += 1;
+        }
+        let run_state = &mut self.run_state;
+        let result = &self.result;
+        let meter = &self.meter;
+        let bytes = self
+            .exec
+            .persist_model(|nvm| run_state.save(nvm, result, meter))?;
+        self.result.ckpt_nvm_bytes += bytes;
+        self.last_persist_mark = self.persist_mark();
         Ok(())
     }
 }
@@ -1220,6 +1385,57 @@ mod tests {
             r.cycles
         );
         assert_eq!(r.sensed, 0);
+    }
+
+    #[test]
+    fn forecast_budgets_hold_back_the_sync_price() {
+        let mut e = small_engine(0.0, 600);
+        assert!(e.forecast_budgets().is_none(), "knob off must stay None");
+        e.cfg.forecast = true;
+        e.world.enable_forecast();
+        e.world.cap.set_voltage(3.3);
+        let (r0, f0) = e.forecast_budgets().unwrap();
+        assert_eq!(r0, f0, "no rendezvous announced, nothing reserved");
+        // a rendezvous one minute out with a dead harvester (no refill):
+        // the whole radio price comes out of the reserved budget
+        e.note_next_sync(60_000_000, 1);
+        let (r1, f1) = e.forecast_budgets().unwrap();
+        let (price_uj, _) = e.costs.sync_price(1);
+        assert_eq!(f1, f0);
+        assert!(
+            (f1 - r1 - price_uj).abs() < 1e-6,
+            "reserve {} vs price {price_uj}",
+            f1 - r1
+        );
+        // the rendezvous arriving releases the hold
+        assert!(e.prepare_sync(1, e.now_us()).is_some());
+        let (r2, f2) = e.forecast_budgets().unwrap();
+        assert_eq!(r2, f2, "prepare_sync left the reserve armed");
+    }
+
+    #[test]
+    fn forecast_mode_elides_checkpoints_and_keeps_the_final_save() {
+        let mut e = small_engine(0.010, 1800);
+        e.cfg.forecast = true;
+        e.world.enable_forecast();
+        let r = e.run_to_end().unwrap();
+        // 10 mW against a ~15 mJ learn path: the margin holds at most
+        // persist points, so saves are elided — but never the horizon's
+        assert!(r.checkpoints_elided > 0, "{r:?}");
+        assert!(r.checkpoints_taken >= 1, "final checkpoint must persist");
+        let doc = r.to_json().to_string();
+        assert!(doc.contains("\"checkpoints_elided\""), "{doc}");
+        assert!(doc.contains("\"ckpt_nvm_bytes\""), "{doc}");
+        // the learner model is still durable: a cold learner restores it
+        let mut back = KnnAnomalyLearner::new();
+        back.restore(&mut e.exec.nvm).unwrap();
+        assert!(back.learned_count() > 0);
+        // the default policy reaches no elision decision and its document
+        // keeps the pre-forecast shape; byte accounting runs regardless
+        let base = small_engine(0.010, 1800).run().unwrap();
+        assert_eq!(base.checkpoints_taken + base.checkpoints_elided, 0);
+        assert!(!base.to_json().to_string().contains("checkpoints_taken"));
+        assert!(base.ckpt_nvm_bytes > 0);
     }
 
     #[test]

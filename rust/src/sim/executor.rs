@@ -74,6 +74,28 @@ impl Executor {
         }
         Ok(Exec::Done)
     }
+
+    /// Persist a model checkpoint through one atomic NVM transaction and
+    /// return the bytes it wrote. This is the persistence seam the engine
+    /// brackets learner delta saves and sync merges through — and the
+    /// point forecast-aware checkpoint elision bypasses: an elided
+    /// checkpoint simply never opens the transaction, so every persist
+    /// that *does* happen stays a whole atomic commit and crash recovery
+    /// still lands on an exact commit boundary (the `fault::sweep`
+    /// invariant).
+    pub fn persist_model(
+        &mut self,
+        save: impl FnOnce(&mut Nvm) -> Result<()>,
+    ) -> Result<u64> {
+        let before = self.nvm.bytes_written;
+        self.nvm.begin_action()?;
+        if let Err(err) = save(&mut self.nvm) {
+            self.nvm.abort_action();
+            return Err(err);
+        }
+        self.nvm.commit_action()?;
+        Ok(self.nvm.bytes_written - before)
+    }
 }
 
 #[cfg(test)]
@@ -136,6 +158,29 @@ mod tests {
             .unwrap();
         assert_eq!(r, Exec::Done);
         assert_eq!(ex.sub_done, 3);
+    }
+
+    #[test]
+    fn persist_model_brackets_one_atomic_commit() {
+        let mut exec = Executor::new();
+        let bytes = exec
+            .persist_model(|nvm| {
+                nvm.write("model/a", &[1, 2, 3])?;
+                nvm.write_u64("model/n", 7)
+            })
+            .unwrap();
+        assert_eq!(exec.nvm.commits, 1);
+        assert_eq!(exec.nvm.aborts, 0);
+        assert!(bytes >= 3 + 8, "bytes written not accounted: {bytes}");
+        assert_eq!(exec.nvm.read("model/a").unwrap(), vec![1, 2, 3]);
+        // a failing save aborts the open transaction and stages nothing
+        let err = exec.persist_model(|nvm| {
+            nvm.write("model/a", &[9])?;
+            Err(Error::Config("save failed".into()))
+        });
+        assert!(err.is_err());
+        assert_eq!(exec.nvm.aborts, 1);
+        assert_eq!(exec.nvm.read("model/a").unwrap(), vec![1, 2, 3]);
     }
 
     #[test]

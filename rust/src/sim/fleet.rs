@@ -355,6 +355,12 @@ pub struct FleetRollup {
     pub syncs_done: Rollup,
     pub syncs_skipped: Rollup,
     pub syncs_solo: Rollup,
+    /// Forecast-mode checkpoint counters per shard (all zero unless the
+    /// `forecast` policy knob is on; omitted from the JSON then, so
+    /// default documents keep the pre-forecast shape byte for byte).
+    pub checkpoints_taken: Rollup,
+    pub checkpoints_elided: Rollup,
+    pub learns_deferred: Rollup,
 }
 
 impl FleetRollup {
@@ -382,6 +388,11 @@ impl FleetRollup {
             kvs.push(("syncs_skipped", self.syncs_skipped.to_json()));
             kvs.push(("syncs_solo", self.syncs_solo.to_json()));
         }
+        if self.checkpoints_taken.total + self.checkpoints_elided.total > 0.0 {
+            kvs.push(("checkpoints_taken", self.checkpoints_taken.to_json()));
+            kvs.push(("checkpoints_elided", self.checkpoints_elided.to_json()));
+            kvs.push(("learns_deferred", self.learns_deferred.to_json()));
+        }
         Json::obj(kvs)
     }
 }
@@ -403,6 +414,9 @@ pub struct ShardStats {
     pub syncs_done: f64,
     pub syncs_skipped: f64,
     pub syncs_solo: f64,
+    pub checkpoints_taken: f64,
+    pub checkpoints_elided: f64,
+    pub learns_deferred: f64,
 }
 
 impl ShardStats {
@@ -418,6 +432,9 @@ impl ShardStats {
             syncs_done: r.syncs_done as f64,
             syncs_skipped: r.syncs_skipped as f64,
             syncs_solo: r.syncs_solo as f64,
+            checkpoints_taken: r.checkpoints_taken as f64,
+            checkpoints_elided: r.checkpoints_elided as f64,
+            learns_deferred: r.learns_deferred as f64,
         }
     }
 }
@@ -431,14 +448,14 @@ impl ShardStats {
 #[derive(Debug, Clone)]
 pub struct FleetRollupAcc {
     shards: usize,
-    accs: [RollupAcc; 10],
+    accs: [RollupAcc; 13],
 }
 
 impl FleetRollupAcc {
     pub fn new() -> FleetRollupAcc {
         FleetRollupAcc {
             shards: 0,
-            accs: [RollupAcc::new(); 10],
+            accs: [RollupAcc::new(); 13],
         }
     }
 
@@ -456,6 +473,9 @@ impl FleetRollupAcc {
         self.accs[7].fold(s.syncs_done);
         self.accs[8].fold(s.syncs_skipped);
         self.accs[9].fold(s.syncs_solo);
+        self.accs[10].fold(s.checkpoints_taken);
+        self.accs[11].fold(s.checkpoints_elided);
+        self.accs[12].fold(s.learns_deferred);
     }
 
     pub fn finish(&self) -> FleetRollup {
@@ -471,6 +491,9 @@ impl FleetRollupAcc {
             syncs_done: self.accs[7].finish(),
             syncs_skipped: self.accs[8].finish(),
             syncs_solo: self.accs[9].finish(),
+            checkpoints_taken: self.accs[10].finish(),
+            checkpoints_elided: self.accs[11].finish(),
+            learns_deferred: self.accs[12].finish(),
         }
     }
 }
@@ -697,37 +720,43 @@ impl<'a, F: ShardFactory + ?Sized> Fleet<'a, F> {
                             .unwrap_or(plan.horizon_us);
                         for sh in &mut mine {
                             let report = match &mut sh.engine {
-                                Ok(e) => match e.run_until(boundary) {
-                                    // the horizon ends a shard's rounds
-                                    Ok(()) if e.now_us() < e.cfg.horizon_us => {
-                                        if sh.quarantine.sits_out(boundary) {
-                                            // quarantined catch-up: keep
-                                            // the normal charge/wake
-                                            // rhythm instead of idling at
-                                            // a gate it cannot afford
-                                            e.note_sync_skipped();
-                                            Report::Out
-                                        } else {
-                                            match e.prepare_sync(rx_peers, deadline) {
-                                                Some(s) => {
-                                                    sh.quarantine.on_made_rendezvous();
-                                                    sh.in_round = true;
-                                                    Report::Snapshot(s)
-                                                }
-                                                None => {
-                                                    sh.quarantine
-                                                        .on_gated(boundary, plan.period_us);
-                                                    Report::Out
+                                Ok(e) => {
+                                    // forecast-aware shards hold the radio
+                                    // price in reserve ahead of the boundary
+                                    // (no-op unless the knob is on)
+                                    e.note_next_sync(boundary, rx_peers);
+                                    match e.run_until(boundary) {
+                                        // the horizon ends a shard's rounds
+                                        Ok(()) if e.now_us() < e.cfg.horizon_us => {
+                                            if sh.quarantine.sits_out(boundary) {
+                                                // quarantined catch-up: keep
+                                                // the normal charge/wake
+                                                // rhythm instead of idling at
+                                                // a gate it cannot afford
+                                                e.note_sync_skipped();
+                                                Report::Out
+                                            } else {
+                                                match e.prepare_sync(rx_peers, deadline) {
+                                                    Some(s) => {
+                                                        sh.quarantine.on_made_rendezvous();
+                                                        sh.in_round = true;
+                                                        Report::Snapshot(s)
+                                                    }
+                                                    None => {
+                                                        sh.quarantine
+                                                            .on_gated(boundary, plan.period_us);
+                                                        Report::Out
+                                                    }
                                                 }
                                             }
                                         }
+                                        Ok(()) => Report::Out,
+                                        Err(err) => {
+                                            sh.engine = Err(err);
+                                            Report::Out
+                                        }
                                     }
-                                    Ok(()) => Report::Out,
-                                    Err(err) => {
-                                        sh.engine = Err(err);
-                                        Report::Out
-                                    }
-                                },
+                                }
                                 Err(_) => Report::Out,
                             };
                             if rep_tx.send((sh.slot, report)).is_err() {

@@ -212,6 +212,12 @@ pub struct SimConfig {
     pub probe_lookback_us: u64,
     /// Charging integrator (event-driven by default).
     pub charge_kernel: ChargeKernel,
+    /// Forecast-aware planning (the `"policy": {"forecast": true}` spec
+    /// knob): surface the harvester's energy forecast in `PlanContext`,
+    /// elide checkpoints the forecast proves unnecessary, and hold a
+    /// radio reserve ahead of a known sync rendezvous. Off by default;
+    /// when off the engine is bit-identical to the pre-forecast policy.
+    pub forecast: bool,
 }
 
 impl Default for SimConfig {
@@ -224,6 +230,7 @@ impl Default for SimConfig {
             charge_step_us: 60_000_000,
             probe_lookback_us: 2 * 3_600_000_000,
             charge_kernel: ChargeKernel::default(),
+            forecast: false,
         }
     }
 }
@@ -291,6 +298,25 @@ pub struct RunResult {
     /// and listening to silence buys nothing) and no radio energy is
     /// spent. Fixes the PR-5 lone-participant tax.
     pub syncs_solo: u64,
+    /// Checkpoint persists actually written in forecast mode (the
+    /// elision decision points that persisted). Forecast-off runs never
+    /// reach a decision point, so both this and
+    /// [`RunResult::checkpoints_elided`] stay 0 and the JSON keeps its
+    /// pre-forecast shape.
+    pub checkpoints_taken: u64,
+    /// Checkpoint persists the forecast proved unnecessary and skipped:
+    /// either stored + predicted harvest covers the next persist window
+    /// with margin, or nothing at risk was added since the last persist.
+    pub checkpoints_elided: u64,
+    /// Learn-path work (a `SenseNew` or a `Learn` advance) the sync
+    /// energy reserve deferred ahead of a known rendezvous boundary —
+    /// learns the shard would have burned and then skipped the sync for.
+    pub learns_deferred: u64,
+    /// NVM bytes written by checkpoint persists (learner delta saves and
+    /// run-state saves). Tracked in every mode; reported in JSON only
+    /// alongside the forecast counters (it is the elision savings
+    /// denominator).
+    pub ckpt_nvm_bytes: u64,
     /// Total energy spent, µJ.
     pub energy_uj: f64,
     /// Energy time series (t_us, cumulative µJ).
@@ -353,6 +379,14 @@ impl RunResult {
             kvs.push(("syncs_done", Json::Num(self.syncs_done as f64)));
             kvs.push(("syncs_skipped", Json::Num(self.syncs_skipped as f64)));
             kvs.push(("syncs_solo", Json::Num(self.syncs_solo as f64)));
+        }
+        // forecast-mode counters: only forecast runs reach an elision
+        // decision point, so default documents keep the pre-forecast shape
+        if self.checkpoints_taken + self.checkpoints_elided > 0 {
+            kvs.push(("checkpoints_taken", Json::Num(self.checkpoints_taken as f64)));
+            kvs.push(("checkpoints_elided", Json::Num(self.checkpoints_elided as f64)));
+            kvs.push(("learns_deferred", Json::Num(self.learns_deferred as f64)));
+            kvs.push(("ckpt_nvm_bytes", Json::Num(self.ckpt_nvm_bytes as f64)));
         }
         kvs.extend([
             ("energy_uj", Json::Num(self.energy_uj)),

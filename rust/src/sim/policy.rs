@@ -37,14 +37,21 @@ impl Policy {
     }
 
     /// Build the planning context for the next decision, carrying the real
-    /// windowed completion counts.
-    pub fn context(&self, learned_total: u64, quality: f32) -> PlanContext {
+    /// windowed completion counts and (in forecast mode) the engine's
+    /// predicted energy budget for the current burst.
+    pub fn context(
+        &self,
+        learned_total: u64,
+        quality: f32,
+        forecast_uj: Option<f64>,
+    ) -> PlanContext {
         PlanContext {
             learned_total,
             quality,
             window_learns: self.window_learns,
             window_infers: self.window_infers,
             window_cycle: self.cycles_in_window,
+            forecast_uj,
         }
     }
 
@@ -136,15 +143,18 @@ mod tests {
     #[test]
     fn context_carries_real_window_counts() {
         let mut p = planner_policy();
-        assert_eq!(p.context(5, 0.5).window_learns, 0);
+        assert_eq!(p.context(5, 0.5, None).window_learns, 0);
         p.observe_completion(Action::Learn);
         p.observe_completion(Action::Learn);
         p.observe_completion(Action::Infer);
         p.observe_completion(Action::Extract); // not a completion
-        let ctx = p.context(5, 0.5);
+        let ctx = p.context(5, 0.5, None);
         assert_eq!(ctx.window_learns, 2);
         assert_eq!(ctx.window_infers, 1);
         assert_eq!(ctx.learned_total, 5);
+        assert_eq!(ctx.forecast_uj, None);
+        // the engine's forecast budget passes through untouched
+        assert_eq!(p.context(5, 0.5, Some(123.0)).forecast_uj, Some(123.0));
     }
 
     #[test]

@@ -284,6 +284,11 @@ pub(crate) fn run_events<F: ShardFactory + ?Sized>(
                                         for _ in 0..skips {
                                             e.note_sync_skipped();
                                         }
+                                        // the event heap knows this shard's
+                                        // next rendezvous exactly: let a
+                                        // forecast-aware shard reserve the
+                                        // radio price ahead of it
+                                        e.note_next_sync(t_us, rx_peers);
                                         match e.run_until(t_us) {
                                             // the horizon ends a shard's rendezvous
                                             Ok(()) if e.now_us() < e.cfg.horizon_us => {

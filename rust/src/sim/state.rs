@@ -21,14 +21,15 @@ use crate::sim::{Checkpoint, RunResult};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Layout version tag (first u64 of the head blob). V2 added the fleet
-/// sync counters and V3 the solo-sync counter; an old head (earlier
-/// firmware) reads as "no run state", which is the correct degradation
-/// for an in-memory store.
-const MAGIC: u64 = 0x494C_5253_5633; // "ILRSV3"
+/// sync counters, V3 the solo-sync counter, and V4 the forecast-mode
+/// checkpoint counters (taken/elided/deferred/bytes); an old head
+/// (earlier firmware) reads as "no run state", which is the correct
+/// degradation for an in-memory store.
+const MAGIC: u64 = 0x494C_5253_5634; // "ILRSV4"
 
-/// Head blob: magic + run nonce + 11 scalar counters + 3 vector lengths +
+/// Head blob: magic + run nonce + 15 scalar counters + 3 vector lengths +
 /// total µJ.
-const HEAD_LEN: usize = 17 * 8;
+const HEAD_LEN: usize = 21 * 8;
 const CKPT_LEN: usize = 6 * 8;
 const INFER_LEN: usize = 16;
 const SERIES_LEN: usize = 16;
@@ -46,7 +47,7 @@ struct StateKeys {
 /// Parsed head blob.
 struct Head {
     nonce: u64,
-    scalars: [u64; 11],
+    scalars: [u64; 15],
     ckpts: u64,
     infers: u64,
     series: u64,
@@ -116,17 +117,17 @@ impl RunState {
         if u(0) != MAGIC {
             return None;
         }
-        let mut scalars = [0u64; 11];
+        let mut scalars = [0u64; 15];
         for (j, s) in scalars.iter_mut().enumerate() {
             *s = u(2 + j);
         }
         Some(Head {
             nonce: u(1),
             scalars,
-            ckpts: u(13),
-            infers: u(14),
-            series: u(15),
-            total_uj: f64::from_bits(u(16)),
+            ckpts: u(17),
+            infers: u(18),
+            series: u(19),
+            total_uj: f64::from_bits(u(20)),
         })
     }
 
@@ -214,6 +215,10 @@ impl RunState {
             result.syncs_done,
             result.syncs_skipped,
             result.syncs_solo,
+            result.checkpoints_taken,
+            result.checkpoints_elided,
+            result.learns_deferred,
+            result.ckpt_nvm_bytes,
         ] {
             scratch.extend_from_slice(&v.to_le_bytes());
         }
@@ -325,6 +330,10 @@ impl RunState {
             syncs_done,
             syncs_skipped,
             syncs_solo,
+            checkpoints_taken,
+            checkpoints_elided,
+            learns_deferred,
+            ckpt_nvm_bytes,
         ] = head.scalars;
         let meter = EnergyMeter::from_parts(tallies, series, head.total_uj);
         let result = RunResult {
@@ -340,6 +349,10 @@ impl RunState {
             syncs_done,
             syncs_skipped,
             syncs_solo,
+            checkpoints_taken,
+            checkpoints_elided,
+            learns_deferred,
+            ckpt_nvm_bytes,
             energy_uj: meter.total_uj(),
             energy_series: meter.series.clone(),
             action_tallies: meter
@@ -470,6 +483,23 @@ mod tests {
         assert_eq!(back.syncs_done, 5);
         assert_eq!(back.syncs_skipped, 2);
         assert_eq!(back.syncs_solo, 1);
+        assert_eq!(back.to_json().to_string(), r.to_json().to_string());
+    }
+
+    #[test]
+    fn forecast_counters_round_trip_through_run_state() {
+        let (mut r, m) = sample_run(3);
+        r.checkpoints_taken = 9;
+        r.checkpoints_elided = 4;
+        r.learns_deferred = 2;
+        r.ckpt_nvm_bytes = 1_234;
+        let mut nvm = Nvm::new();
+        RunState::new().save(&mut nvm, &r, &m).unwrap();
+        let (back, _) = RunState::new().restore(&mut nvm).unwrap().unwrap();
+        assert_eq!(back.checkpoints_taken, 9);
+        assert_eq!(back.checkpoints_elided, 4);
+        assert_eq!(back.learns_deferred, 2);
+        assert_eq!(back.ckpt_nvm_bytes, 1_234);
         assert_eq!(back.to_json().to_string(), r.to_json().to_string());
     }
 

@@ -10,7 +10,7 @@
 //! build with `--features stepped-kernel` to make it the default); the
 //! equivalence suite pins the event kernel's `RunResult` to it.
 
-use crate::energy::harvester::Harvester;
+use crate::energy::harvester::{Forecast, Harvester};
 use crate::energy::Capacitor;
 use crate::sensors::Sensor;
 use crate::sim::ChargeKernel;
@@ -34,6 +34,10 @@ pub struct World {
     pub cap: Capacitor,
     pub sensor: Box<dyn Sensor>,
     t_us: u64,
+    /// Forecast-aware planning state (`None` unless the policy's
+    /// `forecast` knob is on): exact piecewise lookahead for analytic
+    /// harvesters, a causal EWMA for recorded traces.
+    forecast: Option<Forecast>,
 }
 
 impl World {
@@ -47,6 +51,7 @@ impl World {
             cap,
             sensor,
             t_us: 0,
+            forecast: None,
         }
     }
 
@@ -60,6 +65,32 @@ impl World {
         self.t_us = self.t_us.saturating_add(dt_us);
     }
 
+    /// Turn on the forecast view (the policy layer's `forecast` knob).
+    /// Picks the forecaster that fits the harvester; see
+    /// [`Forecast::for_harvester`].
+    pub fn enable_forecast(&mut self) {
+        self.forecast = Some(Forecast::for_harvester(self.harvester.as_ref()));
+    }
+
+    pub fn forecast_enabled(&self) -> bool {
+        self.forecast.is_some()
+    }
+
+    /// Net energy (µJ) the forecast predicts the capacitor can bank over
+    /// the next `dt_us`: predicted mean harvest power through the
+    /// conversion efficiency, minus leakage, floored at zero. `None` when
+    /// the forecast knob is off.
+    pub fn forecast_net_uj(&self, dt_us: u64) -> Option<f64> {
+        let f = self.forecast.as_ref()?;
+        if dt_us == 0 {
+            return Some(0.0);
+        }
+        let to = self.t_us.saturating_add(dt_us);
+        let p = f.mean_power_w(self.harvester.as_ref(), self.t_us, to);
+        let net_w = p * self.cap.eff - self.cap.leak_w;
+        Some((net_w * dt_us as f64).max(0.0)) // W · µs = µJ
+    }
+
     /// Charge until the capacitor reaches the wake threshold or the clock
     /// reaches `until_us`, whichever is first. Returns `true` when awake.
     pub fn charge_until(
@@ -68,6 +99,12 @@ impl World {
         kernel: ChargeKernel,
         charge_step_us: u64,
     ) -> bool {
+        // feed the EWMA forecaster (trace worlds) at every charge call:
+        // wake and sleep boundaries are the instants a real device could
+        // sample its harvester, and they are deterministic per run
+        if let Some(f) = self.forecast.as_mut() {
+            f.observe(self.t_us, self.harvester.power_w(self.t_us));
+        }
         match kernel {
             ChargeKernel::Event => self.charge_event(until_us),
             ChargeKernel::Stepped => self.charge_stepped(until_us, charge_step_us),

@@ -158,6 +158,7 @@ fn prop_planner_transitions_always_legal() {
                 window_learns: rng.below(5),
                 window_infers: rng.below(5),
                 window_cycle: 1 + rng.below(10),
+                forecast_uj: None,
             };
             match planner.next_action(&pending, &ctx, &costs) {
                 Planned::SenseNew => {
